@@ -1,0 +1,119 @@
+//! The end-to-end driver (DESIGN.md deliverable): the complete LRMP system
+//! on a real small workload, all three layers composing —
+//!
+//!   L3 rust: DDPG agent + budget enforcement + LP replication + cost model
+//!   L2 jax:  the quantized MLP (AOT-lowered HLO, loaded via PJRT)
+//!   L1 pallas: the crossbar VMM kernels inside that HLO
+//!
+//! Every episode's accuracy reward is a *live* quantized-inference run over
+//! the synthetic-digit test set through the compiled artifacts; the final
+//! policy is quantization-aware-finetuned from rust via the grad artifact.
+//! Falls back to the SQNR surrogate (with a note) if artifacts are missing.
+//!
+//!     cargo run --release --example end_to_end_search -- [--episodes 20]
+
+use lrmp::accuracy::Evaluator;
+use lrmp::cli::Args;
+use lrmp::cost::CostModel;
+use lrmp::lrmp::{AccuracyProvider, LiveAccuracy, Lrmp, SearchConfig};
+use lrmp::nets;
+use lrmp::quant::SqnrSurrogate;
+use lrmp::replication::Objective;
+use lrmp::runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let episodes = args.usize("episodes", 20);
+    let net = nets::mlp_tiny();
+    let model = CostModel::paper();
+    let cfg = SearchConfig {
+        objective: Objective::Latency,
+        episodes,
+        updates_per_episode: 4,
+        budget_start: 0.5,
+        budget_end: 0.3,
+        seed: args.u64("seed", 0xE2E),
+        ..Default::default()
+    };
+    let search = Lrmp::new(&model, &net, cfg);
+    let baseline = model.baseline(&net);
+    println!(
+        "net {} on the paper chip: baseline latency {:.2} ms, {} tiles (budget)",
+        net.name,
+        baseline.latency_s() * 1e3,
+        search.baseline_tiles()
+    );
+
+    let dir = runtime::default_artifacts_dir();
+    let mut provider: Box<dyn AccuracyProvider> = if dir.join("manifest.json").exists() {
+        let ev = Evaluator::new(&dir)?;
+        println!(
+            "accuracy: LIVE through PJRT artifacts ({} test samples/eval)\n",
+            512
+        );
+        Box::new(LiveAccuracy::new(ev, 512))
+    } else {
+        println!("accuracy: artifacts missing -> SQNR surrogate (run `make artifacts`)\n");
+        Box::new(SqnrSurrogate::new(&net, 0.92, 0.5))
+    };
+
+    let t0 = std::time::Instant::now();
+    let res = search.run(provider.as_mut())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("episode  budget  reward   acc     latency-x  mean-bits(w/a)");
+    for e in &res.trajectory {
+        println!(
+            "{:7}  {:.3}   {:+.3}  {:.4}  {:8.2}  {:.1}/{:.1}",
+            e.episode,
+            e.budget_fraction,
+            e.reward,
+            e.accuracy,
+            e.latency_improvement,
+            e.mean_w_bits,
+            e.mean_a_bits
+        );
+    }
+
+    println!("\n=== result ({wall:.1}s wall) ===");
+    println!(
+        "latency    x{:.2}   (baseline {:.2} ms -> {:.2} ms)",
+        res.latency_improvement(),
+        res.baseline.latency_s() * 1e3,
+        res.optimized.latency_s() * 1e3
+    );
+    println!("throughput x{:.2}", res.throughput_improvement());
+    println!("energy     x{:.2}", res.energy_improvement());
+    println!(
+        "accuracy   {:.4} (baseline) -> {:.4} (best policy) -> {:.4} (finetuned)",
+        res.baseline_accuracy, res.best_accuracy, res.finetuned_accuracy
+    );
+    println!(
+        "tiles      {} / {} budget",
+        res.best_plan.tiles_used,
+        search.baseline_tiles()
+    );
+    println!(
+        "policy     w_bits {:?}",
+        res.best_policy
+            .layers
+            .iter()
+            .map(|l| l.w_bits)
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "           a_bits {:?}",
+        res.best_policy
+            .layers
+            .iter()
+            .map(|l| l.a_bits)
+            .collect::<Vec<_>>()
+    );
+    println!("replication {:?}", res.best_plan.replication);
+
+    if let Some(out) = args.flags.get("out") {
+        std::fs::write(out, res.to_json().pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! The paper's §III motivating example (Fig 2), reproduced step by step on
+//! ResNet-18: (a) the 8-bit baseline and its bottleneck; (b) selective 6-bit
+//! quantization conserving 72 tiles and cutting the bottleneck's bit-stream;
+//! (c) naive replication of the bottleneck with the freed tiles.
+//!
+//!     cargo run --release --example motivation
+
+use lrmp::bench_harness::Table;
+use lrmp::cost::CostModel;
+use lrmp::nets;
+use lrmp::quant::Policy;
+
+fn main() {
+    let net = nets::resnet::resnet18();
+    let model = CostModel::paper();
+    let nl = net.num_layers();
+
+    // (a) 8-bit baseline: per-layer latency/tile breakdown (Fig 2a).
+    let base = model.baseline(&net);
+    println!("(a) ResNet18 8/8 baseline — per-layer breakdown (Fig 2a)\n");
+    let mut t = Table::new(&["layer", "tiles", "latency (kcyc)", "share %"]);
+    for (l, c) in net.layers.iter().zip(&base.layers) {
+        t.row(&[
+            l.name.clone(),
+            c.tiles.to_string(),
+            format!("{:.0}", c.total_cycles() as f64 / 1e3),
+            format!("{:.1}", 100.0 * c.total_cycles() as f64 / base.total_cycles),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nbaseline: {} tiles, {:.2} Mcycles, {:.2} inf/s — bottleneck = {}",
+        base.tiles_used,
+        base.total_cycles / 1e6,
+        base.throughput(),
+        net.layers[base.bottleneck_layer].name
+    );
+
+    // (b) quantize: one resource-heavy layer to 6-bit weights (frees
+    // 72 tiles, Eqn 2) + the bottleneck's activations to 6 bits (Eqn 3).
+    let heavy = net
+        .layers
+        .iter()
+        .position(|l| l.name == "layer4.1.conv2")
+        .unwrap();
+    let mut p = Policy::baseline(nl);
+    p.layers[heavy].w_bits = 6;
+    p.layers[0].a_bits = 6;
+    let q = model.network(&net, &p, &vec![1; nl]);
+    let freed = base.tiles_used - q.tiles_used;
+    println!(
+        "\n(b) 6-bit weights on {} + 6-bit activations on conv1:\n    \
+         {} tiles conserved (paper: 72), latency -{:.1}% (paper: 5.7%), \
+         throughput x{:.2} (paper: 1.33)",
+        net.layers[heavy].name,
+        freed,
+        100.0 * (1.0 - q.total_cycles / base.total_cycles),
+        q.throughput() / base.throughput()
+    );
+
+    // (c) naively replicate only the bottleneck layer with the freed tiles.
+    let copies = freed / q.layers[0].tiles;
+    let mut repl = vec![1u64; nl];
+    repl[0] += copies;
+    let r = model.network(&net, &p, &repl);
+    println!(
+        "\n(c) + {} extra copies of conv1 (naive replication):\n    \
+         latency -{:.1}% (paper: 25.5%), throughput x{:.2} (paper: 2.34)",
+        copies,
+        100.0 * (1.0 - r.total_cycles / base.total_cycles),
+        r.throughput() / base.throughput()
+    );
+    println!(
+        "\n=> the LRMP search (examples/end_to_end_search.rs) automates and \
+         beats this hand-crafted trade-off."
+    );
+}

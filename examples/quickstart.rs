@@ -1,0 +1,77 @@
+//! Quickstart: map a DNN onto the IMC chip, inspect the cost model, and run
+//! the LP replication optimizer — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use lrmp::bench_harness::Table;
+use lrmp::cost::CostModel;
+use lrmp::nets;
+use lrmp::quant::Policy;
+use lrmp::replication::{self, LayerSummary, Objective};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The paper's chip (Table I) and a benchmark network.
+    let model = CostModel::paper();
+    let net = nets::by_name("resnet18").unwrap();
+    println!(
+        "chip: {} tiles of {}x{}, {} vector modules @ {:.0} MHz",
+        model.chip.n_tiles,
+        model.chip.tile_size,
+        model.chip.tile_size,
+        model.chip.n_vector_modules,
+        model.chip.clock_hz / 1e6
+    );
+
+    // 2. Baseline mapping: 8-bit weights/activations, one instance per layer.
+    let baseline = model.baseline(&net);
+    println!(
+        "\n{}: {} layers, {} tiles, latency {:.1} ms, throughput {:.1} inf/s, {:.1} mJ/inf",
+        net.name,
+        net.num_layers(),
+        baseline.tiles_used,
+        baseline.latency_s() * 1e3,
+        baseline.throughput(),
+        baseline.energy_j * 1e3
+    );
+    println!(
+        "bottleneck: {} ({:.1}% of total latency)",
+        net.layers[baseline.bottleneck_layer].name,
+        100.0 * baseline.bottleneck_cycles / baseline.total_cycles
+    );
+
+    // 3. A mixed-precision policy frees tiles (Eqn 2) and shortens the
+    //    bit-streams (Eqn 3)...
+    let mut policy = Policy::baseline(net.num_layers());
+    for p in policy.layers.iter_mut() {
+        p.w_bits = 5;
+        p.a_bits = 6;
+    }
+    let quantized = model.network(&net, &policy, &vec![1; net.num_layers()]);
+    println!(
+        "\nuniform 5w/6a: {} tiles ({} freed), latency {:.1} ms",
+        quantized.tiles_used,
+        baseline.tiles_used - quantized.tiles_used,
+        quantized.latency_s() * 1e3
+    );
+
+    // 4. ...and the LP optimizer spends them on replicating bottlenecks.
+    let summaries = LayerSummary::from_costs(&quantized.layers);
+    let n_tiles = baseline.tiles_used; // the paper's iso-area constraint
+    let mut table = Table::new(&["objective", "latency x", "throughput x", "tiles"]);
+    for obj in [Objective::Latency, Objective::Throughput] {
+        let plan = replication::optimize(&summaries, n_tiles, obj)?;
+        let optimized = model.network(&net, &policy, &plan.replication);
+        table.row(&[
+            format!("{obj:?}"),
+            format!("{:.2}", baseline.total_cycles / optimized.total_cycles),
+            format!(
+                "{:.2}",
+                optimized.throughput() / baseline.throughput()
+            ),
+            optimized.tiles_used.to_string(),
+        ]);
+    }
+    table.print();
+    println!("\nnext: examples/end_to_end_search.rs runs the full RL+LP loop.");
+    Ok(())
+}

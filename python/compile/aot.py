@@ -1,0 +1,179 @@
+"""AOT compile path: lower the L2/L1 computations to HLO *text* artifacts,
+train the base model, and dump weights + the synthetic corpus for the rust
+runtime. Runs exactly once (`make artifacts`); Python never serves requests.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos and NOT ``.serialize()``
+— is the interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the rust `xla` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifact ABI (consumed by rust/src/runtime/):
+  manifest.json            index: artifacts, shapes, dataset, base accuracy
+  mlp_infer.hlo.txt        (x[B,256], w1,b1..w4,b4, wbits[4], abits[4]) -> logits[B,10]
+  mlp_train_step.hlo.txt   (x[Bt,256], onehot[Bt,10], params..., wbits, abits, lr) -> (params'..., loss)
+  crossbar_demo.hlo.txt    (x[Bd,R], w[R,N], wbits, abits) -> (y_bit_exact, y_fast)
+  weights.lrt / dataset    LRT1 tensors (util::io format on the rust side)
+"""
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+EVAL_BATCH = 256
+TRAIN_BATCH = 128
+DEMO_SHAPE = (32, 64, 48)  # (B, R, N) of the crossbar demo layer
+
+
+# --------------------------------------------------------------------------
+# LRT1 tensor writer (mirrors rust util::io)
+# --------------------------------------------------------------------------
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def save_tensor(path, arr):
+    arr = np.ascontiguousarray(arr)
+    code = _DTYPES[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(b"LRT1")
+        f.write(struct.pack("<II", code, arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.tobytes())
+
+
+# --------------------------------------------------------------------------
+# HLO text lowering (see module docstring)
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(fn, *example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    # ---- data + base model -------------------------------------------------
+    print("[aot] generating synthetic corpus ...", flush=True)
+    (x_train, y_train), (x_test, y_test) = model.make_dataset(seed=args.seed)
+    print("[aot] training base MLP ...", flush=True)
+    params0 = model.init_params(seed=args.seed)
+    flat, losses = model.train_base(params0, x_train, y_train, steps=args.train_steps)
+    base_acc = model.accuracy_f32(flat, x_test, y_test)
+    print(f"[aot] base f32 test accuracy: {base_acc:.4f} "
+          f"(loss {losses[0]:.3f} -> {losses[-1]:.3f})", flush=True)
+
+    # Quantized sanity point: 8/8 must be ~lossless (also recorded for rust tests).
+    bits8 = jnp.full((model.NUM_LAYERS,), 8.0, dtype=jnp.float32)
+    q88_acc = model.accuracy_quant(flat, x_test[:512], y_test[:512], bits8, bits8)
+    print(f"[aot] 8/8 quantized accuracy (512 samples): {q88_acc:.4f}", flush=True)
+
+    # ---- dump tensors -------------------------------------------------------
+    save_tensor(f"{out}/x_train.lrt", x_train)
+    save_tensor(f"{out}/y_train.lrt", y_train)
+    save_tensor(f"{out}/x_test.lrt", x_test)
+    save_tensor(f"{out}/y_test.lrt", y_test)
+    param_files = []
+    for i, p in enumerate(flat):
+        name = f"param_{i}.lrt"
+        save_tensor(f"{out}/{name}", np.asarray(p))
+        param_files.append({"file": name, "shape": list(np.asarray(p).shape)})
+
+    # ---- lower artifacts ----------------------------------------------------
+    L = model.NUM_LAYERS
+    dims = model.LAYER_DIMS
+    param_specs = []
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        param_specs.extend([spec((d_in, d_out)), spec((d_out,))])
+    bits_spec = spec((L,))
+
+    print("[aot] lowering mlp_infer ...", flush=True)
+    infer_fn = lambda x, flatp, wb, ab: (model.qmlp_logits(x, list(flatp), wb, ab),)
+    infer_hlo = to_hlo_text(
+        infer_fn, spec((EVAL_BATCH, dims[0])), tuple(param_specs), bits_spec, bits_spec
+    )
+    open(f"{out}/mlp_infer.hlo.txt", "w").write(infer_hlo)
+
+    print("[aot] lowering mlp_train_step ...", flush=True)
+    step_fn = lambda x, t, flatp, wb, ab, lr: model.qmlp_train_step(
+        x, t, list(flatp), wb, ab, lr
+    )
+    step_hlo = to_hlo_text(
+        step_fn,
+        spec((TRAIN_BATCH, dims[0])),
+        spec((TRAIN_BATCH, model.NUM_CLASSES)),
+        tuple(param_specs),
+        bits_spec,
+        bits_spec,
+        spec(()),
+    )
+    open(f"{out}/mlp_train_step.hlo.txt", "w").write(step_hlo)
+
+    print("[aot] lowering crossbar_demo ...", flush=True)
+    bd, rd, nd = DEMO_SHAPE
+    demo_hlo = to_hlo_text(
+        model.crossbar_demo, spec((bd, rd)), spec((rd, nd)), spec(()), spec(())
+    )
+    open(f"{out}/crossbar_demo.hlo.txt", "w").write(demo_hlo)
+
+    # ---- manifest -----------------------------------------------------------
+    manifest = {
+        "version": 1,
+        "created_unix": int(time.time()),
+        "layer_dims": dims,
+        "num_layers": L,
+        "eval_batch": EVAL_BATCH,
+        "train_batch": TRAIN_BATCH,
+        "act_clip": model.ACT_CLIP,
+        "base_accuracy_f32": base_acc,
+        "accuracy_q88_512": q88_acc,
+        "num_classes": model.NUM_CLASSES,
+        "demo_shape": list(DEMO_SHAPE),
+        "params": param_files,
+        "dataset": {
+            "x_train": "x_train.lrt",
+            "y_train": "y_train.lrt",
+            "x_test": "x_test.lrt",
+            "y_test": "y_test.lrt",
+            "n_train": int(x_train.shape[0]),
+            "n_test": int(x_test.shape[0]),
+        },
+        "executables": {
+            "infer": "mlp_infer.hlo.txt",
+            "train_step": "mlp_train_step.hlo.txt",
+            "crossbar_demo": "crossbar_demo.hlo.txt",
+        },
+    }
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {out}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

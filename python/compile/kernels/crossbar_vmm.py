@@ -1,0 +1,182 @@
+"""Layer-1 Pallas kernels: the crossbar vector-matrix-multiply hot-spot.
+
+Two kernels model the paper's §II VMM pipeline (Fig 1):
+
+``crossbar_vmm_bit_exact``
+    The full architectural simulation: activations quantized to unsigned
+    ``a_bits`` integers are *bit-streamed* (temporal loop, Eqn 3); weights
+    quantized to signed two's-complement ``w_bits`` integers are *bit-sliced*
+    into 1-bit planes (spatial, Eqn 2); partial sums are formed over
+    9-wordline row groups and pass through a 4-bit ADC clamp before the
+    digital shift-add reduction — exactly the dataflow of the ISSCC'22 chip
+    the paper models.
+
+``crossbar_vmm_fast``
+    The algebraically-equal production kernel: because 9-row groups of 1-bit
+    device × 1-bit input partial sums never exceed 9 < 2^4, the ADC never
+    clips, and the full bit-level pipeline collapses *exactly* to the integer
+    matmul of the quantized operands (the paper relies on the same fact —
+    "to prevent partial sum quantization ... only 9 rows are activated").
+    This kernel tiles the output columns in crossbar-sized (256-wide) blocks
+    via the Pallas grid — the BlockSpec expresses the same HBM→VMEM schedule
+    the chip realizes with column tiles.
+
+``python/tests/test_kernel.py`` proves bit_exact == fast == the pure-jnp
+oracle in ``ref.py`` over randomized shapes/bit-widths (hypothesis).
+
+Hardware adaptation notes (DESIGN.md §2): one crossbar tile = one 256-wide
+column block; bit-slicing = extra plane axis; bit-streaming = the unrolled
+8-step temporal loop masked by the runtime ``a_bits``. ``interpret=True``
+everywhere — CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Architectural constants (Table I).
+TILE = 256  # crossbar dimension X
+ROW_PAR = 9  # wordlines activated simultaneously
+ADC_BITS = 4  # Flash ADC precision
+MAX_BITS = 8  # static unroll bound for runtime bit-widths
+
+
+def _quantize_operands(x, w, a_bits, a_scale, w_bits, w_scale):
+    """Symmetric quantization shared by both kernels (plain jnp, traced
+    into the surrounding computation; the kernels consume integers).
+
+    x: [B, R] non-negative activations (post-ReLU), f32.
+    w: [R, N] weights, f32.
+    a_bits / w_bits: runtime scalars (f32, integral values 2..8).
+    a_scale / w_scale: positive quantization scales.
+    Returns (x_q int32 in [0, 2^a_bits - 1], w_q int32 two's-complement range).
+    """
+    a_levels = jnp.exp2(a_bits) - 1.0
+    w_levels = jnp.exp2(w_bits - 1.0) - 1.0
+    x_q = jnp.clip(jnp.round(x / a_scale), 0.0, a_levels).astype(jnp.int32)
+    w_q = jnp.clip(jnp.round(w / w_scale), -w_levels - 1.0, w_levels).astype(jnp.int32)
+    return x_q, w_q
+
+
+# --------------------------------------------------------------------------
+# Bit-exact architectural kernel
+# --------------------------------------------------------------------------
+
+
+def _bit_exact_kernel(meta_ref, xq_ref, wq_ref, o_ref):
+    """Pallas kernel body: full bit-streamed / bit-sliced / row-grouped VMM.
+
+    meta_ref: [2] int32 — (a_bits, w_bits) runtime bit-widths.
+    xq_ref:   [B, Rp] int32 — quantized activations, rows padded to ROW_PAR.
+    wq_ref:   [Rp, N] int32 — quantized signed weights, padded alike.
+    o_ref:    [B, N] int32 — exact integer VMM output.
+    """
+    a_bits = meta_ref[0]
+    w_bits = meta_ref[1]
+    xq = xq_ref[...]
+    wq = wq_ref[...]
+    b, rp = xq.shape
+    n = wq.shape[1]
+    groups = rp // ROW_PAR
+
+    # Two's-complement encode the signed weights at runtime width:
+    # tc = w mod 2^w_bits (negative weights wrap into the high range).
+    modulus = jnp.left_shift(jnp.int32(1), w_bits)
+    w_tc = jnp.where(wq < 0, wq + modulus, wq)
+
+    # Row-grouped views: activations [B, G, 9], weights [G, 9, N].
+    xg = xq.reshape(b, groups, ROW_PAR)
+    wg = w_tc.reshape(groups, ROW_PAR, n)
+
+    acc = jnp.zeros((b, n), dtype=jnp.int32)
+    for t in range(MAX_BITS):  # temporal bit-streaming (Eqn 3)
+        x_bit = jnp.bitwise_and(jax.lax.shift_right_logical(xg, t), 1)
+        stream_active = jnp.int32(t) < a_bits
+        plane_acc = jnp.zeros((b, n), dtype=jnp.int32)
+        for s in range(MAX_BITS):  # spatial bit-slicing (Eqn 2)
+            w_plane = jnp.bitwise_and(jax.lax.shift_right_logical(wg, s), 1)
+            # Analog row-group partial sum: ≤ ROW_PAR with 1-bit operands.
+            partial = jnp.einsum(
+                "bgr,grn->bgn", x_bit, w_plane, preferred_element_type=jnp.int32
+            )
+            # The 4-bit flash ADC: clamps at 2^ADC_BITS - 1. By construction
+            # (ROW_PAR = 9 < 16) this is the identity — asserted in tests.
+            adc = jnp.clip(partial, 0, (1 << ADC_BITS) - 1)
+            col_sum = jnp.sum(adc, axis=1)  # digital row-group reduce
+            # Shift-add slice weight: plane s contributes 2^s, except the
+            # (runtime) sign plane s = w_bits-1 which contributes -2^s.
+            sign_plane = jnp.int32(s) == (w_bits - 1)
+            slice_active = jnp.int32(s) < w_bits
+            pw = jnp.where(sign_plane, -(1 << s), 1 << s) * slice_active
+            plane_acc = plane_acc + pw * col_sum
+        acc = acc + jnp.where(stream_active, plane_acc * (1 << t), 0)
+    o_ref[...] = acc
+
+
+def _pad_rows(arrs, r):
+    """Pad the shared contraction dim of (x [B,R], w [R,N]) to ROW_PAR."""
+    rp = ((r + ROW_PAR - 1) // ROW_PAR) * ROW_PAR
+    x, w = arrs
+    if rp != r:
+        x = jnp.pad(x, ((0, 0), (0, rp - r)))
+        w = jnp.pad(w, ((0, rp - r), (0, 0)))
+    return x, w
+
+
+def crossbar_vmm_bit_exact(x, w, a_bits, a_scale, w_bits, w_scale):
+    """Quantize + run the bit-exact crossbar pipeline; returns f32 [B, N]."""
+    x_q, w_q = _quantize_operands(x, w, a_bits, a_scale, w_bits, w_scale)
+    b, r = x_q.shape
+    n = w_q.shape[1]
+    x_q, w_q = _pad_rows((x_q, w_q), r)
+    meta = jnp.stack(
+        [a_bits.astype(jnp.int32), w_bits.astype(jnp.int32)]
+    )
+    acc = pl.pallas_call(
+        _bit_exact_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(meta, x_q, w_q)
+    return acc.astype(jnp.float32) * (a_scale * w_scale)
+
+
+# --------------------------------------------------------------------------
+# Fast production kernel (provably equal; column-tiled via the Pallas grid)
+# --------------------------------------------------------------------------
+
+
+def _fast_kernel(xq_ref, wq_ref, o_ref):
+    """One crossbar-column-tile worth of the integer VMM.
+
+    Grid: one program per 256-wide column block (a physical column tile).
+    The int32 matmul equals the full bit pipeline because the ADC never
+    clips (see module docstring).
+    """
+    o_ref[...] = jnp.dot(
+        xq_ref[...], wq_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+def crossbar_vmm_fast(x, w, a_bits, a_scale, w_bits, w_scale):
+    """Quantize + integer VMM, tiled in crossbar-width column blocks."""
+    x_q, w_q = _quantize_operands(x, w, a_bits, a_scale, w_bits, w_scale)
+    b, r = x_q.shape
+    n = w_q.shape[1]
+    # Pad N to a multiple of the crossbar width so the grid is regular.
+    n_pad = ((n + TILE - 1) // TILE) * TILE
+    if n_pad != n:
+        w_q = jnp.pad(w_q, ((0, 0), (0, n_pad - n)))
+    acc = pl.pallas_call(
+        _fast_kernel,
+        grid=(n_pad // TILE,),
+        in_specs=[
+            pl.BlockSpec((b, r), lambda j: (0, 0)),  # activations broadcast
+            pl.BlockSpec((r, TILE), lambda j: (0, j)),  # one column tile
+        ],
+        out_specs=pl.BlockSpec((b, TILE), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.int32),
+        interpret=True,
+    )(x_q, w_q)
+    return acc[:, :n].astype(jnp.float32) * (a_scale * w_scale)

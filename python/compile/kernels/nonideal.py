@@ -1,0 +1,106 @@
+"""Analog non-ideality extension (paper §V-C defers these; we model them):
+a crossbar VMM with device-level conductance variation, conductance drift,
+and additive read noise, layered on the same quantization/bit-slicing math
+as the ideal kernels.
+
+Model (standard in RxNN/NeuroSim-style evaluations the paper cites):
+  g_actual = g_ideal · (1 + ε_dev) · (t/t0)^(-ν)  + read noise per access
+where ε_dev ~ N(0, σ_dev) is programmed-once per device (fixed pattern) and
+ν is the drift coefficient. With 1-bit devices, g_ideal ∈ {0, 1} per plane;
+variation perturbs only the on-state.
+
+``crossbar_vmm_nonideal`` returns the noisy analog result dequantized like
+the ideal kernels; at σ=ν=read=0 it is bit-exact equal to the fast kernel
+(tested), so the ideal pipeline is the zero-noise special case.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import crossbar_vmm as cv
+
+
+def _split_planes(w_q, w_bits_static):
+    """Decompose signed integers into per-plane 0/1 arrays with their
+    shift-add weights (sign plane negative). Static bit-width variant used
+    by the non-ideality analysis."""
+    modulus = 1 << w_bits_static
+    w_tc = jnp.where(w_q < 0, w_q + modulus, w_q)
+    planes = []
+    weights = []
+    for s in range(w_bits_static):
+        planes.append(jnp.bitwise_and(jax.lax.shift_right_logical(w_tc, s), 1))
+        pw = -(1 << s) if s == w_bits_static - 1 else (1 << s)
+        weights.append(pw)
+    return planes, weights
+
+
+def _nonideal_kernel(xq_ref, planes_ref, eps_ref, noise_ref, meta_ref, o_ref):
+    """Pallas kernel: per-plane analog accumulate with perturbed on-state
+    conductances and additive read noise.
+
+    xq_ref:     [B, R] f32 integer-valued quantized activations.
+    planes_ref: [S, R, N] f32 0/1 bit-planes.
+    eps_ref:    [S, R, N] f32 per-device variation (fixed pattern).
+    noise_ref:  [B, N] f32 read-noise sample for this call.
+    meta_ref:   [S+2] f32 — S plane weights, then drift factor, then a pad.
+    o_ref:      [B, N] f32 noisy integer-domain accumulation.
+    """
+    xq = xq_ref[...]
+    planes = planes_ref[...]
+    eps = eps_ref[...]
+    s = planes.shape[0]
+    drift = meta_ref[s]
+    acc = jnp.zeros((xq.shape[0], planes.shape[2]), dtype=jnp.float32)
+    for i in range(s):  # static unroll over bit planes
+        g = planes[i] * (1.0 + eps[i]) * drift
+        acc = acc + meta_ref[i] * (xq @ g)
+    o_ref[...] = acc + noise_ref[...]
+
+
+def crossbar_vmm_nonideal(
+    x,
+    w,
+    a_bits_static,
+    w_bits_static,
+    sigma_device=0.0,
+    drift_nu=0.0,
+    decades=0.0,
+    sigma_read=0.0,
+    seed=0,
+):
+    """Noisy crossbar VMM. Static bit-widths (analysis path, not AOT).
+
+    Returns (y_nonideal, y_ideal) so callers can measure the perturbation.
+    """
+    a_scale = jnp.maximum(jnp.max(x), 1e-6) / (2.0**a_bits_static - 1.0)
+    w_scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6) / (
+        2.0 ** (w_bits_static - 1) - 1.0
+    )
+    ab = jnp.float32(a_bits_static)
+    wb = jnp.float32(w_bits_static)
+    x_q, w_q = cv._quantize_operands(x, w, ab, a_scale, wb, w_scale)
+
+    planes, weights = _split_planes(w_q, w_bits_static)
+    planes = jnp.stack([p.astype(jnp.float32) for p in planes])
+    s, r, n = planes.shape
+    b = x_q.shape[0]
+
+    key = jax.random.PRNGKey(seed)
+    k_dev, k_read = jax.random.split(key)
+    eps = sigma_device * jax.random.normal(k_dev, (s, r, n), dtype=jnp.float32)
+    noise = sigma_read * jax.random.normal(k_read, (b, n), dtype=jnp.float32)
+    drift = jnp.float32((10.0**decades) ** (-drift_nu) if drift_nu > 0 else 1.0)
+    meta = jnp.concatenate(
+        [jnp.asarray(weights, dtype=jnp.float32), jnp.stack([drift, jnp.float32(0.0)])]
+    )
+
+    acc = pl.pallas_call(
+        _nonideal_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x_q.astype(jnp.float32), planes, eps, noise, meta)
+    y_nonideal = acc * (a_scale * w_scale)
+    y_ideal = (x_q @ w_q).astype(jnp.float32) * (a_scale * w_scale)
+    return y_nonideal, y_ideal

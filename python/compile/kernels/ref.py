@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+``ref_vmm`` is the mathematical ground truth the crossbar pipeline must
+reproduce: symmetric quantization of both operands followed by an exact
+integer matmul and dequantization. ``ref_fake_quant`` is the straight-through
+fake-quantizer the L2 training graph uses; at identical scales the two agree
+exactly (tested).
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_activations(x, a_bits, a_scale):
+    """Unsigned symmetric quantization of non-negative activations."""
+    levels = jnp.exp2(a_bits) - 1.0
+    return jnp.clip(jnp.round(x / a_scale), 0.0, levels)
+
+
+def quantize_weights(w, w_bits, w_scale):
+    """Signed symmetric quantization (two's-complement range)."""
+    levels = jnp.exp2(w_bits - 1.0) - 1.0
+    return jnp.clip(jnp.round(w / w_scale), -levels - 1.0, levels)
+
+
+def ref_vmm(x, w, a_bits, a_scale, w_bits, w_scale):
+    """Oracle for the crossbar kernels: quantize, integer matmul, dequantize.
+
+    Matches crossbar_vmm_{bit_exact,fast} bit-for-bit (integer math is exact,
+    and all magnitudes stay below 2^24 so the f32 dot is also exact).
+    """
+    x_q = quantize_activations(x, a_bits, a_scale)
+    w_q = quantize_weights(w, w_bits, w_scale)
+    return (x_q @ w_q) * (a_scale * w_scale)
+
+
+def ref_fake_quant(x, w, a_bits, a_scale, w_bits, w_scale):
+    """Fake-quantized VMM: dequantized operands multiplied in f32.
+
+    Algebraically identical to ref_vmm: (x_q s_a) @ (w_q s_w) = (x_q @ w_q)
+    s_a s_w. This is the form the L2 training graph uses so that the
+    straight-through estimator can flow gradients.
+    """
+    x_dq = quantize_activations(x, a_bits, a_scale) * a_scale
+    w_dq = quantize_weights(w, w_bits, w_scale) * w_scale
+    return x_dq @ w_dq

@@ -1,0 +1,259 @@
+"""Layer-2: the quantized DNN under test, in JAX, calling the L1 kernels.
+
+The live end-to-end accuracy path of the LRMP search uses a scaled MLP
+(256-512-512-128-10 over 16×16 synthetic digits — substitution table in
+DESIGN.md §4; the full-size MNIST MLP geometry is used by the cost-side
+experiments in rust). Exported computations (AOT via aot.py, loaded by the
+rust runtime):
+
+- ``qmlp_logits``      — quantized inference with *runtime* per-layer
+                         (w_bits, a_bits), so one compiled artifact serves
+                         every policy the RL agent explores.
+- ``qmlp_train_step``  — one SGD step of quantization-aware finetuning
+                         (straight-through estimator), returning updated
+                         params and the batch loss.
+- ``crossbar_demo``    — the bit-exact and fast L1 kernels side by side on
+                         one layer, letting rust verify kernel equality at
+                         runtime.
+
+Everything here is build-time only; Python is never on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import crossbar_vmm as cvmm
+from .kernels import ref
+
+# MLP geometry for the live path (mirrors rust nets::mlp_tiny()).
+LAYER_DIMS = [256, 512, 512, 128, 10]
+NUM_LAYERS = len(LAYER_DIMS) - 1
+IMG = 16  # 16×16 inputs
+NUM_CLASSES = 10
+
+# Fixed activation-range calibration: inputs are in [0,1]; hidden ReLU
+# activations are clipped to [0, ACT_CLIP] so activation scales are static
+# (the chip calibrates DAC ranges once — same idea).
+ACT_CLIP = 6.0
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(seed: int = 0):
+    """He-initialized MLP parameters: [(w, b)] per layer, f32."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for d_in, d_out in zip(LAYER_DIMS[:-1], LAYER_DIMS[1:]):
+        w = rng.normal(0.0, np.sqrt(2.0 / d_in), size=(d_in, d_out)).astype(np.float32)
+        b = np.zeros(d_out, dtype=np.float32)
+        params.append((jnp.asarray(w), jnp.asarray(b)))
+    return params
+
+
+def flatten_params(params):
+    """Pytree → flat list [w1, b1, w2, b2, ...] (the artifact ABI)."""
+    out = []
+    for w, b in params:
+        out.extend([w, b])
+    return out
+
+
+def unflatten_params(flat):
+    return [(flat[2 * i], flat[2 * i + 1]) for i in range(NUM_LAYERS)]
+
+
+# --------------------------------------------------------------------------
+# Quantized forward pass
+# --------------------------------------------------------------------------
+
+
+def _layer_scales(w, w_bits, a_bits, first):
+    """Static-calibration quantization scales for one layer."""
+    w_scale = jnp.max(jnp.abs(w)) / (jnp.exp2(w_bits - 1.0) - 1.0)
+    a_max = jnp.float32(1.0) if first else jnp.float32(ACT_CLIP)
+    a_scale = a_max / (jnp.exp2(a_bits) - 1.0)
+    return w_scale, a_scale
+
+
+def _ste(fq, x):
+    """Straight-through estimator: forward fq(x), identity gradient."""
+    return x + jax.lax.stop_gradient(fq - x)
+
+
+def qmlp_logits(x, flat_params, w_bits, a_bits):
+    """Quantized inference. x: [B, 256] in [0,1]; w_bits/a_bits: [L] f32.
+
+    Every layer's VMM runs through the L1 fast crossbar kernel (the
+    bit-exact variant is algebraically identical — proven by tests and the
+    runtime demo artifact).
+    """
+    params = unflatten_params(flat_params)
+    h = x
+    for l, (w, b) in enumerate(params):
+        wb, ab = w_bits[l], a_bits[l]
+        w_scale, a_scale = _layer_scales(w, wb, ab, first=(l == 0))
+        h = jnp.clip(h, 0.0, 1.0 if l == 0 else ACT_CLIP)
+        y = cvmm.crossbar_vmm_fast(h, w, ab, a_scale, wb, w_scale) + b
+        h = jnp.clip(y, 0.0, ACT_CLIP) if l < NUM_LAYERS - 1 else y
+    return h
+
+
+def _qmlp_logits_ste(x, params, w_bits, a_bits):
+    """Fake-quant forward with STE — differentiable twin of qmlp_logits.
+
+    Uses ref.ref_fake_quant (same math as the kernel) wrapped in STE so
+    finetuning gradients flow to the latent f32 weights.
+    """
+    h = x
+    for l, (w, b) in enumerate(params):
+        wb, ab = w_bits[l], a_bits[l]
+        w_scale, a_scale = _layer_scales(w, wb, ab, first=(l == 0))
+        h = jnp.clip(h, 0.0, 1.0 if l == 0 else ACT_CLIP)
+        w_dq = _ste(ref.quantize_weights(w, wb, w_scale) * w_scale, w)
+        h_dq = _ste(ref.quantize_activations(h, ab, a_scale) * a_scale, h)
+        y = h_dq @ w_dq + b
+        h = jnp.clip(y, 0.0, ACT_CLIP) if l < NUM_LAYERS - 1 else y
+    return h
+
+
+def cross_entropy(logits, onehot):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def qmlp_loss(flat_params, x, onehot, w_bits, a_bits):
+    params = unflatten_params(flat_params)
+    return cross_entropy(_qmlp_logits_ste(x, params, w_bits, a_bits), onehot)
+
+
+def qmlp_train_step(x, onehot, flat_params, w_bits, a_bits, lr):
+    """One quantization-aware SGD step. Returns (new_flat_params..., loss)."""
+    loss, grads = jax.value_and_grad(qmlp_loss)(flat_params, x, onehot, w_bits, a_bits)
+    new_flat = [p - lr * g for p, g in zip(flat_params, grads)]
+    return tuple(new_flat) + (loss,)
+
+
+def crossbar_demo(x, w, w_bits, a_bits):
+    """Single-layer L1 demo: (bit_exact, fast) outputs for runtime equality
+    checking from rust."""
+    w_scale = jnp.max(jnp.abs(w)) / (jnp.exp2(w_bits - 1.0) - 1.0)
+    a_scale = jnp.float32(1.0) / (jnp.exp2(a_bits) - 1.0)
+    y_exact = cvmm.crossbar_vmm_bit_exact(x, w, a_bits, a_scale, w_bits, w_scale)
+    y_fast = cvmm.crossbar_vmm_fast(x, w, a_bits, a_scale, w_bits, w_scale)
+    return y_exact, y_fast
+
+
+# --------------------------------------------------------------------------
+# Synthetic 16×16 digit corpus (substitution for MNIST — DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+
+def make_dataset(n_train=8192, n_test=2048, seed=0):
+    """Procedurally generated 10-class dataset of 16×16 'digit' images.
+
+    Each class is a smooth random template; samples apply random shifts,
+    per-pixel noise, and amplitude jitter. Linearly separable enough to
+    train an MLP into the high 90s yet hard enough that aggressive
+    quantization visibly degrades accuracy — the property the RL reward
+    needs.
+    """
+    rng = np.random.default_rng(seed)
+    # Smooth class templates: low-frequency random fields. A shared
+    # "confuser" component is mixed into every class so templates overlap
+    # and fine weight resolution genuinely matters (see test
+    # test_lower_bits_monotone_distortion and the RL reward).
+    freqs = rng.normal(size=(NUM_CLASSES, 4, 4))
+    shared = rng.normal(size=(4, 4))
+    freqs = 0.45 * freqs + 0.55 * shared[None, :, :]
+    templates = np.zeros((NUM_CLASSES, IMG, IMG), dtype=np.float32)
+    yy, xx = np.meshgrid(np.linspace(0, 1, IMG), np.linspace(0, 1, IMG), indexing="ij")
+    for c in range(NUM_CLASSES):
+        t = np.zeros((IMG, IMG))
+        for i in range(4):
+            for j in range(4):
+                t += freqs[c, i, j] * np.cos(np.pi * (i * yy + j * xx) + 0.7 * c)
+        t = (t - t.min()) / (t.max() - t.min() + 1e-9)
+        templates[c] = t.astype(np.float32)
+
+    def sample(n):
+        labels = rng.integers(0, NUM_CLASSES, size=n)
+        imgs = np.empty((n, IMG, IMG), dtype=np.float32)
+        shifts = rng.integers(-3, 4, size=(n, 2))
+        amps = rng.uniform(0.6, 1.4, size=n).astype(np.float32)
+        noise = rng.normal(0.0, 0.35, size=(n, IMG, IMG)).astype(np.float32)
+        for i in range(n):
+            img = np.roll(templates[labels[i]], tuple(shifts[i]), axis=(0, 1))
+            imgs[i] = img * amps[i] + noise[i]
+        imgs = np.clip(imgs, 0.0, 1.0).reshape(n, IMG * IMG)
+        return imgs.astype(np.float32), labels.astype(np.int32)
+
+    x_train, y_train = sample(n_train)
+    x_test, y_test = sample(n_test)
+    return (x_train, y_train), (x_test, y_test)
+
+
+def onehot(labels, num_classes=NUM_CLASSES):
+    return np.eye(num_classes, dtype=np.float32)[labels]
+
+
+# --------------------------------------------------------------------------
+# Base (f32) training — build-time only
+# --------------------------------------------------------------------------
+
+
+def train_base(params, x_train, y_train, steps=300, batch=256, lr=0.05, seed=1):
+    """Plain-f32 SGD-with-momentum training of the base MLP."""
+    rng = np.random.default_rng(seed)
+    flat = flatten_params(params)
+    onehots = onehot(y_train)
+
+    def loss_fn(flat_params, x, t):
+        params = unflatten_params(flat_params)
+        h = x
+        for l, (w, b) in enumerate(params):
+            y = h @ w + b
+            h = jnp.clip(y, 0.0, ACT_CLIP) if l < NUM_LAYERS - 1 else y
+        return cross_entropy(h, t)
+
+    step_fn = jax.jit(
+        lambda fp, vel, x, t: _sgd_momentum(loss_fn, fp, vel, x, t, lr)
+    )
+    vel = [jnp.zeros_like(p) for p in flat]
+    n = x_train.shape[0]
+    losses = []
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        flat, vel, loss = step_fn(flat, vel, x_train[idx], onehots[idx])
+        losses.append(float(loss))
+    return flat, losses
+
+
+def _sgd_momentum(loss_fn, flat, vel, x, t, lr, mu=0.9):
+    loss, grads = jax.value_and_grad(loss_fn)(flat, x, t)
+    vel = [mu * v + g for v, g in zip(vel, grads)]
+    flat = [p - lr * v for p, v in zip(flat, vel)]
+    return flat, vel, loss
+
+
+def accuracy_f32(flat_params, x, y):
+    """f32 (unquantized) test accuracy of the base model."""
+    params = unflatten_params(flat_params)
+    h = jnp.asarray(x)
+    for l, (w, b) in enumerate(params):
+        z = h @ w + b
+        h = jnp.clip(z, 0.0, ACT_CLIP) if l < NUM_LAYERS - 1 else z
+    return float(jnp.mean(jnp.argmax(h, axis=-1) == jnp.asarray(y)))
+
+
+def accuracy_quant(flat_params, x, y, w_bits, a_bits, batch=256):
+    """Quantized accuracy through the L1 kernel path (build-time checks)."""
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        xb = jnp.asarray(x[i : i + batch])
+        logits = qmlp_logits(xb, flat_params, w_bits, a_bits)
+        correct += int(jnp.sum(jnp.argmax(logits, axis=-1) == jnp.asarray(y[i : i + batch])))
+    return correct / x.shape[0]

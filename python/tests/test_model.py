@@ -1,0 +1,124 @@
+"""L2 tests: quantized MLP forward/backward, dataset generator, and the
+shape ABI the AOT artifacts promise to the rust runtime."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    (xtr, ytr), (xte, yte) = model.make_dataset(n_train=1024, n_test=512, seed=3)
+    return xtr, ytr, xte, yte
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.flatten_params(model.init_params(seed=0))
+
+
+def bits(v):
+    return jnp.full((model.NUM_LAYERS,), float(v), dtype=jnp.float32)
+
+
+def test_dataset_shapes_and_ranges(small_data):
+    xtr, ytr, xte, yte = small_data
+    assert xtr.shape == (1024, 256) and xte.shape == (512, 256)
+    assert xtr.dtype == np.float32 and ytr.dtype == np.int32
+    assert xtr.min() >= 0.0 and xtr.max() <= 1.0
+    assert set(np.unique(ytr)) <= set(range(10))
+
+
+def test_dataset_deterministic():
+    (a, la), _ = model.make_dataset(n_train=64, n_test=16, seed=9)
+    (b, lb), _ = model.make_dataset(n_train=64, n_test=16, seed=9)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+    (c, _), _ = model.make_dataset(n_train=64, n_test=16, seed=10)
+    assert not np.array_equal(a, c)
+
+
+def test_dataset_class_balance(small_data):
+    _, ytr, _, _ = small_data
+    counts = np.bincount(ytr, minlength=10)
+    assert counts.min() > 1024 // 10 // 2, counts
+
+
+def test_logits_shape(params, small_data):
+    xtr, *_ = small_data
+    logits = model.qmlp_logits(jnp.asarray(xtr[:32]), params, bits(8), bits(8))
+    assert logits.shape == (32, 10)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_quantized_8bit_close_to_f32(params, small_data):
+    xtr, *_ = small_data
+    x = jnp.asarray(xtr[:64])
+    q = model.qmlp_logits(x, params, bits(8), bits(8))
+    # f32 forward
+    h = x
+    p = model.unflatten_params(params)
+    for l, (w, b) in enumerate(p):
+        z = jnp.clip(h, 0.0, 1.0 if l == 0 else model.ACT_CLIP) @ w + b
+        h = jnp.clip(z, 0.0, model.ACT_CLIP) if l < model.NUM_LAYERS - 1 else z
+    # 8-bit quantization should track f32 closely (random init, pre-softmax).
+    err = float(jnp.max(jnp.abs(q - h)))
+    scale = float(jnp.max(jnp.abs(h))) + 1e-6
+    assert err / scale < 0.15, (err, scale)
+
+
+def test_lower_bits_monotone_distortion(params, small_data):
+    xtr, *_ = small_data
+    x = jnp.asarray(xtr[:64])
+    ref = model.qmlp_logits(x, params, bits(8), bits(8))
+    errs = []
+    for b in (8, 6, 4, 2):
+        q = model.qmlp_logits(x, params, bits(b), bits(b))
+        errs.append(float(jnp.mean(jnp.abs(q - ref))))
+    assert errs[0] <= errs[1] <= errs[2] <= errs[3], errs
+
+
+def test_train_step_reduces_loss(params, small_data):
+    xtr, ytr, *_ = small_data
+    x = jnp.asarray(xtr[: model.NUM_CLASSES * 12])
+    t = jnp.asarray(model.onehot(ytr[: model.NUM_CLASSES * 12]))
+    flat = list(params)
+    losses = []
+    for _ in range(12):
+        out = model.qmlp_train_step(x, t, flat, bits(8), bits(8), jnp.float32(0.1))
+        flat = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_abi_shapes(params):
+    # The artifact promises: inputs (x, onehot, params..., wb, ab, lr),
+    # outputs (params'..., loss) — 2L+1 outputs.
+    x = jnp.zeros((8, model.LAYER_DIMS[0]), dtype=jnp.float32)
+    t = jnp.zeros((8, model.NUM_CLASSES), dtype=jnp.float32)
+    out = model.qmlp_train_step(x, t, list(params), bits(8), bits(8), jnp.float32(0.01))
+    assert len(out) == 2 * model.NUM_LAYERS + 1
+    for got, want in zip(out[:-1], params):
+        assert got.shape == want.shape
+    assert out[-1].shape == ()
+
+
+def test_base_training_learns():
+    # Needs a real training-set size: the corpus is deliberately noisy
+    # (DESIGN.md §4), so 1k samples memorize without generalizing.
+    (xtr, ytr), (xte, yte) = model.make_dataset(n_train=4096, n_test=512, seed=3)
+    p0 = model.init_params(seed=0)
+    flat, losses = model.train_base(p0, xtr, ytr, steps=220, batch=192)
+    acc = model.accuracy_f32(flat, xte, yte)
+    assert acc > 0.8, f"base training failed to learn: acc={acc}, losses={losses[-5:]}"
+    assert losses[-1] < losses[0]
+
+
+def test_crossbar_demo_outputs_agree():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(0, 1, size=(8, 20)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(20, 12)).astype(np.float32))
+    y_exact, y_fast = model.crossbar_demo(x, w, jnp.float32(5.0), jnp.float32(6.0))
+    np.testing.assert_array_equal(np.asarray(y_exact), np.asarray(y_fast))

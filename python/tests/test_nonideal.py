@@ -1,0 +1,79 @@
+"""Non-ideality kernel tests: the zero-noise case collapses to the ideal
+pipeline; perturbations scale sensibly with their knobs."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import nonideal
+
+
+def case(seed, b=6, r=40, n=24):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.abs(rng.normal(size=(b, r))).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(r, n)).astype(np.float32))
+    return x, w
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    a_bits=st.integers(2, 8),
+    w_bits=st.integers(2, 8),
+)
+def test_zero_noise_equals_ideal(seed, a_bits, w_bits):
+    x, w = case(seed)
+    noisy, ideal = nonideal.crossbar_vmm_nonideal(x, w, a_bits, w_bits)
+    np.testing.assert_allclose(np.asarray(noisy), np.asarray(ideal), rtol=1e-5, atol=1e-5)
+
+
+def test_device_variation_perturbs_monotonically():
+    x, w = case(3)
+    errs = []
+    for sigma in (0.0, 0.02, 0.1, 0.3):
+        noisy, ideal = nonideal.crossbar_vmm_nonideal(
+            x, w, 6, 6, sigma_device=sigma, seed=11
+        )
+        scale = float(jnp.mean(jnp.abs(ideal))) + 1e-9
+        errs.append(float(jnp.mean(jnp.abs(noisy - ideal))) / scale)
+    assert errs[0] < 1e-6
+    assert errs[0] <= errs[1] <= errs[2] <= errs[3], errs
+
+
+def test_drift_shrinks_magnitudes():
+    x, w = case(5)
+    noisy, ideal = nonideal.crossbar_vmm_nonideal(
+        x, w, 6, 6, drift_nu=0.05, decades=3.0, seed=2
+    )
+    # Drift multiplies conductances by (10^3)^(-0.05) ≈ 0.708.
+    ratio = float(jnp.sum(jnp.abs(noisy)) / (jnp.sum(jnp.abs(ideal)) + 1e-9))
+    assert 0.6 < ratio < 0.8, ratio
+
+
+def test_read_noise_is_zero_mean():
+    x, w = case(9)
+    diffs = []
+    for seed in range(6):
+        noisy, ideal = nonideal.crossbar_vmm_nonideal(
+            x, w, 6, 6, sigma_read=2.0, seed=seed
+        )
+        diffs.append(float(jnp.mean(noisy - ideal)))
+    assert abs(np.mean(diffs)) < 0.5, diffs
+
+
+def test_lower_precision_more_noise_sensitive():
+    # Relative error from the same device variation grows as fewer levels
+    # separate the quantized states — the reason the paper favors 1-bit
+    # devices with digital shift-add (§II).
+    x, w = case(13, b=8, r=64, n=32)
+    rel = {}
+    for w_bits in (8, 3):
+        noisy, ideal = nonideal.crossbar_vmm_nonideal(
+            x, w, 6, w_bits, sigma_device=0.15, seed=7
+        )
+        scale = float(jnp.mean(jnp.abs(ideal))) + 1e-9
+        rel[w_bits] = float(jnp.mean(jnp.abs(noisy - ideal))) / scale
+    # Both perturbed, neither catastrophically (shift-add keeps slices small).
+    assert rel[8] > 0.0 and rel[3] > 0.0
+    assert rel[3] < 5.0 and rel[8] < 5.0

@@ -1,0 +1,87 @@
+//! Extension ablation (beyond the paper — its §V-C defers non-idealities):
+//! how analog device variation shifts the accuracy/performance trade-off of
+//! the LRMP search on ResNet-18. Expectation: latency improvements are
+//! noise-robust (they depend on geometry, not devices), while the
+//! achievable accuracy degrades monotonically with σ_device and the agent
+//! compensates by retaining more weight bits.
+
+use lrmp::bench_harness::Table;
+use lrmp::cost::CostModel;
+use lrmp::lrmp::{AccuracyProvider, Lrmp, SearchConfig};
+use lrmp::nets;
+use lrmp::quant::nonideal::{NoisySurrogate, NonidealParams};
+use lrmp::quant::SqnrSurrogate;
+
+fn main() {
+    let net = nets::resnet::resnet18();
+    let model = CostModel::paper();
+    let episodes = std::env::var("LRMP_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20);
+    println!(
+        "=== Extension ablation: LRMP under analog device variation \
+         (ResNet18, {episodes} episodes/point) ===\n"
+    );
+
+    let mut t = Table::new(&[
+        "sigma_device",
+        "latency x",
+        "finetuned acc",
+        "mean w bits",
+        "baseline acc (noisy chip)",
+    ]);
+    let mut accs = Vec::new();
+    let mut lats = Vec::new();
+    for sigma in [0.0, 0.05, 0.10, 0.20] {
+        let params = NonidealParams {
+            sigma_device: sigma,
+            ..NonidealParams::ideal()
+        };
+        let mut provider =
+            NoisySurrogate::new(&net, SqnrSurrogate::for_benchmark(&net), params);
+        let baseline_acc = provider.baseline();
+        let cfg = SearchConfig {
+            episodes,
+            updates_per_episode: 4,
+            lambda: 10.0,
+            seed: 0x0a5e,
+            ..Default::default()
+        };
+        let res = Lrmp::new(&model, &net, cfg)
+            .run(&mut provider)
+            .expect("search");
+        let (mw, _) = res.best_policy.mean_bits();
+        t.row(&[
+            format!("{sigma:.2}"),
+            format!("{:.2}", res.latency_improvement()),
+            format!("{:.4}", res.finetuned_accuracy),
+            format!("{mw:.1}"),
+            format!("{baseline_acc:.4}"),
+        ]);
+        accs.push(res.finetuned_accuracy);
+        lats.push(res.latency_improvement());
+    }
+    t.print();
+
+    // Shape assertions.
+    for w in accs.windows(2) {
+        assert!(
+            w[1] <= w[0] + 0.01,
+            "accuracy should not improve with more device noise: {accs:?}"
+        );
+    }
+    for &l in &lats {
+        assert!(
+            l >= 3.0,
+            "latency improvements must be noise-robust (geometry-driven): {lats:?}"
+        );
+    }
+    println!(
+        "\nlatency improvements stay {:.1}-{:.1}x across the noise sweep while \
+         accuracy degrades gracefully — LRMP's performance wins are device-robust.",
+        lats.iter().cloned().fold(f64::INFINITY, f64::min),
+        lats.iter().cloned().fold(0.0, f64::max)
+    );
+    println!("all noise-ablation assertions passed");
+}

@@ -1,0 +1,79 @@
+//! Fig 2 reproduction: the §III motivating experiment on ResNet-18 —
+//! (a) the 8-bit baseline breakdown, (b) selective 6-bit quantization,
+//! (c) naive replication of the bottleneck — with the paper's numbers
+//! asserted as tolerances.
+
+use lrmp::bench_harness::Table;
+use lrmp::cost::CostModel;
+use lrmp::nets;
+use lrmp::quant::Policy;
+
+fn main() {
+    let net = nets::resnet::resnet18();
+    let model = CostModel::paper();
+    let nl = net.num_layers();
+    let base = model.baseline(&net);
+
+    println!("=== Fig 2(a): baseline per-layer breakdown (top 6 by latency) ===\n");
+    let mut idx: Vec<usize> = (0..nl).collect();
+    idx.sort_by(|&a, &b| {
+        base.layers[b]
+            .total_cycles()
+            .cmp(&base.layers[a].total_cycles())
+    });
+    let mut t = Table::new(&["layer", "tiles", "Mcycles", "share %"]);
+    for &i in idx.iter().take(6) {
+        t.row(&[
+            net.layers[i].name.clone(),
+            base.layers[i].tiles.to_string(),
+            format!("{:.2}", base.layers[i].total_cycles() as f64 / 1e6),
+            format!(
+                "{:.1}",
+                100.0 * base.layers[i].total_cycles() as f64 / base.total_cycles
+            ),
+        ]);
+    }
+    t.print();
+    assert_eq!(base.bottleneck_layer, 0, "conv1 must bottleneck the baseline");
+
+    // (b) selective quantization.
+    let heavy = net
+        .layers
+        .iter()
+        .position(|l| l.name == "layer4.1.conv2")
+        .unwrap();
+    let mut p = Policy::baseline(nl);
+    p.layers[heavy].w_bits = 6;
+    p.layers[0].a_bits = 6;
+    let q = model.network(&net, &p, &vec![1; nl]);
+    let freed = base.tiles_used - q.tiles_used;
+    let lat_b = 100.0 * (1.0 - q.total_cycles / base.total_cycles);
+    let thr_b = q.throughput() / base.throughput();
+
+    // (c) naive replication.
+    let copies = freed / q.layers[0].tiles;
+    let mut repl = vec![1u64; nl];
+    repl[0] += copies;
+    let r = model.network(&net, &p, &repl);
+    let lat_c = 100.0 * (1.0 - r.total_cycles / base.total_cycles);
+    let thr_c = r.throughput() / base.throughput();
+
+    println!("\n=== Fig 2(b)/(c): paper vs measured ===\n");
+    let mut t2 = Table::new(&["quantity", "paper", "ours"]);
+    t2.row(&["(b) tiles conserved".into(), "72".into(), freed.to_string()]);
+    t2.row(&["(b) latency reduction".into(), "5.7%".into(), format!("{lat_b:.1}%")]);
+    t2.row(&["(b) throughput gain".into(), "1.33x".into(), format!("{thr_b:.2}x")]);
+    t2.row(&["(c) extra conv1 copies".into(), "9".into(), copies.to_string()]);
+    t2.row(&["(c) latency reduction".into(), "25.5%".into(), format!("{lat_c:.1}%")]);
+    t2.row(&["(c) throughput gain".into(), "2.34x".into(), format!("{thr_c:.2}x")]);
+    t2.print();
+
+    // Shape assertions (see EXPERIMENTS.md for the discussion).
+    assert_eq!(freed, 72, "Eqn-2 tile conservation must match exactly");
+    assert!((thr_b - 1.33).abs() < 0.02, "throughput(b) {thr_b}");
+    assert_eq!(copies, 9, "naive replication copy count");
+    assert!((thr_c - 2.34).abs() < 0.05, "throughput(c) {thr_c}");
+    assert!((3.0..9.0).contains(&lat_b), "latency(b) {lat_b}% vs paper 5.7%");
+    assert!((20.0..32.0).contains(&lat_c), "latency(c) {lat_c}% vs paper 25.5%");
+    println!("\nall Fig 2 assertions passed");
+}

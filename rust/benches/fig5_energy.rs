@@ -1,0 +1,100 @@
+//! Fig 5 reproduction: energy improvements achieved by LRMP (a byproduct of
+//! quantization shrinking the bit-slice/bit-stream products and of shorter
+//! makespans cutting SRAM leakage). Paper: 5.5–10.6× (throughputOptim),
+//! 5.5–9× (latencyOptim). The energy model components are RRAM tile energy,
+//! vector-module SRAM accesses, and SRAM leakage (§VI-B).
+
+use lrmp::bench_harness::Table;
+use lrmp::cost::energy::EnergyReport;
+use lrmp::cost::CostModel;
+use lrmp::lrmp::{Lrmp, SearchConfig};
+use lrmp::nets;
+use lrmp::quant::SqnrSurrogate;
+use lrmp::replication::Objective;
+
+fn episodes() -> usize {
+    std::env::var("LRMP_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24)
+}
+
+fn main() {
+    let model = CostModel::paper();
+    let eps = episodes();
+    println!("=== Fig 5: energy improvements ({eps} episodes/search) ===\n");
+    let mut t = Table::new(&[
+        "benchmark",
+        "mode",
+        "energy x",
+        "tile mJ",
+        "sram mJ",
+        "leak mJ",
+    ]);
+    let mut improvements = Vec::new();
+    for net in nets::paper_benchmarks() {
+        let base = model.baseline(&net);
+        let base_rep = EnergyReport::of(&base);
+        for (mode, objective, b_end) in [
+            ("latencyOptim", Objective::Latency, 0.20),
+            ("throughputOptim", Objective::Throughput, 0.08),
+        ] {
+            let mut surrogate = SqnrSurrogate::for_benchmark(&net);
+            let cfg = SearchConfig {
+                objective,
+                episodes: eps,
+                updates_per_episode: 4,
+                lambda: 10.0,
+                budget_end: b_end,
+                ..Default::default()
+            };
+            let res = Lrmp::new(&model, &net, cfg)
+                .run(&mut surrogate)
+                .expect("search");
+            let rep = EnergyReport::of(&res.optimized);
+            let imp = res.energy_improvement();
+            improvements.push(imp);
+            t.row(&[
+                net.name.clone(),
+                mode.into(),
+                format!("{imp:.2}"),
+                format!("{:.2}", rep.tile_j * 1e3),
+                format!("{:.2}", rep.sram_dynamic_j * 1e3),
+                format!("{:.2}", rep.sram_leak_j * 1e3),
+            ]);
+        }
+        println!(
+            "{} baseline energy: {:.2} mJ/inf (tile {:.2} / sram {:.2} / leak {:.2})",
+            net.name,
+            base_rep.total_j() * 1e3,
+            base_rep.tile_j * 1e3,
+            base_rep.sram_dynamic_j * 1e3,
+            base_rep.sram_leak_j * 1e3
+        );
+    }
+    println!();
+    t.print();
+
+    let min = improvements.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = improvements.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "\npaper: 5.5-10.6x (throughputOptim), 5.5-9x (latencyOptim); ours: {min:.1}-{max:.1}x"
+    );
+    println!(
+        "divergence note (EXPERIMENTS.md): our throughputOptim policies keep\n\
+         non-bottleneck layers at high precision (Eqn 8 gives them no reason to\n\
+         quantize), so their energy wins are smaller than the paper's; the\n\
+         latencyOptim shape (multi-x, growing with quantization depth) matches."
+    );
+    // Shape: every configuration improves energy multiplicatively; the
+    // latencyOptim runs land in the paper's decade (our SRAM/leakage
+    // constants are 40nm-class estimates — DESIGN.md §6).
+    for (i, &e) in improvements.iter().enumerate() {
+        let is_latency_mode = i % 2 == 0;
+        let floor = if is_latency_mode { 2.3 } else { 1.4 };
+        assert!(e > floor, "config {i}: energy improvement {e} below {floor}");
+        assert!(e < 20.0, "config {i}: energy improvement {e} implausible");
+    }
+    assert!(max > 5.0, "best energy improvement {max} should exceed 5x");
+    println!("all Fig 5 shape assertions passed");
+}

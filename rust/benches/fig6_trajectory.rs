@@ -1,0 +1,99 @@
+//! Fig 6 reproduction: the trajectory of the RL agent jointly optimizing
+//! ResNet-18 for accuracy and latency — the budget starts lenient at 0.35×
+//! baseline latency and tightens exponentially to 0.2×; over the episodes
+//! the agent finds policies reaching ~5× latency improvement while holding
+//! accuracy (paper: "upto 5× improvement in latency ... while also
+//! improving the accuracy").
+
+use lrmp::bench_harness::Table;
+use lrmp::cost::CostModel;
+use lrmp::lrmp::{Lrmp, SearchConfig};
+use lrmp::nets;
+use lrmp::quant::SqnrSurrogate;
+use lrmp::replication::Objective;
+
+fn main() {
+    let net = nets::resnet::resnet18();
+    let model = CostModel::paper();
+    let episodes = std::env::var("LRMP_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48);
+    let cfg = SearchConfig {
+        objective: Objective::Latency,
+        episodes,
+        updates_per_episode: 6,
+        lambda: 10.0,
+        budget_start: 0.35,
+        budget_end: 0.20,
+        ..Default::default()
+    };
+    let search = Lrmp::new(&model, &net, cfg);
+    let mut surrogate = SqnrSurrogate::for_benchmark(&net);
+    println!(
+        "=== Fig 6: RL trajectory, ResNet18 latencyOptim, budget 0.35x -> 0.2x \
+         ({episodes} episodes) ===\n"
+    );
+    let t0 = std::time::Instant::now();
+    let res = search.run(&mut surrogate).expect("search");
+    println!("search wall-clock: {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let mut t = Table::new(&[
+        "episode",
+        "budget x",
+        "latency x",
+        "acc (reward est.)",
+        "reward",
+        "mean bits w/a",
+    ]);
+    for e in res
+        .trajectory
+        .iter()
+        .step_by((episodes / 16).max(1))
+        .chain(res.trajectory.last())
+    {
+        t.row(&[
+            e.episode.to_string(),
+            format!("{:.3}", e.budget_fraction),
+            format!("{:.2}", e.latency_improvement),
+            format!("{:.4}", e.accuracy),
+            format!("{:+.3}", e.reward),
+            format!("{:.1}/{:.1}", e.mean_w_bits, e.mean_a_bits),
+        ]);
+    }
+    t.print();
+
+    // --- Fig 6 shape assertions ---
+    // (1) budget anchors: 0.35 → 0.20, exponentially monotone.
+    assert!((res.trajectory[0].budget_fraction - 0.35).abs() < 1e-9);
+    assert!((res.trajectory.last().unwrap().budget_fraction - 0.20).abs() < 1e-9);
+    for w in res.trajectory.windows(2) {
+        assert!(w[1].budget_fraction <= w[0].budget_fraction + 1e-12);
+    }
+    // (2) the agent reaches ~5× latency improvement (paper: "upto 5×").
+    let best_lat = res
+        .trajectory
+        .iter()
+        .map(|e| e.latency_improvement)
+        .fold(0.0, f64::max);
+    assert!(best_lat >= 4.5, "best latency improvement {best_lat} < 4.5x");
+    // (3) late-phase rewards beat the early ones (the agent learns).
+    let half = res.trajectory.len() / 2;
+    let early: f64 = res.trajectory[..half]
+        .iter()
+        .map(|e| e.reward)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let late: f64 = res.trajectory[half..]
+        .iter()
+        .map(|e| e.reward)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nbest latency improvement {best_lat:.2}x (paper: up to 5x); \
+         best reward early {early:+.3} vs late {late:+.3}"
+    );
+    assert!(
+        late >= early - 0.05,
+        "agent failed to hold/improve reward: early {early} late {late}"
+    );
+    println!("all Fig 6 shape assertions passed");
+}

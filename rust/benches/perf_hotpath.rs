@@ -1,0 +1,170 @@
+//! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf): the operations the
+//! LRMP search loop and the runtime execute millions / thousands of times.
+//! Targets (DESIGN.md §9):
+//!   cost-model ≥ 10^6 layer-evals/s; latencyOptim LP (RN101) ≤ 10 ms;
+//!   DDPG act ≤ 20 µs, update ≤ 2 ms; simulator ≥ 10^5 events/s;
+//!   PJRT accuracy-eval dominated by XLA compute.
+
+use lrmp::bench_harness::Bencher;
+use lrmp::cost::CostModel;
+use lrmp::lp::mckp::{self, Choice};
+use lrmp::nets;
+use lrmp::quant::{LayerPrecision, Policy};
+use lrmp::replication::{self, LayerSummary, Objective};
+use lrmp::rl::ddpg::{Ddpg, DdpgConfig, Transition};
+use lrmp::rl::env::OBS_DIM;
+use lrmp::runtime;
+use lrmp::sim;
+use lrmp::util::json::Json;
+use lrmp::util::prng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let model = CostModel::paper();
+    let rn18 = nets::resnet::resnet18();
+    let rn101 = nets::resnet::resnet101();
+
+    println!("=== L3 hot-path microbenchmarks ===\n");
+
+    // --- cost model ---
+    let policy18 = Policy::baseline(rn18.num_layers());
+    let repl18 = vec![1u64; rn18.num_layers()];
+    let layer = &rn18.layers[5];
+    let prec = LayerPrecision::new(5, 6);
+    let r = b.run("cost: single layer eval", || {
+        std::hint::black_box(model.layer(layer, prec));
+    });
+    println!("  -> {:.2} M layer-evals/s\n", r.throughput() / 1e6);
+    b.run("cost: full RN18 network eval", || {
+        std::hint::black_box(model.network(&rn18, &policy18, &repl18));
+    });
+
+    // --- replication optimizers ---
+    let costs18 = model.layers(&rn18, &policy18);
+    let sum18 = LayerSummary::from_costs(&costs18);
+    let quant101 = Policy::uniform(rn101.num_layers(), 4, 4);
+    let costs101 = model.layers(&rn101, &quant101);
+    let sum101 = LayerSummary::from_costs(&costs101);
+    let tiles18 = rn18.tiles_at_uniform(256, 8, 1);
+    let tiles101 = rn101.tiles_at_uniform(256, 8, 1);
+    let r = b.run("LP: latencyOptim MCKP-DP RN18", || {
+        std::hint::black_box(replication::latency_optim(&sum18, tiles18).unwrap());
+    });
+    let rn18_ms = r.mean() * 1e3;
+    let r = b.run("LP: latencyOptim MCKP-DP RN101@4b", || {
+        std::hint::black_box(replication::latency_optim(&sum101, tiles101).unwrap());
+    });
+    let rn101_ms = r.mean() * 1e3;
+    b.run("LP: throughputOptim bisect RN101@4b", || {
+        std::hint::black_box(replication::throughput_optim(&sum101, tiles101).unwrap());
+    });
+    b.run("LP: greedy (enforcement inner) RN101@4b", || {
+        std::hint::black_box(
+            replication::greedy(&sum101, tiles101, Objective::Latency).unwrap(),
+        );
+    });
+    println!(
+        "  -> exact DP: RN18 {rn18_ms:.2} ms, RN101 {rn101_ms:.2} ms (target ≤ 10 ms)\n"
+    );
+
+    // --- raw MCKP kernel ---
+    let mut rng = Rng::new(3);
+    let groups: Vec<Vec<Choice>> = (0..40)
+        .map(|_| {
+            (1..=24u64)
+                .map(|r| Choice {
+                    weight: rng.int_range(1, 12) as u64 * r,
+                    cost: 1e6 / r as f64,
+                })
+                .collect()
+        })
+        .collect();
+    b.run("LP: raw MCKP 40 groups x 24 choices, cap 2000", || {
+        std::hint::black_box(mckp::solve(&groups, 2000));
+    });
+
+    // --- DDPG agent ---
+    let mut agent = Ddpg::new(DdpgConfig::default_for(OBS_DIM, 2, 1));
+    let obs = vec![0.3; OBS_DIM];
+    for _ in 0..256 {
+        agent.replay.push(Transition {
+            state: obs.clone(),
+            action: vec![0.5, 0.5],
+            reward: 0.1,
+            next_state: obs.clone(),
+            terminal: false,
+        });
+    }
+    let r = b.run("RL: DDPG act", || {
+        std::hint::black_box(agent.act(&obs));
+    });
+    println!("  -> act {:.1} us (target ≤ 20 us)\n", r.mean() * 1e6);
+    let r = b.run("RL: DDPG minibatch update", || {
+        std::hint::black_box(agent.update());
+    });
+    println!("  -> update {:.2} ms (target ≤ 2 ms)\n", r.mean() * 1e3);
+
+    // --- simulator ---
+    let conv = &rn18.layers[8];
+    let sim_res = sim::simulate_layer(&model, conv, LayerPrecision::new(8, 8), 2);
+    let r = b.run("sim: event-driven layer (conv, r=2)", || {
+        std::hint::black_box(sim::simulate_layer(
+            &model,
+            conv,
+            LayerPrecision::new(8, 8),
+            2,
+        ));
+    });
+    println!(
+        "  -> {:.2} M events/s (target ≥ 0.1 M)\n",
+        sim_res.events as f64 / r.mean() / 1e6
+    );
+
+    // --- JSON substrate ---
+    let payload = Json::obj(vec![
+        ("policy", Policy::uniform(105, 5, 6).to_json()),
+        ("trajectory", Json::arr_f64(&vec![1.25; 256])),
+    ])
+    .pretty();
+    b.run("util: JSON parse 105-layer report", || {
+        std::hint::black_box(Json::parse(&payload).unwrap());
+    });
+
+    // --- PJRT request path (requires artifacts) ---
+    let dir = runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        println!("\n=== PJRT request path (artifacts found) ===\n");
+        let engine = lrmp::runtime::engine::Engine::start(dir).expect("engine");
+        let bsz = engine.eval_batch * engine.input_dim;
+        let x: Vec<f32> = (0..bsz).map(|i| (i % 97) as f32 / 97.0).collect();
+        let wb = vec![5.0f32; engine.num_layers];
+        let ab = vec![6.0f32; engine.num_layers];
+        let quick = Bencher::quick();
+        let r = quick.run("runtime: eval 256-batch quantized infer", || {
+            std::hint::black_box(
+                engine.eval(x.clone(), wb.clone(), ab.clone()).unwrap(),
+            );
+        });
+        println!(
+            "  -> {:.1} inferences/s through the full PJRT path ({} samples/batch)",
+            engine.eval_batch as f64 * r.throughput(),
+            engine.eval_batch
+        );
+        let xt: Vec<f32> = (0..engine.train_batch * engine.input_dim)
+            .map(|i| (i % 89) as f32 / 89.0)
+            .collect();
+        let mut onehot = vec![0.0f32; engine.train_batch * engine.num_classes];
+        for i in 0..engine.train_batch {
+            onehot[i * engine.num_classes + i % engine.num_classes] = 1.0;
+        }
+        quick.run("runtime: finetune step (fwd+bwd+sgd)", || {
+            std::hint::black_box(
+                engine
+                    .train_step(xt.clone(), onehot.clone(), wb.clone(), ab.clone(), 0.0)
+                    .unwrap(),
+            );
+        });
+    } else {
+        println!("\n(PJRT benches skipped: run `make artifacts` first)");
+    }
+}

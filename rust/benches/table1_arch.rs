@@ -1,0 +1,45 @@
+//! Table I reproduction: the microarchitectural parameters of the scaled
+//! ISSCC'22 system, plus the derived quantities the cost model relies on,
+//! with validity assertions (ADC never clips, scaling relations hold).
+
+use lrmp::arch::ChipConfig;
+use lrmp::bench_harness::Table;
+
+fn main() {
+    let chip = ChipConfig::paper_scaled();
+    assert!(chip.validate().is_empty(), "{:?}", chip.validate());
+
+    println!("=== Table I: microarchitectural parameters (paper vs ours) ===\n");
+    let mut t = Table::new(&["parameter", "paper", "ours"]);
+    let rows: Vec<(&str, String, String)> = vec![
+        ("eNVM", "1T-1R RRAM".into(), "1T-1R RRAM (modeled)".into()),
+        ("tile size", "256x256".into(), format!("{0}x{0}", chip.tile_size)),
+        ("no. of tiles", "5682".into(), chip.n_tiles.to_string()),
+        ("no. of vector modules", "40".into(), chip.n_vector_modules.to_string()),
+        ("device precision", "1 bit".into(), format!("{} bit", chip.device_bits)),
+        ("row parallelism", "9".into(), chip.row_parallelism.to_string()),
+        ("DAC precision", "1 bit".into(), format!("{} bit", chip.dac_bits)),
+        ("column parallelism", "8".into(), chip.adcs_per_tile.to_string()),
+        ("ADC precision", "4 bits".into(), format!("{} bits", chip.adc_bits)),
+        ("avg power per tile", "70 uW".into(), format!("{:.0} uW", chip.tile_power_w * 1e6)),
+        ("clock frequency", "192 MHz".into(), format!("{:.0} MHz", chip.clock_hz / 1e6)),
+    ];
+    for (p, a, b) in rows {
+        t.row(&[p.to_string(), a, b]);
+    }
+    t.print();
+
+    println!("\nderived quantities used by the cost model:");
+    println!("  ADC batches per tile read      : {}", chip.adc_batches());
+    println!("  row phases for a full tile     : {}", chip.row_phases(256));
+    println!("  max analog partial sum         : {} (< 2^{} = {}; no clipping)",
+        chip.max_partial_sum(), chip.adc_bits, 1u64 << chip.adc_bits);
+    println!("  tiles per vector-module cluster: {}", chip.tiles_per_cluster());
+    println!(
+        "  base ISSCC'22 system scaling   : 288 tiles/2 VMs -> {} tiles/{} VMs",
+        chip.n_tiles, chip.n_vector_modules
+    );
+    let base = ChipConfig::isscc22_base();
+    assert_eq!(base.tiles_per_cluster(), 144);
+    println!("\nall Table I assertions passed");
+}

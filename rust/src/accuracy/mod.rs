@@ -1,0 +1,187 @@
+//! Accuracy evaluation + quantization-aware finetuning over the PJRT
+//! artifacts (paper §IV-D reward term and §V-B finetuning phase), driven
+//! entirely from rust through `runtime::engine::Engine`.
+
+use crate::quant::Policy;
+use crate::runtime::engine::Engine;
+use crate::util::io::Tensor;
+use crate::util::prng::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Held-out dataset in host memory.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub dim: usize,
+}
+
+impl Dataset {
+    pub fn from_tensors(x: &Tensor, y: &Tensor) -> Result<Dataset> {
+        let dims = &x.dims;
+        if dims.len() != 2 {
+            bail!("expected [N, D] inputs, got {dims:?}");
+        }
+        let (n, dim) = (dims[0], dims[1]);
+        let xv = x.as_f32().context("x must be f32")?.to_vec();
+        let yv = y.as_i32().context("y must be i32")?.to_vec();
+        if yv.len() != n {
+            bail!("label count {} != sample count {n}", yv.len());
+        }
+        Ok(Dataset {
+            x: xv,
+            y: yv,
+            n,
+            dim,
+        })
+    }
+}
+
+/// Policy bit-vectors in the artifact ABI (f32 per layer).
+pub fn policy_bits(policy: &Policy) -> (Vec<f32>, Vec<f32>) {
+    (
+        policy.layers.iter().map(|l| l.w_bits as f32).collect(),
+        policy.layers.iter().map(|l| l.a_bits as f32).collect(),
+    )
+}
+
+/// Batched accuracy/finetune driver over the engine.
+pub struct Evaluator {
+    pub engine: Engine,
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+impl Evaluator {
+    pub fn new(artifacts_dir: &Path) -> Result<Evaluator> {
+        let engine = Engine::start(artifacts_dir.to_path_buf())?;
+        // Load datasets via a throwaway manifest read (tensors only).
+        let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
+        let train = Dataset::from_tensors(
+            &manifest.tensor(&manifest.dataset.x_train)?,
+            &manifest.tensor(&manifest.dataset.y_train)?,
+        )?;
+        let test = Dataset::from_tensors(
+            &manifest.tensor(&manifest.dataset.x_test)?,
+            &manifest.tensor(&manifest.dataset.y_test)?,
+        )?;
+        if train.dim != engine.input_dim || test.dim != engine.input_dim {
+            bail!(
+                "dataset dim {} != model input dim {}",
+                train.dim,
+                engine.input_dim
+            );
+        }
+        Ok(Evaluator {
+            engine,
+            train,
+            test,
+        })
+    }
+
+    /// Top-1 accuracy of the current engine parameters under `policy`,
+    /// over at most `max_samples` test samples (0 = all).
+    pub fn accuracy(&self, policy: &Policy, max_samples: usize) -> Result<f64> {
+        let (wb, ab) = policy_bits(policy);
+        let b = self.engine.eval_batch;
+        let dim = self.engine.input_dim;
+        let classes = self.engine.num_classes;
+        let n = if max_samples == 0 {
+            self.test.n
+        } else {
+            self.test.n.min(max_samples)
+        };
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut batch = vec![0f32; b * dim];
+        while seen < n {
+            let take = (n - seen).min(b);
+            batch[..take * dim]
+                .copy_from_slice(&self.test.x[seen * dim..(seen + take) * dim]);
+            // Zero-pad the tail batch; padded rows are ignored below.
+            for v in batch[take * dim..].iter_mut() {
+                *v = 0.0;
+            }
+            let logits = self
+                .engine
+                .eval(batch.clone(), wb.clone(), ab.clone())
+                .context("eval batch")?;
+            for i in 0..take {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as i32)
+                    .unwrap();
+                if pred == self.test.y[seen + i] {
+                    correct += 1;
+                }
+            }
+            seen += take;
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    /// Quantization-aware finetuning: `steps` SGD steps at `lr` on random
+    /// train batches under `policy`. Returns the per-step losses.
+    pub fn finetune(&self, policy: &Policy, steps: usize, lr: f32, seed: u64) -> Result<Vec<f32>> {
+        let (wb, ab) = policy_bits(policy);
+        let bt = self.engine.train_batch;
+        let dim = self.engine.input_dim;
+        let classes = self.engine.num_classes;
+        let mut rng = Rng::new(seed);
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let mut x = Vec::with_capacity(bt * dim);
+            let mut t = vec![0f32; bt * classes];
+            for i in 0..bt {
+                let j = rng.below(self.train.n as u64) as usize;
+                x.extend_from_slice(&self.train.x[j * dim..(j + 1) * dim]);
+                t[i * classes + self.train.y[j] as usize] = 1.0;
+            }
+            let loss = self
+                .engine
+                .train_step(x, t, wb.clone(), ab.clone(), lr)
+                .context("train step")?;
+            losses.push(loss);
+        }
+        Ok(losses)
+    }
+
+    /// Restore pristine base-trained parameters (undo finetuning).
+    pub fn reset(&self) -> Result<()> {
+        self.engine.reset_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_from_tensors_validates() {
+        let x = Tensor::f32(vec![4, 3], vec![0.0; 12]);
+        let y = Tensor::i32(vec![4], vec![0, 1, 2, 3]);
+        let d = Dataset::from_tensors(&x, &y).unwrap();
+        assert_eq!((d.n, d.dim), (4, 3));
+
+        let bad_y = Tensor::i32(vec![3], vec![0, 1, 2]);
+        assert!(Dataset::from_tensors(&x, &bad_y).is_err());
+
+        let bad_x = Tensor::f32(vec![12], vec![0.0; 12]);
+        assert!(Dataset::from_tensors(&bad_x, &y).is_err());
+    }
+
+    #[test]
+    fn policy_bits_abi_order() {
+        let mut p = Policy::baseline(3);
+        p.layers[1].w_bits = 4;
+        p.layers[2].a_bits = 5;
+        let (wb, ab) = policy_bits(&p);
+        assert_eq!(wb, vec![8.0, 4.0, 8.0]);
+        assert_eq!(ab, vec![8.0, 8.0, 5.0]);
+    }
+}

@@ -1,0 +1,207 @@
+//! Microarchitecture model of the target spatial IMC chip (paper §IV-A /
+//! Table I): a scaled-up version of the ISSCC'22 40nm RRAM/SRAM
+//! compute-in-memory system [17] — 1T-1R RRAM crossbar tiles with per-tile
+//! Flash ADCs, digital vector modules, and shared transport buses.
+
+use crate::util::ceil_div;
+
+/// Full chip configuration. Field names follow Table I of the paper.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipConfig {
+    /// Crossbar tile dimension X (tiles are X×X). Paper: 256.
+    pub tile_size: u64,
+    /// Total crossbar tiles on chip (the area constraint N_tiles). Paper: 5682.
+    pub n_tiles: u64,
+    /// Digital vector modules. Paper: 40.
+    pub n_vector_modules: u64,
+    /// Parallel compute lanes per vector module. Paper: 64 (scaled system).
+    pub lanes_per_vm: u64,
+    /// Bits stored per RRAM device (s_b). Paper: 1.
+    pub device_bits: u32,
+    /// Wordlines activated simultaneously (row parallelism p). Paper: 9.
+    pub row_parallelism: u64,
+    /// DAC precision in bits (inputs are streamed 1 bit at a time). Paper: 1.
+    pub dac_bits: u32,
+    /// ADCs per tile (column parallelism n_ADC). Paper: 8.
+    pub adcs_per_tile: u64,
+    /// ADC precision in bits. Paper: 4 (sufficient for 9-row 1-bit partial sums).
+    pub adc_bits: u32,
+    /// Average power per active tile, in watts. Paper: 70 µW.
+    pub tile_power_w: f64,
+    /// Clock frequency in Hz. Paper: 192 MHz.
+    pub clock_hz: f64,
+    /// SRAM per vector module, in bytes. ISSCC'22 system: 128 KB.
+    pub sram_per_vm_bytes: u64,
+    /// Input-transport lanes per tile cluster (VM → tiles). ISSCC'22: 8 lanes.
+    pub in_bus_lanes: u64,
+    /// Width of each input-transport lane, bits. ISSCC'22: 8.
+    pub in_bus_bits: u64,
+    /// Output-transport lanes per tile cluster (tiles → VM). ISSCC'22: 8 lanes.
+    pub out_bus_lanes: u64,
+    /// Width of each output-transport lane, bits. ISSCC'22: 32.
+    pub out_bus_bits: u64,
+    /// Cycles for one tile access phase (drive rows, settle, one ADC batch).
+    pub tile_phase_cycles: u64,
+    /// SRAM dynamic energy per 32-bit access, joules (40nm-class estimate).
+    pub sram_access_j: f64,
+    /// SRAM leakage power per vector module, watts (40nm-class estimate).
+    pub sram_leak_w_per_vm: f64,
+}
+
+impl ChipConfig {
+    /// The scaled-up evaluation system of the paper (Table I).
+    pub fn paper_scaled() -> Self {
+        ChipConfig {
+            tile_size: 256,
+            n_tiles: 5682,
+            n_vector_modules: 40,
+            lanes_per_vm: 64,
+            device_bits: 1,
+            row_parallelism: 9,
+            dac_bits: 1,
+            adcs_per_tile: 8,
+            adc_bits: 4,
+            tile_power_w: 70e-6,
+            clock_hz: 192e6,
+            sram_per_vm_bytes: 128 * 1024,
+            in_bus_lanes: 8,
+            in_bus_bits: 8,
+            out_bus_lanes: 8,
+            out_bus_bits: 32,
+            tile_phase_cycles: 1,
+            sram_access_j: 2e-12,
+            sram_leak_w_per_vm: 5e-5,
+        }
+    }
+
+    /// The fabricated ISSCC'22 base system [17]: 288 tiles, 2 vector modules,
+    /// 8 lanes each. Used by tests to check the scaling relationships.
+    pub fn isscc22_base() -> Self {
+        ChipConfig {
+            n_tiles: 288,
+            n_vector_modules: 2,
+            lanes_per_vm: 8,
+            ..Self::paper_scaled()
+        }
+    }
+
+    /// A config with a different total-tile budget (area-sensitivity sweeps,
+    /// Fig 8). All other parameters unchanged.
+    pub fn with_tiles(&self, n_tiles: u64) -> Self {
+        ChipConfig {
+            n_tiles,
+            ..self.clone()
+        }
+    }
+
+    /// Tiles served by one vector module ("cluster"). ISSCC'22: 288/2 = 144.
+    pub fn tiles_per_cluster(&self) -> u64 {
+        ceil_div(self.n_tiles, self.n_vector_modules)
+    }
+
+    /// Seconds per clock cycle.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    /// ADC batches needed to read all X columns of a tile: ceil(X / n_ADC).
+    pub fn adc_batches(&self) -> u64 {
+        ceil_div(self.tile_size, self.adcs_per_tile)
+    }
+
+    /// Row phases to present `rows` wordlines at row-parallelism p.
+    pub fn row_phases(&self, rows: u64) -> u64 {
+        ceil_div(rows.min(self.tile_size), self.row_parallelism)
+    }
+
+    /// Maximum partial-sum value of one row group with 1-bit devices and
+    /// 1-bit streamed inputs — must fit in the ADC range (no clipping).
+    pub fn max_partial_sum(&self) -> u64 {
+        self.row_parallelism * ((1u64 << self.device_bits) - 1) * ((1u64 << self.dac_bits) - 1)
+    }
+
+    /// Validate internal consistency; returns a list of violations.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        if self.tile_size == 0 || self.n_tiles == 0 || self.n_vector_modules == 0 {
+            errs.push("tile_size, n_tiles, n_vector_modules must be positive".into());
+        }
+        if self.row_parallelism == 0 || self.row_parallelism > self.tile_size {
+            errs.push("row_parallelism must be in 1..=tile_size".into());
+        }
+        if self.adcs_per_tile == 0 || self.adcs_per_tile > self.tile_size {
+            errs.push("adcs_per_tile must be in 1..=tile_size".into());
+        }
+        if self.max_partial_sum() >= (1u64 << self.adc_bits) {
+            errs.push(format!(
+                "ADC clips: max partial sum {} needs more than {} bits",
+                self.max_partial_sum(),
+                self.adc_bits
+            ));
+        }
+        if self.clock_hz <= 0.0 || self.tile_power_w < 0.0 {
+            errs.push("clock_hz must be positive, tile_power_w non-negative".into());
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_valid_table1() {
+        let c = ChipConfig::paper_scaled();
+        assert!(c.validate().is_empty(), "{:?}", c.validate());
+        // Table I values.
+        assert_eq!(c.tile_size, 256);
+        assert_eq!(c.n_tiles, 5682);
+        assert_eq!(c.n_vector_modules, 40);
+        assert_eq!(c.device_bits, 1);
+        assert_eq!(c.row_parallelism, 9);
+        assert_eq!(c.dac_bits, 1);
+        assert_eq!(c.adcs_per_tile, 8);
+        assert_eq!(c.adc_bits, 4);
+        assert!((c.tile_power_w - 70e-6).abs() < 1e-12);
+        assert!((c.clock_hz - 192e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn adc_never_clips_at_paper_params() {
+        let c = ChipConfig::paper_scaled();
+        // 9 rows × 1-bit devices × 1-bit inputs → max sum 9 < 2^4 = 16.
+        assert_eq!(c.max_partial_sum(), 9);
+        assert!(c.max_partial_sum() < (1 << c.adc_bits));
+    }
+
+    #[test]
+    fn clipping_detected_when_row_parallelism_too_high() {
+        let c = ChipConfig {
+            row_parallelism: 32,
+            ..ChipConfig::paper_scaled()
+        };
+        assert!(c.validate().iter().any(|e| e.contains("ADC clips")));
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let c = ChipConfig::paper_scaled();
+        assert_eq!(c.adc_batches(), 32); // 256/8
+        assert_eq!(c.row_phases(256), 29); // ceil(256/9)
+        assert_eq!(c.row_phases(147), 17); // conv1 of ResNet-18
+        assert_eq!(c.row_phases(64), 8);
+        assert_eq!(c.row_phases(100_000), 29); // clamped to tile rows
+        // ISSCC'22 base: 144 tiles per vector module.
+        assert_eq!(ChipConfig::isscc22_base().tiles_per_cluster(), 144);
+    }
+
+    #[test]
+    fn with_tiles_preserves_everything_else() {
+        let c = ChipConfig::paper_scaled();
+        let c2 = c.with_tiles(1234);
+        assert_eq!(c2.n_tiles, 1234);
+        assert_eq!(c2.tile_size, c.tile_size);
+        assert_eq!(c2.adc_bits, c.adc_bits);
+    }
+}

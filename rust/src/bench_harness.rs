@@ -1,0 +1,203 @@
+//! Hand-rolled micro/macro benchmark harness (criterion is unavailable
+//! offline). Provides warmup, min-time sampling, and mean/p50/p95 reporting,
+//! plus table helpers used by the per-figure reproduction benches.
+
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: wall-clock per iteration, in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+    pub fn std(&self) -> f64 {
+        stats::std_dev(&self.samples)
+    }
+    /// iterations/second at the mean sample time.
+    pub fn throughput(&self) -> f64 {
+        if self.mean() > 0.0 {
+            1.0 / self.mean()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Benchmark runner: measures `f` (one logical iteration per call).
+pub struct Bencher {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_millis(800),
+            min_samples: 10,
+            max_samples: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for slow end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            min_time: Duration::from_millis(150),
+            min_samples: 3,
+            max_samples: 200,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibrate how many inner iterations amortize timer noise.
+        let cal_start = Instant::now();
+        let mut cal_iters: u64 = 0;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            cal_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / cal_iters.max(1) as f64;
+        // Aim for samples of ~2ms, at least one iteration each.
+        let iters_per_sample = ((2e-3 / per_iter.max(1e-12)) as u64).clamp(1, 1 << 24);
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.min_time || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples,
+            iters_per_sample,
+        };
+        println!(
+            "bench {:40} mean {:>12}  p50 {:>12}  p95 {:>12}  ({} samples x {} iters)",
+            res.name,
+            fmt_time(res.mean()),
+            fmt_time(res.p50()),
+            fmt_time(res.p95()),
+            res.samples.len(),
+            res.iters_per_sample
+        );
+        res
+    }
+}
+
+/// Pretty-print seconds with an appropriate unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Fixed-width table printer for paper-vs-measured reproduction rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let sep = {
+            let mut s = String::from("|");
+            for w in &widths {
+                s.push_str(&format!("{}|", "-".repeat(w + 2)));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            min_time: Duration::from_millis(20),
+            min_samples: 3,
+            max_samples: 100,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(1);
+        });
+        assert!(r.samples.len() >= 3);
+        assert!(r.mean() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".to_string()]);
+    }
+}

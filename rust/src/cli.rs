@@ -1,0 +1,115 @@
+//! Minimal subcommand + `--flag value` argument parser (clap is unavailable
+//! offline). Supports `--key value`, `--key=value`, and boolean `--switch`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["search", "--net", "resnet18", "--episodes=40", "--live"]);
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.str("net", ""), "resnet18");
+        assert_eq!(a.usize("episodes", 0), 40);
+        assert!(a.bool("live"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = parse(&["tables"]);
+        assert_eq!(a.str("net", "mlp"), "mlp");
+        assert_eq!(a.f64("alpha", 1.5), 1.5);
+        assert_eq!(a.u64("tiles", 7), 7);
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = parse(&["evaluate", "policy.json", "--net", "mlp"]);
+        assert_eq!(a.positional, vec!["policy.json"]);
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["x", "--live", "--net", "mlp"]);
+        assert!(a.bool("live"));
+        assert_eq!(a.str("net", ""), "mlp");
+    }
+}

@@ -1,0 +1,160 @@
+//! Dynamic batching policy: fill the batch, or flush on deadline — the
+//! classic latency/throughput knob of serving systems.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// When to flush a partially-filled batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are queued (≤ the engine batch size).
+    pub max_batch: usize,
+    /// Flush a non-empty batch this long after its first request arrived.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: usize::MAX, // fill to the engine batch
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Collects requests off an mpsc receiver according to a `BatchPolicy`.
+pub struct Batcher {
+    policy: BatchPolicy,
+    hard_cap: usize,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy, engine_batch: usize) -> Self {
+        Batcher {
+            policy,
+            hard_cap: engine_batch,
+        }
+    }
+
+    /// Effective flush size.
+    pub fn flush_size(&self) -> usize {
+        self.policy.max_batch.min(self.hard_cap)
+    }
+
+    /// Block for the first request, then drain until full or deadline.
+    /// Returns an empty vec when the channel closed or `stop` was set.
+    pub fn collect<T>(&mut self, rx: &mpsc::Receiver<T>, stop: &AtomicBool) -> Vec<T> {
+        let mut out = Vec::new();
+        let flush = self.flush_size();
+        // Wait for the first request, polling `stop`.
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return out;
+            }
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(r) => {
+                    out.push(r);
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return out,
+            }
+        }
+        let deadline = Instant::now() + self.policy.max_wait;
+        while out.len() < flush {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => out.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn flush_size_respects_engine_cap() {
+        let b = Batcher::new(
+            BatchPolicy {
+                max_batch: 1000,
+                max_wait: Duration::from_millis(1),
+            },
+            256,
+        );
+        assert_eq!(b.flush_size(), 256);
+        let b = Batcher::new(
+            BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+            },
+            256,
+        );
+        assert_eq!(b.flush_size(), 16);
+    }
+
+    #[test]
+    fn collects_prequeued_up_to_flush() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let stop = AtomicBool::new(false);
+        let mut b = Batcher::new(
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+            256,
+        );
+        let batch = b.collect(&rx, &stop);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = b.collect(&rx, &stop);
+        assert_eq!(batch, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(42).unwrap();
+        let stop = AtomicBool::new(false);
+        let mut b = Batcher::new(
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(10),
+            },
+            256,
+        );
+        let t0 = Instant::now();
+        let batch = b.collect(&rx, &stop);
+        assert_eq!(batch, vec![42]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn stop_unblocks_empty_wait() {
+        let (_tx, rx) = mpsc::channel::<u32>();
+        let stop = AtomicBool::new(true);
+        let mut b = Batcher::new(BatchPolicy::default(), 256);
+        let batch = b.collect(&rx, &stop);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn disconnected_channel_returns_empty() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        let stop = AtomicBool::new(false);
+        let mut b = Batcher::new(BatchPolicy::default(), 256);
+        assert!(b.collect(&rx, &stop).is_empty());
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving metrics: request latency distribution, batch fill, failures.
+
+use std::time::Duration;
+
+/// Rolling serving statistics (distributions kept in bounded reservoirs).
+#[derive(Clone, Debug)]
+pub struct ServeMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub failures: u64,
+    /// Σ batch fill ratio — divide by `batches` for the mean.
+    fill_sum: f64,
+    /// End-to-end request latencies, seconds.
+    latencies: Vec<f64>,
+    /// Engine execution time per batch, seconds.
+    exec_times: Vec<f64>,
+    cap: usize,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            requests: 0,
+            batches: 0,
+            failures: 0,
+            fill_sum: 0.0,
+            latencies: Vec::new(),
+            exec_times: Vec::new(),
+            cap: 65_536,
+        }
+    }
+}
+
+impl ServeMetrics {
+    /// Record one executed batch: `n` live requests in `b` slots.
+    pub fn record_batch(&mut self, n: usize, b: usize, exec: Duration) {
+        self.batches += 1;
+        self.fill_sum += n as f64 / b as f64;
+        if self.exec_times.len() < self.cap {
+            self.exec_times.push(exec.as_secs_f64());
+        }
+    }
+
+    /// Record one completed request's end-to-end latency.
+    pub fn record_request(&mut self, latency: Duration) {
+        self.requests += 1;
+        if self.latencies.len() < self.cap {
+            self.latencies.push(latency.as_secs_f64());
+        }
+    }
+
+    pub fn record_failure(&mut self, n: usize) {
+        self.failures += n as u64;
+    }
+
+    /// Mean fraction of batch slots carrying live requests.
+    pub fn mean_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.fill_sum / self.batches as f64
+        }
+    }
+
+    /// Latency percentile (p in [0,100]), seconds.
+    pub fn latency_p(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&self.latencies, p)
+    }
+
+    /// Mean engine execution time per batch, seconds.
+    pub fn mean_exec(&self) -> f64 {
+        crate::util::stats::mean(&self.exec_times)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_and_request_accounting() {
+        let mut m = ServeMetrics::default();
+        m.record_batch(128, 256, Duration::from_millis(40));
+        m.record_batch(256, 256, Duration::from_millis(42));
+        for _ in 0..384 {
+            m.record_request(Duration::from_millis(5));
+        }
+        m.record_failure(2);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.requests, 384);
+        assert_eq!(m.failures, 2);
+        assert!((m.mean_fill() - 0.75).abs() < 1e-12);
+        assert!((m.latency_p(50.0) - 0.005).abs() < 1e-9);
+        assert!((m.mean_exec() - 0.041).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.mean_fill(), 0.0);
+        assert_eq!(m.latency_p(99.0), 0.0);
+    }
+}

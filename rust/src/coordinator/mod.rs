@@ -1,0 +1,183 @@
+//! L3 serving coordinator: a dynamic-batching request front end over the
+//! PJRT evaluation engine (vLLM-router flavored, scaled to this system).
+//!
+//! The chip serves inference requests; the engine executes fixed-size
+//! batches (the AOT artifact's static shape). The coordinator bridges the
+//! two: clients submit single samples, a batcher collects them until the
+//! batch fills or a deadline expires, pads the tail, executes, and routes
+//! each logits row back to its requester. Metrics (queue depth, batch fill,
+//! p50/p95 latency) are tracked for the serving bench.
+
+pub mod batcher;
+pub mod metrics;
+
+use crate::quant::Policy;
+use crate::runtime::engine::Engine;
+use anyhow::{anyhow, Result};
+use batcher::{BatchPolicy, Batcher};
+use metrics::ServeMetrics;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One inference request: a single input sample.
+struct Request {
+    x: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// Handle to a running serving coordinator.
+pub struct Server {
+    tx: mpsc::Sender<Request>,
+    stop: Arc<AtomicBool>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<ServeMetrics>>,
+    input_dim: usize,
+}
+
+impl Server {
+    /// Start serving over `engine` with quantization `policy`.
+    pub fn start(engine: Engine, policy: &Policy, batch_policy: BatchPolicy) -> Server {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let input_dim = engine.input_dim;
+        let (wb, ab): (Vec<f32>, Vec<f32>) = (
+            policy.layers.iter().map(|l| l.w_bits as f32).collect(),
+            policy.layers.iter().map(|l| l.a_bits as f32).collect(),
+        );
+        let stop2 = Arc::clone(&stop);
+        let metrics2 = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("lrmp-server".into())
+            .spawn(move || serve_loop(engine, rx, stop2, metrics2, wb, ab, batch_policy))
+            .expect("spawn server");
+        Server {
+            tx,
+            stop,
+            worker: Some(worker),
+            metrics,
+            input_dim,
+        }
+    }
+
+    /// Submit one sample; blocks until its logits return.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        if x.len() != self.input_dim {
+            return Err(anyhow!(
+                "expected {} features, got {}",
+                self.input_dim,
+                x.len()
+            ));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                x,
+                enqueued: Instant::now(),
+                reply,
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// Submit asynchronously; returns a receiver for the logits.
+    pub fn infer_async(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        if x.len() != self.input_dim {
+            return Err(anyhow!(
+                "expected {} features, got {}",
+                self.input_dim,
+                x.len()
+            ));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                x,
+                enqueued: Instant::now(),
+                reply,
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    pub fn snapshot_metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the worker's recv with a poison request drop: dropping tx
+        // closes the channel.
+        // (tx is still alive here; the worker also polls `stop` on timeout.)
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_loop(
+    engine: Engine,
+    rx: mpsc::Receiver<Request>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    wb: Vec<f32>,
+    ab: Vec<f32>,
+    batch_policy: BatchPolicy,
+) {
+    let b = engine.eval_batch;
+    let dim = engine.input_dim;
+    let classes = engine.num_classes;
+    let mut batcher = Batcher::new(batch_policy, b);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // Collect a batch (blocking poll with the batcher's deadline logic).
+        let batch: Vec<Request> = batcher.collect(&rx, &stop);
+        if batch.is_empty() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            continue;
+        }
+        let n = batch.len();
+        let mut x = vec![0f32; b * dim];
+        for (i, r) in batch.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(&r.x);
+        }
+        let t0 = Instant::now();
+        match engine.eval(x, wb.clone(), ab.clone()) {
+            Ok(logits) => {
+                let exec = t0.elapsed();
+                let now = Instant::now();
+                let mut m = metrics.lock().unwrap();
+                m.record_batch(n, b, exec);
+                for (i, r) in batch.into_iter().enumerate() {
+                    let row = logits[i * classes..(i + 1) * classes].to_vec();
+                    m.record_request(now.duration_since(r.enqueued));
+                    let _ = r.reply.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in batch {
+                    let _ = r.reply.send(Err(anyhow!("batch failed: {msg}")));
+                }
+                metrics.lock().unwrap().record_failure(n);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The full Server is exercised in rust/tests/serving_integration.rs
+    // (needs artifacts); the batcher and metrics have unit tests in their
+    // own modules.
+}

@@ -1,0 +1,79 @@
+//! Energy-model reporting helpers (paper §VI-B, Fig 5). The component model
+//! lives in `cost::CostModel::{layer, network}`; this module packages
+//! improvement factors and breakdowns for the benches and examples.
+
+use super::NetworkCost;
+
+/// Energy breakdown of one configuration, joules per inference.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyReport {
+    pub tile_j: f64,
+    pub sram_dynamic_j: f64,
+    pub sram_leak_j: f64,
+}
+
+impl EnergyReport {
+    pub fn of(cost: &NetworkCost) -> Self {
+        let (tile_j, sram_dynamic_j, sram_leak_j) = cost.energy_parts;
+        EnergyReport {
+            tile_j,
+            sram_dynamic_j,
+            sram_leak_j,
+        }
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.tile_j + self.sram_dynamic_j + self.sram_leak_j
+    }
+
+    /// Fraction of total energy per component: (tile, sram, leak).
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total_j();
+        if t == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            self.tile_j / t,
+            self.sram_dynamic_j / t,
+            self.sram_leak_j / t,
+        )
+    }
+}
+
+/// Energy improvement factor of `optimized` over `baseline` (Fig 5 y-axis).
+pub fn improvement(baseline: &NetworkCost, optimized: &NetworkCost) -> f64 {
+    baseline.energy_j / optimized.energy_j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::nets::resnet;
+    use crate::quant::Policy;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let net = resnet::resnet18();
+        let model = CostModel::paper();
+        let base = model.baseline(&net);
+        let rep = EnergyReport::of(&base);
+        let (a, b, c) = rep.fractions();
+        assert!((a + b + c - 1.0).abs() < 1e-12);
+        assert!(rep.total_j() > 0.0);
+    }
+
+    #[test]
+    fn quantization_improves_energy_multiplicatively() {
+        let net = resnet::resnet18();
+        let model = CostModel::paper();
+        let base = model.baseline(&net);
+        let n = net.num_layers();
+        let q = model.network(&net, &Policy::uniform(n, 4, 4), &vec![1; n]);
+        let imp = improvement(&base, &q);
+        // Halving both precisions should give a multi-x energy win
+        // (tile energy scales ~(8/4)·(8/4) = 4×; leakage with latency).
+        assert!(imp > 1.8, "improvement {imp}");
+        assert!(imp < 8.0, "improvement suspiciously large {imp}");
+    }
+}

@@ -1,0 +1,375 @@
+//! Analytical hardware cost model (paper §II Eqns 1–3 and §IV-A Eqns 4–7):
+//! tiles, the four latency components, throughput under coarse-grained
+//! pipelining, and energy. This is the evaluation engine behind every
+//! experiment; `sim::` cross-validates it event-by-event.
+//!
+//! All latencies are in clock cycles of the 192 MHz system; convert with
+//! `ChipConfig::cycle_s()`. Replication divides every per-layer component
+//! linearly (Eqn 7): r copies split the W² input vectors r ways and bring r×
+//! the tiles, bus bandwidth, and vector-module lanes.
+
+pub mod energy;
+
+use crate::arch::ChipConfig;
+use crate::nets::{layer_tiles, Layer, Network};
+use crate::quant::{LayerPrecision, Policy};
+use crate::util::ceil_div;
+
+/// Accumulator width (bits) of the digital column partial sums shipped from
+/// tiles to vector modules: 256 rows × 8-bit streamed inputs < 2^16.
+pub const ACC_BITS: u64 = 16;
+
+/// Cost of a single instance (r = 1) of one layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerCost {
+    /// Crossbar tiles for one instance, s_l (Eqn 2).
+    pub tiles: u64,
+    /// VM → tile input-vector transport cycles, T_tileIn.
+    pub t_tile_in: u64,
+    /// Tile → VM output transport cycles, T_tileOut.
+    pub t_tile_out: u64,
+    /// Crossbar VMM cycles with bit-streaming/bit-slicing, T_tile (Eqn 3).
+    pub t_tile: u64,
+    /// Vector-module digital post-processing cycles, T_d.
+    pub t_digital: u64,
+    /// RRAM tile energy for one inference, joules.
+    pub e_tile_j: f64,
+    /// Vector-module SRAM dynamic access energy, joules.
+    pub e_sram_j: f64,
+}
+
+impl LayerCost {
+    /// T_l = T_tileIn + T_tileOut + T_tile + T_d (Eqn 4), cycles, r = 1.
+    pub fn total_cycles(&self) -> u64 {
+        self.t_tile_in + self.t_tile_out + self.t_tile + self.t_digital
+    }
+}
+
+/// Whole-network cost under a policy and replication assignment.
+#[derive(Clone, Debug)]
+pub struct NetworkCost {
+    /// Per-layer single-instance costs.
+    pub layers: Vec<LayerCost>,
+    /// Per-layer replication factors r_l (≥ 1).
+    pub replication: Vec<u64>,
+    /// Per-layer effective latency T_l / r_l, cycles.
+    pub layer_cycles: Vec<f64>,
+    /// Σ_l T_l / r_l (Eqn 5/7), cycles.
+    pub total_cycles: f64,
+    /// max_l T_l / r_l — the pipeline bottleneck (Eqn 6 denominator), cycles.
+    pub bottleneck_cycles: f64,
+    /// Index of the bottleneck layer.
+    pub bottleneck_layer: usize,
+    /// Σ_l r_l · s_l — total tiles consumed.
+    pub tiles_used: u64,
+    /// Energy per inference, joules (tile + SRAM dynamic + SRAM leakage).
+    pub energy_j: f64,
+    /// Breakdown of energy, joules: (tile, sram dynamic, leakage).
+    pub energy_parts: (f64, f64, f64),
+    /// Clock, for unit conversions.
+    pub clock_hz: f64,
+}
+
+impl NetworkCost {
+    /// End-to-end latency, seconds (Eqn 5).
+    pub fn latency_s(&self) -> f64 {
+        self.total_cycles / self.clock_hz
+    }
+    /// Steady-state pipelined throughput, inferences/second (Eqn 6).
+    pub fn throughput(&self) -> f64 {
+        self.clock_hz / self.bottleneck_cycles
+    }
+}
+
+/// The analytical cost model over a chip configuration.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub chip: ChipConfig,
+}
+
+impl CostModel {
+    pub fn new(chip: ChipConfig) -> Self {
+        debug_assert!(chip.validate().is_empty(), "{:?}", chip.validate());
+        CostModel { chip }
+    }
+
+    pub fn paper() -> Self {
+        CostModel::new(ChipConfig::paper_scaled())
+    }
+
+    /// Cost of one instance of `layer` at precision `prec` (Eqns 2–4).
+    pub fn layer(&self, layer: &Layer, prec: LayerPrecision) -> LayerCost {
+        let c = &self.chip;
+        let x = c.tile_size;
+        let r_rows = layer.lowered_rows();
+        let n_cols = layer.lowered_cols();
+        let vecs = layer.num_vectors();
+        let w_b = prec.w_bits as u64;
+        let a_b = prec.a_bits as u64;
+
+        let row_tiles = ceil_div(r_rows, x);
+        let col_tiles = ceil_div(n_cols, x);
+        let slices = ceil_div(w_b, c.device_bits as u64);
+        let tiles = row_tiles * col_tiles * slices; // Eqn 2
+
+        // --- T_tile (Eqn 3, with the 9-row serialization explicit) ---
+        // Streams a_b input bits; every ADC batch reads n_ADC columns; a full
+        // input presentation needs ceil(min(R,X)/p) row phases. All tiles of
+        // the instance operate in parallel, so the instance latency is set by
+        // the deepest row-tile (min(R, X) rows).
+        let t_tile = vecs * a_b * c.adc_batches() * c.row_phases(r_rows) * c.tile_phase_cycles;
+
+        // --- transport (paper §IV-A) ---
+        // One instance spans ceil(s_l / tiles_per_cluster) clusters and gets
+        // that many input/output buses and vector modules.
+        let clusters = ceil_div(tiles, c.tiles_per_cluster()).max(1);
+        let in_bus_bits_per_cycle = c.in_bus_lanes * c.in_bus_bits * clusters;
+        let out_bus_bits_per_cycle = c.out_bus_lanes * c.out_bus_bits * clusters;
+        // Input vectors are broadcast along a row-tile's column tiles but each
+        // of the `row_tiles` row groups needs its own R-slice; slices of the
+        // same weights share the stream (inputs are bit-streamed once and the
+        // analog array applies them to every slice in parallel).
+        let in_bits = vecs * r_rows * a_b;
+        let t_tile_in = ceil_div(in_bits, in_bus_bits_per_cycle);
+        // Every (row-tile × slice) of a column block ships its accumulated
+        // column partial sums (ACC_BITS wide) for digital reduction.
+        let out_bits = vecs * n_cols * row_tiles * slices * ACC_BITS;
+        let t_tile_out = ceil_div(out_bits, out_bus_bits_per_cycle);
+
+        // --- T_d: digital shift-add reduction + requant/activation ---
+        // Per output element: (row_tiles · slices) partial-sum adds + 1
+        // requantize/activate op, over the lanes of the VMs spanned.
+        let vm_lanes = c.lanes_per_vm * clusters;
+        let d_ops = vecs * n_cols * (row_tiles * slices + 1);
+        let t_digital = ceil_div(d_ops, vm_lanes);
+
+        // --- energy (per inference, one instance; replication-invariant) ---
+        // Tiles are active for the VMM stream; power-gated otherwise (§IV-A).
+        let e_tile_j = tiles as f64 * c.tile_power_w * (t_tile as f64) * c.cycle_s();
+        // SRAM dynamic: activations read once, partials written+read, outputs
+        // written — counted as 32-bit accesses.
+        let sram_bits = in_bits + 2 * out_bits + vecs * n_cols * a_b;
+        let e_sram_j = (sram_bits as f64 / 32.0) * c.sram_access_j;
+
+        LayerCost {
+            tiles,
+            t_tile_in,
+            t_tile_out,
+            t_tile,
+            t_digital,
+            e_tile_j,
+            e_sram_j,
+        }
+    }
+
+    /// Per-layer single-instance costs for a whole network.
+    pub fn layers(&self, net: &Network, policy: &Policy) -> Vec<LayerCost> {
+        assert_eq!(policy.len(), net.num_layers(), "policy/net length mismatch");
+        net.layers
+            .iter()
+            .zip(&policy.layers)
+            .map(|(l, &p)| self.layer(l, p))
+            .collect()
+    }
+
+    /// Full network cost under `policy` and `replication` (Eqns 5–7).
+    pub fn network(&self, net: &Network, policy: &Policy, replication: &[u64]) -> NetworkCost {
+        let layers = self.layers(net, policy);
+        assert_eq!(replication.len(), layers.len());
+        assert!(replication.iter().all(|&r| r >= 1), "r_l must be >= 1");
+
+        let layer_cycles: Vec<f64> = layers
+            .iter()
+            .zip(replication)
+            .map(|(lc, &r)| lc.total_cycles() as f64 / r as f64)
+            .collect();
+        let total_cycles: f64 = layer_cycles.iter().sum();
+        let (bottleneck_layer, bottleneck_cycles) = layer_cycles
+            .iter()
+            .enumerate()
+            .fold((0usize, 0f64), |(bi, bv), (i, &v)| {
+                if v > bv {
+                    (i, v)
+                } else {
+                    (bi, bv)
+                }
+            });
+        let tiles_used: u64 = layers
+            .iter()
+            .zip(replication)
+            .map(|(lc, &r)| lc.tiles * r)
+            .sum();
+
+        // Energy: tile + SRAM dynamic are replication-invariant per inference;
+        // SRAM leakage integrates over the makespan.
+        let e_tile: f64 = layers.iter().map(|l| l.e_tile_j).sum();
+        let e_sram: f64 = layers.iter().map(|l| l.e_sram_j).sum();
+        let e_leak = self.chip.sram_leak_w_per_vm
+            * self.chip.n_vector_modules as f64
+            * (total_cycles * self.chip.cycle_s());
+
+        NetworkCost {
+            layers,
+            replication: replication.to_vec(),
+            layer_cycles,
+            total_cycles,
+            bottleneck_cycles,
+            bottleneck_layer,
+            tiles_used,
+            energy_j: e_tile + e_sram + e_leak,
+            energy_parts: (e_tile, e_sram, e_leak),
+            clock_hz: self.chip.clock_hz,
+        }
+    }
+
+    /// Baseline (8-bit, no replication) cost — the paper's reference point.
+    pub fn baseline(&self, net: &Network) -> NetworkCost {
+        let policy = Policy::baseline(net.num_layers());
+        let repl = vec![1u64; net.num_layers()];
+        self.network(net, &policy, &repl)
+    }
+
+    /// Eqn 2 helper exposed for table generation.
+    pub fn tiles_of(&self, layer: &Layer, w_bits: u32) -> u64 {
+        layer_tiles(layer, self.chip.tile_size, w_bits, self.chip.device_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{self, resnet};
+
+    fn cm() -> CostModel {
+        CostModel::paper()
+    }
+
+    #[test]
+    fn table2_tile_counts() {
+        // Paper Table II baseline (8-bit) tile counts. MLP matches exactly;
+        // ResNets match to within a handful of tiles (downsample tallying —
+        // see DESIGN.md §5), well under 1%.
+        let cases: &[(&str, u64, u64)] = &[
+            ("mlp", 3232, 0),
+            ("resnet18", 1602, 8),
+            ("resnet34", 2965, 8),
+            ("resnet50", 3370, 40),
+            ("resnet101", 5682, 80),
+        ];
+        for &(name, paper, tol) in cases {
+            let net = nets::by_name(name).unwrap();
+            let ours = net.tiles_at_uniform(256, 8, 1);
+            assert!(
+                (ours as i64 - paper as i64).unsigned_abs() <= tol,
+                "{name}: ours {ours} vs paper {paper} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn resnet18_conv1_latency_structure() {
+        // Fig 7: conv1 (12544 vectors, 147 rows) dominates the baseline.
+        let net = resnet::resnet18();
+        let base = cm().baseline(&net);
+        assert_eq!(base.bottleneck_layer, 0, "conv1 must be the bottleneck");
+        // T_tile for conv1 = 12544 · 8 · 32 · ceil(147/9)=17 · 1 cycle.
+        assert_eq!(base.layers[0].t_tile, 12544 * 8 * 32 * 17);
+        // Crossbar VMM dominates transport/digital components.
+        let l0 = &base.layers[0];
+        assert!(l0.t_tile > 10 * (l0.t_tile_in + l0.t_tile_out + l0.t_digital));
+    }
+
+    #[test]
+    fn fig2b_throughput_ratio() {
+        // §III worked example: dropping conv1's activations to 6 bits cuts
+        // the bottleneck by 8/6 → 1.33× throughput at unchanged replication.
+        let net = resnet::resnet18();
+        let model = cm();
+        let base = model.baseline(&net);
+        let mut p = Policy::baseline(net.num_layers());
+        p.layers[0].a_bits = 6;
+        let q = model.network(&net, &p, &vec![1; net.num_layers()]);
+        let ratio = q.throughput() / base.throughput();
+        assert!((ratio - 8.0 / 6.0).abs() < 0.02, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig2b_tiles_conserved() {
+        // §III: one 512→512 3×3 layer at 6-bit weights frees 72 tiles.
+        let net = resnet::resnet18();
+        let model = cm();
+        let heavy = net
+            .layers
+            .iter()
+            .position(|l| l.name == "layer4.1.conv2")
+            .unwrap();
+        let t8 = model.tiles_of(&net.layers[heavy], 8);
+        let t6 = model.tiles_of(&net.layers[heavy], 6);
+        assert_eq!(t8 - t6, 72);
+    }
+
+    #[test]
+    fn replication_divides_latency_linearly() {
+        let net = resnet::resnet18();
+        let model = cm();
+        let policy = Policy::baseline(net.num_layers());
+        let mut repl = vec![1u64; net.num_layers()];
+        let base = model.network(&net, &policy, &repl);
+        repl[0] = 4;
+        let r = model.network(&net, &policy, &repl);
+        assert!((r.layer_cycles[0] - base.layer_cycles[0] / 4.0).abs() < 1e-6);
+        // Other layers unchanged.
+        assert_eq!(r.layer_cycles[1], base.layer_cycles[1]);
+        // Tiles grow by 3 extra copies of conv1's 8 tiles.
+        assert_eq!(r.tiles_used, base.tiles_used + 3 * base.layers[0].tiles);
+    }
+
+    #[test]
+    fn energy_tile_component_replication_invariant() {
+        let net = resnet::resnet18();
+        let model = cm();
+        let policy = Policy::baseline(net.num_layers());
+        let base = model.network(&net, &policy, &vec![1; net.num_layers()]);
+        let mut repl = vec![1u64; net.num_layers()];
+        repl[0] = 10;
+        repl[5] = 3;
+        let r = model.network(&net, &policy, &repl);
+        // Tile + SRAM-dynamic energy identical; leakage shrinks with latency.
+        assert!((r.energy_parts.0 - base.energy_parts.0).abs() < 1e-15);
+        assert!((r.energy_parts.1 - base.energy_parts.1).abs() < 1e-15);
+        assert!(r.energy_parts.2 < base.energy_parts.2);
+    }
+
+    #[test]
+    fn lower_precision_reduces_latency_and_energy() {
+        let net = resnet::resnet18();
+        let model = cm();
+        let repl = vec![1u64; net.num_layers()];
+        let c8 = model.network(&net, &Policy::uniform(net.num_layers(), 8, 8), &repl);
+        let c4 = model.network(&net, &Policy::uniform(net.num_layers(), 4, 4), &repl);
+        assert!(c4.total_cycles < c8.total_cycles);
+        assert!(c4.energy_j < c8.energy_j);
+        assert!(c4.tiles_used < c8.tiles_used);
+        // Activation bits scale T_tile exactly linearly.
+        assert!((c8.layers[0].t_tile as f64 / c4.layers[0].t_tile as f64 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fc_layer_single_vector() {
+        let net = nets::mlp_mnist();
+        let model = cm();
+        let costs = model.layers(&net, &Policy::baseline(net.num_layers()));
+        // FC layers stream exactly one vector: T_tile = 1·8·32·29.
+        assert_eq!(costs[1].t_tile, 8 * 32 * 29);
+    }
+
+    #[test]
+    #[should_panic(expected = "r_l must be >= 1")]
+    fn zero_replication_rejected() {
+        let net = nets::mlp_mnist();
+        let model = cm();
+        let policy = Policy::baseline(net.num_layers());
+        let repl = vec![0u64; net.num_layers()];
+        model.network(&net, &policy, &repl);
+    }
+}

@@ -1,0 +1,234 @@
+//! LP-relaxation branch & bound for integer programs. Used as the exact
+//! cross-check for the linearized replication ILPs (the production path is
+//! the MCKP dynamic program / min-max bisection — see `replication::`).
+
+use super::{simplex, Lp, LpOutcome, Rel};
+
+const INT_TOL: f64 = 1e-6;
+
+/// Options for the search.
+#[derive(Clone, Debug)]
+pub struct BbOptions {
+    /// Maximum explored nodes before giving up (returns best incumbent).
+    pub max_nodes: usize,
+    /// Which variables must be integral (None = all).
+    pub integral: Option<Vec<bool>>,
+}
+
+impl Default for BbOptions {
+    fn default() -> Self {
+        BbOptions {
+            max_nodes: 200_000,
+            integral: None,
+        }
+    }
+}
+
+/// Result of the B&B search.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IlpOutcome {
+    Optimal(Vec<f64>, f64),
+    Infeasible,
+    Unbounded,
+    /// Node budget exhausted; best incumbent so far (if any).
+    NodeLimit(Option<(Vec<f64>, f64)>),
+}
+
+/// Solve min c·x, Ax (rel) b, x ≥ 0, x integral (per `opts.integral`).
+pub fn solve(lp: &Lp, opts: &BbOptions) -> IlpOutcome {
+    let n = lp.num_vars();
+    let integral = opts
+        .integral
+        .clone()
+        .unwrap_or_else(|| vec![true; n]);
+    assert_eq!(integral.len(), n);
+
+    // Each node adds bound rows: (var, is_upper, value).
+    type Node = Vec<(usize, bool, f64)>;
+    let mut stack: Vec<Node> = vec![Vec::new()];
+    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    let mut explored = 0usize;
+
+    while let Some(bounds) = stack.pop() {
+        if explored >= opts.max_nodes {
+            return IlpOutcome::NodeLimit(incumbent);
+        }
+        explored += 1;
+
+        let mut node_lp = lp.clone();
+        for &(var, is_upper, val) in &bounds {
+            let mut row = vec![0.0; n];
+            row[var] = 1.0;
+            node_lp.constraint(row, if is_upper { Rel::Le } else { Rel::Ge }, val);
+        }
+        let (x, v) = match simplex::solve(&node_lp) {
+            LpOutcome::Optimal(x, v) => (x, v),
+            LpOutcome::Infeasible => continue,
+            LpOutcome::Unbounded => {
+                // Unbounded relaxation at the root means the ILP is unbounded
+                // (or needs bounds the caller forgot); report at root only.
+                if bounds.is_empty() {
+                    return IlpOutcome::Unbounded;
+                }
+                continue;
+            }
+        };
+
+        // Prune on incumbent.
+        if let Some((_, best)) = &incumbent {
+            if v >= *best - 1e-9 {
+                continue;
+            }
+        }
+
+        // Most-fractional branching variable.
+        let frac = |t: f64| (t - t.round()).abs();
+        let branch_var = (0..n)
+            .filter(|&i| integral[i] && frac(x[i]) > INT_TOL)
+            .max_by(|&i, &j| frac(x[i]).partial_cmp(&frac(x[j])).unwrap());
+
+        match branch_var {
+            None => {
+                // Integral solution: round cleanly and accept.
+                let xi: Vec<f64> = x
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| if integral[i] { t.round() } else { t })
+                    .collect();
+                let vi = lp.objective(&xi);
+                if incumbent.as_ref().map_or(true, |(_, b)| vi < *b) {
+                    incumbent = Some((xi, vi));
+                }
+            }
+            Some(var) => {
+                let lo = x[var].floor();
+                // Branch down first (pushed last → explored first) to find
+                // integral incumbents quickly in knapsack-like problems.
+                let mut up = bounds.clone();
+                up.push((var, false, lo + 1.0));
+                stack.push(up);
+                let mut down = bounds;
+                down.push((var, true, lo));
+                stack.push(down);
+            }
+        }
+    }
+
+    match incumbent {
+        Some((x, v)) => IlpOutcome::Optimal(x, v),
+        None => IlpOutcome::Infeasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::{Lp, Rel};
+    use crate::util::prng::Rng;
+    use crate::util::propcheck;
+
+    #[test]
+    fn knapsack_ilp() {
+        // max 10x0 + 6x1 + 4x2, x <= 1 each, 5x0 + 4x1 + 3x2 <= 8 → x=(1,0,1) v=14
+        let mut lp = Lp::new(3);
+        lp.c = vec![-10.0, -6.0, -4.0];
+        lp.constraint(vec![5.0, 4.0, 3.0], Rel::Le, 8.0);
+        for i in 0..3 {
+            let mut row = vec![0.0; 3];
+            row[i] = 1.0;
+            lp.constraint(row, Rel::Le, 1.0);
+        }
+        match solve(&lp, &BbOptions::default()) {
+            IlpOutcome::Optimal(x, v) => {
+                assert!((v + 14.0).abs() < 1e-6, "v={v}");
+                assert_eq!(
+                    x.iter().map(|t| t.round() as i64).collect::<Vec<_>>(),
+                    vec![1, 0, 1]
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn integrality_gap_case() {
+        // LP relaxation would take x = 1.5; ILP must take 1.
+        let mut lp = Lp::new(1);
+        lp.c = vec![-1.0];
+        lp.constraint(vec![2.0], Rel::Le, 3.0);
+        match solve(&lp, &BbOptions::default()) {
+            IlpOutcome::Optimal(x, v) => {
+                assert_eq!(x[0].round() as i64, 1);
+                assert!((v + 1.0).abs() < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_integer_but_feasible_lp() {
+        // 0.4 <= x <= 0.6 has LP solutions but no integer ones.
+        let mut lp = Lp::new(1);
+        lp.c = vec![1.0];
+        lp.constraint(vec![1.0], Rel::Ge, 0.4);
+        lp.constraint(vec![1.0], Rel::Le, 0.6);
+        assert_eq!(solve(&lp, &BbOptions::default()), IlpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn mixed_integrality() {
+        // x0 integer, x1 continuous: min x0 + x1, x0 + x1 >= 1.5, x0 <= 1.
+        let mut lp = Lp::new(2);
+        lp.c = vec![1.0, 1.0];
+        lp.constraint(vec![1.0, 1.0], Rel::Ge, 1.5);
+        lp.constraint(vec![1.0, 0.0], Rel::Le, 1.0);
+        let opts = BbOptions {
+            integral: Some(vec![true, false]),
+            ..Default::default()
+        };
+        match solve(&lp, &opts) {
+            IlpOutcome::Optimal(x, v) => {
+                assert!((v - 1.5).abs() < 1e-6, "v={v} x={x:?}");
+                assert!((x[0] - x[0].round()).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_bb_matches_bruteforce_on_small_binaries() {
+        propcheck::check("bb-equals-bruteforce", 40, |rng: &mut Rng| {
+            let n = rng.int_range(2, 5) as usize;
+            let mut lp = Lp::new(n);
+            for c in lp.c.iter_mut() {
+                *c = -rng.uniform(0.5, 5.0); // maximize positive values
+            }
+            let weights: Vec<f64> = (0..n).map(|_| rng.uniform(1.0, 4.0)).collect();
+            let cap = rng.uniform(2.0, 8.0);
+            lp.constraint(weights.clone(), Rel::Le, cap);
+            for i in 0..n {
+                let mut row = vec![0.0; n];
+                row[i] = 1.0;
+                lp.constraint(row, Rel::Le, 1.0); // binary
+            }
+            // Brute force over {0,1}^n.
+            let mut best = f64::INFINITY;
+            for mask in 0u32..(1 << n) {
+                let x: Vec<f64> = (0..n).map(|i| ((mask >> i) & 1) as f64).collect();
+                let w: f64 = weights.iter().zip(&x).map(|(w, x)| w * x).sum();
+                if w <= cap + 1e-9 {
+                    best = best.min(lp.objective(&x));
+                }
+            }
+            match solve(&lp, &BbOptions::default()) {
+                IlpOutcome::Optimal(_, v) => {
+                    if (v - best).abs() > 1e-6 {
+                        return Err(format!("bb {v} vs brute {best}"));
+                    }
+                    Ok(())
+                }
+                other => Err(format!("{other:?}")),
+            }
+        });
+    }
+}

@@ -1,0 +1,117 @@
+//! Linear/integer programming substrate (paper §IV-B): the replication
+//! optimizer formulates min-sum and min-max problems whose 1/r_l objectives
+//! are linearized with multiple-choice binary selectors [21]; this module
+//! provides the machinery to solve them exactly:
+//!
+//! - [`simplex`] — a two-phase dense primal simplex for general LPs
+//!   (≤ / = / ≥ rows, minimization, Bland's rule),
+//! - [`branch_bound`] — LP-relaxation branch & bound for (mixed-)integer
+//!   programs, used as an exact cross-check,
+//! - [`mckp`] — a multiple-choice-knapsack dynamic program, the production
+//!   solver for the linearized latencyOptim problem (exact and fast).
+
+pub mod branch_bound;
+pub mod mckp;
+pub mod simplex;
+
+/// Relation of one constraint row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rel {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// A linear program in the form: minimize c·x subject to A x (rel) b, x ≥ 0.
+#[derive(Clone, Debug)]
+pub struct Lp {
+    /// Objective coefficients (minimization).
+    pub c: Vec<f64>,
+    /// Constraint matrix, row-major; each row has `c.len()` entries.
+    pub a: Vec<Vec<f64>>,
+    pub rel: Vec<Rel>,
+    pub b: Vec<f64>,
+}
+
+impl Lp {
+    pub fn new(num_vars: usize) -> Self {
+        Lp {
+            c: vec![0.0; num_vars],
+            a: Vec::new(),
+            rel: Vec::new(),
+            b: Vec::new(),
+        }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.c.len()
+    }
+
+    pub fn constraint(&mut self, row: Vec<f64>, rel: Rel, rhs: f64) {
+        assert_eq!(row.len(), self.c.len(), "row width mismatch");
+        self.a.push(row);
+        self.rel.push(rel);
+        self.b.push(rhs);
+    }
+
+    /// Check a candidate solution against all constraints (tolerance `tol`).
+    pub fn feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.num_vars() || x.iter().any(|&v| v < -tol) {
+            return false;
+        }
+        self.a.iter().zip(&self.rel).zip(&self.b).all(|((row, rel), &rhs)| {
+            let lhs: f64 = row.iter().zip(x).map(|(a, x)| a * x).sum();
+            match rel {
+                Rel::Le => lhs <= rhs + tol,
+                Rel::Eq => (lhs - rhs).abs() <= tol,
+                Rel::Ge => lhs >= rhs - tol,
+            }
+        })
+    }
+
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        self.c.iter().zip(x).map(|(c, x)| c * x).sum()
+    }
+}
+
+/// Solver outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpOutcome {
+    /// Optimal solution found: (x, objective value).
+    Optimal(Vec<f64>, f64),
+    Infeasible,
+    Unbounded,
+}
+
+impl LpOutcome {
+    pub fn optimal(&self) -> Option<(&[f64], f64)> {
+        match self {
+            LpOutcome::Optimal(x, v) => Some((x, *v)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lp_builder_and_feasibility() {
+        let mut lp = Lp::new(2);
+        lp.c = vec![-1.0, -1.0];
+        lp.constraint(vec![1.0, 2.0], Rel::Le, 4.0);
+        lp.constraint(vec![1.0, 0.0], Rel::Ge, 1.0);
+        assert!(lp.feasible(&[1.0, 1.0], 1e-9));
+        assert!(!lp.feasible(&[0.0, 1.0], 1e-9)); // violates x0 >= 1
+        assert!(!lp.feasible(&[1.0, 2.0], 1e-9)); // violates row 0
+        assert_eq!(lp.objective(&[1.0, 1.5]), -2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_constraint() {
+        let mut lp = Lp::new(3);
+        lp.constraint(vec![1.0], Rel::Le, 1.0);
+    }
+}

@@ -1,0 +1,336 @@
+//! Two-phase dense primal simplex with Bland's anti-cycling rule.
+//!
+//! Standard-form reduction: every `≤` row gains a slack, every `≥` row a
+//! surplus, and rows whose canonical basis column is missing gain an
+//! artificial variable; phase 1 minimizes the artificial sum, phase 2 the
+//! user objective. Dense tableaus are entirely adequate at our problem sizes
+//! (≤ a few hundred rows/columns from the linearized replication LPs).
+
+use super::{Lp, LpOutcome, Rel};
+
+const EPS: f64 = 1e-9;
+
+struct Tableau {
+    /// rows × (cols + 1); last column is the RHS.
+    t: Vec<Vec<f64>>,
+    /// Objective row (reduced costs), length cols + 1.
+    z: Vec<f64>,
+    /// Basis variable per row.
+    basis: Vec<usize>,
+    cols: usize,
+}
+
+impl Tableau {
+    fn pivot(&mut self, row: usize, col: usize) {
+        let pv = self.t[row][col];
+        debug_assert!(pv.abs() > EPS);
+        let inv = 1.0 / pv;
+        for v in self.t[row].iter_mut() {
+            *v *= inv;
+        }
+        let pivot_row = self.t[row].clone();
+        for (r, tr) in self.t.iter_mut().enumerate() {
+            if r != row {
+                let f = tr[col];
+                if f.abs() > EPS {
+                    for (v, p) in tr.iter_mut().zip(&pivot_row) {
+                        *v -= f * p;
+                    }
+                }
+            }
+        }
+        let f = self.z[col];
+        if f.abs() > EPS {
+            for (v, p) in self.z.iter_mut().zip(&pivot_row) {
+                *v -= f * p;
+            }
+        }
+        self.basis[row] = col;
+    }
+
+    /// Run simplex iterations until optimal or unbounded.
+    /// Returns false on unbounded.
+    fn solve(&mut self, max_iters: usize) -> bool {
+        for _ in 0..max_iters {
+            // Bland's rule: entering variable = smallest index with negative
+            // reduced cost.
+            let Some(col) = (0..self.cols).find(|&j| self.z[j] < -EPS) else {
+                return true; // optimal
+            };
+            // Ratio test; Bland tie-break on smallest basis index.
+            let mut best: Option<(usize, f64)> = None;
+            for r in 0..self.t.len() {
+                let a = self.t[r][col];
+                if a > EPS {
+                    let ratio = self.t[r][self.cols] / a;
+                    best = match best {
+                        None => Some((r, ratio)),
+                        Some((br, bratio)) => {
+                            if ratio < bratio - EPS
+                                || (ratio < bratio + EPS && self.basis[r] < self.basis[br])
+                            {
+                                Some((r, ratio))
+                            } else {
+                                Some((br, bratio))
+                            }
+                        }
+                    };
+                }
+            }
+            match best {
+                None => return false, // unbounded
+                Some((row, _)) => self.pivot(row, col),
+            }
+        }
+        // Iteration cap hit — treat as optimal-so-far; callers use generous caps.
+        true
+    }
+}
+
+/// Solve `lp` (minimization) with the two-phase simplex.
+pub fn solve(lp: &Lp) -> LpOutcome {
+    let n = lp.num_vars();
+    let m = lp.a.len();
+
+    // Normalize to non-negative RHS.
+    let mut a = lp.a.clone();
+    let mut b = lp.b.clone();
+    let mut rel = lp.rel.clone();
+    for i in 0..m {
+        if b[i] < 0.0 {
+            for v in a[i].iter_mut() {
+                *v = -*v;
+            }
+            b[i] = -b[i];
+            rel[i] = match rel[i] {
+                Rel::Le => Rel::Ge,
+                Rel::Ge => Rel::Le,
+                Rel::Eq => Rel::Eq,
+            };
+        }
+    }
+
+    // Column layout: [x (n)] [slack/surplus (m, some unused)] [artificial (m, some unused)].
+    let slack_base = n;
+    let art_base = n + m;
+    let cols = n + 2 * m;
+
+    let mut t = vec![vec![0.0; cols + 1]; m];
+    let mut basis = vec![usize::MAX; m];
+    let mut artificials = Vec::new();
+    for i in 0..m {
+        t[i][..n].copy_from_slice(&a[i]);
+        t[i][cols] = b[i];
+        match rel[i] {
+            Rel::Le => {
+                t[i][slack_base + i] = 1.0;
+                basis[i] = slack_base + i;
+            }
+            Rel::Ge => {
+                t[i][slack_base + i] = -1.0;
+                t[i][art_base + i] = 1.0;
+                basis[i] = art_base + i;
+                artificials.push(art_base + i);
+            }
+            Rel::Eq => {
+                t[i][art_base + i] = 1.0;
+                basis[i] = art_base + i;
+                artificials.push(art_base + i);
+            }
+        }
+    }
+
+    let max_iters = 200 * (cols + m + 16);
+
+    // --- Phase 1: minimize sum of artificials ---
+    if !artificials.is_empty() {
+        let mut z1 = vec![0.0; cols + 1];
+        for &ai in &artificials {
+            z1[ai] = 1.0;
+        }
+        // Make reduced costs consistent with the starting basis.
+        for i in 0..m {
+            if artificials.contains(&basis[i]) {
+                for j in 0..=cols {
+                    z1[j] -= t[i][j];
+                }
+            }
+        }
+        let mut tab = Tableau {
+            t,
+            z: z1,
+            basis,
+            cols,
+        };
+        if !tab.solve(max_iters) {
+            return LpOutcome::Unbounded; // cannot happen in phase 1, defensive
+        }
+        // Phase-1 objective value = -z RHS entry.
+        let p1 = -tab.z[cols];
+        if p1 > 1e-7 {
+            return LpOutcome::Infeasible;
+        }
+        // Drive any artificial still in the basis out (degenerate rows).
+        for r in 0..m {
+            if tab.basis[r] >= art_base {
+                if let Some(j) = (0..art_base).find(|&j| tab.t[r][j].abs() > EPS) {
+                    tab.pivot(r, j);
+                }
+                // else: all-zero row; harmless.
+            }
+        }
+        t = tab.t;
+        basis = tab.basis;
+    }
+
+    // --- Phase 2: the user objective; zero out artificial columns ---
+    for row in t.iter_mut() {
+        for j in art_base..cols {
+            row[j] = 0.0;
+        }
+    }
+    let mut z = vec![0.0; cols + 1];
+    z[..n].copy_from_slice(&lp.c);
+    // Make reduced costs consistent with the current basis.
+    for i in 0..m {
+        let bi = basis[i];
+        let cb = if bi < n { lp.c[bi] } else { 0.0 };
+        if cb.abs() > EPS {
+            for j in 0..=cols {
+                z[j] -= cb * t[i][j];
+            }
+        }
+    }
+    let mut tab = Tableau { t, z, basis, cols };
+    if !tab.solve(max_iters) {
+        return LpOutcome::Unbounded;
+    }
+
+    let mut x = vec![0.0; n];
+    for (r, &bi) in tab.basis.iter().enumerate() {
+        if bi < n {
+            x[bi] = tab.t[r][cols].max(0.0);
+        }
+    }
+    let obj = lp.objective(&x);
+    LpOutcome::Optimal(x, obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::{Lp, Rel};
+    use crate::util::prng::Rng;
+    use crate::util::propcheck;
+
+    fn approx(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-6 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn textbook_max_problem() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 → (2,6), obj 36.
+        let mut lp = Lp::new(2);
+        lp.c = vec![-3.0, -5.0];
+        lp.constraint(vec![1.0, 0.0], Rel::Le, 4.0);
+        lp.constraint(vec![0.0, 2.0], Rel::Le, 12.0);
+        lp.constraint(vec![3.0, 2.0], Rel::Le, 18.0);
+        let (x, v) = solve(&lp).optimal().map(|(x, v)| (x.to_vec(), v)).unwrap();
+        assert!(approx(v, -36.0), "v={v}");
+        assert!(approx(x[0], 2.0) && approx(x[1], 6.0), "{x:?}");
+    }
+
+    #[test]
+    fn ge_and_eq_rows() {
+        // min x + y s.t. x + y >= 3, x - y = 1 → (2,1), obj 3.
+        let mut lp = Lp::new(2);
+        lp.c = vec![1.0, 1.0];
+        lp.constraint(vec![1.0, 1.0], Rel::Ge, 3.0);
+        lp.constraint(vec![1.0, -1.0], Rel::Eq, 1.0);
+        let (x, v) = solve(&lp).optimal().map(|(x, v)| (x.to_vec(), v)).unwrap();
+        assert!(approx(v, 3.0));
+        assert!(approx(x[0], 2.0) && approx(x[1], 1.0), "{x:?}");
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut lp = Lp::new(1);
+        lp.c = vec![1.0];
+        lp.constraint(vec![1.0], Rel::Le, 1.0);
+        lp.constraint(vec![1.0], Rel::Ge, 2.0);
+        assert_eq!(solve(&lp), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut lp = Lp::new(1);
+        lp.c = vec![-1.0]; // maximize x with no upper bound
+        lp.constraint(vec![1.0], Rel::Ge, 0.0);
+        assert_eq!(solve(&lp), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // min x s.t. -x <= -2  (i.e. x >= 2)
+        let mut lp = Lp::new(1);
+        lp.c = vec![1.0];
+        lp.constraint(vec![-1.0], Rel::Le, -2.0);
+        let (x, v) = solve(&lp).optimal().map(|(x, v)| (x.to_vec(), v)).unwrap();
+        assert!(approx(x[0], 2.0) && approx(v, 2.0));
+    }
+
+    #[test]
+    fn degenerate_equality_with_redundancy() {
+        // x + y = 2 twice (redundant) plus bound.
+        let mut lp = Lp::new(2);
+        lp.c = vec![1.0, 2.0];
+        lp.constraint(vec![1.0, 1.0], Rel::Eq, 2.0);
+        lp.constraint(vec![1.0, 1.0], Rel::Eq, 2.0);
+        let (x, v) = solve(&lp).optimal().map(|(x, v)| (x.to_vec(), v)).unwrap();
+        assert!(approx(v, 2.0), "v={v} x={x:?}"); // all weight on x0
+    }
+
+    #[test]
+    fn prop_solution_is_feasible_and_not_worse_than_random_points() {
+        // Random small LPs with a known feasible point: the solver's optimum
+        // must be feasible and at least as good as any random feasible point.
+        propcheck::check("simplex-dominates-random-feasible", 60, |rng: &mut Rng| {
+            let n = rng.int_range(1, 4) as usize;
+            let m = rng.int_range(1, 5) as usize;
+            let mut lp = Lp::new(n);
+            for c in lp.c.iter_mut() {
+                *c = rng.uniform(-3.0, 3.0);
+            }
+            // Constraints a·x <= b chosen to keep the box [0,U]^n feasible,
+            // with U bounding so the LP is never unbounded.
+            for _ in 0..m {
+                let row: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 2.0)).collect();
+                let bound = row.iter().sum::<f64>() * rng.uniform(1.0, 3.0) + 1.0;
+                lp.constraint(row, Rel::Le, bound);
+            }
+            // Box upper bounds to guarantee boundedness.
+            for i in 0..n {
+                let mut row = vec![0.0; n];
+                row[i] = 1.0;
+                lp.constraint(row, Rel::Le, 10.0);
+            }
+            let (x, v) = match solve(&lp) {
+                LpOutcome::Optimal(x, v) => (x, v),
+                other => return Err(format!("expected optimal, got {other:?}")),
+            };
+            if !lp.feasible(&x, 1e-6) {
+                return Err(format!("solver returned infeasible point {x:?}"));
+            }
+            for _ in 0..32 {
+                let cand: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 10.0)).collect();
+                if lp.feasible(&cand, 1e-9) && lp.objective(&cand) < v - 1e-6 {
+                    return Err(format!(
+                        "random point {cand:?} (obj {}) beats 'optimal' {v}",
+                        lp.objective(&cand)
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

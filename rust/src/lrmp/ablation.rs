@@ -1,0 +1,108 @@
+//! The Fig 8 area-sensitivity ablation: latency improvements of
+//! quantization-only, replication-only, and joint LRMP at different tile
+//! budgets (fractions of the 8-bit baseline's tile count).
+
+use super::{Lrmp, SearchConfig};
+use crate::cost::CostModel;
+use crate::nets::Network;
+use crate::quant::{Policy, SqnrSurrogate};
+use crate::replication::{latency_optim, LayerSummary};
+
+/// One ablation cell: mode name + (latency improvement ×, tiles used), or
+/// None when the configuration is infeasible at this area budget.
+pub type AblationCell = (&'static str, Option<(f64, u64)>);
+
+/// Run the three Fig 8 modes at `n_tiles`.
+pub fn area_modes(
+    model: &CostModel,
+    net: &Network,
+    n_tiles: u64,
+    seed: u64,
+    episodes: usize,
+) -> Vec<AblationCell> {
+    let nl = net.num_layers();
+    let base = model.baseline(net);
+    let mut out = Vec::new();
+
+    // --- quantization only: LRMP search, then drop the replication ---
+    let mut surrogate = SqnrSurrogate::for_benchmark(net);
+    let cfg = SearchConfig {
+        episodes,
+        updates_per_episode: 4,
+        n_tiles: Some(n_tiles),
+        seed,
+        ..Default::default()
+    };
+    let quant_only = Lrmp::new(model, net, cfg).run(&mut surrogate).ok().and_then(|r| {
+        let plain = model.network(net, &r.best_policy, &vec![1; nl]);
+        (plain.tiles_used <= n_tiles)
+            .then(|| (base.total_cycles / plain.total_cycles, plain.tiles_used))
+    });
+    out.push(("quant-only", quant_only));
+
+    // --- replication only: 8-bit everywhere + LP (needs n_tiles ≥ baseline) ---
+    let costs = model.layers(net, &Policy::baseline(nl));
+    let repl_only = latency_optim(&LayerSummary::from_costs(&costs), n_tiles)
+        .ok()
+        .map(|p| (base.total_cycles / p.total_cycles, p.tiles_used));
+    out.push(("repl-only", repl_only));
+
+    // --- joint LRMP ---
+    let mut surrogate = SqnrSurrogate::for_benchmark(net);
+    let cfg = SearchConfig {
+        episodes,
+        updates_per_episode: 4,
+        n_tiles: Some(n_tiles),
+        seed: seed ^ 1,
+        ..Default::default()
+    };
+    let joint = Lrmp::new(model, net, cfg).run(&mut surrogate).ok().map(|r| {
+        (
+            base.total_cycles / r.optimized.total_cycles,
+            r.optimized.tiles_used,
+        )
+    });
+    out.push(("joint", joint));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn fig8_structure_holds_on_mlp() {
+        // At the baseline area: joint ≥ each single-dimension mode; below
+        // baseline area: repl-only infeasible, quantization still works.
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let base_tiles = net.tiles_at_uniform(256, 8, 1);
+
+        let at_base = area_modes(&model, &net, base_tiles, 3, 10);
+        let get = |cells: &[AblationCell], name: &str| {
+            cells
+                .iter()
+                .find(|(n, _)| *n == name)
+                .and_then(|(_, v)| *v)
+        };
+        let joint = get(&at_base, "joint").expect("joint feasible at baseline");
+        let repl = get(&at_base, "repl-only").expect("repl-only feasible at baseline");
+        assert!(
+            joint.0 >= repl.0 * 0.95,
+            "joint {} should not lose to repl-only {}",
+            joint.0,
+            repl.0
+        );
+
+        let below = area_modes(&model, &net, base_tiles * 6 / 10, 3, 8);
+        assert!(
+            get(&below, "repl-only").is_none(),
+            "repl-only must be infeasible below baseline area"
+        );
+        assert!(
+            get(&below, "joint").is_some(),
+            "joint must stay feasible at 0.6x area via quantization"
+        );
+    }
+}

@@ -1,0 +1,494 @@
+//! LRMP orchestration (paper §IV, Fig 3): the iterative joint optimization —
+//! each episode the DDPG agent prescribes per-layer precisions, the budget
+//! constraint is enforced on the action space (§IV-C), the LP-based
+//! optimizer replicates layers with the conserved tiles (§IV-B), and the
+//! agent is rewarded with the affine accuracy/performance combination of
+//! Eqn 8. The performance budget tightens exponentially across episodes
+//! (0.35× → 0.2× of baseline for Fig 6).
+
+use crate::accuracy::Evaluator;
+
+pub mod ablation;
+use crate::cost::{CostModel, NetworkCost};
+use crate::nets::Network;
+use crate::quant::nonideal::NoisySurrogate;
+use crate::quant::{Policy, SqnrSurrogate};
+use crate::replication::{Objective, ReplicationPlan};
+use crate::rl::ddpg::{Ddpg, DdpgConfig, Transition};
+use crate::rl::env::{self, OBS_DIM};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Source of the accuracy term in the reward (Eqn 8): live PJRT evaluation
+/// for the MLP benchmark, the SQNR surrogate for the ImageNet ResNets
+/// (substitution table, DESIGN.md §4).
+pub trait AccuracyProvider {
+    fn name(&self) -> &str;
+    /// Accuracy of the unquantized / 8-bit reference.
+    fn baseline(&mut self) -> f64;
+    /// Accuracy under `policy` without finetuning (exploration phase).
+    fn accuracy(&mut self, policy: &Policy) -> Result<f64>;
+    /// Accuracy after quantization-aware finetuning (final phase).
+    fn finetuned(&mut self, policy: &Policy) -> Result<f64>;
+    /// Accuracy estimate used inside the episode reward (Eqn 8). The paper
+    /// finetunes the chosen policies, so the reward should reflect the
+    /// *recoverable* accuracy; surrogates use their finetuned estimate,
+    /// the live provider uses the raw quantized accuracy (finetuning per
+    /// episode would be prohibitive — same pragmatic choice as HAQ).
+    fn reward_accuracy(&mut self, policy: &Policy) -> Result<f64> {
+        self.accuracy(policy)
+    }
+}
+
+impl AccuracyProvider for SqnrSurrogate {
+    fn name(&self) -> &str {
+        "sqnr-surrogate"
+    }
+    fn baseline(&mut self) -> f64 {
+        self.base_acc
+    }
+    fn accuracy(&mut self, policy: &Policy) -> Result<f64> {
+        Ok(SqnrSurrogate::accuracy(self, policy))
+    }
+    fn finetuned(&mut self, policy: &Policy) -> Result<f64> {
+        Ok(self.accuracy_finetuned(policy))
+    }
+    fn reward_accuracy(&mut self, policy: &Policy) -> Result<f64> {
+        Ok(self.accuracy_finetuned(policy))
+    }
+}
+
+impl AccuracyProvider for NoisySurrogate {
+    fn name(&self) -> &str {
+        "noisy-sqnr-surrogate"
+    }
+    fn baseline(&mut self) -> f64 {
+        // Baseline = the 8/8 policy *under analog noise* (the chip never
+        // escapes its devices), so the reward's accuracy delta isolates the
+        // quantization decision.
+        let nl = self.layer_count();
+        NoisySurrogate::accuracy(self, &Policy::baseline(nl))
+    }
+    fn accuracy(&mut self, policy: &Policy) -> Result<f64> {
+        Ok(NoisySurrogate::accuracy(self, policy))
+    }
+    fn finetuned(&mut self, policy: &Policy) -> Result<f64> {
+        // Noise-aware finetuning recovers most of the combined drop,
+        // mirroring the ideal surrogate's recovery model.
+        let pre = NoisySurrogate::accuracy(self, policy);
+        let base = self.ideal.base_acc;
+        Ok(base - 0.12 * (base - pre))
+    }
+    fn reward_accuracy(&mut self, policy: &Policy) -> Result<f64> {
+        self.finetuned(policy)
+    }
+}
+
+/// Live accuracy through the PJRT artifacts (MLP path).
+pub struct LiveAccuracy {
+    pub evaluator: Evaluator,
+    /// Test samples per evaluation (0 = full test set).
+    pub samples: usize,
+    /// Finetuning steps + learning rate for `finetuned`.
+    pub finetune_steps: usize,
+    pub finetune_lr: f32,
+    cached_baseline: Option<f64>,
+}
+
+impl LiveAccuracy {
+    pub fn new(evaluator: Evaluator, samples: usize) -> Self {
+        LiveAccuracy {
+            evaluator,
+            samples,
+            finetune_steps: 60,
+            finetune_lr: 0.05,
+            cached_baseline: None,
+        }
+    }
+}
+
+impl AccuracyProvider for LiveAccuracy {
+    fn name(&self) -> &str {
+        "live-pjrt"
+    }
+    fn baseline(&mut self) -> f64 {
+        if let Some(b) = self.cached_baseline {
+            return b;
+        }
+        let l = self.evaluator.engine.num_layers;
+        let b = self
+            .evaluator
+            .accuracy(&Policy::baseline(l), self.samples)
+            .unwrap_or(0.0);
+        self.cached_baseline = Some(b);
+        b
+    }
+    fn accuracy(&mut self, policy: &Policy) -> Result<f64> {
+        self.evaluator.accuracy(policy, self.samples)
+    }
+    fn finetuned(&mut self, policy: &Policy) -> Result<f64> {
+        self.evaluator.reset()?;
+        self.evaluator
+            .finetune(policy, self.finetune_steps, self.finetune_lr, 0xF17E)?;
+        let acc = self.evaluator.accuracy(policy, self.samples)?;
+        self.evaluator.reset()?;
+        Ok(acc)
+    }
+}
+
+/// Search configuration (defaults follow §V/§VI).
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub objective: Objective,
+    pub episodes: usize,
+    /// Budget schedule as fractions of the baseline metric: exponentially
+    /// tightened from `budget_start` to `budget_end` (Fig 6: 0.35 → 0.2).
+    pub budget_start: f64,
+    pub budget_end: f64,
+    /// Reward weights λ (accuracy) and α (performance) of Eqn 8.
+    pub lambda: f64,
+    pub alpha: f64,
+    /// Area constraint: tiles available (paper: the 8-bit baseline's tiles).
+    pub n_tiles: Option<u64>,
+    /// DDPG updates per episode.
+    pub updates_per_episode: usize,
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            objective: Objective::Latency,
+            episodes: 120,
+            budget_start: 0.35,
+            budget_end: 0.20,
+            lambda: 2.0,
+            alpha: 1.0,
+            n_tiles: None,
+            updates_per_episode: 8,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// Per-episode log row (Fig 6 trajectory).
+#[derive(Clone, Debug)]
+pub struct EpisodeLog {
+    pub episode: usize,
+    pub budget_fraction: f64,
+    pub reward: f64,
+    pub accuracy: f64,
+    pub latency_improvement: f64,
+    pub throughput_improvement: f64,
+    pub mean_w_bits: f64,
+    pub mean_a_bits: f64,
+    pub tiles_used: u64,
+    pub feasible: bool,
+}
+
+/// Search output: the best policy/plan and the full trajectory.
+#[derive(Debug)]
+pub struct SearchResult {
+    pub best_policy: Policy,
+    pub best_plan: ReplicationPlan,
+    pub best_reward: f64,
+    pub best_accuracy: f64,
+    pub finetuned_accuracy: f64,
+    pub baseline_accuracy: f64,
+    pub baseline: NetworkCost,
+    pub optimized: NetworkCost,
+    pub trajectory: Vec<EpisodeLog>,
+}
+
+impl SearchResult {
+    pub fn latency_improvement(&self) -> f64 {
+        self.baseline.total_cycles / self.optimized.total_cycles
+    }
+    pub fn throughput_improvement(&self) -> f64 {
+        self.optimized.throughput() / self.baseline.throughput()
+    }
+    pub fn energy_improvement(&self) -> f64 {
+        self.baseline.energy_j / self.optimized.energy_j
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("best_reward", Json::Num(self.best_reward)),
+            ("best_accuracy", Json::Num(self.best_accuracy)),
+            ("finetuned_accuracy", Json::Num(self.finetuned_accuracy)),
+            ("baseline_accuracy", Json::Num(self.baseline_accuracy)),
+            ("latency_improvement", Json::Num(self.latency_improvement())),
+            (
+                "throughput_improvement",
+                Json::Num(self.throughput_improvement()),
+            ),
+            ("energy_improvement", Json::Num(self.energy_improvement())),
+            ("policy", self.best_policy.to_json()),
+            (
+                "replication",
+                Json::arr_u64(&self.best_plan.replication),
+            ),
+            ("tiles_used", Json::Num(self.best_plan.tiles_used as f64)),
+            (
+                "trajectory",
+                Json::Arr(
+                    self.trajectory
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("episode", Json::Num(e.episode as f64)),
+                                ("budget", Json::Num(e.budget_fraction)),
+                                ("reward", Json::Num(e.reward)),
+                                ("acc", Json::Num(e.accuracy)),
+                                ("lat_x", Json::Num(e.latency_improvement)),
+                                ("thr_x", Json::Num(e.throughput_improvement)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The LRMP search loop.
+pub struct Lrmp<'a> {
+    pub model: &'a CostModel,
+    pub net: &'a Network,
+    pub cfg: SearchConfig,
+}
+
+impl<'a> Lrmp<'a> {
+    pub fn new(model: &'a CostModel, net: &'a Network, cfg: SearchConfig) -> Self {
+        Lrmp { model, net, cfg }
+    }
+
+    /// The paper's area constraint: tiles of the 8-bit fixed baseline.
+    pub fn baseline_tiles(&self) -> u64 {
+        self.net
+            .tiles_at_uniform(self.model.chip.tile_size, 8, self.model.chip.device_bits)
+    }
+
+    pub fn run(&self, provider: &mut dyn AccuracyProvider) -> Result<SearchResult> {
+        let cfg = &self.cfg;
+        let n_tiles = cfg.n_tiles.unwrap_or_else(|| self.baseline_tiles());
+        let baseline = self.model.baseline(self.net);
+        let base_metric = match cfg.objective {
+            Objective::Latency => baseline.total_cycles,
+            Objective::Throughput => baseline.bottleneck_cycles,
+        };
+        let acc_base = provider.baseline();
+        let nl = self.net.num_layers();
+
+        let mut agent = Ddpg::new(DdpgConfig::default_for(OBS_DIM, 2, cfg.seed));
+        let mut trajectory = Vec::with_capacity(cfg.episodes);
+        let mut best: Option<(f64, Policy, ReplicationPlan, f64)> = None;
+
+        for ep in 0..cfg.episodes {
+            // Exponential budget tightening (§IV-C).
+            let f = if cfg.episodes > 1 {
+                ep as f64 / (cfg.episodes - 1) as f64
+            } else {
+                1.0
+            };
+            let budget_fraction =
+                cfg.budget_start * (cfg.budget_end / cfg.budget_start).powf(f);
+            let budget = budget_fraction * base_metric;
+
+            // --- rollout: per-layer precision decisions ---
+            let mut states = Vec::with_capacity(nl);
+            let mut actions = Vec::with_capacity(nl);
+            let mut prev = (1.0, 1.0); // baseline-ish previous action
+            let mut policy = Policy::baseline(nl);
+            for l in 0..nl {
+                let obs = env::observation(self.net, l, prev);
+                let act = agent.act_explore(&obs);
+                policy.layers[l] = env::action_to_bits((act[0], act[1]));
+                prev = (act[0], act[1]);
+                states.push(obs);
+                actions.push(act);
+            }
+
+            // --- budget enforcement + LP replication (§IV-B/C) ---
+            let enforced = env::enforce_budget(
+                self.model,
+                self.net,
+                policy,
+                n_tiles,
+                cfg.objective,
+                budget,
+            );
+            let (reward, log) = match enforced {
+                None => {
+                    // Unreachable budget: strong negative reward.
+                    (
+                        -1.0,
+                        EpisodeLog {
+                            episode: ep,
+                            budget_fraction,
+                            reward: -1.0,
+                            accuracy: 0.0,
+                            latency_improvement: 0.0,
+                            throughput_improvement: 0.0,
+                            mean_w_bits: 0.0,
+                            mean_a_bits: 0.0,
+                            tiles_used: 0,
+                            feasible: false,
+                        },
+                    )
+                }
+                Some((policy, plan)) => {
+                    let acc = provider.reward_accuracy(&policy)?;
+                    let metric = match cfg.objective {
+                        Objective::Latency => plan.total_cycles,
+                        Objective::Throughput => plan.bottleneck_cycles,
+                    };
+                    // Eqn 8.
+                    let reward = cfg.lambda * (acc - acc_base)
+                        + cfg.alpha * (1.0 - metric / base_metric);
+                    let (mw, ma) = policy.mean_bits();
+                    let log = EpisodeLog {
+                        episode: ep,
+                        budget_fraction,
+                        reward,
+                        accuracy: acc,
+                        latency_improvement: baseline.total_cycles / plan.total_cycles,
+                        throughput_improvement: baseline.bottleneck_cycles
+                            / plan.bottleneck_cycles,
+                        mean_w_bits: mw,
+                        mean_a_bits: ma,
+                        tiles_used: plan.tiles_used,
+                        feasible: true,
+                    };
+                    if best.as_ref().map_or(true, |(r, ..)| reward > *r) {
+                        best = Some((reward, policy, plan, acc));
+                    }
+                    (reward, log)
+                }
+            };
+            trajectory.push(log);
+
+            // --- HAQ-style credit assignment: the episode reward goes to
+            // every transition; terminal at the last layer. ---
+            for l in 0..nl {
+                let next_state = if l + 1 < nl {
+                    states[l + 1].clone()
+                } else {
+                    vec![0.0; OBS_DIM]
+                };
+                agent.replay.push(Transition {
+                    state: states[l].clone(),
+                    action: actions[l].clone(),
+                    reward,
+                    next_state,
+                    terminal: l + 1 == nl,
+                });
+            }
+            for _ in 0..cfg.updates_per_episode {
+                agent.update();
+            }
+            agent.decay_noise();
+        }
+
+        let (best_reward, best_policy, best_plan, best_accuracy) =
+            best.expect("at least one episode must be feasible");
+        let finetuned_accuracy = provider.finetuned(&best_policy)?;
+        let optimized = self
+            .model
+            .network(self.net, &best_policy, &best_plan.replication);
+        Ok(SearchResult {
+            best_policy,
+            best_plan,
+            best_reward,
+            best_accuracy,
+            finetuned_accuracy,
+            baseline_accuracy: acc_base,
+            baseline,
+            optimized,
+            trajectory,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn search_on_mlp_with_surrogate_improves_latency() {
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let mut surrogate = SqnrSurrogate::new(&net, 0.98, 0.5);
+        let cfg = SearchConfig {
+            episodes: 20,
+            updates_per_episode: 4,
+            ..Default::default()
+        };
+        let search = Lrmp::new(&model, &net, cfg);
+        let res = search.run(&mut surrogate).unwrap();
+        assert!(
+            res.latency_improvement() > 2.0,
+            "latency improvement {} too small",
+            res.latency_improvement()
+        );
+        assert!(res.best_plan.tiles_used <= search.baseline_tiles());
+        assert!(res.finetuned_accuracy > 0.9);
+        assert_eq!(res.trajectory.len(), 20);
+    }
+
+    #[test]
+    fn throughput_objective_optimizes_bottleneck() {
+        let net = nets::resnet::resnet18();
+        let model = CostModel::paper();
+        let mut surrogate = SqnrSurrogate::new(&net, 0.70, 0.4);
+        let cfg = SearchConfig {
+            objective: Objective::Throughput,
+            episodes: 12,
+            updates_per_episode: 2,
+            ..Default::default()
+        };
+        let res = Lrmp::new(&model, &net, cfg).run(&mut surrogate).unwrap();
+        assert!(
+            res.throughput_improvement() > 5.0,
+            "throughput improvement {}",
+            res.throughput_improvement()
+        );
+    }
+
+    #[test]
+    fn trajectory_budget_tightens_monotonically() {
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let mut surrogate = SqnrSurrogate::new(&net, 0.98, 0.5);
+        let cfg = SearchConfig {
+            episodes: 10,
+            updates_per_episode: 1,
+            ..Default::default()
+        };
+        let res = Lrmp::new(&model, &net, cfg).run(&mut surrogate).unwrap();
+        for w in res.trajectory.windows(2) {
+            assert!(w[1].budget_fraction <= w[0].budget_fraction + 1e-12);
+        }
+        assert!((res.trajectory[0].budget_fraction - 0.35).abs() < 1e-9);
+        assert!(
+            (res.trajectory.last().unwrap().budget_fraction - 0.20).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn result_json_is_parseable() {
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let mut surrogate = SqnrSurrogate::new(&net, 0.98, 0.5);
+        let cfg = SearchConfig {
+            episodes: 4,
+            updates_per_episode: 1,
+            ..Default::default()
+        };
+        let res = Lrmp::new(&model, &net, cfg).run(&mut surrogate).unwrap();
+        let j = res.to_json().pretty();
+        let parsed = Json::parse(&j).unwrap();
+        assert!(parsed.get("latency_improvement").as_f64().unwrap() > 1.0);
+    }
+}

@@ -1,0 +1,348 @@
+//! `lrmp` — command-line front end of the LRMP reproduction.
+//!
+//! Subcommands:
+//!   tables                         print Table I (microarchitecture) and
+//!                                  Table II (baseline tile counts)
+//!   motivate                       the §III / Fig 2 worked example
+//!   search    --net N --objective latency|throughput [--episodes E]
+//!             [--live] [--tiles T] [--out FILE]      run the LRMP search
+//!   sweep-area --net N             the Fig 8 area-sensitivity ablation
+//!   simulate  --net N              event-driven validation of the cost model
+//!   demo                           run the L1 crossbar kernels through PJRT
+//!   serve     [--requests R] [--clients C] [--wbits W] [--abits A]
+//!                                  closed-loop load test of the serving
+//!                                  coordinator (dynamic batcher + engine)
+//!
+//! `--live` routes the accuracy term through the PJRT artifacts (MLP path);
+//! otherwise the SQNR surrogate is used (DESIGN.md §4).
+
+use anyhow::{bail, Context, Result};
+use lrmp::accuracy::Evaluator;
+use lrmp::arch::ChipConfig;
+use lrmp::bench_harness::Table;
+use lrmp::cli::Args;
+use lrmp::cost::CostModel;
+use lrmp::lrmp::{ablation, AccuracyProvider, LiveAccuracy, Lrmp, SearchConfig};
+use lrmp::quant::{Policy, SqnrSurrogate};
+use lrmp::replication::Objective;
+use lrmp::util::prng::Rng;
+use lrmp::{nets, runtime, sim};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("tables") => cmd_tables(),
+        Some("motivate") => cmd_motivate(),
+        Some("search") => cmd_search(args),
+        Some("sweep-area") => cmd_sweep_area(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("demo") => cmd_demo(),
+        Some("serve") => cmd_serve(args),
+        _ => {
+            eprintln!(
+                "usage: lrmp <tables|motivate|search|sweep-area|simulate|demo|serve> [flags]\n\
+                 see `rust/src/main.rs` header for the flag list"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn net_arg(args: &Args) -> Result<lrmp::nets::Network> {
+    let name = args.str("net", "resnet18");
+    nets::by_name(&name).with_context(|| format!("unknown network '{name}'"))
+}
+
+fn objective_arg(args: &Args) -> Result<Objective> {
+    match args.str("objective", "latency").as_str() {
+        "latency" => Ok(Objective::Latency),
+        "throughput" => Ok(Objective::Throughput),
+        o => bail!("unknown objective '{o}' (latency|throughput)"),
+    }
+}
+
+fn cmd_tables() -> Result<()> {
+    let chip = ChipConfig::paper_scaled();
+    println!("Table I — microarchitectural parameters (scaled ISSCC'22 [17])");
+    let mut t1 = Table::new(&["parameter", "value"]);
+    t1.row(&["eNVM".into(), "1T-1R RRAM".into()]);
+    t1.row(&["tile size".into(), format!("{0}x{0}", chip.tile_size)]);
+    t1.row(&["no. of tiles".into(), chip.n_tiles.to_string()]);
+    t1.row(&["vector modules".into(), chip.n_vector_modules.to_string()]);
+    t1.row(&["device precision".into(), format!("{} bit", chip.device_bits)]);
+    t1.row(&["row parallelism".into(), chip.row_parallelism.to_string()]);
+    t1.row(&["DAC precision".into(), format!("{} bit", chip.dac_bits)]);
+    t1.row(&["column parallelism".into(), chip.adcs_per_tile.to_string()]);
+    t1.row(&["ADC precision".into(), format!("{} bits", chip.adc_bits)]);
+    t1.row(&[
+        "avg power per tile".into(),
+        format!("{:.0} uW", chip.tile_power_w * 1e6),
+    ]);
+    t1.row(&["clock".into(), format!("{:.0} MHz", chip.clock_hz / 1e6)]);
+    t1.print();
+
+    println!("\nTable II — DNN benchmarks, 8-bit baseline tile counts");
+    let paper = [3232u64, 1602, 2965, 3370, 5682];
+    let mut t2 = Table::new(&["benchmark", "dataset", "tiles (paper)", "tiles (ours)"]);
+    for (net, p) in nets::paper_benchmarks().iter().zip(paper) {
+        let ours = net.tiles_at_uniform(chip.tile_size, 8, chip.device_bits);
+        let ds = if net.name == "MLP" { "MNIST" } else { "ImageNet" };
+        t2.row(&[net.name.clone(), ds.into(), p.to_string(), ours.to_string()]);
+    }
+    t2.print();
+    Ok(())
+}
+
+fn cmd_motivate() -> Result<()> {
+    // The §III worked example; the same numbers are asserted in
+    // rust/benches/fig2_motivation.rs.
+    let net = nets::resnet::resnet18();
+    let model = CostModel::paper();
+    let nl = net.num_layers();
+    let base = model.baseline(&net);
+    println!(
+        "baseline ResNet18 8/8: latency {:.2} Mcycles, throughput {:.2} inf/s, {} tiles",
+        base.total_cycles / 1e6,
+        base.throughput(),
+        base.tiles_used
+    );
+
+    // (b) 6-bit weights on a heavy layer + 6-bit activations on conv1.
+    let heavy = net
+        .layers
+        .iter()
+        .position(|l| l.name == "layer4.1.conv2")
+        .unwrap();
+    let mut p = Policy::baseline(nl);
+    p.layers[heavy].w_bits = 6;
+    p.layers[0].a_bits = 6;
+    let q = model.network(&net, &p, &vec![1; nl]);
+    println!(
+        "(b) mixed precision: {} tiles conserved, latency -{:.1}%, throughput x{:.2}",
+        base.tiles_used - q.tiles_used,
+        100.0 * (1.0 - q.total_cycles / base.total_cycles),
+        q.throughput() / base.throughput()
+    );
+
+    // (c) naive replication of the bottleneck with the freed tiles.
+    let freed = base.tiles_used - q.tiles_used;
+    let copies = freed / q.layers[0].tiles;
+    let mut repl = vec![1u64; nl];
+    repl[0] += copies;
+    let r = model.network(&net, &p, &repl);
+    println!(
+        "(c) + naive replication of conv1 x{}: latency -{:.1}%, throughput x{:.2}",
+        repl[0],
+        100.0 * (1.0 - r.total_cycles / base.total_cycles),
+        r.throughput() / base.throughput()
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let model = CostModel::paper();
+    let cfg = SearchConfig {
+        objective: objective_arg(args)?,
+        episodes: args.usize("episodes", 120),
+        budget_start: args.f64("budget-start", 0.35),
+        budget_end: args.f64("budget-end", 0.20),
+        lambda: args.f64("lambda", 2.0),
+        alpha: args.f64("alpha", 1.0),
+        n_tiles: args.flags.get("tiles").and_then(|v| v.parse().ok()),
+        updates_per_episode: args.usize("updates", 8),
+        seed: args.u64("seed", 0xA11CE),
+    };
+    let search = Lrmp::new(&model, &net, cfg);
+
+    let mut provider: Box<dyn AccuracyProvider> = if args.bool("live") {
+        if !net.name.starts_with("MLP") {
+            bail!("--live accuracy is available for the MLP benchmarks only");
+        }
+        let ev = Evaluator::new(&runtime::default_artifacts_dir())?;
+        Box::new(LiveAccuracy::new(ev, args.usize("samples", 512)))
+    } else if args.flags.contains_key("noise") {
+        // Noise-aware search: score policies under analog non-idealities
+        // (`--noise typical` or `--noise <sigma_device>`).
+        use lrmp::quant::nonideal::{NoisySurrogate, NonidealParams};
+        let params = match args.str("noise", "typical").as_str() {
+            "typical" => NonidealParams::typical_rram(),
+            s => NonidealParams {
+                sigma_device: s.parse().context("--noise expects 'typical' or a sigma")?,
+                ..NonidealParams::ideal()
+            },
+        };
+        Box::new(NoisySurrogate::new(
+            &net,
+            SqnrSurrogate::for_benchmark(&net),
+            params,
+        ))
+    } else {
+        Box::new(SqnrSurrogate::for_benchmark(&net))
+    };
+
+    let res = search.run(provider.as_mut())?;
+    println!(
+        "{} [{}] latency x{:.2}  throughput x{:.2}  energy x{:.2}  acc {:.4} -> {:.4} (finetuned)",
+        net.name,
+        provider.name(),
+        res.latency_improvement(),
+        res.throughput_improvement(),
+        res.energy_improvement(),
+        res.baseline_accuracy,
+        res.finetuned_accuracy,
+    );
+    if let Some(out) = args.flags.get("out") {
+        std::fs::write(out, res.to_json().pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep_area(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let model = CostModel::paper();
+    let base_tiles = net.tiles_at_uniform(model.chip.tile_size, 8, model.chip.device_bits);
+    let mut t = Table::new(&["tiles/baseline", "mode", "latency x", "tiles used"]);
+    for frac in [0.6, 0.8, 1.0, 1.2, 1.5] {
+        let n_tiles = (base_tiles as f64 * frac) as u64;
+        for (mode, result) in ablation::area_modes(
+            &model,
+            &net,
+            n_tiles,
+            args.u64("seed", 7),
+            args.usize("episodes", 24),
+        ) {
+            match result {
+                Some((lat_x, used)) => t.row(&[
+                    format!("{frac:.1}"),
+                    mode.into(),
+                    format!("{lat_x:.2}"),
+                    used.to_string(),
+                ]),
+                None => t.row(&[
+                    format!("{frac:.1}"),
+                    mode.into(),
+                    "infeasible".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let model = CostModel::paper();
+    let policy = Policy::baseline(net.num_layers());
+    let repl = vec![1u64; net.num_layers()];
+    let cost = model.network(&net, &policy, &repl);
+    let sims = sim::simulate_network(&model, &net, &policy, &repl);
+    let mut t = Table::new(&["layer", "analytic (cyc)", "simulated (cyc)", "ratio"]);
+    for ((l, c), s) in net.layers.iter().zip(&cost.layers).zip(&sims) {
+        t.row(&[
+            l.name.clone(),
+            c.total_cycles().to_string(),
+            s.makespan.to_string(),
+            format!("{:.3}", s.makespan as f64 / c.total_cycles() as f64),
+        ]);
+    }
+    t.print();
+    let sim_total: u64 = sims.iter().map(|s| s.makespan).sum();
+    println!(
+        "total: analytic {:.2} Mcyc, simulated {:.2} Mcyc (pipelined stages overlap)",
+        cost.total_cycles / 1e6,
+        sim_total as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use lrmp::coordinator::{batcher::BatchPolicy, Server};
+    use std::sync::Arc;
+    let engine = lrmp::runtime::engine::Engine::start(runtime::default_artifacts_dir())?;
+    let nl = engine.num_layers;
+    let dim = engine.input_dim;
+    let wb = args.u64("wbits", 8).clamp(2, 8) as u32;
+    let ab = args.u64("abits", 8).clamp(2, 8) as u32;
+    let requests = args.usize("requests", 1024);
+    let clients = args.usize("clients", 4);
+    let policy = Policy::uniform(nl, wb, ab);
+    let server = Arc::new(Server::start(
+        engine,
+        &policy,
+        BatchPolicy {
+            max_batch: args.usize("max-batch", 256),
+            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 4)),
+        },
+    ));
+    println!(
+        "serving quantized MLP (w{wb}/a{ab}) — {clients} clients x {} requests",
+        requests / clients
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = Arc::clone(&server);
+        let per = requests / clients;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64 + 1);
+            for _ in 0..per {
+                let x: Vec<f32> = (0..dim).map(|_| rng.f64() as f32).collect();
+                server.infer(x).expect("infer");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.snapshot_metrics();
+    println!(
+        "served {} requests in {:.2}s -> {:.0} req/s | batches {} (mean fill {:.2}) \
+         | latency p50 {:.1}ms p95 {:.1}ms | failures {}",
+        m.requests,
+        wall,
+        m.requests as f64 / wall,
+        m.batches,
+        m.mean_fill(),
+        m.latency_p(50.0) * 1e3,
+        m.latency_p(95.0) * 1e3,
+        m.failures
+    );
+    Ok(())
+}
+
+fn cmd_demo() -> Result<()> {
+    let engine = lrmp::runtime::engine::Engine::start(runtime::default_artifacts_dir())?;
+    let (b, r, n) = engine.demo_shape;
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..b * r).map(|_| rng.f64() as f32).collect();
+    let w: Vec<f32> = (0..r * n).map(|_| rng.normal() as f32).collect();
+    for (wb, ab) in [(8.0, 8.0), (4.0, 6.0), (2.0, 2.0)] {
+        let (exact, fast) = engine.crossbar_demo(x.clone(), w.clone(), wb, ab)?;
+        let agree = exact == fast;
+        println!(
+            "crossbar demo w={wb} a={ab}: bit-exact == fast kernel: {agree} \
+             (first outputs: {:?})",
+            &exact[..4.min(exact.len())]
+        );
+        if !agree {
+            bail!("kernel mismatch at w={wb} a={ab}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,279 @@
+//! Physical placement substrate: assign every (layer, replica) instance's
+//! crossbar tiles to concrete tiles on the chip's cluster grid (a cluster =
+//! the tiles served by one vector module and its buses). The analytical
+//! model assumes instances get bus/lane bandwidth proportional to the
+//! clusters they span; this module produces an actual placement and checks
+//! that assumption is realizable: every instance fits, no tile is shared,
+//! and fragmentation stays bounded.
+//!
+//! Placement heuristic: first-fit-decreasing over instances (largest tile
+//! demand first), preferring the cluster with the least remaining space
+//! that still fits (best-fit) to keep big contiguous regions available —
+//! the same packing family ISAAC-style compilers use.
+
+use crate::arch::ChipConfig;
+use thiserror::Error;
+
+/// One placed instance: which clusters host how many of its tiles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub layer: usize,
+    pub replica: u64,
+    /// (cluster index, tiles allocated there), non-empty, sums to demand.
+    pub spans: Vec<(usize, u64)>,
+}
+
+impl Placement {
+    pub fn tiles(&self) -> u64 {
+        self.spans.iter().map(|(_, t)| t).sum()
+    }
+    pub fn clusters_spanned(&self) -> usize {
+        self.spans.len()
+    }
+}
+
+/// Full chip placement.
+#[derive(Clone, Debug)]
+pub struct ChipPlacement {
+    pub placements: Vec<Placement>,
+    pub cluster_free: Vec<u64>,
+    pub cluster_capacity: u64,
+}
+
+#[derive(Debug, Error)]
+pub enum PlacementError {
+    #[error("demand {demand} tiles exceeds chip capacity {capacity}")]
+    OverCapacity { demand: u64, capacity: u64 },
+}
+
+/// Place `(layer, replication, tiles_per_instance)` demands onto the chip.
+pub fn place(
+    chip: &ChipConfig,
+    demands: &[(usize, u64, u64)], // (layer, r_l, s_l)
+) -> Result<ChipPlacement, PlacementError> {
+    let n_clusters = chip.n_vector_modules as usize;
+    let capacity = chip.tiles_per_cluster();
+    let total_capacity = capacity * n_clusters as u64;
+    let demand: u64 = demands.iter().map(|&(_, r, s)| r * s).sum();
+    if demand > total_capacity {
+        return Err(PlacementError::OverCapacity {
+            demand,
+            capacity: total_capacity,
+        });
+    }
+
+    // Expand to instances, sort by tile demand descending (FFD).
+    let mut instances: Vec<(usize, u64, u64)> = demands
+        .iter()
+        .flat_map(|&(layer, r, s)| (0..r).map(move |k| (layer, k, s)))
+        .collect();
+    instances.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1)));
+
+    let mut free = vec![capacity; n_clusters];
+    let mut placements = Vec::with_capacity(instances.len());
+    for (layer, replica, mut need) in instances {
+        let mut spans = Vec::new();
+        // Best-fit: smallest remaining space that still holds the whole
+        // instance; otherwise split across the emptiest clusters.
+        if let Some(best) = (0..n_clusters)
+            .filter(|&c| free[c] >= need)
+            .min_by_key(|&c| free[c])
+        {
+            free[best] -= need;
+            spans.push((best, need));
+        } else {
+            // Split: take from the emptiest clusters until satisfied.
+            let mut order: Vec<usize> = (0..n_clusters).collect();
+            order.sort_by_key(|&c| std::cmp::Reverse(free[c]));
+            for c in order {
+                if need == 0 {
+                    break;
+                }
+                let take = free[c].min(need);
+                if take > 0 {
+                    free[c] -= take;
+                    need -= take;
+                    spans.push((c, take));
+                }
+            }
+            debug_assert_eq!(need, 0, "capacity was pre-checked");
+        }
+        placements.push(Placement {
+            layer,
+            replica,
+            spans,
+        });
+    }
+    Ok(ChipPlacement {
+        placements,
+        cluster_free: free,
+        cluster_capacity: capacity,
+    })
+}
+
+impl ChipPlacement {
+    /// Total tiles placed.
+    pub fn tiles_used(&self) -> u64 {
+        self.placements.iter().map(|p| p.tiles()).sum()
+    }
+
+    /// Mean clusters spanned per instance (fragmentation indicator; 1.0 is
+    /// ideal for instances that fit in one cluster).
+    pub fn mean_span(&self) -> f64 {
+        if self.placements.is_empty() {
+            return 0.0;
+        }
+        self.placements
+            .iter()
+            .map(|p| p.clusters_spanned() as f64)
+            .sum::<f64>()
+            / self.placements.len() as f64
+    }
+
+    /// Validate the placement invariants; returns violations.
+    pub fn validate(&self, chip: &ChipConfig) -> Vec<String> {
+        let mut errs = Vec::new();
+        let n_clusters = chip.n_vector_modules as usize;
+        let mut used = vec![0u64; n_clusters];
+        for p in &self.placements {
+            if p.spans.is_empty() {
+                errs.push(format!("layer {} replica {} placed nowhere", p.layer, p.replica));
+            }
+            for &(c, t) in &p.spans {
+                if c >= n_clusters {
+                    errs.push(format!("cluster {c} out of range"));
+                } else {
+                    used[c] += t;
+                }
+                if t == 0 {
+                    errs.push(format!("empty span in layer {}", p.layer));
+                }
+            }
+        }
+        for (c, &u) in used.iter().enumerate() {
+            if u > self.cluster_capacity {
+                errs.push(format!(
+                    "cluster {c} over capacity: {u} > {}",
+                    self.cluster_capacity
+                ));
+            }
+            if u + self.cluster_free[c] != self.cluster_capacity {
+                errs.push(format!("cluster {c} free-list inconsistent"));
+            }
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::nets;
+    use crate::quant::Policy;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck;
+
+    fn chip() -> ChipConfig {
+        ChipConfig::paper_scaled()
+    }
+
+    #[test]
+    fn single_small_instance_fits_one_cluster() {
+        let p = place(&chip(), &[(0, 1, 8)]).unwrap();
+        assert_eq!(p.placements.len(), 1);
+        assert_eq!(p.placements[0].clusters_spanned(), 1);
+        assert_eq!(p.tiles_used(), 8);
+        assert!(p.validate(&chip()).is_empty());
+    }
+
+    #[test]
+    fn oversize_instance_splits_across_clusters() {
+        let cap = chip().tiles_per_cluster();
+        let p = place(&chip(), &[(0, 1, cap * 2 + 3)]).unwrap();
+        assert!(p.placements[0].clusters_spanned() >= 3);
+        assert_eq!(p.placements[0].tiles(), cap * 2 + 3);
+        assert!(p.validate(&chip()).is_empty());
+    }
+
+    #[test]
+    fn over_capacity_rejected() {
+        let total = chip().n_tiles; // tiles_per_cluster × clusters ≈ n_tiles
+        let r = place(&chip(), &[(0, 1, total + 1000)]);
+        assert!(matches!(r, Err(PlacementError::OverCapacity { .. })));
+    }
+
+    #[test]
+    fn resnet18_baseline_places_with_low_fragmentation() {
+        let net = nets::resnet::resnet18();
+        let model = CostModel::paper();
+        let costs = model.layers(&net, &Policy::baseline(net.num_layers()));
+        let demands: Vec<(usize, u64, u64)> = costs
+            .iter()
+            .enumerate()
+            .map(|(l, c)| (l, 1u64, c.tiles))
+            .collect();
+        let p = place(&chip(), &demands).unwrap();
+        assert!(p.validate(&chip()).is_empty(), "{:?}", p.validate(&chip()));
+        assert_eq!(p.tiles_used(), 1608);
+        // Every ResNet-18 layer fits inside a couple of clusters.
+        assert!(p.mean_span() < 2.5, "mean span {}", p.mean_span());
+    }
+
+    #[test]
+    fn replicated_plan_places_all_instances() {
+        let net = nets::resnet::resnet18();
+        let model = CostModel::paper();
+        let costs = model.layers(&net, &Policy::uniform(net.num_layers(), 4, 4));
+        let demands: Vec<(usize, u64, u64)> = costs
+            .iter()
+            .enumerate()
+            .map(|(l, c)| (l, if l == 0 { 14 } else { 1 }, c.tiles))
+            .collect();
+        let p = place(&chip(), &demands).unwrap();
+        let conv1_instances = p.placements.iter().filter(|x| x.layer == 0).count();
+        assert_eq!(conv1_instances, 14);
+        assert!(p.validate(&chip()).is_empty());
+    }
+
+    #[test]
+    fn prop_random_demands_place_or_reject_consistently() {
+        propcheck::check("placement-invariants", 40, |rng: &mut Rng| {
+            let chip = chip();
+            let n = rng.int_range(1, 30) as usize;
+            let demands: Vec<(usize, u64, u64)> = (0..n)
+                .map(|l| {
+                    (
+                        l,
+                        rng.int_range(1, 6) as u64,
+                        rng.int_range(1, 300) as u64,
+                    )
+                })
+                .collect();
+            let total: u64 = demands.iter().map(|&(_, r, s)| r * s).sum();
+            match place(&chip, &demands) {
+                Ok(p) => {
+                    let errs = p.validate(&chip);
+                    if !errs.is_empty() {
+                        return Err(format!("{errs:?}"));
+                    }
+                    if p.tiles_used() != total {
+                        return Err(format!("placed {} != demand {total}", p.tiles_used()));
+                    }
+                    let instances: u64 = demands.iter().map(|&(_, r, _)| r).sum();
+                    if p.placements.len() as u64 != instances {
+                        return Err("instance count mismatch".into());
+                    }
+                    Ok(())
+                }
+                Err(_) => {
+                    let cap = chip.tiles_per_cluster() * chip.n_vector_modules;
+                    if total <= cap {
+                        return Err(format!("rejected feasible demand {total} <= {cap}"));
+                    }
+                    Ok(())
+                }
+            }
+        });
+    }
+}

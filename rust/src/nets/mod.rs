@@ -1,0 +1,309 @@
+//! DNN layer geometry and the paper's benchmark networks (Table II).
+//!
+//! Only *shapes* matter to the hardware model: a layer is characterized by
+//! its lowered (im2col) weight matrix R×N and the number of input vectors W²
+//! it must push through the crossbars (paper §II). We describe the exact
+//! ImageNet geometries of ResNet-18/34/50/101 and the MNIST MLP, plus the
+//! scaled-down MLP used by the live end-to-end accuracy path (see DESIGN.md
+//! §4 substitutions).
+
+pub mod resnet;
+
+use crate::util::ceil_div;
+
+/// Kind of a mappable (weight-bearing) layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution lowered via im2col.
+    Conv2d {
+        in_c: u64,
+        out_c: u64,
+        kernel: u64,
+        stride: u64,
+        padding: u64,
+        /// Input spatial size (H = W assumed; true for all paper benchmarks).
+        in_hw: u64,
+    },
+    /// Fully-connected layer.
+    Linear { in_f: u64, out_f: u64 },
+}
+
+/// A weight-bearing layer plus its identity within a network.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+impl Layer {
+    pub fn conv(
+        name: &str,
+        in_c: u64,
+        out_c: u64,
+        kernel: u64,
+        stride: u64,
+        padding: u64,
+        in_hw: u64,
+    ) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv2d {
+                in_c,
+                out_c,
+                kernel,
+                stride,
+                padding,
+                in_hw,
+            },
+        }
+    }
+
+    pub fn linear(name: &str, in_f: u64, out_f: u64) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Linear { in_f, out_f },
+        }
+    }
+
+    /// Rows of the lowered weight matrix (R = K²·C for conv, in_f for FC).
+    pub fn lowered_rows(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d { in_c, kernel, .. } => kernel * kernel * in_c,
+            LayerKind::Linear { in_f, .. } => in_f,
+        }
+    }
+
+    /// Columns of the lowered weight matrix (N output features).
+    pub fn lowered_cols(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d { out_c, .. } => out_c,
+            LayerKind::Linear { out_f, .. } => out_f,
+        }
+    }
+
+    /// Output spatial size (out_hw × out_hw) for conv; 1 for FC.
+    pub fn out_hw(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d {
+                kernel,
+                stride,
+                padding,
+                in_hw,
+                ..
+            } => (in_hw + 2 * padding - kernel) / stride + 1,
+            LayerKind::Linear { .. } => 1,
+        }
+    }
+
+    /// Number of input vectors to stream (W² per paper Eqn 3; 1 for FC).
+    pub fn num_vectors(&self) -> u64 {
+        let w = self.out_hw();
+        w * w
+    }
+
+    /// Weight parameter count.
+    pub fn params(&self) -> u64 {
+        self.lowered_rows() * self.lowered_cols()
+    }
+
+    /// MACs for one inference of this layer.
+    pub fn macs(&self) -> u64 {
+        self.params() * self.num_vectors()
+    }
+}
+
+/// A benchmark network: an ordered list of weight-bearing layers.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Tiles for the whole net at uniform weight precision (Eqn 2).
+    pub fn tiles_at_uniform(&self, tile: u64, w_bits: u32, dev_bits: u32) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| layer_tiles(l, tile, w_bits, dev_bits))
+            .sum()
+    }
+}
+
+/// Eqn 2: tiles(K,C,N,X,w_b,s_b) = ceil(R/X)·ceil(N/X)·ceil(w_b/s_b).
+pub fn layer_tiles(layer: &Layer, tile: u64, w_bits: u32, dev_bits: u32) -> u64 {
+    ceil_div(layer.lowered_rows(), tile)
+        * ceil_div(layer.lowered_cols(), tile)
+        * ceil_div(w_bits as u64, dev_bits as u64)
+}
+
+/// The paper's MNIST MLP: 784-1024-4096-4096-1024-10 (§V-C).
+pub fn mlp_mnist() -> Network {
+    let dims = [784u64, 1024, 4096, 4096, 1024, 10];
+    let layers = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| Layer::linear(&format!("fc{}", i + 1), w[0], w[1]))
+        .collect();
+    Network {
+        name: "MLP".to_string(),
+        layers,
+    }
+}
+
+/// Scaled MLP for the live PJRT accuracy path: 256-512-512-128-10 over
+/// 16×16 synthetic digits (substitution documented in DESIGN.md §4).
+pub fn mlp_tiny() -> Network {
+    let dims = [256u64, 512, 512, 128, 10];
+    let layers = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| Layer::linear(&format!("fc{}", i + 1), w[0], w[1]))
+        .collect();
+    Network {
+        name: "MLP-tiny".to_string(),
+        layers,
+    }
+}
+
+/// VGG-16 ImageNet geometry (not in the paper's suite; included to show the
+/// toolchain generalizes beyond it — its 25088→4096 FC dominates tiles).
+pub fn vgg16() -> Network {
+    let cfg: &[(u64, u64, u64)] = &[
+        // (in_c, out_c, in_hw) — all 3×3 stride-1 pad-1 convs.
+        (3, 64, 224),
+        (64, 64, 224),
+        (64, 128, 112),
+        (128, 128, 112),
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 256, 56),
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+    ];
+    let mut layers: Vec<Layer> = cfg
+        .iter()
+        .enumerate()
+        .map(|(i, &(ic, oc, hw))| Layer::conv(&format!("conv{}", i + 1), ic, oc, 3, 1, 1, hw))
+        .collect();
+    layers.push(Layer::linear("fc1", 512 * 7 * 7, 4096));
+    layers.push(Layer::linear("fc2", 4096, 4096));
+    layers.push(Layer::linear("fc3", 4096, 1000));
+    Network {
+        name: "VGG16".to_string(),
+        layers,
+    }
+}
+
+/// All five paper benchmarks (Table II order).
+pub fn paper_benchmarks() -> Vec<Network> {
+    vec![
+        mlp_mnist(),
+        resnet::resnet18(),
+        resnet::resnet34(),
+        resnet::resnet50(),
+        resnet::resnet101(),
+    ]
+}
+
+/// Look a benchmark up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Network> {
+    let n = name.to_ascii_lowercase();
+    match n.as_str() {
+        "mlp" | "mlp_mnist" => Some(mlp_mnist()),
+        "mlp_tiny" | "mlp-tiny" => Some(mlp_tiny()),
+        "resnet18" | "rn18" => Some(resnet::resnet18()),
+        "resnet34" | "rn34" => Some(resnet::resnet34()),
+        "resnet50" | "rn50" => Some(resnet::resnet50()),
+        "resnet101" | "rn101" => Some(resnet::resnet101()),
+        "vgg16" => Some(vgg16()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_lowering_dims() {
+        // ResNet-18 conv1: 7×7, 3→64, stride 2, pad 3, 224×224 input.
+        let l = Layer::conv("conv1", 3, 64, 7, 2, 3, 224);
+        assert_eq!(l.lowered_rows(), 147);
+        assert_eq!(l.lowered_cols(), 64);
+        assert_eq!(l.out_hw(), 112);
+        assert_eq!(l.num_vectors(), 12544);
+    }
+
+    #[test]
+    fn linear_lowering_dims() {
+        let l = Layer::linear("fc", 512, 1000);
+        assert_eq!(l.lowered_rows(), 512);
+        assert_eq!(l.lowered_cols(), 1000);
+        assert_eq!(l.num_vectors(), 1);
+    }
+
+    #[test]
+    fn eqn2_tile_counts() {
+        // Worked examples from §II / §III of the paper.
+        let conv1 = Layer::conv("conv1", 3, 64, 7, 2, 3, 224);
+        assert_eq!(layer_tiles(&conv1, 256, 8, 1), 8); // 1×1×8
+        let l4conv = Layer::conv("c", 512, 512, 3, 1, 1, 7);
+        assert_eq!(layer_tiles(&l4conv, 256, 8, 1), 288); // 18×2×8
+        assert_eq!(layer_tiles(&l4conv, 256, 6, 1), 216); // freeing 72 tiles (Fig 2b)
+    }
+
+    #[test]
+    fn mlp_matches_table2_exactly() {
+        // Paper Table II: MLP on MNIST needs 3232 tiles at 8-bit weights.
+        let n = mlp_mnist();
+        assert_eq!(n.tiles_at_uniform(256, 8, 1), 3232);
+    }
+
+    #[test]
+    fn mlp_structure() {
+        let n = mlp_mnist();
+        assert_eq!(n.num_layers(), 5);
+        assert_eq!(n.layers[0].lowered_rows(), 784);
+        assert_eq!(n.layers[4].lowered_cols(), 10);
+        // 784·1024 + 1024·4096 + 4096·4096 + 4096·1024 + 1024·10
+        assert_eq!(n.total_params(), 25_978_880);
+    }
+
+    #[test]
+    fn vgg16_geometry() {
+        let v = vgg16();
+        assert_eq!(v.num_layers(), 16);
+        // Conv+FC weight params of torchvision VGG-16: 14.71M + 123.63M.
+        assert_eq!(v.total_params(), 138_344_128);
+        // The paper's chip cannot hold 8-bit VGG-16 (FC1 alone ≈ 12.7k tiles)
+        // — exactly the area pressure LRMP targets.
+        let tiles = v.tiles_at_uniform(256, 8, 1);
+        assert!(tiles > 12_000, "vgg16 tiles {tiles}");
+        // With 2-bit weights it approaches (but still exceeds) 5682.
+        assert!(v.tiles_at_uniform(256, 2, 1) < tiles / 3);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(by_name("ResNet18").unwrap().name, "ResNet18");
+        assert_eq!(by_name("mlp").unwrap().name, "MLP");
+        assert_eq!(by_name("vgg16").unwrap().name, "VGG16");
+        assert!(by_name("alexnet").is_none());
+    }
+}

@@ -1,0 +1,191 @@
+//! Exact ImageNet geometries of ResNet-18/34/50/101 (He et al., CVPR'16),
+//! the conv benchmarks of Table II. Only weight-bearing layers are emitted
+//! (convs incl. downsample projections, and the final FC); batch-norms and
+//! pooling carry no crossbar weights and fold into the vector-module digital
+//! path of the cost model.
+
+use super::{Layer, Network};
+
+/// Spatial sizes at the four ResNet stages for 224×224 ImageNet inputs.
+const STAGE_HW: [u64; 4] = [56, 28, 14, 7];
+/// Basic-block channel widths per stage.
+const STAGE_C: [u64; 4] = [64, 128, 256, 512];
+
+/// Build a basic-block (two 3×3 convs) ResNet: 18 = [2,2,2,2], 34 = [3,4,6,3].
+fn resnet_basic(name: &str, blocks: [u64; 4]) -> Network {
+    let mut layers = vec![Layer::conv("conv1", 3, 64, 7, 2, 3, 224)];
+    let mut in_c = 64;
+    for (stage, (&nblocks, (&c, &hw))) in blocks
+        .iter()
+        .zip(STAGE_C.iter().zip(STAGE_HW.iter()))
+        .enumerate()
+    {
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            // When stride 2, the block's first conv sees the previous stage's
+            // spatial size; subsequent convs see this stage's.
+            let conv_in_hw = if stride == 2 { hw * 2 } else { hw };
+            let p = format!("layer{}.{}", stage + 1, b);
+            layers.push(Layer::conv(
+                &format!("{p}.conv1"),
+                in_c,
+                c,
+                3,
+                stride,
+                1,
+                conv_in_hw,
+            ));
+            layers.push(Layer::conv(&format!("{p}.conv2"), c, c, 3, 1, 1, hw));
+            if in_c != c || stride != 1 {
+                layers.push(Layer::conv(
+                    &format!("{p}.downsample"),
+                    in_c,
+                    c,
+                    1,
+                    stride,
+                    0,
+                    conv_in_hw,
+                ));
+            }
+            in_c = c;
+        }
+    }
+    layers.push(Layer::linear("fc", 512, 1000));
+    Network {
+        name: name.to_string(),
+        layers,
+    }
+}
+
+/// Build a bottleneck (1×1 → 3×3 → 1×1, 4× expansion) ResNet:
+/// 50 = [3,4,6,3], 101 = [3,4,23,3].
+fn resnet_bottleneck(name: &str, blocks: [u64; 4]) -> Network {
+    let mut layers = vec![Layer::conv("conv1", 3, 64, 7, 2, 3, 224)];
+    let mut in_c = 64;
+    for (stage, (&nblocks, (&c, &hw))) in blocks
+        .iter()
+        .zip(STAGE_C.iter().zip(STAGE_HW.iter()))
+        .enumerate()
+    {
+        let out_c = c * 4;
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let conv_in_hw = if stride == 2 { hw * 2 } else { hw };
+            let p = format!("layer{}.{}", stage + 1, b);
+            // Torchvision convention: the stride lives on the 3×3 conv.
+            layers.push(Layer::conv(&format!("{p}.conv1"), in_c, c, 1, 1, 0, conv_in_hw));
+            layers.push(Layer::conv(
+                &format!("{p}.conv2"),
+                c,
+                c,
+                3,
+                stride,
+                1,
+                conv_in_hw,
+            ));
+            layers.push(Layer::conv(&format!("{p}.conv3"), c, out_c, 1, 1, 0, hw));
+            if in_c != out_c || stride != 1 {
+                layers.push(Layer::conv(
+                    &format!("{p}.downsample"),
+                    in_c,
+                    out_c,
+                    1,
+                    stride,
+                    0,
+                    conv_in_hw,
+                ));
+            }
+            in_c = out_c;
+        }
+    }
+    layers.push(Layer::linear("fc", 2048, 1000));
+    Network {
+        name: name.to_string(),
+        layers,
+    }
+}
+
+pub fn resnet18() -> Network {
+    resnet_basic("ResNet18", [2, 2, 2, 2])
+}
+
+pub fn resnet34() -> Network {
+    resnet_basic("ResNet34", [3, 4, 6, 3])
+}
+
+pub fn resnet50() -> Network {
+    resnet_bottleneck("ResNet50", [3, 4, 6, 3])
+}
+
+pub fn resnet101() -> Network {
+    resnet_bottleneck("ResNet101", [3, 4, 23, 3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::LayerKind;
+
+    #[test]
+    fn layer_counts_match_torchvision() {
+        // Weight-bearing layers: convs (incl. downsample) + fc.
+        assert_eq!(resnet18().num_layers(), 1 + (2 + 2 + 2 + 2) * 2 + 3 + 1); // 21
+        assert_eq!(resnet34().num_layers(), 1 + (3 + 4 + 6 + 3) * 2 + 3 + 1); // 37
+        assert_eq!(resnet50().num_layers(), 1 + (3 + 4 + 6 + 3) * 3 + 4 + 1); // 54
+        assert_eq!(resnet101().num_layers(), 1 + (3 + 4 + 23 + 3) * 3 + 4 + 1); // 105
+    }
+
+    #[test]
+    fn param_counts_match_known_values() {
+        // Conv+FC weight params (no biases/BN), matching torchvision's
+        // conv/fc weight tensors exactly.
+        assert_eq!(resnet18().total_params(), 11_678_912);
+        assert_eq!(resnet34().total_params(), 21_779_648);
+        assert_eq!(resnet50().total_params(), 25_502_912);
+        assert_eq!(resnet101().total_params(), 44_442_816);
+    }
+
+    #[test]
+    fn spatial_chain_consistent() {
+        // Every conv's output spatial size must equal the next conv's input
+        // within a stage (modulo residual branches, checked via stage sizes).
+        for net in [resnet18(), resnet34(), resnet50(), resnet101()] {
+            for l in &net.layers {
+                if let LayerKind::Conv2d { in_hw, .. } = l.kind {
+                    assert!(
+                        [224, 112, 56, 28, 14, 7].contains(&in_hw),
+                        "{}: unexpected in_hw {}",
+                        l.name,
+                        in_hw
+                    );
+                    assert!(l.out_hw() >= 7, "{}: degenerate output", l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_layer_has_most_vectors() {
+        // The paper's Fig 7 observation: conv1 is the latency bottleneck
+        // because it streams the most input vectors (112² = 12544).
+        for net in [resnet18(), resnet34(), resnet50(), resnet101()] {
+            let v0 = net.layers[0].num_vectors();
+            assert_eq!(v0, 12544);
+            assert!(net.layers[1..].iter().all(|l| l.num_vectors() <= v0));
+        }
+    }
+
+    #[test]
+    fn downsample_projection_count() {
+        let count = |n: &Network| {
+            n.layers
+                .iter()
+                .filter(|l| l.name.contains("downsample"))
+                .count()
+        };
+        assert_eq!(count(&resnet18()), 3); // stages 2..4
+        assert_eq!(count(&resnet34()), 3);
+        assert_eq!(count(&resnet50()), 4); // incl. stage-1 expansion
+        assert_eq!(count(&resnet101()), 4);
+    }
+}

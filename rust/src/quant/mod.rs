@@ -1,0 +1,252 @@
+//! Mixed-precision quantization policies: per-layer weight/activation
+//! bitwidths, the search's decision variables (paper §IV). Also hosts the
+//! SQNR-based accuracy surrogate used for the conv benchmarks where live
+//! ImageNet evaluation is unavailable (DESIGN.md §4).
+
+use crate::nets::Network;
+use crate::util::json::Json;
+
+/// Bitwidth bounds explored by the RL agent (HAQ convention).
+pub const MIN_BITS: u32 = 2;
+pub const MAX_BITS: u32 = 8;
+
+/// Per-layer precision assignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerPrecision {
+    pub w_bits: u32,
+    pub a_bits: u32,
+}
+
+impl LayerPrecision {
+    pub fn new(w_bits: u32, a_bits: u32) -> Self {
+        assert!((MIN_BITS..=MAX_BITS).contains(&w_bits), "w_bits {w_bits}");
+        assert!((MIN_BITS..=MAX_BITS).contains(&a_bits), "a_bits {a_bits}");
+        LayerPrecision { w_bits, a_bits }
+    }
+}
+
+/// A quantization policy for a whole network.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Policy {
+    pub layers: Vec<LayerPrecision>,
+}
+
+impl Policy {
+    /// The paper's fixed-precision baseline: 8-bit weights & activations.
+    pub fn baseline(num_layers: usize) -> Policy {
+        Policy::uniform(num_layers, 8, 8)
+    }
+
+    pub fn uniform(num_layers: usize, w_bits: u32, a_bits: u32) -> Policy {
+        Policy {
+            layers: vec![LayerPrecision::new(w_bits, a_bits); num_layers],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Average bits across layers, (w, a) — reported in experiment logs.
+    pub fn mean_bits(&self) -> (f64, f64) {
+        if self.layers.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = self.layers.len() as f64;
+        (
+            self.layers.iter().map(|l| l.w_bits as f64).sum::<f64>() / n,
+            self.layers.iter().map(|l| l.a_bits as f64).sum::<f64>() / n,
+        )
+    }
+
+    /// Model-size compression vs the 8-bit baseline, weighted by params.
+    pub fn weight_compression(&self, net: &Network) -> f64 {
+        assert_eq!(self.len(), net.num_layers());
+        let base: u64 = net.layers.iter().map(|l| l.params() * 8).sum();
+        let ours: u64 = net
+            .layers
+            .iter()
+            .zip(&self.layers)
+            .map(|(l, p)| l.params() * p.w_bits as u64)
+            .sum();
+        base as f64 / ours as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.layers
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("w", Json::Num(p.w_bits as f64)),
+                        ("a", Json::Num(p.a_bits as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Option<Policy> {
+        let arr = j.as_arr()?;
+        let mut layers = Vec::with_capacity(arr.len());
+        for e in arr {
+            let w = e.get("w").as_u64()? as u32;
+            let a = e.get("a").as_u64()? as u32;
+            if !(MIN_BITS..=MAX_BITS).contains(&w) || !(MIN_BITS..=MAX_BITS).contains(&a) {
+                return None;
+            }
+            layers.push(LayerPrecision { w_bits: w, a_bits: a });
+        }
+        Some(Policy { layers })
+    }
+}
+
+/// SQNR-based accuracy surrogate for benchmarks whose live dataset we cannot
+/// evaluate (ImageNet ResNets — DESIGN.md §4).
+///
+/// Uniform symmetric quantization to b bits has SQNR ≈ 6.02·b dB per layer;
+/// we model estimated top-1 degradation as a params-weighted sum of per-layer
+/// noise powers relative to the 8-bit baseline, saturating at `max_drop`.
+/// The surrogate's only job is to give the RL reward the right *monotonic
+/// structure* (more aggressive quantization ⇒ more accuracy loss, weighted
+/// toward parameter-heavy layers, with activations counted at half weight).
+#[derive(Clone, Debug)]
+pub struct SqnrSurrogate {
+    /// Baseline top-1 accuracy in [0,1].
+    pub base_acc: f64,
+    /// Maximum accuracy drop when everything is at MIN_BITS.
+    pub max_drop: f64,
+    /// Per-layer parameter weights (normalized).
+    weights: Vec<f64>,
+}
+
+pub mod nonideal;
+
+impl SqnrSurrogate {
+    /// Calibrated per-benchmark surrogate: MNIST MLPs are famously robust to
+    /// aggressive quantization (small max_drop); ImageNet ResNets are not.
+    pub fn for_benchmark(net: &Network) -> Self {
+        match net.name.as_str() {
+            "MLP" => SqnrSurrogate::new(net, 0.98, 0.15),
+            "MLP-tiny" => SqnrSurrogate::new(net, 0.92, 0.5),
+            _ => SqnrSurrogate::new(net, 0.70, 0.40),
+        }
+    }
+
+    pub fn new(net: &Network, base_acc: f64, max_drop: f64) -> Self {
+        let total: u64 = net.total_params();
+        let weights = net
+            .layers
+            .iter()
+            .map(|l| l.params() as f64 / total as f64)
+            .collect();
+        SqnrSurrogate {
+            base_acc,
+            max_drop,
+            weights,
+        }
+    }
+
+    /// Quantization-noise power of b bits relative to 8 bits: 4^(8-b) − 1,
+    /// normalized so that b = MIN_BITS ⇒ 1.0.
+    fn rel_noise(bits: u32) -> f64 {
+        let worst = 4f64.powi((8 - MIN_BITS) as i32) - 1.0;
+        (4f64.powi((8 - bits) as i32) - 1.0) / worst
+    }
+
+    /// Estimated top-1 accuracy (pre-finetuning) under `policy`.
+    pub fn accuracy(&self, policy: &Policy) -> f64 {
+        assert_eq!(policy.len(), self.weights.len());
+        let noise: f64 = policy
+            .layers
+            .iter()
+            .zip(&self.weights)
+            .map(|(p, w)| w * (Self::rel_noise(p.w_bits) + 0.5 * Self::rel_noise(p.a_bits)))
+            .sum();
+        // Saturating degradation curve.
+        let drop = self.max_drop * (1.0 - (-3.0 * noise).exp()) / (1.0 - (-4.5f64).exp());
+        (self.base_acc - drop).max(0.0)
+    }
+
+    /// Accuracy after finetuning: the paper reports <1% loss post-finetune
+    /// (its policies keep most layers ≥ 4 bits); we model finetuning as
+    /// recovering 92% of the quantization drop — calibrated so the live MLP
+    /// path and the surrogate agree on the shape of the recovery.
+    pub fn accuracy_finetuned(&self, policy: &Policy) -> f64 {
+        let pre = self.accuracy(policy);
+        self.base_acc - 0.08 * (self.base_acc - pre)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn baseline_policy_is_8_8() {
+        let p = Policy::baseline(5);
+        assert_eq!(p.len(), 5);
+        assert!(p.layers.iter().all(|l| l.w_bits == 8 && l.a_bits == 8));
+        assert_eq!(p.mean_bits(), (8.0, 8.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_bits() {
+        LayerPrecision::new(1, 8);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut p = Policy::baseline(3);
+        p.layers[1] = LayerPrecision::new(4, 6);
+        let j = p.to_json();
+        assert_eq!(Policy::from_json(&j), Some(p));
+    }
+
+    #[test]
+    fn from_json_rejects_bad_bits() {
+        let j = Json::parse(r#"[{"w": 12, "a": 8}]"#).unwrap();
+        assert_eq!(Policy::from_json(&j), None);
+    }
+
+    #[test]
+    fn compression_for_half_bits() {
+        let net = nets::mlp_mnist();
+        let p = Policy::uniform(net.num_layers(), 4, 8);
+        assert!((p.weight_compression(&net) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn surrogate_monotonic_in_bits() {
+        let net = nets::resnet::resnet18();
+        let s = SqnrSurrogate::new(&net, 0.70, 0.40);
+        let accs: Vec<f64> = (MIN_BITS..=MAX_BITS)
+            .map(|b| s.accuracy(&Policy::uniform(net.num_layers(), b, b)))
+            .collect();
+        for w in accs.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12, "not monotone: {accs:?}");
+        }
+        // 8-bit policy is (by construction) lossless vs baseline.
+        assert!((accs[accs.len() - 1] - 0.70).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finetune_recovers_most_accuracy() {
+        let net = nets::resnet::resnet18();
+        let s = SqnrSurrogate::new(&net, 0.70, 0.40);
+        let p = Policy::uniform(net.num_layers(), 4, 4);
+        let pre = s.accuracy(&p);
+        let post = s.accuracy_finetuned(&p);
+        assert!(post > pre);
+        assert!(post <= s.base_acc + 1e-12);
+        // Paper: <1% loss at the chosen policies after finetuning. At a
+        // moderate uniform 6/6 policy the surrogate should satisfy that too.
+        let p6 = Policy::uniform(net.num_layers(), 6, 6);
+        assert!(s.base_acc - s.accuracy_finetuned(&p6) < 0.01);
+    }
+}

@@ -1,0 +1,212 @@
+//! Analog non-ideality accuracy model (rust side of the extension whose
+//! bit-level kernel lives in `python/compile/kernels/nonideal.py`): device
+//! conductance variation, conductance drift, and ADC-referred read noise
+//! folded into the SQNR accuracy surrogate. The paper defers these effects
+//! (§V-C) citing RxNN/NeuroSim-class models; this module lets the LRMP
+//! search run *noise-aware* — policies are scored under the perturbed
+//! accuracy so the agent can trade precision against analog headroom.
+
+use super::{Policy, SqnrSurrogate};
+use crate::nets::Network;
+
+/// Device/circuit non-ideality knobs (dimensionless; typical RRAM values:
+/// σ_dev ≈ 0.03–0.15, drift ν ≈ 0.005–0.05 per decade, σ_read ≪ 1 LSB).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NonidealParams {
+    /// Std-dev of per-device on-conductance variation (fraction of G_on).
+    pub sigma_device: f64,
+    /// Drift exponent ν: conductance scales as t^(-ν).
+    pub drift_nu: f64,
+    /// Decades of time elapsed since programming.
+    pub decades: f64,
+    /// ADC-referred read noise, in LSB of the 4-bit ADC.
+    pub sigma_read_lsb: f64,
+}
+
+impl NonidealParams {
+    pub fn ideal() -> Self {
+        NonidealParams {
+            sigma_device: 0.0,
+            drift_nu: 0.0,
+            decades: 0.0,
+            sigma_read_lsb: 0.0,
+        }
+    }
+
+    /// A typical foundry-RRAM corner (moderate variation, 1-year drift).
+    pub fn typical_rram() -> Self {
+        NonidealParams {
+            sigma_device: 0.05,
+            drift_nu: 0.01,
+            decades: 7.5, // ~1 year in seconds
+            sigma_read_lsb: 0.1,
+        }
+    }
+
+    /// Multiplicative conductance attenuation from drift.
+    pub fn drift_factor(&self) -> f64 {
+        if self.drift_nu <= 0.0 {
+            1.0
+        } else {
+            10f64.powf(-self.drift_nu * self.decades)
+        }
+    }
+
+    /// Effective extra noise power relative to the signal for a layer with
+    /// `rows` active rows per column and `w_bits` 1-bit slices.
+    ///
+    /// Variation: each column partial sum over R rows with ~half the devices
+    /// on has signal ≈ R/2·G and noise std ≈ σ·√(R/2)·G → relative noise
+    /// power ≈ 2σ²/R per slice read; the shift-add across slices is
+    /// coherent in signal and incoherent in noise, shrinking the aggregate.
+    /// Read noise: σ_read LSB against a 9-level partial sum.
+    pub fn relative_noise_power(&self, rows: u64, w_bits: u32) -> f64 {
+        let r = rows.max(1) as f64;
+        let var_dev = 2.0 * self.sigma_device * self.sigma_device / r;
+        // Slices contribute 4^-k weighted noise — geometric sum < 4/3.
+        let slice_agg = (1.0 - 4f64.powi(-(w_bits as i32))) * 4.0 / 3.0;
+        let var_read = {
+            let lsb = self.sigma_read_lsb / 9.0; // vs the 9-row full scale
+            lsb * lsb
+        };
+        var_dev * slice_agg + var_read
+    }
+}
+
+/// SQNR surrogate wrapped with analog noise: accuracy under `policy` is the
+/// ideal surrogate's accuracy minus a noise-power-driven penalty (same
+/// saturating curve as quantization noise, so units are commensurate).
+#[derive(Clone, Debug)]
+pub struct NoisySurrogate {
+    pub ideal: SqnrSurrogate,
+    pub params: NonidealParams,
+    rows: Vec<u64>,
+    weights: Vec<f64>,
+}
+
+impl NoisySurrogate {
+    pub fn new(net: &Network, ideal: SqnrSurrogate, params: NonidealParams) -> Self {
+        let total: u64 = net.total_params();
+        NoisySurrogate {
+            ideal,
+            params,
+            rows: net.layers.iter().map(|l| l.lowered_rows()).collect(),
+            weights: net
+                .layers
+                .iter()
+                .map(|l| l.params() as f64 / total as f64)
+                .collect(),
+        }
+    }
+
+    /// Number of layers this surrogate models.
+    pub fn layer_count(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Aggregate analog noise *std* under `policy`: per-layer relative
+    /// output-noise std (params-weighted), compounded across depth as √L —
+    /// independent per-layer perturbations accumulate like a random walk
+    /// through the network (the RxNN-class observation that deep nets are
+    /// far more variation-sensitive than a single crossbar read suggests).
+    pub fn analog_noise(&self, policy: &Policy) -> f64 {
+        assert_eq!(policy.len(), self.rows.len());
+        let drift_err = 1.0 - self.params.drift_factor();
+        let per_layer: f64 = policy
+            .layers
+            .iter()
+            .zip(self.rows.iter().zip(&self.weights))
+            .map(|(p, (&rows, &w))| {
+                // Residual drift error after scale recalibration (~10%).
+                let drift_var = (0.1 * drift_err) * (0.1 * drift_err);
+                w * (self.params.relative_noise_power(rows, p.w_bits) + drift_var).sqrt()
+            })
+            .sum();
+        per_layer * (self.rows.len() as f64).sqrt()
+    }
+
+    /// Accuracy with both quantization and analog noise.
+    pub fn accuracy(&self, policy: &Policy) -> f64 {
+        let ideal = self.ideal.accuracy(policy);
+        let noise = self.analog_noise(policy);
+        // Same saturating degradation shape as the quantization surrogate.
+        let drop = self.ideal.max_drop * (1.0 - (-6.0 * noise).exp());
+        (ideal - drop).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    fn setup(params: NonidealParams) -> (Network, NoisySurrogate) {
+        let net = nets::resnet::resnet18();
+        let ideal = SqnrSurrogate::new(&net, 0.70, 0.40);
+        let s = NoisySurrogate::new(&net, ideal, params);
+        (net, s)
+    }
+
+    use crate::nets::Network;
+
+    #[test]
+    fn ideal_params_change_nothing() {
+        let (net, s) = setup(NonidealParams::ideal());
+        for b in [2u32, 4, 6, 8] {
+            let p = Policy::uniform(net.num_layers(), b, b);
+            assert!((s.accuracy(&p) - s.ideal.accuracy(&p)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn noise_monotone_in_sigma() {
+        let p_ref = Policy::uniform(nets::resnet::resnet18().num_layers(), 6, 6);
+        let mut last = f64::INFINITY;
+        for sigma in [0.0, 0.05, 0.15, 0.4] {
+            let (_, s) = setup(NonidealParams {
+                sigma_device: sigma,
+                ..NonidealParams::ideal()
+            });
+            let acc = s.accuracy(&p_ref);
+            assert!(acc <= last + 1e-12, "sigma {sigma}: acc {acc} > {last}");
+            last = acc;
+        }
+    }
+
+    #[test]
+    fn drift_factor_and_penalty() {
+        let p = NonidealParams {
+            drift_nu: 0.01,
+            decades: 7.5,
+            ..NonidealParams::ideal()
+        };
+        let f = p.drift_factor();
+        assert!((f - 10f64.powf(-0.075)).abs() < 1e-12);
+        let (net, s) = setup(p);
+        let pol = Policy::baseline(net.num_layers());
+        assert!(s.accuracy(&pol) < s.ideal.accuracy(&pol));
+    }
+
+    #[test]
+    fn more_rows_average_out_device_variation() {
+        let p = NonidealParams {
+            sigma_device: 0.1,
+            ..NonidealParams::ideal()
+        };
+        let big = p.relative_noise_power(2304, 8);
+        let small = p.relative_noise_power(64, 8);
+        assert!(big < small, "{big} vs {small}");
+    }
+
+    #[test]
+    fn typical_rram_corner_is_noticeable_but_recoverable() {
+        // Uncompensated accuracy at the typical corner drops noticeably
+        // (literature: raw variation costs several points on deep nets);
+        // noise-aware finetuning (the `finetuned` provider path) recovers
+        // most of it.
+        let (net, s) = setup(NonidealParams::typical_rram());
+        let pol = Policy::baseline(net.num_layers());
+        let drop = s.ideal.accuracy(&pol) - s.accuracy(&pol);
+        assert!(drop > 0.01 && drop < 0.25, "typical-corner drop {drop}");
+    }
+}

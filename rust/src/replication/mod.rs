@@ -1,0 +1,543 @@
+//! Layer-replication optimizer (paper §IV-B): given per-layer tile costs s_l
+//! and single-instance latencies T_l under a quantization policy, choose
+//! integer replication factors r_l ≥ 1 with Σ r_l·s_l ≤ N_tiles that
+//!
+//! - `latencyOptim`:   minimize Σ_l T_l / r_l            (Eqn 7 objective)
+//! - `throughputOptim`: minimize max_l T_l / r_l          (min-max, Eqn 6)
+//!
+//! Both 1/r objectives are linearized with multiple-choice selectors [21].
+//! Production solvers: an exact MCKP dynamic program for the min-sum form
+//! and exact candidate bisection for the min-max form (with an MCKP pass to
+//! spend leftover tiles on total latency as a tie-break). `ilp_*` build the
+//! same problems as explicit ILPs for cross-checking against branch & bound.
+
+use crate::cost::LayerCost;
+use crate::lp::mckp::{self, Choice};
+use crate::lp::{Lp, Rel};
+use thiserror::Error;
+
+/// Optimization objective (paper: latencyOptim / throughputOptim).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    Latency,
+    Throughput,
+}
+
+#[derive(Debug, Error)]
+pub enum ReplicationError {
+    #[error("infeasible: one instance of every layer needs {needed} tiles but only {available} are available")]
+    Infeasible { needed: u64, available: u64 },
+    #[error("network has no layers")]
+    Empty,
+}
+
+/// Result of a replication optimization.
+#[derive(Clone, Debug)]
+pub struct ReplicationPlan {
+    pub replication: Vec<u64>,
+    pub tiles_used: u64,
+    /// Σ_l T_l / r_l, cycles.
+    pub total_cycles: f64,
+    /// max_l T_l / r_l, cycles.
+    pub bottleneck_cycles: f64,
+}
+
+/// Per-layer inputs to the optimizer.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerSummary {
+    /// Tiles for one instance, s_l.
+    pub tiles: u64,
+    /// Single-instance latency T_l, cycles.
+    pub cycles: u64,
+}
+
+impl LayerSummary {
+    pub fn from_costs(costs: &[LayerCost]) -> Vec<LayerSummary> {
+        costs
+            .iter()
+            .map(|c| LayerSummary {
+                tiles: c.tiles,
+                cycles: c.total_cycles(),
+            })
+            .collect()
+    }
+}
+
+fn plan_from(layers: &[LayerSummary], replication: Vec<u64>) -> ReplicationPlan {
+    let tiles_used = layers
+        .iter()
+        .zip(&replication)
+        .map(|(l, &r)| l.tiles * r)
+        .sum();
+    let eff: Vec<f64> = layers
+        .iter()
+        .zip(&replication)
+        .map(|(l, &r)| l.cycles as f64 / r as f64)
+        .collect();
+    ReplicationPlan {
+        replication,
+        tiles_used,
+        total_cycles: eff.iter().sum(),
+        bottleneck_cycles: eff.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+fn check_feasible(layers: &[LayerSummary], n_tiles: u64) -> Result<u64, ReplicationError> {
+    if layers.is_empty() {
+        return Err(ReplicationError::Empty);
+    }
+    let needed: u64 = layers.iter().map(|l| l.tiles).sum();
+    if needed > n_tiles {
+        return Err(ReplicationError::Infeasible {
+            needed,
+            available: n_tiles,
+        });
+    }
+    Ok(needed)
+}
+
+/// Hard cap on per-layer replication factors considered by the exact
+/// solvers. Keeps the MCKP DP's choice count bounded when a tiny layer
+/// (e.g. 4-tile conv1 at 2-bit weights) could nominally replicate hundreds
+/// of times: marginal gain decays as 1/r², so factors beyond ~10× the
+/// highest factor the paper ever reports (19) are never competitive.
+/// `prop_latency_dp_matches_bruteforce` cross-checks optimality under the
+/// cap; `perf_hotpath` measures the ~8× DP speedup it buys on ResNet-101.
+pub const R_MAX_CAP: u64 = 192;
+
+/// Max useful replication factor for layer `l` given everyone else's minimum.
+fn r_max(layers: &[LayerSummary], l: usize, n_tiles: u64, min_total: u64) -> u64 {
+    let others = min_total - layers[l].tiles;
+    let budget = n_tiles - others;
+    (budget / layers[l].tiles).clamp(1, R_MAX_CAP)
+}
+
+/// Entry point: optimize replication for `objective` under `n_tiles`.
+pub fn optimize(
+    layers: &[LayerSummary],
+    n_tiles: u64,
+    objective: Objective,
+) -> Result<ReplicationPlan, ReplicationError> {
+    match objective {
+        Objective::Latency => latency_optim(layers, n_tiles),
+        Objective::Throughput => throughput_optim(layers, n_tiles),
+    }
+}
+
+/// latencyOptim: exact MCKP DP over the linearized selectors.
+pub fn latency_optim(
+    layers: &[LayerSummary],
+    n_tiles: u64,
+) -> Result<ReplicationPlan, ReplicationError> {
+    let min_total = check_feasible(layers, n_tiles)?;
+    // DP over the *slack* beyond the mandatory one-instance-per-layer
+    // allocation: choice r costs (r-1)·s_l extra tiles. Halves the DP
+    // capacity vs budgeting total tiles (perf: EXPERIMENTS.md §Perf).
+    let slack = n_tiles - min_total;
+    let groups: Vec<Vec<Choice>> = layers
+        .iter()
+        .enumerate()
+        .map(|(l, lay)| {
+            let rmax = r_max(layers, l, n_tiles, min_total);
+            (1..=rmax)
+                .map(|r| Choice {
+                    weight: lay.tiles * (r - 1),
+                    cost: lay.cycles as f64 / r as f64,
+                })
+                .collect()
+        })
+        .collect();
+    let (sel, _) = mckp::solve(&groups, slack).expect("feasibility pre-checked");
+    let replication: Vec<u64> = sel.iter().map(|&k| (k + 1) as u64).collect();
+    Ok(plan_from(layers, replication))
+}
+
+/// throughputOptim: exact min-max via candidate bisection, then an MCKP pass
+/// (with per-layer lower bounds r_l ≥ ceil(T_l / M*)) to spend leftover tiles
+/// minimizing total latency without degrading the bottleneck.
+pub fn throughput_optim(
+    layers: &[LayerSummary],
+    n_tiles: u64,
+) -> Result<ReplicationPlan, ReplicationError> {
+    let min_total = check_feasible(layers, n_tiles)?;
+
+    // Candidate bottleneck values: T_l / k for any layer l and feasible k.
+    let mut candidates: Vec<f64> = Vec::new();
+    for (l, lay) in layers.iter().enumerate() {
+        let rmax = r_max(layers, l, n_tiles, min_total);
+        for r in 1..=rmax {
+            candidates.push(lay.cycles as f64 / r as f64);
+        }
+    }
+    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    candidates.dedup();
+
+    // Feasibility of a target M: every layer needs ceil(T_l / M) copies.
+    let tiles_needed = |m: f64| -> Option<u64> {
+        let mut total: u64 = 0;
+        for lay in layers {
+            let r = (lay.cycles as f64 / m).ceil().max(1.0) as u64;
+            total = total.checked_add(lay.tiles.checked_mul(r)?)?;
+        }
+        Some(total)
+    };
+    let feasible = |m: f64| tiles_needed(m).map_or(false, |t| t <= n_tiles);
+
+    // Binary search the smallest feasible candidate.
+    let (mut lo, mut hi) = (0usize, candidates.len() - 1);
+    debug_assert!(feasible(candidates[hi]), "r=1 everywhere must be feasible");
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(candidates[mid]) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let m_star = candidates[lo];
+
+    // Lower bounds from M*, then spend leftovers on total latency (MCKP with
+    // shifted choice sets).
+    let r_min: Vec<u64> = layers
+        .iter()
+        .map(|lay| ((lay.cycles as f64 / m_star).ceil().max(1.0)) as u64)
+        .collect();
+    let committed: u64 = layers
+        .iter()
+        .zip(&r_min)
+        .map(|(l, &r)| l.tiles * r)
+        .sum();
+    debug_assert!(committed <= n_tiles);
+
+    // Spend the remaining slack on total latency: DP over the slack beyond
+    // the committed r_min allocation (choice r costs (r - r_min)·s_l).
+    let slack = n_tiles - committed;
+    let groups: Vec<Vec<Choice>> = layers
+        .iter()
+        .enumerate()
+        .map(|(l, lay)| {
+            let rmax = (r_min[l] + slack / lay.tiles).min(r_min[l] + R_MAX_CAP);
+            (r_min[l]..=rmax)
+                .map(|r| Choice {
+                    weight: lay.tiles * (r - r_min[l]),
+                    cost: lay.cycles as f64 / r as f64,
+                })
+                .collect()
+        })
+        .collect();
+    let (sel, _) = mckp::solve(&groups, slack).expect("r_min assignment is feasible");
+    let replication: Vec<u64> = sel
+        .iter()
+        .enumerate()
+        .map(|(l, &k)| r_min[l] + k as u64)
+        .collect();
+    Ok(plan_from(layers, replication))
+}
+
+/// The naive strategy of §III / Fig 2(c): spend every free tile replicating
+/// only the current bottleneck layer.
+pub fn naive_bottleneck(
+    layers: &[LayerSummary],
+    n_tiles: u64,
+) -> Result<ReplicationPlan, ReplicationError> {
+    let min_total = check_feasible(layers, n_tiles)?;
+    let bottleneck = layers
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, l)| l.cycles)
+        .map(|(i, _)| i)
+        .unwrap();
+    let free = n_tiles - min_total;
+    let extra = free / layers[bottleneck].tiles;
+    let mut replication = vec![1u64; layers.len()];
+    replication[bottleneck] += extra;
+    Ok(plan_from(layers, replication))
+}
+
+/// Greedy marginal-gain baseline (ablation): repeatedly grant one more copy
+/// to whichever layer buys the largest objective improvement per tile.
+pub fn greedy(
+    layers: &[LayerSummary],
+    n_tiles: u64,
+    objective: Objective,
+) -> Result<ReplicationPlan, ReplicationError> {
+    let min_total = check_feasible(layers, n_tiles)?;
+    let mut replication = vec![1u64; layers.len()];
+    let mut used = min_total;
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (l, lay) in layers.iter().enumerate() {
+            if used + lay.tiles > n_tiles {
+                continue;
+            }
+            let r = replication[l];
+            let gain = match objective {
+                Objective::Latency => {
+                    lay.cycles as f64 / r as f64 - lay.cycles as f64 / (r + 1) as f64
+                }
+                Objective::Throughput => {
+                    // Gain only if this layer is the current bottleneck.
+                    let cur_max = layers
+                        .iter()
+                        .zip(&replication)
+                        .map(|(l2, &r2)| l2.cycles as f64 / r2 as f64)
+                        .fold(0.0, f64::max);
+                    let mine = lay.cycles as f64 / r as f64;
+                    if (mine - cur_max).abs() > 1e-9 {
+                        0.0
+                    } else {
+                        mine - lay.cycles as f64 / (r + 1) as f64
+                    }
+                }
+            } / lay.tiles as f64;
+            if gain > 0.0 && best.map_or(true, |(_, g)| gain > g) {
+                best = Some((l, gain));
+            }
+        }
+        match best {
+            Some((l, _)) => {
+                replication[l] += 1;
+                used += layers[l].tiles;
+            }
+            None => break,
+        }
+    }
+    Ok(plan_from(layers, replication))
+}
+
+/// Build the linearized latencyOptim ILP (for cross-checking with B&B).
+/// Variables: x_{l,k}, k = 1..r_max_l, column-major by layer.
+pub fn ilp_latency(layers: &[LayerSummary], n_tiles: u64, r_cap: u64) -> (Lp, Vec<(usize, u64)>) {
+    let mut vars: Vec<(usize, u64)> = Vec::new(); // (layer, r)
+    for (l, lay) in layers.iter().enumerate() {
+        let rmax = (n_tiles / lay.tiles.max(1)).min(r_cap).max(1);
+        for r in 1..=rmax {
+            vars.push((l, r));
+        }
+    }
+    let n = vars.len();
+    let mut lp = Lp::new(n);
+    for (j, &(l, r)) in vars.iter().enumerate() {
+        lp.c[j] = layers[l].cycles as f64 / r as f64;
+    }
+    // One selector per layer.
+    for l in 0..layers.len() {
+        let row: Vec<f64> = vars
+            .iter()
+            .map(|&(l2, _)| if l2 == l { 1.0 } else { 0.0 })
+            .collect();
+        lp.constraint(row, Rel::Eq, 1.0);
+    }
+    // Tile capacity.
+    let row: Vec<f64> = vars
+        .iter()
+        .map(|&(l, r)| (layers[l].tiles * r) as f64)
+        .collect();
+    lp.constraint(row, Rel::Le, n_tiles as f64);
+    // x ≤ 1 (binary upper bound; B&B enforces integrality).
+    for j in 0..n {
+        let mut row = vec![0.0; n];
+        row[j] = 1.0;
+        lp.constraint(row, Rel::Le, 1.0);
+    }
+    (lp, vars)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::branch_bound::{self, BbOptions, IlpOutcome};
+    use crate::util::prng::Rng;
+    use crate::util::propcheck;
+
+    fn lay(tiles: u64, cycles: u64) -> LayerSummary {
+        LayerSummary { tiles, cycles }
+    }
+
+    #[test]
+    fn infeasible_when_too_few_tiles() {
+        let layers = [lay(10, 100), lay(10, 100)];
+        assert!(matches!(
+            latency_optim(&layers, 19),
+            Err(ReplicationError::Infeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn no_free_tiles_means_all_ones() {
+        let layers = [lay(10, 100), lay(10, 50)];
+        let p = latency_optim(&layers, 20).unwrap();
+        assert_eq!(p.replication, vec![1, 1]);
+        assert_eq!(p.tiles_used, 20);
+    }
+
+    #[test]
+    fn latency_spends_tiles_on_slowest_per_tile() {
+        // Layer 0: cheap to replicate and very slow → should get the copies.
+        let layers = [lay(1, 1000), lay(10, 100)];
+        let p = latency_optim(&layers, 20).unwrap();
+        assert!(p.replication[0] >= 9, "{:?}", p.replication);
+        assert_eq!(p.replication[1], 1);
+        assert!(p.tiles_used <= 20);
+    }
+
+    #[test]
+    fn throughput_minimizes_bottleneck() {
+        let layers = [lay(2, 1000), lay(2, 100)];
+        let p = throughput_optim(&layers, 22).unwrap();
+        // 10 copies of layer 0 → max(100, 100) = 100.
+        assert_eq!(p.replication[0], 10);
+        assert!((p.bottleneck_cycles - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_spends_leftovers_on_latency() {
+        // After fixing the bottleneck, leftover tiles must still be used.
+        let layers = [lay(2, 1000), lay(1, 400)];
+        let p = throughput_optim(&layers, 40).unwrap();
+        let naive_bneck = 1000.0 / p.replication[0] as f64;
+        assert!(p.bottleneck_cycles <= naive_bneck + 1e-9);
+        // Total latency better than the pure min-max assignment with r=min.
+        assert!(p.tiles_used <= 40);
+        assert!(p.total_cycles < 1400.0);
+    }
+
+    #[test]
+    fn naive_replicates_only_bottleneck() {
+        let layers = [lay(8, 1000), lay(8, 10)];
+        let p = naive_bottleneck(&layers, 96).unwrap();
+        // free = 96 - 16 = 80 → 10 extra copies of layer 0.
+        assert_eq!(p.replication, vec![11, 1]);
+    }
+
+    #[test]
+    fn greedy_never_exceeds_budget_and_helps() {
+        let layers = [lay(3, 900), lay(5, 500), lay(2, 100)];
+        for obj in [Objective::Latency, Objective::Throughput] {
+            let p = greedy(&layers, 40, obj).unwrap();
+            assert!(p.tiles_used <= 40);
+            let base: f64 = layers.iter().map(|l| l.cycles as f64).sum();
+            assert!(p.total_cycles <= base);
+        }
+    }
+
+    #[test]
+    fn mckp_matches_ilp_crosscheck_small() {
+        let layers = [lay(3, 700), lay(4, 420), lay(2, 230)];
+        let n_tiles = 24;
+        let dp = latency_optim(&layers, n_tiles).unwrap();
+        let (lp, vars) = ilp_latency(&layers, n_tiles, 8);
+        match branch_bound::solve(&lp, &BbOptions::default()) {
+            IlpOutcome::Optimal(x, v) => {
+                assert!(
+                    (v - dp.total_cycles).abs() < 1e-6,
+                    "ilp {v} vs dp {}",
+                    dp.total_cycles
+                );
+                // Decode ILP solution and check the tile constraint.
+                let mut used = 0u64;
+                for (j, &(l, r)) in vars.iter().enumerate() {
+                    if x[j] > 0.5 {
+                        used += layers[l].tiles * r;
+                    }
+                }
+                assert!(used <= n_tiles);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_optimizers_feasible_and_ordered() {
+        propcheck::check("replication-invariants", 60, |rng: &mut Rng| {
+            let n = rng.int_range(1, 7) as usize;
+            let layers: Vec<LayerSummary> = (0..n)
+                .map(|_| lay(rng.int_range(1, 12) as u64, rng.int_range(10, 5000) as u64))
+                .collect();
+            let min: u64 = layers.iter().map(|l| l.tiles).sum();
+            let n_tiles = min + rng.int_range(0, 60) as u64;
+
+            let lat = latency_optim(&layers, n_tiles).map_err(|e| e.to_string())?;
+            let thr = throughput_optim(&layers, n_tiles).map_err(|e| e.to_string())?;
+            let grd = greedy(&layers, n_tiles, Objective::Latency).map_err(|e| e.to_string())?;
+            let nve = naive_bottleneck(&layers, n_tiles).map_err(|e| e.to_string())?;
+
+            for (name, p) in [("lat", &lat), ("thr", &thr), ("grd", &grd), ("nve", &nve)] {
+                if p.tiles_used > n_tiles {
+                    return Err(format!("{name} over budget: {} > {n_tiles}", p.tiles_used));
+                }
+                if p.replication.iter().any(|&r| r < 1) {
+                    return Err(format!("{name} has r < 1"));
+                }
+            }
+            // latencyOptim is optimal for total latency → beats greedy/naive.
+            if lat.total_cycles > grd.total_cycles + 1e-6 {
+                return Err(format!(
+                    "greedy beat DP on latency: {} < {}",
+                    grd.total_cycles, lat.total_cycles
+                ));
+            }
+            if lat.total_cycles > nve.total_cycles + 1e-6 {
+                return Err("naive beat DP on latency".into());
+            }
+            // throughputOptim is optimal for the bottleneck → beats others.
+            for (name, p) in [("lat", &lat), ("grd", &grd), ("nve", &nve)] {
+                if thr.bottleneck_cycles > p.bottleneck_cycles + 1e-6 {
+                    return Err(format!(
+                        "{name} beat throughputOptim on bottleneck: {} < {}",
+                        p.bottleneck_cycles, thr.bottleneck_cycles
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_latency_dp_matches_bruteforce() {
+        propcheck::check("latency-dp-vs-bruteforce", 30, |rng: &mut Rng| {
+            let n = rng.int_range(1, 4) as usize;
+            let layers: Vec<LayerSummary> = (0..n)
+                .map(|_| lay(rng.int_range(1, 5) as u64, rng.int_range(10, 1000) as u64))
+                .collect();
+            let min: u64 = layers.iter().map(|l| l.tiles).sum();
+            let n_tiles = min + rng.int_range(0, 15) as u64;
+            let dp = latency_optim(&layers, n_tiles).map_err(|e| e.to_string())?;
+
+            // Brute force over r in 1..=8 per layer.
+            fn rec(
+                layers: &[LayerSummary],
+                i: usize,
+                used: u64,
+                cost: f64,
+                cap: u64,
+                best: &mut f64,
+            ) {
+                if used > cap {
+                    return;
+                }
+                if i == layers.len() {
+                    *best = best.min(cost);
+                    return;
+                }
+                for r in 1..=8u64 {
+                    rec(
+                        layers,
+                        i + 1,
+                        used + layers[i].tiles * r,
+                        cost + layers[i].cycles as f64 / r as f64,
+                        cap,
+                        best,
+                    );
+                }
+            }
+            let mut best = f64::INFINITY;
+            rec(&layers, 0, 0, 0.0, n_tiles, &mut best);
+            // DP may use r > 8, so it can only be ≤ the brute-force optimum.
+            if dp.total_cycles > best + 1e-6 {
+                return Err(format!("dp {} worse than brute {}", dp.total_cycles, best));
+            }
+            Ok(())
+        });
+    }
+}

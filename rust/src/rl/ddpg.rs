@@ -1,0 +1,298 @@
+//! DDPG agent (Lillicrap et al.) as used by HAQ [22] for hardware-aware
+//! mixed-precision search: deterministic actor over a continuous action
+//! space (per-layer bitwidth knobs), critic with target networks, replay
+//! buffer, and truncated-normal exploration noise with decay.
+
+use super::mlp::{Act, Mlp};
+use crate::util::prng::Rng;
+
+/// One transition of the sequential per-layer decision process.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    pub action: Vec<f64>,
+    pub reward: f64,
+    pub next_state: Vec<f64>,
+    pub terminal: bool,
+}
+
+/// Fixed-capacity ring replay buffer.
+#[derive(Debug)]
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    cap: usize,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> Self {
+        ReplayBuffer {
+            buf: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.cap {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+    pub fn sample<'a>(&'a self, rng: &mut Rng, n: usize) -> Vec<&'a Transition> {
+        (0..n)
+            .map(|_| &self.buf[rng.below(self.buf.len() as u64) as usize])
+            .collect()
+    }
+}
+
+/// DDPG hyper-parameters (HAQ-flavored defaults).
+#[derive(Clone, Debug)]
+pub struct DdpgConfig {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: usize,
+    pub actor_lr: f64,
+    pub critic_lr: f64,
+    pub gamma: f64,
+    pub tau: f64,
+    pub batch: usize,
+    pub buffer_cap: usize,
+    /// Initial exploration noise std (on [0,1] actions) and its decay/episode.
+    pub noise_sigma: f64,
+    pub noise_decay: f64,
+    pub seed: u64,
+}
+
+impl DdpgConfig {
+    pub fn default_for(obs_dim: usize, act_dim: usize, seed: u64) -> Self {
+        DdpgConfig {
+            obs_dim,
+            act_dim,
+            hidden: 48,
+            actor_lr: 1e-3,
+            critic_lr: 1e-3,
+            gamma: 1.0, // episodic, reward at the end (HAQ convention)
+            tau: 0.01,
+            batch: 48,
+            buffer_cap: 8192,
+            noise_sigma: 0.45,
+            noise_decay: 0.985,
+            seed,
+        }
+    }
+}
+
+pub struct Ddpg {
+    pub cfg: DdpgConfig,
+    actor: Mlp,
+    actor_target: Mlp,
+    critic: Mlp,
+    critic_target: Mlp,
+    pub replay: ReplayBuffer,
+    rng: Rng,
+    sigma: f64,
+}
+
+impl Ddpg {
+    pub fn new(cfg: DdpgConfig) -> Ddpg {
+        let actor = Mlp::new(
+            &[cfg.obs_dim, cfg.hidden, cfg.hidden, cfg.act_dim],
+            Act::Sigmoid,
+            cfg.seed,
+        );
+        let critic = Mlp::new(
+            &[cfg.obs_dim + cfg.act_dim, cfg.hidden, cfg.hidden, 1],
+            Act::Linear,
+            cfg.seed ^ 0x5eed,
+        );
+        let mut actor_target = actor.clone();
+        let mut critic_target = critic.clone();
+        actor_target.soft_update_from(&actor, 1.0);
+        critic_target.soft_update_from(&critic, 1.0);
+        Ddpg {
+            replay: ReplayBuffer::new(cfg.buffer_cap),
+            rng: Rng::new(cfg.seed ^ 0xdd96),
+            sigma: cfg.noise_sigma,
+            cfg,
+            actor,
+            actor_target,
+            critic,
+            critic_target,
+        }
+    }
+
+    /// Deterministic policy action in [0,1]^act_dim.
+    pub fn act(&self, state: &[f64]) -> Vec<f64> {
+        self.actor.forward(state)
+    }
+
+    /// Exploratory action: policy + truncated Gaussian noise.
+    pub fn act_explore(&mut self, state: &[f64]) -> Vec<f64> {
+        let mut a = self.actor.forward(state);
+        for v in a.iter_mut() {
+            *v = (*v + self.rng.normal() * self.sigma).clamp(0.0, 1.0);
+        }
+        a
+    }
+
+    /// Decay exploration noise (called once per episode).
+    pub fn decay_noise(&mut self) {
+        self.sigma *= self.cfg.noise_decay;
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    fn critic_in(state: &[f64], action: &[f64]) -> Vec<f64> {
+        let mut v = Vec::with_capacity(state.len() + action.len());
+        v.extend_from_slice(state);
+        v.extend_from_slice(action);
+        v
+    }
+
+    /// One minibatch update of critic + actor + targets.
+    /// Returns (critic_loss, mean_q) for logging.
+    pub fn update(&mut self) -> Option<(f64, f64)> {
+        if self.replay.len() < self.cfg.batch {
+            return None;
+        }
+        let batch: Vec<Transition> = self
+            .replay
+            .sample(&mut self.rng, self.cfg.batch)
+            .into_iter()
+            .cloned()
+            .collect();
+
+        // --- critic update: MSE to the Bellman target ---
+        let mut critic_grads = self.critic.zero_grads();
+        let mut closs = 0.0;
+        let mut qsum = 0.0;
+        for t in &batch {
+            let target_q = if t.terminal {
+                t.reward
+            } else {
+                let a2 = self.actor_target.forward(&t.next_state);
+                let q2 = self.critic_target.forward(&Self::critic_in(&t.next_state, &a2))[0];
+                t.reward + self.cfg.gamma * q2
+            };
+            let q = self
+                .critic
+                .forward_train(&Self::critic_in(&t.state, &t.action))[0];
+            let err = q - target_q;
+            closs += err * err;
+            qsum += q;
+            self.critic.backward(&[err], &mut critic_grads);
+        }
+        let scale = 1.0 / self.cfg.batch as f64;
+        self.critic
+            .adam_step(&critic_grads, self.cfg.critic_lr, scale);
+
+        // --- actor update: ascend Q(s, π(s)) ---
+        let mut actor_grads = self.actor.zero_grads();
+        for t in &batch {
+            let a = self.actor.forward_train(&t.state);
+            // dQ/da via the critic input gradient.
+            let _q = self.critic.forward_train(&Self::critic_in(&t.state, &a));
+            let mut scratch = self.critic.zero_grads();
+            let din = self.critic.backward(&[1.0], &mut scratch);
+            let dq_da = &din[t.state.len()..];
+            // Gradient *ascent* on Q → descend -dQ/da.
+            let neg: Vec<f64> = dq_da.iter().map(|g| -g).collect();
+            self.actor.backward(&neg, &mut actor_grads);
+        }
+        self.actor.adam_step(&actor_grads, self.cfg.actor_lr, scale);
+
+        // --- target networks ---
+        self.actor_target.soft_update_from(&self.actor, self.cfg.tau);
+        self.critic_target
+            .soft_update_from(&self.critic, self.cfg.tau);
+
+        Some((closs * scale, qsum * scale))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_ring_wraps() {
+        let mut rb = ReplayBuffer::new(4);
+        for i in 0..10 {
+            rb.push(Transition {
+                state: vec![i as f64],
+                action: vec![0.0],
+                reward: 0.0,
+                next_state: vec![0.0],
+                terminal: true,
+            });
+        }
+        assert_eq!(rb.len(), 4);
+        // Contains only the last 4 states {6,7,8,9}.
+        let states: Vec<i64> = rb.buf.iter().map(|t| t.state[0] as i64).collect();
+        let mut sorted = states.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn actions_bounded() {
+        let mut agent = Ddpg::new(DdpgConfig::default_for(4, 2, 3));
+        for i in 0..64 {
+            let s = vec![i as f64 / 64.0; 4];
+            for v in agent.act_explore(&s) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn noise_decays() {
+        let mut agent = Ddpg::new(DdpgConfig::default_for(2, 1, 0));
+        let s0 = agent.sigma();
+        for _ in 0..10 {
+            agent.decay_noise();
+        }
+        assert!(agent.sigma() < s0);
+    }
+
+    #[test]
+    fn learns_trivial_bandit() {
+        // One state, reward peaked at a = 0.6 (mid-range, away from the
+        // sigmoid saturation tails): the actor must converge toward it.
+        let mut cfg = DdpgConfig::default_for(1, 1, 11);
+        cfg.batch = 16;
+        cfg.noise_sigma = 0.6;
+        cfg.noise_decay = 0.996;
+        let mut agent = Ddpg::new(cfg);
+        let state = vec![1.0];
+        for _ in 0..800 {
+            let a = agent.act_explore(&state);
+            let r = 1.0 - 4.0 * (a[0] - 0.6) * (a[0] - 0.6);
+            agent.replay.push(Transition {
+                state: state.clone(),
+                action: a,
+                reward: r,
+                next_state: state.clone(),
+                terminal: true,
+            });
+            agent.update();
+            agent.update();
+            agent.decay_noise();
+        }
+        let a = agent.act(&state)[0];
+        assert!(
+            (a - 0.6).abs() < 0.15,
+            "bandit action {a} did not converge toward 0.6"
+        );
+    }
+}

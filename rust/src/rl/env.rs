@@ -1,0 +1,262 @@
+//! The mixed-precision search environment (HAQ [22] restructured per paper
+//! §IV-C): sequential per-layer observations, continuous→discrete bitwidth
+//! actions, and performance-budget enforcement that decrements bitwidths
+//! until the post-replication metric fits the (exponentially tightening)
+//! budget.
+
+use crate::cost::CostModel;
+use crate::nets::{LayerKind, Network};
+use crate::quant::{LayerPrecision, Policy, MAX_BITS, MIN_BITS};
+use crate::replication::{self, LayerSummary, Objective};
+
+/// Observation dimension of the per-layer state vector.
+pub const OBS_DIM: usize = 12;
+
+/// Build the HAQ-style observation for layer `l` given the previous action.
+pub fn observation(net: &Network, l: usize, prev_action: (f64, f64)) -> Vec<f64> {
+    let layer = &net.layers[l];
+    let nl = net.num_layers() as f64;
+    let (is_conv, kernel, stride, in_c, out_c) = match layer.kind {
+        LayerKind::Conv2d {
+            in_c,
+            out_c,
+            kernel,
+            stride,
+            ..
+        } => (1.0, kernel as f64, stride as f64, in_c as f64, out_c as f64),
+        LayerKind::Linear { in_f, out_f } => (0.0, 1.0, 1.0, in_f as f64, out_f as f64),
+    };
+    let total_params = net.total_params() as f64;
+    let total_macs = net.total_macs() as f64;
+    vec![
+        l as f64 / nl,                                  // layer index
+        is_conv,                                        // layer type
+        (in_c.ln()) / 8.0,                              // log input features
+        (out_c.ln()) / 8.0,                             // log output features
+        kernel / 7.0,                                   // kernel size
+        stride / 2.0,                                   // stride
+        ((layer.num_vectors() as f64) + 1.0).ln() / 10.0, // log #vectors (W²)
+        ((layer.params() as f64) + 1.0).ln() / 18.0,    // log weight count
+        layer.params() as f64 / total_params,           // parameter share
+        layer.macs() as f64 / total_macs,               // compute share
+        prev_action.0,                                  // previous w action
+        prev_action.1,                                  // previous a action
+    ]
+}
+
+/// Map a continuous action pair in [0,1]² to discrete bitwidths (HAQ's
+/// linear quantization of the action space).
+pub fn action_to_bits(a: (f64, f64)) -> LayerPrecision {
+    let span = (MAX_BITS - MIN_BITS) as f64;
+    let to_bits = |v: f64| (MIN_BITS as f64 + (v.clamp(0.0, 1.0) * span).round()) as u32;
+    LayerPrecision::new(to_bits(a.0).clamp(MIN_BITS, MAX_BITS), to_bits(a.1).clamp(MIN_BITS, MAX_BITS))
+}
+
+/// The post-replication performance metric the budget applies to.
+/// latencyOptim budgets Σ T_l/r_l; throughputOptim budgets max T_l/r_l
+/// (paper §IV-D: "When optimizing for throughput, T_quant and T_original
+/// are latencies of the bottleneck layers").
+pub fn optimized_metric(
+    model: &CostModel,
+    net: &Network,
+    policy: &Policy,
+    n_tiles: u64,
+    objective: Objective,
+) -> Option<(f64, replication::ReplicationPlan)> {
+    let costs = model.layers(net, policy);
+    let summaries = LayerSummary::from_costs(&costs);
+    let plan = replication::optimize(&summaries, n_tiles, objective).ok()?;
+    let metric = match objective {
+        Objective::Latency => plan.total_cycles,
+        Objective::Throughput => plan.bottleneck_cycles,
+    };
+    Some((metric, plan))
+}
+
+/// Fast inner-loop variant of [`optimized_metric`] for budget enforcement:
+/// the greedy marginal-gain optimizer (near-optimal for these concave-gain
+/// problems) instead of the exact DP — ~100× cheaper on ResNet-101, and the
+/// loop's final answer is re-verified with the exact solver anyway.
+fn optimized_metric_fast(
+    model: &CostModel,
+    net: &Network,
+    policy: &Policy,
+    n_tiles: u64,
+    objective: Objective,
+) -> Option<(f64, replication::ReplicationPlan)> {
+    let costs = model.layers(net, policy);
+    let summaries = LayerSummary::from_costs(&costs);
+    let plan = replication::greedy(&summaries, n_tiles, objective).ok()?;
+    let metric = match objective {
+        Objective::Latency => plan.total_cycles,
+        Objective::Throughput => plan.bottleneck_cycles,
+    };
+    Some((metric, plan))
+}
+
+/// Enforce the performance budget (paper §IV-C): while the optimized metric
+/// exceeds `budget_cycles`, decrement the bitwidth that most reduces the
+/// dominant cost driver — activation bits of the slowest layer (latency is
+/// linear in a_b, Eqn 3) alternated with weight bits of the most tile-hungry
+/// layer (frees tiles for replication, Eqn 2). Returns the enforced policy
+/// and its plan, or None if even the all-MIN_BITS policy cannot fit.
+pub fn enforce_budget(
+    model: &CostModel,
+    net: &Network,
+    mut policy: Policy,
+    n_tiles: u64,
+    objective: Objective,
+    budget_cycles: f64,
+) -> Option<(Policy, replication::ReplicationPlan)> {
+    // Alternates between lowering activation bits of the slowest effective
+    // layer and weight bits of the most tile-hungry layer. The loop runs on
+    // the fast greedy optimizer; once the budget is met the policy is
+    // re-solved exactly (the exact plan is never worse than the greedy one,
+    // so the budget still holds).
+    let mut prefer_acts = true;
+    loop {
+        match optimized_metric_fast(model, net, &policy, n_tiles, objective) {
+            Some((metric, _plan)) if metric <= budget_cycles => {
+                let (exact_metric, exact_plan) =
+                    optimized_metric(model, net, &policy, n_tiles, objective)?;
+                debug_assert!(exact_metric <= metric * (1.0 + 1e-9));
+                return Some((policy, exact_plan));
+            }
+            Some((_, plan)) => {
+                let lc = model.layers(net, &policy);
+                let act_target = (0..policy.len())
+                    .filter(|&l| policy.layers[l].a_bits > MIN_BITS)
+                    .max_by(|&a, &b| {
+                        let ca = lc[a].total_cycles() as f64 / plan.replication[a] as f64;
+                        let cb = lc[b].total_cycles() as f64 / plan.replication[b] as f64;
+                        ca.partial_cmp(&cb).unwrap()
+                    });
+                let weight_target = (0..policy.len())
+                    .filter(|&l| policy.layers[l].w_bits > MIN_BITS)
+                    .max_by_key(|&l| lc[l].tiles);
+                let applied = if prefer_acts {
+                    act_target
+                        .map(|l| policy.layers[l].a_bits -= 1)
+                        .or_else(|| weight_target.map(|l| policy.layers[l].w_bits -= 1))
+                } else {
+                    weight_target
+                        .map(|l| policy.layers[l].w_bits -= 1)
+                        .or_else(|| act_target.map(|l| policy.layers[l].a_bits -= 1))
+                };
+                prefer_acts = !prefer_acts;
+                applied?; // both sides exhausted at MIN_BITS → unreachable budget
+            }
+            None => {
+                // Even one instance per layer does not fit: lower weight bits
+                // of the most tile-hungry layer until mapping is feasible.
+                let lc = model.layers(net, &policy);
+                let target = (0..policy.len())
+                    .filter(|&l| policy.layers[l].w_bits > MIN_BITS)
+                    .max_by_key(|&l| lc[l].tiles)?;
+                policy.layers[target].w_bits -= 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn observation_shape_and_range() {
+        let net = nets::resnet::resnet18();
+        for l in 0..net.num_layers() {
+            let obs = observation(&net, l, (0.5, 0.5));
+            assert_eq!(obs.len(), OBS_DIM);
+            for (i, v) in obs.iter().enumerate() {
+                assert!(
+                    (-0.5..=2.5).contains(v),
+                    "obs[{i}] = {v} out of expected range at layer {l}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn action_mapping_covers_bit_range() {
+        assert_eq!(action_to_bits((0.0, 0.0)), LayerPrecision::new(2, 2));
+        assert_eq!(action_to_bits((1.0, 1.0)), LayerPrecision::new(8, 8));
+        assert_eq!(action_to_bits((0.5, 0.5)), LayerPrecision::new(5, 5));
+        // Out-of-range actions clamp.
+        assert_eq!(action_to_bits((-3.0, 7.0)), LayerPrecision::new(2, 8));
+    }
+
+    #[test]
+    fn budget_enforcement_reaches_budget() {
+        let net = nets::resnet::resnet18();
+        let model = CostModel::paper();
+        let n_tiles = net.tiles_at_uniform(256, 8, 1);
+        let base = model.baseline(&net);
+        let policy = Policy::baseline(net.num_layers());
+        // A budget requiring real quantization: 0.3× baseline latency.
+        let budget = 0.3 * base.total_cycles;
+        let (enforced, plan) =
+            enforce_budget(&model, &net, policy, n_tiles, Objective::Latency, budget)
+                .expect("budget should be reachable");
+        assert!(plan.total_cycles <= budget * (1.0 + 1e-9));
+        // Enforcement must have reduced some precision.
+        let (mw, ma) = enforced.mean_bits();
+        assert!(mw < 8.0 || ma < 8.0, "mean bits {mw}/{ma}");
+        assert!(plan.tiles_used <= n_tiles);
+    }
+
+    #[test]
+    fn budget_enforcement_noop_when_already_met() {
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let n_tiles = net.tiles_at_uniform(256, 8, 1) + 500;
+        let policy = Policy::baseline(net.num_layers());
+        let (m0, _) =
+            optimized_metric(&model, &net, &policy, n_tiles, Objective::Latency).unwrap();
+        let (enforced, _) = enforce_budget(
+            &model,
+            &net,
+            policy.clone(),
+            n_tiles,
+            Objective::Latency,
+            m0 * 1.01,
+        )
+        .unwrap();
+        assert_eq!(enforced, policy, "no decrement needed");
+    }
+
+    #[test]
+    fn impossible_budget_returns_none() {
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let n_tiles = net.tiles_at_uniform(256, 2, 1); // tight area too
+        let policy = Policy::baseline(net.num_layers());
+        let out = enforce_budget(&model, &net, policy, n_tiles, Objective::Latency, 1.0);
+        assert!(out.is_none(), "1-cycle budget cannot be met");
+    }
+
+    #[test]
+    fn infeasible_mapping_recovered_by_weight_quantization() {
+        // Fewer tiles than the 8-bit baseline needs: enforcement must first
+        // quantize weights to make the mapping feasible at all (Fig 8 left).
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let baseline_tiles = net.tiles_at_uniform(256, 8, 1);
+        let n_tiles = baseline_tiles / 2;
+        let policy = Policy::baseline(net.num_layers());
+        let (enforced, plan) = enforce_budget(
+            &model,
+            &net,
+            policy,
+            n_tiles,
+            Objective::Latency,
+            f64::INFINITY,
+        )
+        .expect("half-area must be mappable with quantization");
+        assert!(plan.tiles_used <= n_tiles);
+        let (mw, _) = enforced.mean_bits();
+        assert!(mw < 8.0);
+    }
+}

@@ -1,0 +1,345 @@
+//! Minimal dense neural network with manual backprop and Adam — the
+//! function approximator for the DDPG actor/critic (paper §IV-C/D uses the
+//! HAQ agent [22]; the search loop lives on the rust hot path so the agent
+//! does too).
+
+use crate::util::prng::Rng;
+
+/// Activation applied after each hidden layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+    Sigmoid,
+    Linear,
+}
+
+impl Act {
+    fn f(self, x: f64) -> f64 {
+        match self {
+            Act::Relu => x.max(0.0),
+            Act::Tanh => x.tanh(),
+            Act::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Act::Linear => x,
+        }
+    }
+    /// Derivative expressed in terms of the activation output y = f(x).
+    fn df_from_y(self, y: f64) -> f64 {
+        match self {
+            Act::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Tanh => 1.0 - y * y,
+            Act::Sigmoid => y * (1.0 - y),
+            Act::Linear => 1.0,
+        }
+    }
+}
+
+/// One dense layer (row-major weights [out][in]).
+#[derive(Clone, Debug)]
+struct Dense {
+    w: Vec<f64>,
+    b: Vec<f64>,
+    n_in: usize,
+    n_out: usize,
+    act: Act,
+    // Adam state.
+    mw: Vec<f64>,
+    vw: Vec<f64>,
+    mb: Vec<f64>,
+    vb: Vec<f64>,
+}
+
+impl Dense {
+    fn new(n_in: usize, n_out: usize, act: Act, rng: &mut Rng) -> Dense {
+        let scale = (2.0 / (n_in + n_out) as f64).sqrt();
+        Dense {
+            w: (0..n_in * n_out).map(|_| rng.normal() * scale).collect(),
+            b: vec![0.0; n_out],
+            n_in,
+            n_out,
+            act,
+            mw: vec![0.0; n_in * n_out],
+            vw: vec![0.0; n_in * n_out],
+            mb: vec![0.0; n_out],
+            vb: vec![0.0; n_out],
+        }
+    }
+
+    fn forward(&self, x: &[f64], out: &mut Vec<f64>) {
+        debug_assert_eq!(x.len(), self.n_in);
+        out.clear();
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let z: f64 = row.iter().zip(x).map(|(w, x)| w * x).sum::<f64>() + self.b[o];
+            out.push(self.act.f(z));
+        }
+    }
+}
+
+/// A fully-connected network with cached activations for backprop.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    layers: Vec<Dense>,
+    /// Per-layer output caches from the last `forward_train` call (input at 0).
+    cache: Vec<Vec<f64>>,
+    t: u64, // Adam timestep
+}
+
+impl Mlp {
+    /// `dims` = [in, h1, ..., out]; hidden layers ReLU, output `out_act`.
+    pub fn new(dims: &[usize], out_act: Act, seed: u64) -> Mlp {
+        assert!(dims.len() >= 2);
+        let mut rng = Rng::new(seed);
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, d)| {
+                let act = if i + 2 == dims.len() { out_act } else { Act::Relu };
+                Dense::new(d[0], d[1], act, &mut rng)
+            })
+            .collect();
+        Mlp {
+            layers,
+            cache: Vec::new(),
+            t: 0,
+        }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.layers[0].n_in
+    }
+    pub fn n_out(&self) -> usize {
+        self.layers.last().unwrap().n_out
+    }
+
+    /// Inference without caching.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for l in &self.layers {
+            l.forward(&cur, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Forward pass that caches activations for a following `backward`.
+    pub fn forward_train(&mut self, x: &[f64]) -> Vec<f64> {
+        self.cache.clear();
+        self.cache.push(x.to_vec());
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for l in &self.layers {
+            l.forward(&cur, &mut next);
+            self.cache.push(next.clone());
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Backprop `d_out` (∂L/∂output) through the cached forward pass,
+    /// accumulating gradients into `grads`. Returns ∂L/∂input.
+    pub fn backward(&self, d_out: &[f64], grads: &mut Grads) -> Vec<f64> {
+        assert_eq!(self.cache.len(), self.layers.len() + 1, "forward_train first");
+        let mut delta = d_out.to_vec();
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let y = &self.cache[li + 1];
+            let x = &self.cache[li];
+            // δ_z = δ_y ⊙ f'(z) (from cached y).
+            for (d, &yv) in delta.iter_mut().zip(y) {
+                *d *= layer.act.df_from_y(yv);
+            }
+            let g = &mut grads.layers[li];
+            for o in 0..layer.n_out {
+                g.b[o] += delta[o];
+                let gw = &mut g.w[o * layer.n_in..(o + 1) * layer.n_in];
+                for (gwi, &xi) in gw.iter_mut().zip(x) {
+                    *gwi += delta[o] * xi;
+                }
+            }
+            // δ_x = Wᵀ δ_z
+            let mut dx = vec![0.0; layer.n_in];
+            for o in 0..layer.n_out {
+                let row = &layer.w[o * layer.n_in..(o + 1) * layer.n_in];
+                for (dxi, &wv) in dx.iter_mut().zip(row) {
+                    *dxi += wv * delta[o];
+                }
+            }
+            delta = dx;
+        }
+        delta
+    }
+
+    pub fn zero_grads(&self) -> Grads {
+        Grads {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerGrads {
+                    w: vec![0.0; l.w.len()],
+                    b: vec![0.0; l.b.len()],
+                })
+                .collect(),
+        }
+    }
+
+    /// Adam update with the accumulated gradients (scaled by `scale`, e.g.
+    /// 1/batch).
+    pub fn adam_step(&mut self, grads: &Grads, lr: f64, scale: f64) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t as i32);
+        let bc2 = 1.0 - B2.powi(self.t as i32);
+        for (l, g) in self.layers.iter_mut().zip(&grads.layers) {
+            for i in 0..l.w.len() {
+                let gi = g.w[i] * scale;
+                l.mw[i] = B1 * l.mw[i] + (1.0 - B1) * gi;
+                l.vw[i] = B2 * l.vw[i] + (1.0 - B2) * gi * gi;
+                l.w[i] -= lr * (l.mw[i] / bc1) / ((l.vw[i] / bc2).sqrt() + EPS);
+            }
+            for i in 0..l.b.len() {
+                let gi = g.b[i] * scale;
+                l.mb[i] = B1 * l.mb[i] + (1.0 - B1) * gi;
+                l.vb[i] = B2 * l.vb[i] + (1.0 - B2) * gi * gi;
+                l.b[i] -= lr * (l.mb[i] / bc1) / ((l.vb[i] / bc2).sqrt() + EPS);
+            }
+        }
+    }
+
+    /// Polyak soft update: θ ← τ·θ_src + (1-τ)·θ (DDPG target networks).
+    pub fn soft_update_from(&mut self, src: &Mlp, tau: f64) {
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            for (d, &sv) in dst.w.iter_mut().zip(&s.w) {
+                *d = tau * sv + (1.0 - tau) * *d;
+            }
+            for (d, &sv) in dst.b.iter_mut().zip(&s.b) {
+                *d = tau * sv + (1.0 - tau) * *d;
+            }
+        }
+    }
+}
+
+/// Gradient accumulator matching an Mlp's shape.
+#[derive(Clone, Debug)]
+pub struct Grads {
+    layers: Vec<LayerGrads>,
+}
+
+#[derive(Clone, Debug)]
+struct LayerGrads {
+    w: Vec<f64>,
+    b: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let net = Mlp::new(&[3, 8, 2], Act::Sigmoid, 0);
+        let y = net.forward(&[0.1, -0.2, 0.3]);
+        assert_eq!(y.len(), 2);
+        assert!(y.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn gradient_check_numeric() {
+        // Finite-difference check on a small net with L = sum(outputs²)/2.
+        let mut net = Mlp::new(&[4, 6, 3], Act::Linear, 1);
+        let x = [0.3, -0.7, 0.2, 0.9];
+        let y = net.forward_train(&x);
+        let d_out: Vec<f64> = y.clone(); // dL/dy = y
+        let mut grads = net.zero_grads();
+        net.backward(&d_out, &mut grads);
+
+        let loss = |n: &Mlp| -> f64 {
+            let y = n.forward(&x);
+            0.5 * y.iter().map(|v| v * v).sum::<f64>()
+        };
+        let eps = 1e-6;
+        // Check a few weight entries in each layer.
+        for li in 0..net.layers.len() {
+            for &wi in &[0usize, 1, net.layers[li].w.len() - 1] {
+                let mut plus = net.clone();
+                plus.layers[li].w[wi] += eps;
+                let mut minus = net.clone();
+                minus.layers[li].w[wi] -= eps;
+                let num = (loss(&plus) - loss(&minus)) / (2.0 * eps);
+                let ana = grads.layers[li].w[wi];
+                assert!(
+                    (num - ana).abs() < 1e-4 * (1.0 + num.abs()),
+                    "layer {li} w[{wi}]: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn input_gradient_correct() {
+        let mut net = Mlp::new(&[3, 5, 1], Act::Tanh, 3);
+        let x = [0.5, -0.1, 0.8];
+        let y = net.forward_train(&x);
+        let mut grads = net.zero_grads();
+        let dx = net.backward(&[1.0], &mut grads);
+        let eps = 1e-6;
+        for i in 0..3 {
+            let mut xp = x;
+            xp[i] += eps;
+            let mut xm = x;
+            xm[i] -= eps;
+            let num = (net.forward(&xp)[0] - net.forward(&xm)[0]) / (2.0 * eps);
+            assert!(
+                (num - dx[i]).abs() < 1e-4 * (1.0 + num.abs()),
+                "dx[{i}]: numeric {num} vs analytic {}",
+                dx[i]
+            );
+        }
+        let _ = y;
+    }
+
+    #[test]
+    fn adam_learns_xor() {
+        let mut net = Mlp::new(&[2, 16, 1], Act::Sigmoid, 7);
+        let data = [
+            ([0.0, 0.0], 0.0),
+            ([0.0, 1.0], 1.0),
+            ([1.0, 0.0], 1.0),
+            ([1.0, 1.0], 0.0),
+        ];
+        for _ in 0..800 {
+            let mut grads = net.zero_grads();
+            for (x, t) in &data {
+                let y = net.forward_train(x)[0];
+                net.backward(&[y - t], &mut grads);
+            }
+            net.adam_step(&grads, 0.01, 0.25);
+        }
+        for (x, t) in &data {
+            let y = net.forward(x)[0];
+            assert!((y - t).abs() < 0.25, "xor({x:?}) = {y}, want {t}");
+        }
+    }
+
+    #[test]
+    fn soft_update_interpolates() {
+        let a = Mlp::new(&[2, 3, 1], Act::Linear, 1);
+        let mut b = Mlp::new(&[2, 3, 1], Act::Linear, 2);
+        let before = b.layers[0].w[0];
+        let target = a.layers[0].w[0];
+        b.soft_update_from(&a, 0.5);
+        let after = b.layers[0].w[0];
+        assert!((after - 0.5 * (before + target)).abs() < 1e-12);
+        // τ = 1 copies exactly.
+        b.soft_update_from(&a, 1.0);
+        assert_eq!(b.layers[0].w[0], a.layers[0].w[0]);
+    }
+}

@@ -1,0 +1,5 @@
+//! Reinforcement-learning substrate: DDPG agent (HAQ-style) and the
+//! mixed-precision search environment.
+pub mod ddpg;
+pub mod env;
+pub mod mlp;

@@ -1,0 +1,314 @@
+//! The evaluation-request engine: a dedicated service thread owning the PJRT
+//! client, executables, and the current model parameters, fed through an
+//! mpsc request queue.
+//!
+//! PJRT handles wrap raw pointers (`!Send`), so the actor pattern — one
+//! owning thread, plain-`Vec<f32>` messages — is the sound way to serve
+//! concurrent callers (RL episodes, benches, the CLI) without Python or
+//! locks on the hot path.
+
+use super::{f32_literal, f32_scalar, literal_to_f32, tensor_to_literal, Runtime};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+enum Request {
+    /// Quantized inference on one fixed-size batch: x is [B·in], bit vectors
+    /// are per-layer. Replies with logits [B·classes].
+    Eval {
+        x: Vec<f32>,
+        w_bits: Vec<f32>,
+        a_bits: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    /// One quantization-aware finetuning step on [Bt·in]/[Bt·classes];
+    /// updates the engine's parameters in place, replies with the loss.
+    TrainStep {
+        x: Vec<f32>,
+        onehot: Vec<f32>,
+        w_bits: Vec<f32>,
+        a_bits: Vec<f32>,
+        lr: f32,
+        reply: mpsc::Sender<Result<f32>>,
+    },
+    /// Restore the pristine (base-trained) parameters.
+    ResetParams { reply: mpsc::Sender<Result<()>> },
+    /// Run the L1 crossbar demo artifact; replies (bit_exact, fast) outputs.
+    Demo {
+        x: Vec<f32>,
+        w: Vec<f32>,
+        w_bits: f32,
+        a_bits: f32,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Stop,
+}
+
+/// Handle to the engine service thread. Clone-able via `requester()`.
+pub struct Engine {
+    tx: mpsc::Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+    pub num_layers: usize,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub base_accuracy_f32: f64,
+    pub demo_shape: (usize, usize, usize),
+}
+
+impl Engine {
+    /// Start the service thread: builds the PJRT client, compiles the
+    /// inference/train/demo artifacts, loads the trained parameters.
+    pub fn start(artifacts_dir: PathBuf) -> Result<Engine> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<MetaInfo>>();
+
+        let handle = std::thread::Builder::new()
+            .name("lrmp-engine".to_string())
+            .spawn(move || service(artifacts_dir, rx, ready_tx))
+            .context("spawning engine thread")?;
+
+        let meta = ready_rx
+            .recv()
+            .context("engine thread died during startup")??;
+        Ok(Engine {
+            tx,
+            handle: Some(handle),
+            num_layers: meta.num_layers,
+            eval_batch: meta.eval_batch,
+            train_batch: meta.train_batch,
+            input_dim: meta.input_dim,
+            num_classes: meta.num_classes,
+            base_accuracy_f32: meta.base_accuracy_f32,
+            demo_shape: meta.demo_shape,
+        })
+    }
+
+    fn roundtrip<T>(
+        &self,
+        make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request,
+    ) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(make(reply))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    /// Quantized logits for one fixed-size batch.
+    pub fn eval(&self, x: Vec<f32>, w_bits: Vec<f32>, a_bits: Vec<f32>) -> Result<Vec<f32>> {
+        if x.len() != self.eval_batch * self.input_dim {
+            bail!(
+                "eval expects exactly {}x{} inputs, got {}",
+                self.eval_batch,
+                self.input_dim,
+                x.len()
+            );
+        }
+        self.roundtrip(|reply| Request::Eval {
+            x,
+            w_bits,
+            a_bits,
+            reply,
+        })
+    }
+
+    /// One finetuning step; returns the batch loss.
+    pub fn train_step(
+        &self,
+        x: Vec<f32>,
+        onehot: Vec<f32>,
+        w_bits: Vec<f32>,
+        a_bits: Vec<f32>,
+        lr: f32,
+    ) -> Result<f32> {
+        if x.len() != self.train_batch * self.input_dim {
+            bail!(
+                "train_step expects exactly {}x{} inputs, got {}",
+                self.train_batch,
+                self.input_dim,
+                x.len()
+            );
+        }
+        self.roundtrip(|reply| Request::TrainStep {
+            x,
+            onehot,
+            w_bits,
+            a_bits,
+            lr,
+            reply,
+        })
+    }
+
+    pub fn reset_params(&self) -> Result<()> {
+        self.roundtrip(|reply| Request::ResetParams { reply })
+    }
+
+    /// Run the crossbar-demo artifact (L1 bit-exact vs fast kernels).
+    pub fn crossbar_demo(
+        &self,
+        x: Vec<f32>,
+        w: Vec<f32>,
+        w_bits: f32,
+        a_bits: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.roundtrip(|reply| Request::Demo {
+            x,
+            w,
+            w_bits,
+            a_bits,
+            reply,
+        })
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct MetaInfo {
+    num_layers: usize,
+    eval_batch: usize,
+    train_batch: usize,
+    input_dim: usize,
+    num_classes: usize,
+    base_accuracy_f32: f64,
+    demo_shape: (usize, usize, usize),
+}
+
+/// The service loop (runs on the engine thread, owns all PJRT state).
+fn service(
+    artifacts_dir: PathBuf,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<MetaInfo>>,
+) {
+    let setup = (|| -> Result<_> {
+        let rt = Runtime::new(&artifacts_dir)?;
+        let infer = rt.compile_infer()?;
+        let train = rt.compile_train_step()?;
+        let demo = rt.compile_crossbar_demo()?;
+        let pristine = rt.manifest.params()?;
+        let params: Vec<xla::Literal> = pristine
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+        Ok((rt, infer, train, demo, pristine, params))
+    })();
+
+    let (rt, infer, train, demo, pristine, mut params) = match setup {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let m = &rt.manifest;
+    let input_dim = m.layer_dims[0];
+    let num_layers = m.num_layers;
+    let _ = ready.send(Ok(MetaInfo {
+        num_layers,
+        eval_batch: m.eval_batch,
+        train_batch: m.train_batch,
+        input_dim,
+        num_classes: m.num_classes,
+        base_accuracy_f32: m.base_accuracy_f32,
+        demo_shape: m.demo_shape,
+    }));
+
+    let bits_dims = [num_layers as i64];
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Stop => break,
+            Request::ResetParams { reply } => {
+                let r = pristine
+                    .iter()
+                    .map(tensor_to_literal)
+                    .collect::<Result<Vec<_>>>()
+                    .map(|p| params = p);
+                let _ = reply.send(r);
+            }
+            Request::Eval {
+                x,
+                w_bits,
+                a_bits,
+                reply,
+            } => {
+                let r = (|| -> Result<Vec<f32>> {
+                    let b = m.eval_batch as i64;
+                    // ABI: x, params..., w_bits, a_bits. Parameters are
+                    // passed by reference — no per-request weight copies.
+                    let xl = f32_literal(&x, &[b, input_dim as i64])?;
+                    let wl = f32_literal(&w_bits, &bits_dims)?;
+                    let al = f32_literal(&a_bits, &bits_dims)?;
+                    let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 + params.len());
+                    inputs.push(&xl);
+                    inputs.extend(params.iter());
+                    inputs.push(&wl);
+                    inputs.push(&al);
+                    let out = infer.run(&inputs)?;
+                    Ok(literal_to_f32(&out[0])?.1)
+                })();
+                let _ = reply.send(r);
+            }
+            Request::TrainStep {
+                x,
+                onehot,
+                w_bits,
+                a_bits,
+                lr,
+                reply,
+            } => {
+                let r = (|| -> Result<f32> {
+                    let bt = m.train_batch as i64;
+                    let xl = f32_literal(&x, &[bt, input_dim as i64])?;
+                    let tl = f32_literal(&onehot, &[bt, m.num_classes as i64])?;
+                    let wl = f32_literal(&w_bits, &bits_dims)?;
+                    let al = f32_literal(&a_bits, &bits_dims)?;
+                    let lrl = f32_scalar(lr);
+                    let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(5 + params.len());
+                    inputs.push(&xl);
+                    inputs.push(&tl);
+                    inputs.extend(params.iter());
+                    inputs.push(&wl);
+                    inputs.push(&al);
+                    inputs.push(&lrl);
+                    let mut out = train.run(&inputs)?;
+                    // ABI: (params'..., loss).
+                    let loss_lit = out.pop().expect("train_step returns loss");
+                    let loss = loss_lit.to_vec::<f32>()?[0];
+                    params = out;
+                    Ok(loss)
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Demo {
+                x,
+                w,
+                w_bits,
+                a_bits,
+                reply,
+            } => {
+                let r = (|| -> Result<(Vec<f32>, Vec<f32>)> {
+                    let (bd, rd, nd) = m.demo_shape;
+                    let inputs = vec![
+                        f32_literal(&x, &[bd as i64, rd as i64])?,
+                        f32_literal(&w, &[rd as i64, nd as i64])?,
+                        f32_scalar(w_bits),
+                        f32_scalar(a_bits),
+                    ];
+                    let out = demo.run(&inputs)?;
+                    Ok((literal_to_f32(&out[0])?.1, literal_to_f32(&out[1])?.1))
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+

@@ -1,0 +1,266 @@
+//! L3 ↔ L2 bridge: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the PJRT CPU client, and execute
+//! them from the rust hot path. Python is never involved at runtime.
+//!
+//! Interchange is HLO *text* — xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-instruction-id protos; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §1).
+
+pub mod engine;
+
+use crate::util::io::Tensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub layer_dims: Vec<usize>,
+    pub num_layers: usize,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub num_classes: usize,
+    pub base_accuracy_f32: f64,
+    pub demo_shape: (usize, usize, usize),
+    pub param_files: Vec<String>,
+    pub dataset: DatasetFiles,
+    pub exe_infer: String,
+    pub exe_train_step: String,
+    pub exe_crossbar_demo: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetFiles {
+    pub x_train: String,
+    pub y_train: String,
+    pub x_test: String,
+    pub y_test: String,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let need_usize = |k: &str| -> Result<usize> {
+            j.get(k)
+                .as_usize()
+                .with_context(|| format!("manifest missing numeric field '{k}'"))
+        };
+        let exes = j.get("executables");
+        let need_exe = |k: &str| -> Result<String> {
+            exes.get(k)
+                .as_str()
+                .map(str::to_string)
+                .with_context(|| format!("manifest missing executables.{k}"))
+        };
+        let ds = j.get("dataset");
+        let need_ds = |k: &str| -> Result<String> {
+            ds.get(k)
+                .as_str()
+                .map(str::to_string)
+                .with_context(|| format!("manifest missing dataset.{k}"))
+        };
+        let demo: Vec<usize> = j
+            .get("demo_shape")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_default();
+        if demo.len() != 3 {
+            bail!("manifest demo_shape must have 3 entries");
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            layer_dims: j
+                .get("layer_dims")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default(),
+            num_layers: need_usize("num_layers")?,
+            eval_batch: need_usize("eval_batch")?,
+            train_batch: need_usize("train_batch")?,
+            num_classes: need_usize("num_classes")?,
+            base_accuracy_f32: j.get("base_accuracy_f32").as_f64().unwrap_or(0.0),
+            demo_shape: (demo[0], demo[1], demo[2]),
+            param_files: j
+                .get("params")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|p| p.get("file").as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            dataset: DatasetFiles {
+                x_train: need_ds("x_train")?,
+                y_train: need_ds("y_train")?,
+                x_test: need_ds("x_test")?,
+                y_test: need_ds("y_test")?,
+                n_train: ds.get("n_train").as_usize().unwrap_or(0),
+                n_test: ds.get("n_test").as_usize().unwrap_or(0),
+            },
+            exe_infer: need_exe("infer")?,
+            exe_train_step: need_exe("train_step")?,
+            exe_crossbar_demo: need_exe("crossbar_demo")?,
+        })
+    }
+
+    pub fn tensor(&self, file: &str) -> Result<Tensor> {
+        Tensor::load(&self.dir.join(file))
+    }
+
+    /// Load the trained model parameters [w1, b1, w2, b2, ...].
+    pub fn params(&self) -> Result<Vec<Tensor>> {
+        self.param_files.iter().map(|f| self.tensor(f)).collect()
+    }
+}
+
+/// Convert a host tensor into an XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    let lit = match (t.as_f32(), t.as_i32()) {
+        (Some(v), _) => xla::Literal::vec1(v).reshape(&dims)?,
+        (_, Some(v)) => xla::Literal::vec1(v).reshape(&dims)?,
+        _ => bail!("unsupported tensor dtype for literal conversion"),
+    };
+    Ok(lit)
+}
+
+/// Build an f32 literal from a slice + dims.
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build a rank-0 f32 literal.
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read an f32 literal back into (dims, data).
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<(Vec<usize>, Vec<f32>)> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok((dims, data))
+}
+
+/// A compiled executable with its artifact identity.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on literal inputs (owned or borrowed); flattens the jax
+    /// `return_tuple=True` top-level tuple into its elements.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The PJRT runtime: one CPU client, compile-on-demand artifacts.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { manifest, client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + parse + compile one HLO-text artifact.
+    pub fn compile(&self, file: &str) -> Result<Executable> {
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {file}"))?;
+        Ok(Executable {
+            name: file.to_string(),
+            exe,
+        })
+    }
+
+    pub fn compile_infer(&self) -> Result<Executable> {
+        let f = self.manifest.exe_infer.clone();
+        self.compile(&f)
+    }
+    pub fn compile_train_step(&self) -> Result<Executable> {
+        let f = self.manifest.exe_train_step.clone();
+        self.compile(&f)
+    }
+    pub fn compile_crossbar_demo(&self) -> Result<Executable> {
+        let f = self.manifest.exe_crossbar_demo.clone();
+        self.compile(&f)
+    }
+}
+
+/// Default artifacts directory: `$LRMP_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("LRMP_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_rejects_missing_fields() {
+        let dir = std::env::temp_dir().join("lrmp-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn manifest_error_mentions_make_artifacts() {
+        let dir = std::env::temp_dir().join("lrmp-manifest-missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn default_dir_points_at_repo_artifacts() {
+        let d = default_artifacts_dir();
+        assert!(d.ends_with("artifacts") || std::env::var("LRMP_ARTIFACTS").is_ok());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let (dims, data) = literal_to_f32(&lit).unwrap();
+        assert_eq!(dims, vec![2, 3]);
+        assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+}

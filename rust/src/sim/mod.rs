@@ -1,0 +1,304 @@
+//! Event-driven, cycle-approximate simulator of the spatial IMC chip — the
+//! validation substrate for the analytical cost model (paper §IV-A). The
+//! paper evaluates on the analytical model alone; we additionally *simulate*
+//! each layer's dataflow to check that the closed-form equations (and the
+//! linear-in-1/r replication assumption of Eqn 7) describe an executable
+//! schedule.
+//!
+//! Model: each layer instance is a 4-stage pipeline — input bus (VM→tiles),
+//! crossbar VMM (bit-streamed), output bus (tiles→VM), vector-module digital
+//! reduce. Input vectors are dealt round-robin across the r replicas; within
+//! an instance the stages overlap across consecutive vectors but each stage
+//! serializes its own vectors (it is one physical resource). The pipelined
+//! makespan of a layer is therefore ≥ the per-stage sum for one vector and
+//! ≤ the analytical Eqn-4 sum (which ignores overlap) — asserted in tests.
+//!
+//! A separate coarse-grained network pipeline simulation reproduces the
+//! steady-state throughput 1 / max_l T_l of Eqn 6.
+
+use crate::cost::{CostModel, LayerCost};
+use crate::nets::{Layer, Network};
+use crate::quant::{LayerPrecision, Policy};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulation outcome for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerSim {
+    /// Pipelined makespan, cycles.
+    pub makespan: u64,
+    /// Number of vector-events simulated.
+    pub events: u64,
+}
+
+/// Per-vector stage service times (cycles), derived from the same
+/// architectural parameters the analytical model uses.
+#[derive(Clone, Copy, Debug)]
+struct StageTimes {
+    t_in: u64,
+    t_xbar: u64,
+    t_out: u64,
+    t_dig: u64,
+}
+
+fn stage_times(cost: &LayerCost, vectors: u64) -> StageTimes {
+    // The analytical totals are over all W² vectors; the per-vector service
+    // time of each pipeline stage is the total divided by the vector count
+    // (each stage is one shared physical resource per instance).
+    let per = |total: u64| -> u64 { (total + vectors - 1) / vectors.max(1) };
+    StageTimes {
+        t_in: per(cost.t_tile_in).max(1),
+        t_xbar: per(cost.t_tile).max(1),
+        t_out: per(cost.t_tile_out).max(1),
+        t_dig: per(cost.t_digital).max(1),
+    }
+}
+
+/// Discrete event: (time, instance, stage, vector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Event {
+    time: u64,
+    instance: u32,
+    stage: u8,
+    vector: u32,
+}
+
+/// Simulate one layer with `r` replicas at precision `prec`.
+///
+/// Event-driven: each stage completion schedules the next stage of the same
+/// vector (subject to the stage resource being free) — a classic flow-shop
+/// simulation per instance, with vectors dealt round-robin over instances.
+pub fn simulate_layer(model: &CostModel, layer: &Layer, prec: LayerPrecision, r: u64) -> LayerSim {
+    let cost = model.layer(layer, prec);
+    let vectors = layer.num_vectors();
+    let st = stage_times(&cost, vectors);
+    let r = r.max(1) as usize;
+
+    // Per-instance, per-stage resource availability.
+    let mut free_at = vec![[0u64; 4]; r];
+    // Per-vector readiness for its next stage.
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    for v in 0..vectors {
+        heap.push(Reverse(Event {
+            time: 0,
+            instance: (v % r as u64) as u32,
+            stage: 0,
+            vector: v as u32,
+        }));
+    }
+    let service = [st.t_in, st.t_xbar, st.t_out, st.t_dig];
+    let mut makespan = 0u64;
+    let mut events = 0u64;
+    while let Some(Reverse(ev)) = heap.pop() {
+        events += 1;
+        let inst = ev.instance as usize;
+        let stage = ev.stage as usize;
+        let start = ev.time.max(free_at[inst][stage]);
+        let end = start + service[stage];
+        free_at[inst][stage] = end;
+        if stage + 1 < 4 {
+            heap.push(Reverse(Event {
+                time: end,
+                instance: ev.instance,
+                stage: ev.stage + 1,
+                vector: ev.vector,
+            }));
+        } else {
+            makespan = makespan.max(end);
+        }
+    }
+    LayerSim { makespan, events }
+}
+
+/// Simulate the whole network layer by layer (sequential inference latency).
+pub fn simulate_network(
+    model: &CostModel,
+    net: &Network,
+    policy: &Policy,
+    replication: &[u64],
+) -> Vec<LayerSim> {
+    net.layers
+        .iter()
+        .zip(&policy.layers)
+        .zip(replication)
+        .map(|((l, &p), &r)| simulate_layer(model, l, p, r))
+        .collect()
+}
+
+/// Coarse-grained pipeline throughput simulation (Eqn 6): stream `n_inf`
+/// inferences through the per-layer stage times T_l/r_l; returns the
+/// steady-state inter-departure time in cycles.
+pub fn simulate_pipeline_throughput(layer_cycles: &[f64], n_inf: usize) -> f64 {
+    assert!(!layer_cycles.is_empty() && n_inf >= 2);
+    let l = layer_cycles.len();
+    // completion[l] for the current inference; classic pipeline recurrence.
+    let mut completion = vec![0.0f64; l];
+    let mut last_departure = 0.0;
+    let mut first_departure = 0.0;
+    for i in 0..n_inf {
+        let mut prev_stage_done = 0.0f64;
+        for (s, &t) in layer_cycles.iter().enumerate() {
+            let start = prev_stage_done.max(completion[s]);
+            completion[s] = start + t;
+            prev_stage_done = completion[s];
+        }
+        if i == 0 {
+            first_departure = prev_stage_done;
+        }
+        last_departure = prev_stage_done;
+    }
+    (last_departure - first_departure) / (n_inf - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{self, resnet};
+    use crate::util::prng::Rng;
+    use crate::util::propcheck;
+
+    fn model() -> CostModel {
+        CostModel::paper()
+    }
+
+    #[test]
+    fn simulated_makespan_bounded_by_analytical_sum() {
+        // For every ResNet-18 layer: pipelined sim ≤ analytical Eqn-4 sum
+        // (which ignores stage overlap) and ≥ the dominant component.
+        let net = resnet::resnet18();
+        let m = model();
+        let prec = LayerPrecision::new(8, 8);
+        for layer in &net.layers {
+            let cost = m.layer(layer, prec);
+            let sim = simulate_layer(&m, layer, prec, 1);
+            let analytic = cost.total_cycles();
+            let dominant = cost
+                .t_tile
+                .max(cost.t_tile_in)
+                .max(cost.t_tile_out)
+                .max(cost.t_digital);
+            assert!(
+                sim.makespan <= (analytic as f64 * 1.05) as u64 + 8,
+                "{}: sim {} > analytic {}",
+                layer.name,
+                sim.makespan,
+                analytic
+            );
+            assert!(
+                sim.makespan >= dominant,
+                "{}: sim {} < dominant stage {}",
+                layer.name,
+                sim.makespan,
+                dominant
+            );
+        }
+    }
+
+    #[test]
+    fn crossbar_bound_layers_sim_close_to_analytic() {
+        // T_tile dominates ResNet-18 conv layers, so stage overlap helps only
+        // modestly: the executable pipelined schedule must land within ~25%
+        // below the (overlap-free, conservative) analytical Eqn-4 sum and
+        // never above it.
+        let net = resnet::resnet18();
+        let m = model();
+        let prec = LayerPrecision::new(8, 8);
+        for layer in net.layers.iter().filter(|l| l.num_vectors() > 1) {
+            let cost = m.layer(layer, prec);
+            let sim = simulate_layer(&m, layer, prec, 1);
+            let ratio = sim.makespan as f64 / cost.total_cycles() as f64;
+            assert!(
+                (0.75..=1.05).contains(&ratio),
+                "{}: sim/analytic = {ratio}",
+                layer.name
+            );
+        }
+    }
+
+    #[test]
+    fn replication_speedup_is_linear() {
+        // Eqn 7's core assumption, checked against the executable schedule.
+        let net = resnet::resnet18();
+        let m = model();
+        let prec = LayerPrecision::new(8, 8);
+        let conv1 = &net.layers[0];
+        let base = simulate_layer(&m, conv1, prec, 1).makespan as f64;
+        for r in [2u64, 4, 8, 14] {
+            let rep = simulate_layer(&m, conv1, prec, r).makespan as f64;
+            let speedup = base / rep;
+            assert!(
+                (speedup - r as f64).abs() / (r as f64) < 0.10,
+                "r={r}: speedup {speedup}"
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_throughput_matches_eqn6() {
+        let cycles = [100.0, 900.0, 250.0, 400.0];
+        let inter = simulate_pipeline_throughput(&cycles, 50);
+        assert!(
+            (inter - 900.0).abs() < 1.0,
+            "steady-state inter-departure {inter} != bottleneck 900"
+        );
+    }
+
+    #[test]
+    fn whole_network_sim_vs_model_total() {
+        let net = nets::mlp_mnist();
+        let m = model();
+        let policy = Policy::baseline(net.num_layers());
+        let repl = vec![1u64; net.num_layers()];
+        let sims = simulate_network(&m, &net, &policy, &repl);
+        let cost = m.network(&net, &policy, &repl);
+        let sim_total: u64 = sims.iter().map(|s| s.makespan).sum();
+        let ratio = sim_total as f64 / cost.total_cycles;
+        assert!(
+            (0.6..=1.05).contains(&ratio),
+            "network sim/model = {ratio}"
+        );
+    }
+
+    #[test]
+    fn prop_sim_invariants_random_layers() {
+        propcheck::check("sim-invariants", 25, |rng: &mut Rng| {
+            let m = model();
+            let layer = Layer::conv(
+                "rand",
+                rng.int_range(1, 256) as u64,
+                rng.int_range(1, 256) as u64,
+                [1u64, 3, 5, 7][rng.below(4) as usize],
+                rng.int_range(1, 2) as u64,
+                1,
+                rng.int_range(7, 56) as u64,
+            );
+            let prec = LayerPrecision::new(
+                rng.int_range(2, 8) as u32,
+                rng.int_range(2, 8) as u32,
+            );
+            let r = rng.int_range(1, 6) as u64;
+            let sim = simulate_layer(&m, &layer, prec, r);
+            let cost = m.layer(&layer, prec);
+            if sim.makespan == 0 {
+                return Err("zero makespan".into());
+            }
+            // 4 events per vector.
+            if sim.events != 4 * layer.num_vectors() {
+                return Err(format!(
+                    "event count {} != 4·{}",
+                    sim.events,
+                    layer.num_vectors()
+                ));
+            }
+            // Replicated sim can never exceed the unreplicated analytic sum.
+            if sim.makespan > cost.total_cycles() + 4 {
+                return Err(format!(
+                    "sim {} exceeds analytic {}",
+                    sim.makespan,
+                    cost.total_cycles()
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,219 @@
+//! Binary tensor interchange between the Python compile path and the rust
+//! runtime. Self-describing little-endian format written by
+//! `python/compile/aot.py`:
+//!
+//! ```text
+//! magic   : 4 bytes  = b"LRT1"
+//! dtype   : u32      = 0 (f32) | 1 (i32) | 2 (u8)
+//! ndim    : u32
+//! dims    : ndim × u32
+//! data    : product(dims) elements, little-endian
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"LRT1";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    U8 = 2,
+}
+
+/// A dense host tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor {
+            dims,
+            data: TensorData::F32(data),
+        }
+    }
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor {
+            dims,
+            data: TensorData::I32(data),
+        }
+    }
+    pub fn u8(dims: Vec<usize>, data: Vec<u8>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor {
+            dims,
+            data: TensorData::U8(data),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+            TensorData::U8(_) => DType::U8,
+        }
+    }
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_u8(&self) -> Option<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.dtype() as u32).to_le_bytes())?;
+        f.write_all(&(self.dims.len() as u32).to_le_bytes())?;
+        for &d in &self.dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match &self.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::U8(v) => f.write_all(v)?,
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Tensor> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic {magic:?}");
+        }
+        let dtype = read_u32(&mut f)?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 8 {
+            bail!("{path:?}: implausible ndim {ndim}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut f)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let data = match dtype {
+            0 => {
+                let mut buf = vec![0u8; n * 4];
+                f.read_exact(&mut buf)?;
+                TensorData::F32(
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )
+            }
+            1 => {
+                let mut buf = vec![0u8; n * 4];
+                f.read_exact(&mut buf)?;
+                TensorData::I32(
+                    buf.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )
+            }
+            2 => {
+                let mut buf = vec![0u8; n];
+                f.read_exact(&mut buf)?;
+                TensorData::U8(buf)
+            }
+            d => bail!("{path:?}: unknown dtype {d}"),
+        };
+        Ok(Tensor { dims, data })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lrmp-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25]);
+        let p = tmp("a.lrt");
+        t.save(&p).unwrap();
+        assert_eq!(Tensor::load(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn roundtrip_i32_u8() {
+        let t = Tensor::i32(vec![4], vec![-1, 0, 7, i32::MAX]);
+        let p = tmp("b.lrt");
+        t.save(&p).unwrap();
+        assert_eq!(Tensor::load(&p).unwrap(), t);
+
+        let t = Tensor::u8(vec![3, 1], vec![0, 128, 255]);
+        let p = tmp("c.lrt");
+        t.save(&p).unwrap();
+        assert_eq!(Tensor::load(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.lrt");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(Tensor::load(&p).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn dims_must_match_len() {
+        Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,54 @@
+//! General-purpose substrates built in-tree because the build environment is
+//! fully offline (see DESIGN.md §1): PRNG, JSON, statistics, a
+//! property-testing harness, binary tensor IO, and a thread pool.
+
+pub mod io;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+
+/// Integer ceiling division — used pervasively by the tile/latency equations.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0, "ceil_div by zero");
+    (a + b - 1) / b
+}
+
+/// Human-readable engineering formatting for cycle counts / rates.
+pub fn eng(v: f64) -> String {
+    let av = v.abs();
+    if av >= 1e9 {
+        format!("{:.3}G", v / 1e9)
+    } else if av >= 1e6 {
+        format!("{:.3}M", v / 1e6)
+    } else if av >= 1e3 {
+        format!("{:.3}k", v / 1e3)
+    } else {
+        format!("{:.3}", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(147, 256), 1);
+        assert_eq!(ceil_div(576, 256), 3);
+    }
+
+    #[test]
+    fn eng_format() {
+        assert_eq!(eng(1500.0), "1.500k");
+        assert_eq!(eng(2.5e6), "2.500M");
+        assert_eq!(eng(3.0e9), "3.000G");
+        assert_eq!(eng(12.0), "12.000");
+    }
+}

@@ -1,0 +1,90 @@
+//! Minimal property-based-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| { ... })` runs the property over `cases` random
+//! inputs derived from a fixed base seed (override with env `PROPCHECK_SEED`),
+//! and on failure re-reports the exact seed so the case can be replayed with
+//! `PROPCHECK_SEED=<seed> PROPCHECK_CASES=1 cargo test <name>`.
+
+use super::prng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: assert a condition inside a property.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+fn case_count(default_cases: usize) -> usize {
+    std::env::var("PROPCHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run `prop` over `cases` seeded inputs; panics (test failure) on the first
+/// violated case, reporting the per-case seed for replay.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base = base_seed();
+    let n = case_count(cases);
+    for case in 0..n {
+        let seed = base
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{n} (replay with \
+                 PROPCHECK_SEED={base} — case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("tautology", 32, |_rng| {
+            ran += 1;
+            Ok(())
+        });
+        assert_eq!(ran, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false'")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 4, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn rng_streams_differ_across_cases() {
+        let mut firsts = Vec::new();
+        check("collect", 8, |rng| {
+            firsts.push(rng.next_u64());
+            Ok(())
+        });
+        firsts.sort();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 8, "cases must see distinct rng streams");
+    }
+}

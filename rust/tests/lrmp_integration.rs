@@ -1,0 +1,64 @@
+//! End-to-end integration: the full LRMP search with the *live* accuracy
+//! path — DDPG episodes whose rewards come from quantized inference executed
+//! through PJRT artifacts (rust → XLA → Pallas-authored HLO), with LP
+//! replication on the cost model. Requires `make artifacts`.
+
+use lrmp::accuracy::Evaluator;
+use lrmp::cost::CostModel;
+use lrmp::lrmp::{LiveAccuracy, Lrmp, SearchConfig};
+use lrmp::nets;
+use lrmp::replication::Objective;
+use lrmp::runtime;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn live_search_improves_latency_at_near_iso_accuracy() {
+    let Some(dir) = artifacts() else { return };
+    // The live path uses the scaled MLP geometry that matches the artifacts.
+    let net = nets::mlp_tiny();
+    let model = CostModel::paper();
+    let cfg = SearchConfig {
+        objective: Objective::Latency,
+        episodes: 10,
+        updates_per_episode: 3,
+        budget_start: 0.5,
+        budget_end: 0.35,
+        seed: 0xBEEF,
+        ..Default::default()
+    };
+    let search = Lrmp::new(&model, &net, cfg);
+    let ev = Evaluator::new(&dir).expect("evaluator");
+    let mut provider = LiveAccuracy::new(ev, 512);
+    provider.finetune_steps = 25;
+
+    let res = search.run(&mut provider).expect("search");
+
+    // Performance: the budget forces ≥ 2× latency improvement.
+    assert!(
+        res.latency_improvement() >= 2.0,
+        "latency improvement {}",
+        res.latency_improvement()
+    );
+    // Area: never exceeds the 8-bit baseline tile count (paper's constraint).
+    assert!(res.best_plan.tiles_used <= search.baseline_tiles());
+    // Accuracy: near iso-accuracy after finetuning (paper: <1% loss; allow
+    // 5 points on this tiny budget of episodes/steps).
+    assert!(
+        res.finetuned_accuracy >= res.baseline_accuracy - 0.05,
+        "accuracy {} vs baseline {}",
+        res.finetuned_accuracy,
+        res.baseline_accuracy
+    );
+    // The trajectory was actually explored.
+    assert_eq!(res.trajectory.len(), 10);
+    assert!(res.trajectory.iter().any(|e| e.feasible));
+}

@@ -1,0 +1,91 @@
+//! Integration tests over the PJRT runtime + artifacts: the full
+//! rust-loads-jax/pallas-HLO path. Requires `make artifacts` (skipped with a
+//! clear message otherwise).
+
+use lrmp::accuracy::Evaluator;
+use lrmp::quant::Policy;
+use lrmp::runtime::{self, engine::Engine};
+use lrmp::util::prng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn crossbar_demo_bit_exact_equals_fast() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::start(dir).expect("engine start");
+    let (b, r, n) = engine.demo_shape;
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = (0..b * r).map(|_| rng.f64() as f32).collect();
+    let w: Vec<f32> = (0..r * n).map(|_| rng.normal() as f32).collect();
+    for (wb, ab) in [(8.0, 8.0), (5.0, 6.0), (2.0, 2.0), (3.0, 7.0)] {
+        let (exact, fast) = engine
+            .crossbar_demo(x.clone(), w.clone(), wb, ab)
+            .expect("demo run");
+        assert_eq!(exact.len(), b * n);
+        assert_eq!(
+            exact, fast,
+            "bit-exact and fast crossbar kernels diverged at w={wb} a={ab}"
+        );
+        // Non-trivial output.
+        assert!(exact.iter().any(|&v| v != 0.0));
+    }
+}
+
+#[test]
+fn quantized_accuracy_through_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let ev = Evaluator::new(&dir).expect("evaluator");
+    let l = ev.engine.num_layers;
+
+    let acc8 = ev.accuracy(&Policy::uniform(l, 8, 8), 512).expect("acc 8/8");
+    assert!(
+        acc8 > 0.85,
+        "8/8 accuracy {acc8} too far below the build-time value"
+    );
+
+    let acc2 = ev.accuracy(&Policy::uniform(l, 2, 2), 512).expect("acc 2/2");
+    assert!(
+        acc2 < acc8 - 0.2,
+        "2/2 accuracy {acc2} should collapse vs 8/8 {acc8}"
+    );
+}
+
+#[test]
+fn finetune_recovers_low_bit_accuracy() {
+    let Some(dir) = artifacts() else { return };
+    let ev = Evaluator::new(&dir).expect("evaluator");
+    let l = ev.engine.num_layers;
+    let policy = Policy::uniform(l, 3, 4);
+
+    ev.reset().unwrap();
+    let before = ev.accuracy(&policy, 512).unwrap();
+    let losses = ev.finetune(&policy, 30, 0.05, 7).unwrap();
+    let after = ev.accuracy(&policy, 512).unwrap();
+    ev.reset().unwrap();
+    let reset_acc = ev.accuracy(&policy, 512).unwrap();
+
+    assert!(
+        after >= before - 0.02,
+        "finetuning hurt: {before} -> {after} (losses {losses:?})"
+    );
+    assert!(
+        (reset_acc - before).abs() < 0.03,
+        "reset_params failed to restore: {before} vs {reset_acc}"
+    );
+}
+
+#[test]
+fn eval_rejects_wrong_batch() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::start(dir).expect("engine start");
+    let err = engine.eval(vec![0.0; 3], vec![8.0; 4], vec![8.0; 4]);
+    assert!(err.is_err());
+}

@@ -1,0 +1,122 @@
+//! Serving-path integration: the L3 coordinator (dynamic batcher + request
+//! router) over the PJRT engine — concurrent clients, correctness of routed
+//! logits, and batching metrics. Requires `make artifacts`.
+
+use lrmp::coordinator::batcher::BatchPolicy;
+use lrmp::coordinator::Server;
+use lrmp::quant::Policy;
+use lrmp::runtime::{self, engine::Engine};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+fn load_test_set(dir: &std::path::Path, n: usize) -> (Vec<Vec<f32>>, Vec<i32>, usize) {
+    let manifest = runtime::Manifest::load(dir).unwrap();
+    let x = manifest.tensor(&manifest.dataset.x_test).unwrap();
+    let y = manifest.tensor(&manifest.dataset.y_test).unwrap();
+    let dim = x.dims[1];
+    let xs = x.as_f32().unwrap();
+    let samples = (0..n.min(x.dims[0]))
+        .map(|i| xs[i * dim..(i + 1) * dim].to_vec())
+        .collect();
+    (samples, y.as_i32().unwrap()[..n].to_vec(), dim)
+}
+
+#[test]
+fn batched_serving_routes_correct_logits() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::start(dir.clone()).expect("engine");
+    let nl = engine.num_layers;
+    let server = Arc::new(Server::start(
+        engine,
+        &Policy::baseline(nl),
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(4),
+        },
+    ));
+
+    let (samples, labels, _dim) = load_test_set(&dir, 192);
+
+    // Concurrent clients hammer the server; each checks its own answer.
+    let mut handles = Vec::new();
+    for client in 0..4 {
+        let server = Arc::clone(&server);
+        let samples = samples.clone();
+        let labels = labels.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            let mut count = 0usize;
+            for i in (client..samples.len()).step_by(4) {
+                let logits = server.infer(samples[i].clone()).expect("infer");
+                assert_eq!(logits.len(), 10);
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32;
+                correct += usize::from(pred == labels[i]);
+                count += 1;
+            }
+            (correct, count)
+        }));
+    }
+    let (mut correct, mut count) = (0usize, 0usize);
+    for h in handles {
+        let (c, n) = h.join().unwrap();
+        correct += c;
+        count += n;
+    }
+    assert_eq!(count, 192);
+    let acc = correct as f64 / count as f64;
+    assert!(acc > 0.85, "served accuracy {acc} suspiciously low");
+
+    let m = server.snapshot_metrics();
+    assert_eq!(m.requests, 192);
+    assert_eq!(m.failures, 0);
+    assert!(m.batches >= 3, "requests should ride shared batches");
+    assert!(
+        (m.batches as usize) < count,
+        "batching must coalesce requests ({} batches / {count} requests)",
+        m.batches
+    );
+    assert!(m.mean_fill() > 0.0 && m.mean_fill() <= 1.0);
+    assert!(m.latency_p(50.0) > 0.0);
+}
+
+#[test]
+fn server_rejects_wrong_dimension() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::start(dir).expect("engine");
+    let nl = engine.num_layers;
+    let server = Server::start(engine, &Policy::baseline(nl), BatchPolicy::default());
+    assert!(server.infer(vec![0.0; 3]).is_err());
+}
+
+#[test]
+fn async_requests_complete() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::start(dir.clone()).expect("engine");
+    let nl = engine.num_layers;
+    let server = Server::start(engine, &Policy::uniform(nl, 5, 6), BatchPolicy::default());
+    let (samples, _, _) = load_test_set(&dir, 32);
+    let rxs: Vec<_> = samples
+        .iter()
+        .map(|s| server.infer_async(s.clone()).unwrap())
+        .collect();
+    for rx in rxs {
+        let logits = rx.recv().unwrap().unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}
