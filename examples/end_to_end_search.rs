@@ -1,5 +1,6 @@
 //! The end-to-end driver (DESIGN.md deliverable): the complete LRMP system
-//! on a real small workload, all three layers composing —
+//! on a real small workload, all three layers composing through the
+//! `lrmp::api` facade —
 //!
 //!   L3 rust: DDPG agent + budget enforcement + LP replication + cost model
 //!   L2 jax:  the quantized MLP (AOT-lowered HLO, loaded via PJRT)
@@ -9,56 +10,57 @@
 //! the synthetic-digit test set through the compiled artifacts; the final
 //! policy is quantization-aware-finetuned from rust via the grad artifact.
 //! Falls back to the SQNR surrogate (with a note) if artifacts are missing.
+//! The search's output is a versioned Deployment artifact — pass `--out`
+//! to save it, then `lrmp inspect`/`lrmp serve --deployment` consume it.
 //!
 //!     cargo run --release --example end_to_end_search -- [--episodes 20]
 
-use lrmp::accuracy::Evaluator;
+use lrmp::api::Session;
 use lrmp::cli::Args;
 use lrmp::cost::CostModel;
-use lrmp::lrmp::{AccuracyProvider, LiveAccuracy, Lrmp, SearchConfig};
 use lrmp::nets;
-use lrmp::quant::SqnrSurrogate;
 use lrmp::replication::Objective;
 use lrmp::runtime;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let episodes = args.usize("episodes", 20);
+    for flag in args.flags.keys() {
+        if !["episodes", "seed", "out"].contains(&flag.as_str()) {
+            anyhow::bail!("unknown flag --{flag} (valid: --episodes, --seed, --out)");
+        }
+    }
+    let episodes = args.parsed("episodes", 20).map_err(anyhow::Error::msg)?;
+    let seed = args.parsed("seed", 0xE2E).map_err(anyhow::Error::msg)?;
     let net = nets::mlp_tiny();
     let model = CostModel::paper();
-    let cfg = SearchConfig {
-        objective: Objective::Latency,
-        episodes,
-        updates_per_episode: 4,
-        budget_start: 0.5,
-        budget_end: 0.3,
-        seed: args.u64("seed", 0xE2E),
-        ..Default::default()
-    };
-    let search = Lrmp::new(&model, &net, cfg);
     let baseline = model.baseline(&net);
     println!(
-        "net {} on the paper chip: baseline latency {:.2} ms, {} tiles (budget)",
+        "net {} on the paper chip: baseline latency {:.2} ms, {} tiles",
         net.name,
         baseline.latency_s() * 1e3,
-        search.baseline_tiles()
+        baseline.tiles_used,
     );
 
-    let dir = runtime::default_artifacts_dir();
-    let mut provider: Box<dyn AccuracyProvider> = if dir.join("manifest.json").exists() {
-        let ev = Evaluator::new(&dir)?;
-        println!(
-            "accuracy: LIVE through PJRT artifacts ({} test samples/eval)\n",
-            512
-        );
-        Box::new(LiveAccuracy::new(ev, 512))
+    let live = runtime::default_artifacts_dir()
+        .join("manifest.json")
+        .exists();
+    if live {
+        println!("accuracy: LIVE through PJRT artifacts (512 test samples/eval)\n");
     } else {
         println!("accuracy: artifacts missing -> SQNR surrogate (run `make artifacts`)\n");
-        Box::new(SqnrSurrogate::new(&net, 0.92, 0.5))
-    };
+    }
+
+    let session = Session::new("mlp-tiny")?
+        .objective(Objective::Latency)
+        .episodes(episodes)
+        .updates_per_episode(4)
+        .budget(0.5, 0.3)
+        .seed(seed)
+        .samples(512)
+        .live(live);
 
     let t0 = std::time::Instant::now();
-    let res = search.run(provider.as_mut())?;
+    let (dep, res) = session.search_detailed()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("episode  budget  reward   acc     latency-x  mean-bits(w/a)");
@@ -88,32 +90,23 @@ fn main() -> anyhow::Result<()> {
         "accuracy   {:.4} (baseline) -> {:.4} (best policy) -> {:.4} (finetuned)",
         res.baseline_accuracy, res.best_accuracy, res.finetuned_accuracy
     );
-    println!(
-        "tiles      {} / {} budget",
-        res.best_plan.tiles_used,
-        search.baseline_tiles()
-    );
+    println!("tiles      {} / {} budget", dep.tiles_used, dep.n_tiles);
     println!(
         "policy     w_bits {:?}",
-        res.best_policy
-            .layers
-            .iter()
-            .map(|l| l.w_bits)
-            .collect::<Vec<_>>()
+        dep.policy.layers.iter().map(|l| l.w_bits).collect::<Vec<_>>()
     );
     println!(
         "           a_bits {:?}",
-        res.best_policy
-            .layers
-            .iter()
-            .map(|l| l.a_bits)
-            .collect::<Vec<_>>()
+        dep.policy.layers.iter().map(|l| l.a_bits).collect::<Vec<_>>()
     );
-    println!("replication {:?}", res.best_plan.replication);
+    println!("replication {:?}", dep.replication);
 
     if let Some(out) = args.flags.get("out") {
-        std::fs::write(out, res.to_json().pretty())?;
-        println!("wrote {out}");
+        dep.save(std::path::Path::new(out))?;
+        println!(
+            "wrote deployment {out} — round-trip it with `lrmp inspect {out}` \
+             and `lrmp serve --deployment {out}`"
+        );
     }
     Ok(())
 }

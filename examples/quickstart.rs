@@ -1,8 +1,11 @@
-//! Quickstart: map a DNN onto the IMC chip, inspect the cost model, and run
-//! the LP replication optimizer — the 60-second tour of the public API.
+//! Quickstart: map a DNN onto the IMC chip, inspect the cost model, then
+//! run the whole pipeline through the `lrmp::api` facade — search a design,
+//! save it as a Deployment artifact, load it back, and validate it. The
+//! 60-second tour of the public API.
 //!
 //!     cargo run --release --example quickstart
 
+use lrmp::api::Session;
 use lrmp::bench_harness::Table;
 use lrmp::cost::CostModel;
 use lrmp::nets;
@@ -62,16 +65,37 @@ fn main() -> anyhow::Result<()> {
         let plan = replication::optimize(&summaries, n_tiles, obj)?;
         let optimized = model.network(&net, &policy, &plan.replication);
         table.row(&[
-            format!("{obj:?}"),
+            format!("{obj}"),
             format!("{:.2}", baseline.total_cycles / optimized.total_cycles),
-            format!(
-                "{:.2}",
-                optimized.throughput() / baseline.throughput()
-            ),
+            format!("{:.2}", optimized.throughput() / baseline.throughput()),
             optimized.tiles_used.to_string(),
         ]);
     }
     table.print();
+
+    // 5. The facade ties it together: search -> Deployment artifact ->
+    //    save -> load -> validate. The same artifact drives `simulate`,
+    //    `inspect`, and `serve` on the CLI.
+    println!("\nrunning a short facade search on the MLP benchmark...");
+    let dep = Session::new("mlp")?
+        .objective(Objective::Latency)
+        .episodes(8)
+        .updates_per_episode(2)
+        .seed(0x9017)
+        .search()?;
+    let path = std::env::temp_dir().join("lrmp-quickstart-dep.json");
+    dep.save(&path)?;
+    let loaded = lrmp::api::Deployment::load(&path)?;
+    let cost = loaded.validate()?;
+    assert_eq!(loaded, dep, "artifact must round-trip losslessly");
+    println!(
+        "searched {}: latency x{:.2}, {} / {} tiles, artifact at {}",
+        loaded.net,
+        loaded.predicted.latency_improvement(),
+        cost.tiles_used,
+        loaded.n_tiles,
+        path.display()
+    );
     println!("\nnext: examples/end_to_end_search.rs runs the full RL+LP loop.");
     Ok(())
 }

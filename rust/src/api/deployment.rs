@@ -1,0 +1,612 @@
+//! The serializable Deployment artifact — the typed intermediate
+//! representation that connects the three phases of the system: `search`
+//! produces it, `simulate`/`inspect` analyze it, `serve` executes it.
+//!
+//! A Deployment bundles everything needed to reproduce and run a searched
+//! design: the chip configuration (Table I), the per-layer quantization
+//! policy, the replication plan, the predicted cost-model metrics, and
+//! search provenance. It is versioned (`schema_version`) and round-trips
+//! through JSON byte-for-byte-equivalently (`save` → `load` → deep equal).
+
+use crate::api::{ApiError, ApiResult};
+use crate::arch::ChipConfig;
+use crate::cost::{CostModel, NetworkCost};
+use crate::nets;
+use crate::quant::Policy;
+use crate::replication::Objective;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Schema version written by this build; `load` rejects other versions.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Marker distinguishing deployment artifacts from other JSON files.
+pub const DEPLOYMENT_KIND: &str = "lrmp-deployment";
+
+/// How the artifact was produced (reproducibility record).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    pub episodes: usize,
+    pub seed: u64,
+    pub budget_start: f64,
+    pub budget_end: f64,
+    pub lambda: f64,
+    pub alpha: f64,
+    pub updates_per_episode: usize,
+    /// `AccuracyProvider::name()` used for the reward.
+    pub accuracy_provider: String,
+    /// `CARGO_PKG_VERSION` of the producing build.
+    pub crate_version: String,
+}
+
+/// Cost-model predictions captured at search time. `validate` re-derives
+/// them and rejects artifacts that drift from the current model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictedMetrics {
+    pub total_cycles: f64,
+    pub bottleneck_cycles: f64,
+    pub latency_s: f64,
+    pub throughput_inf_s: f64,
+    pub energy_j: f64,
+    pub baseline_total_cycles: f64,
+    pub baseline_bottleneck_cycles: f64,
+    pub baseline_energy_j: f64,
+    pub baseline_accuracy: f64,
+    pub searched_accuracy: f64,
+    pub finetuned_accuracy: f64,
+}
+
+impl PredictedMetrics {
+    /// Capture the optimized/baseline cost pair plus the accuracy triple
+    /// (baseline, searched, finetuned) — the one place the 11 fields are
+    /// assembled.
+    pub fn from_costs(
+        optimized: &NetworkCost,
+        baseline: &NetworkCost,
+        accuracies: (f64, f64, f64),
+    ) -> PredictedMetrics {
+        PredictedMetrics {
+            total_cycles: optimized.total_cycles,
+            bottleneck_cycles: optimized.bottleneck_cycles,
+            latency_s: optimized.latency_s(),
+            throughput_inf_s: optimized.throughput(),
+            energy_j: optimized.energy_j,
+            baseline_total_cycles: baseline.total_cycles,
+            baseline_bottleneck_cycles: baseline.bottleneck_cycles,
+            baseline_energy_j: baseline.energy_j,
+            baseline_accuracy: accuracies.0,
+            searched_accuracy: accuracies.1,
+            finetuned_accuracy: accuracies.2,
+        }
+    }
+
+    pub fn latency_improvement(&self) -> f64 {
+        self.baseline_total_cycles / self.total_cycles
+    }
+    pub fn throughput_improvement(&self) -> f64 {
+        self.baseline_bottleneck_cycles / self.bottleneck_cycles
+    }
+    pub fn energy_improvement(&self) -> f64 {
+        self.baseline_energy_j / self.energy_j
+    }
+}
+
+/// A versioned, serializable LRMP design: chip + policy + replication plan
+/// + predictions + provenance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Deployment {
+    pub schema_version: u64,
+    /// Canonical benchmark name (resolvable by `nets::by_name`).
+    pub net: String,
+    pub objective: Objective,
+    pub chip: ChipConfig,
+    /// The tile budget the search ran under (≠ `chip.n_tiles` when the
+    /// paper's iso-area constraint or `--tiles` was used).
+    pub n_tiles: u64,
+    pub policy: Policy,
+    pub replication: Vec<u64>,
+    pub tiles_used: u64,
+    pub predicted: PredictedMetrics,
+    pub provenance: Provenance,
+}
+
+impl Deployment {
+    /// Package a finished search into the serializable artifact.
+    pub fn from_search(
+        net: &crate::nets::Network,
+        chip: &ChipConfig,
+        cfg: &crate::lrmp::SearchConfig,
+        n_tiles: u64,
+        provider_name: &str,
+        res: &crate::lrmp::SearchResult,
+    ) -> Deployment {
+        Deployment {
+            schema_version: SCHEMA_VERSION,
+            net: net.name.clone(),
+            objective: cfg.objective,
+            chip: chip.clone(),
+            n_tiles,
+            policy: res.best_policy.clone(),
+            replication: res.best_plan.replication.clone(),
+            tiles_used: res.optimized.tiles_used,
+            predicted: PredictedMetrics::from_costs(
+                &res.optimized,
+                &res.baseline,
+                (
+                    res.baseline_accuracy,
+                    res.best_accuracy,
+                    res.finetuned_accuracy,
+                ),
+            ),
+            provenance: Provenance {
+                episodes: cfg.episodes,
+                seed: cfg.seed,
+                budget_start: cfg.budget_start,
+                budget_end: cfg.budget_end,
+                lambda: cfg.lambda,
+                alpha: cfg.alpha,
+                updates_per_episode: cfg.updates_per_episode,
+                accuracy_provider: provider_name.to_string(),
+                crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            },
+        }
+    }
+
+    /// Build an artifact directly from a policy + replication assignment
+    /// (no search): the uniform-precision serving path and the simulate
+    /// default use this. Accuracy estimates come from the SQNR surrogate.
+    pub fn from_policy(
+        net_name: &str,
+        chip: &ChipConfig,
+        objective: Objective,
+        policy: Policy,
+        replication: Vec<u64>,
+        n_tiles: Option<u64>,
+    ) -> ApiResult<Deployment> {
+        let net = nets::by_name(net_name).ok_or_else(|| ApiError::UnknownNetwork {
+            name: net_name.to_string(),
+        })?;
+        let nl = net.num_layers();
+        if policy.len() != nl || replication.len() != nl {
+            return Err(ApiError::InvalidConfig(format!(
+                "policy/replication must have {nl} entries for {}",
+                net.name
+            )));
+        }
+        if replication.iter().any(|&r| r < 1) {
+            return Err(ApiError::InvalidConfig(
+                "replication factors must be >= 1".into(),
+            ));
+        }
+        let chip_errs = chip.validate();
+        if !chip_errs.is_empty() {
+            return Err(ApiError::Validation(chip_errs));
+        }
+        let model = CostModel::new(chip.clone());
+        let cost = model.network(&net, &policy, &replication);
+        let base = model.baseline(&net);
+        let n_tiles = n_tiles.unwrap_or(cost.tiles_used.max(base.tiles_used));
+        if cost.tiles_used > n_tiles {
+            return Err(ApiError::Infeasible {
+                needed: cost.tiles_used,
+                available: n_tiles,
+            });
+        }
+        let surrogate = crate::quant::SqnrSurrogate::for_benchmark(&net);
+        Ok(Deployment {
+            schema_version: SCHEMA_VERSION,
+            net: net.name.clone(),
+            objective,
+            chip: chip.clone(),
+            n_tiles,
+            tiles_used: cost.tiles_used,
+            predicted: PredictedMetrics::from_costs(
+                &cost,
+                &base,
+                (
+                    surrogate.base_acc,
+                    surrogate.accuracy(&policy),
+                    surrogate.accuracy_finetuned(&policy),
+                ),
+            ),
+            provenance: Provenance {
+                episodes: 0,
+                seed: 0,
+                budget_start: 0.0,
+                budget_end: 0.0,
+                lambda: 0.0,
+                alpha: 0.0,
+                updates_per_episode: 0,
+                accuracy_provider: "fixed-policy".to_string(),
+                crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            },
+            policy,
+            replication,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // JSON
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let p = &self.predicted;
+        let pv = &self.provenance;
+        Json::obj(vec![
+            ("kind", Json::Str(DEPLOYMENT_KIND.to_string())),
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("net", Json::Str(self.net.clone())),
+            ("objective", Json::Str(self.objective.as_str().to_string())),
+            ("chip", self.chip.to_json()),
+            ("n_tiles", Json::Num(self.n_tiles as f64)),
+            ("policy", self.policy.to_json()),
+            ("replication", Json::arr_u64(&self.replication)),
+            ("tiles_used", Json::Num(self.tiles_used as f64)),
+            (
+                "predicted",
+                Json::obj(vec![
+                    ("total_cycles", Json::Num(p.total_cycles)),
+                    ("bottleneck_cycles", Json::Num(p.bottleneck_cycles)),
+                    ("latency_s", Json::Num(p.latency_s)),
+                    ("throughput_inf_s", Json::Num(p.throughput_inf_s)),
+                    ("energy_j", Json::Num(p.energy_j)),
+                    ("baseline_total_cycles", Json::Num(p.baseline_total_cycles)),
+                    (
+                        "baseline_bottleneck_cycles",
+                        Json::Num(p.baseline_bottleneck_cycles),
+                    ),
+                    ("baseline_energy_j", Json::Num(p.baseline_energy_j)),
+                    ("baseline_accuracy", Json::Num(p.baseline_accuracy)),
+                    ("searched_accuracy", Json::Num(p.searched_accuracy)),
+                    ("finetuned_accuracy", Json::Num(p.finetuned_accuracy)),
+                ]),
+            ),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("episodes", Json::Num(pv.episodes as f64)),
+                    // Seeds are 64-bit; JSON numbers are f64 — store as a
+                    // string to keep every seed exact.
+                    ("seed", Json::Str(pv.seed.to_string())),
+                    ("budget_start", Json::Num(pv.budget_start)),
+                    ("budget_end", Json::Num(pv.budget_end)),
+                    ("lambda", Json::Num(pv.lambda)),
+                    ("alpha", Json::Num(pv.alpha)),
+                    (
+                        "updates_per_episode",
+                        Json::Num(pv.updates_per_episode as f64),
+                    ),
+                    ("accuracy_provider", Json::Str(pv.accuracy_provider.clone())),
+                    ("crate_version", Json::Str(pv.crate_version.clone())),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ApiResult<Deployment> {
+        let missing = |k: &str| ApiError::MalformedDeployment(format!("missing field '{k}'"));
+
+        let kind = j.get("kind").as_str().ok_or_else(|| {
+            ApiError::MalformedDeployment(format!(
+                "missing 'kind' marker — not a {DEPLOYMENT_KIND} artifact"
+            ))
+        })?;
+        if kind != DEPLOYMENT_KIND {
+            return Err(ApiError::MalformedDeployment(format!(
+                "kind '{kind}' is not '{DEPLOYMENT_KIND}'"
+            )));
+        }
+        let schema_version = j
+            .get("schema_version")
+            .as_u64()
+            .ok_or_else(|| missing("schema_version"))?;
+        if schema_version != SCHEMA_VERSION {
+            return Err(ApiError::SchemaVersion {
+                found: schema_version,
+                supported: SCHEMA_VERSION,
+            });
+        }
+
+        let net = j
+            .get("net")
+            .as_str()
+            .ok_or_else(|| missing("net"))?
+            .to_string();
+        let objective: Objective = j
+            .get("objective")
+            .as_str()
+            .ok_or_else(|| missing("objective"))?
+            .parse()
+            .map_err(|_| ApiError::UnknownObjective {
+                name: j.get("objective").as_str().unwrap_or("").to_string(),
+            })?;
+        let chip = ChipConfig::from_json(j.get("chip"))
+            .ok_or_else(|| ApiError::MalformedDeployment("bad 'chip' block".into()))?;
+        let n_tiles = j.get("n_tiles").as_u64().ok_or_else(|| missing("n_tiles"))?;
+        let policy = Policy::from_json(j.get("policy"))
+            .ok_or_else(|| ApiError::MalformedDeployment("bad 'policy' block".into()))?;
+        let replication: Vec<u64> = j
+            .get("replication")
+            .as_arr()
+            .ok_or_else(|| missing("replication"))?
+            .iter()
+            .map(|v| v.as_u64())
+            .collect::<Option<Vec<u64>>>()
+            .ok_or_else(|| {
+                ApiError::MalformedDeployment("replication must be non-negative integers".into())
+            })?;
+        let tiles_used = j
+            .get("tiles_used")
+            .as_u64()
+            .ok_or_else(|| missing("tiles_used"))?;
+
+        let p = j.get("predicted");
+        let pf = |k: &str| -> ApiResult<f64> {
+            p.get(k)
+                .as_f64()
+                .ok_or_else(|| ApiError::MalformedDeployment(format!("missing predicted.{k}")))
+        };
+        let predicted = PredictedMetrics {
+            total_cycles: pf("total_cycles")?,
+            bottleneck_cycles: pf("bottleneck_cycles")?,
+            latency_s: pf("latency_s")?,
+            throughput_inf_s: pf("throughput_inf_s")?,
+            energy_j: pf("energy_j")?,
+            baseline_total_cycles: pf("baseline_total_cycles")?,
+            baseline_bottleneck_cycles: pf("baseline_bottleneck_cycles")?,
+            baseline_energy_j: pf("baseline_energy_j")?,
+            baseline_accuracy: pf("baseline_accuracy")?,
+            searched_accuracy: pf("searched_accuracy")?,
+            finetuned_accuracy: pf("finetuned_accuracy")?,
+        };
+
+        let v = j.get("provenance");
+        let vf = |k: &str| -> ApiResult<f64> {
+            v.get(k)
+                .as_f64()
+                .ok_or_else(|| ApiError::MalformedDeployment(format!("missing provenance.{k}")))
+        };
+        let provenance = Provenance {
+            episodes: v
+                .get("episodes")
+                .as_usize()
+                .ok_or_else(|| missing("provenance.episodes"))?,
+            seed: v
+                .get("seed")
+                .as_str()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| {
+                    ApiError::MalformedDeployment("provenance.seed must be a decimal string".into())
+                })?,
+            budget_start: vf("budget_start")?,
+            budget_end: vf("budget_end")?,
+            lambda: vf("lambda")?,
+            alpha: vf("alpha")?,
+            updates_per_episode: v
+                .get("updates_per_episode")
+                .as_usize()
+                .ok_or_else(|| missing("provenance.updates_per_episode"))?,
+            accuracy_provider: v
+                .get("accuracy_provider")
+                .as_str()
+                .ok_or_else(|| missing("provenance.accuracy_provider"))?
+                .to_string(),
+            crate_version: v
+                .get("crate_version")
+                .as_str()
+                .ok_or_else(|| missing("provenance.crate_version"))?
+                .to_string(),
+        };
+
+        Ok(Deployment {
+            schema_version,
+            net,
+            objective,
+            chip,
+            n_tiles,
+            policy,
+            replication,
+            tiles_used,
+            predicted,
+            provenance,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Files
+    // ------------------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> ApiResult<()> {
+        self.to_json().to_file(path).map_err(|e| ApiError::Io {
+            path: path.display().to_string(),
+            message: format!("{e:#}"),
+        })
+    }
+
+    pub fn load(path: &Path) -> ApiResult<Deployment> {
+        let text = std::fs::read_to_string(path).map_err(|e| ApiError::Io {
+            path: path.display().to_string(),
+            message: e.to_string(),
+        })?;
+        let j = Json::parse(&text).map_err(|e| ApiError::Json {
+            path: path.display().to_string(),
+            message: e.to_string(),
+        })?;
+        Deployment::from_json(&j)
+    }
+
+    // ------------------------------------------------------------------
+    // Validation
+    // ------------------------------------------------------------------
+
+    /// Re-run the analytical cost model over the artifact and check that it
+    /// still describes a feasible, internally consistent design:
+    ///
+    /// 1. the chip configuration is physically valid,
+    /// 2. the network is known and the policy/replication lengths match it,
+    /// 3. the recomputed plan fits the `n_tiles` budget,
+    /// 4. the recomputed tile count and latency agree with the recorded
+    ///    predictions (stale artifacts from a different cost model are
+    ///    rejected rather than silently served).
+    ///
+    /// Returns the freshly computed [`NetworkCost`] on success.
+    pub fn validate(&self) -> ApiResult<NetworkCost> {
+        let chip_errs = self.chip.validate();
+        if !chip_errs.is_empty() {
+            return Err(ApiError::Validation(chip_errs));
+        }
+        let net = nets::by_name(&self.net).ok_or_else(|| ApiError::UnknownNetwork {
+            name: self.net.clone(),
+        })?;
+        let nl = net.num_layers();
+        if self.policy.len() != nl {
+            return Err(ApiError::MalformedDeployment(format!(
+                "policy has {} layers but {} has {nl}",
+                self.policy.len(),
+                self.net
+            )));
+        }
+        if self.replication.len() != nl {
+            return Err(ApiError::MalformedDeployment(format!(
+                "replication has {} entries but {} has {nl} layers",
+                self.replication.len(),
+                self.net
+            )));
+        }
+        if self.replication.iter().any(|&r| r < 1) {
+            return Err(ApiError::MalformedDeployment(
+                "replication factors must be >= 1".into(),
+            ));
+        }
+
+        let model = CostModel::new(self.chip.clone());
+        let cost = model.network(&net, &self.policy, &self.replication);
+
+        if cost.tiles_used > self.n_tiles {
+            return Err(ApiError::Infeasible {
+                needed: cost.tiles_used,
+                available: self.n_tiles,
+            });
+        }
+
+        let mut drift = Vec::new();
+        if cost.tiles_used != self.tiles_used {
+            drift.push(format!(
+                "recorded tiles_used {} but the cost model derives {}",
+                self.tiles_used, cost.tiles_used
+            ));
+        }
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+        if rel(cost.total_cycles, self.predicted.total_cycles) > 1e-6 {
+            drift.push(format!(
+                "recorded latency {} cycles but the cost model derives {} \
+                 (artifact predates a cost-model change; re-run the search)",
+                self.predicted.total_cycles, cost.total_cycles
+            ));
+        }
+        if !drift.is_empty() {
+            return Err(ApiError::Validation(drift));
+        }
+        Ok(cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small hand-built deployment (uniform 8/8, r = 1) for unit tests.
+    pub(crate) fn baseline_deployment(net_name: &str) -> Deployment {
+        let net = nets::by_name(net_name).unwrap();
+        let chip = ChipConfig::paper_scaled();
+        let model = CostModel::new(chip.clone());
+        let nl = net.num_layers();
+        let policy = Policy::baseline(nl);
+        let replication = vec![1u64; nl];
+        let cost = model.network(&net, &policy, &replication);
+        Deployment {
+            schema_version: SCHEMA_VERSION,
+            net: net.name.clone(),
+            objective: Objective::Latency,
+            chip,
+            n_tiles: cost.tiles_used,
+            policy,
+            replication,
+            tiles_used: cost.tiles_used,
+            predicted: PredictedMetrics::from_costs(&cost, &cost, (0.98, 0.98, 0.98)),
+            provenance: Provenance {
+                episodes: 0,
+                seed: 0xA11CE,
+                budget_start: 0.35,
+                budget_end: 0.20,
+                lambda: 2.0,
+                alpha: 1.0,
+                updates_per_episode: 0,
+                accuracy_provider: "none".into(),
+                crate_version: env!("CARGO_PKG_VERSION").into(),
+            },
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_deep_equal() {
+        let d = baseline_deployment("mlp");
+        let j = d.to_json();
+        let text = j.pretty();
+        let back = Deployment::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(d, back);
+    }
+
+    #[test]
+    fn validate_accepts_consistent_artifact() {
+        let d = baseline_deployment("mlp");
+        let cost = d.validate().unwrap();
+        assert_eq!(cost.tiles_used, d.tiles_used);
+    }
+
+    #[test]
+    fn validate_rejects_over_budget_plan() {
+        let mut d = baseline_deployment("mlp");
+        d.n_tiles = 10; // budget far below the plan's demand
+        match d.validate() {
+            Err(ApiError::Infeasible { needed, available }) => {
+                assert_eq!(available, 10);
+                assert!(needed > 10);
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validate_rejects_stale_predictions() {
+        let mut d = baseline_deployment("mlp");
+        d.predicted.total_cycles *= 2.0;
+        assert!(matches!(d.validate(), Err(ApiError::Validation(_))));
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let d = baseline_deployment("mlp");
+        let mut j = match d.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        j.insert("schema_version".into(), Json::Num(99.0));
+        match Deployment::from_json(&Json::Obj(j)) {
+            Err(ApiError::SchemaVersion { found, supported }) => {
+                assert_eq!((found, supported), (99, SCHEMA_VERSION));
+            }
+            other => panic!("expected SchemaVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_net_in_artifact_fails_validate() {
+        let mut d = baseline_deployment("mlp");
+        d.net = "alexnet".into();
+        assert!(matches!(
+            d.validate(),
+            Err(ApiError::UnknownNetwork { .. })
+        ));
+    }
+}

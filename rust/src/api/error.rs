@@ -1,0 +1,137 @@
+//! Typed errors of the public facade. Every fallible `api::` operation
+//! returns [`ApiError`] so callers can match on the failure class instead
+//! of parsing `anyhow` strings; `ApiError: std::error::Error`, so `?` still
+//! lifts it into `anyhow::Result` at the binary boundary.
+
+use std::fmt;
+
+/// Errors of the `lrmp::api` facade.
+#[derive(Debug)]
+pub enum ApiError {
+    /// Network name not in the benchmark registry.
+    UnknownNetwork { name: String },
+    /// Objective string is neither `latency` nor `throughput`.
+    UnknownObjective { name: String },
+    /// Unknown subcommand on the CLI.
+    UnknownSubcommand {
+        name: String,
+        valid: Vec<&'static str>,
+    },
+    /// Unknown `--flag` for a subcommand (typos must not silently fall
+    /// back to defaults).
+    UnknownFlag {
+        subcommand: String,
+        flag: String,
+        valid: Vec<&'static str>,
+    },
+    /// A builder/CLI parameter is out of range or inconsistent.
+    InvalidConfig(String),
+    /// A replication plan does not fit the tile budget.
+    Infeasible { needed: u64, available: u64 },
+    /// Deployment artifact written by an unsupported schema.
+    SchemaVersion { found: u64, supported: u64 },
+    /// Deployment artifact is structurally broken (missing/ill-typed field).
+    MalformedDeployment(String),
+    /// Filesystem failure (path included).
+    Io { path: String, message: String },
+    /// JSON syntax failure (path included when reading a file).
+    Json { path: String, message: String },
+    /// The search itself failed.
+    Search(String),
+    /// The execution runtime (PJRT engine or sim backend) failed.
+    Runtime(String),
+    /// Cost-model re-validation of an artifact found violations.
+    Validation(Vec<String>),
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::UnknownNetwork { name } => write!(
+                f,
+                "unknown network '{name}' (known: {})",
+                crate::nets::known_names().join(", ")
+            ),
+            ApiError::UnknownObjective { name } => {
+                write!(f, "unknown objective '{name}' (latency|throughput)")
+            }
+            ApiError::UnknownSubcommand { name, valid } => write!(
+                f,
+                "unknown subcommand '{name}' (valid: {})",
+                valid.join(", ")
+            ),
+            ApiError::UnknownFlag {
+                subcommand,
+                flag,
+                valid,
+            } => {
+                if valid.is_empty() {
+                    write!(f, "'{subcommand}' takes no flags, got --{flag}")
+                } else {
+                    write!(
+                        f,
+                        "unknown flag --{flag} for '{subcommand}' (valid: {})",
+                        valid
+                            .iter()
+                            .map(|v| format!("--{v}"))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                }
+            }
+            ApiError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            ApiError::Infeasible { needed, available } => write!(
+                f,
+                "plan needs {needed} tiles but the budget is {available}"
+            ),
+            ApiError::SchemaVersion { found, supported } => write!(
+                f,
+                "deployment schema_version {found} is not supported \
+                 (this build reads version {supported})"
+            ),
+            ApiError::MalformedDeployment(msg) => {
+                write!(f, "malformed deployment artifact: {msg}")
+            }
+            ApiError::Io { path, message } => write!(f, "{path}: {message}"),
+            ApiError::Json { path, message } => write!(f, "{path}: {message}"),
+            ApiError::Search(msg) => write!(f, "search failed: {msg}"),
+            ApiError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            ApiError::Validation(errs) => {
+                write!(f, "deployment failed validation: {}", errs.join("; "))
+            }
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Facade result type.
+pub type ApiResult<T> = Result<T, ApiError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_flag_and_lists_alternatives() {
+        let e = ApiError::UnknownFlag {
+            subcommand: "search".into(),
+            flag: "episode".into(),
+            valid: vec!["episodes", "net"],
+        };
+        let s = e.to_string();
+        assert!(s.contains("--episode "), "{s}");
+        assert!(s.contains("--episodes"), "{s}");
+        assert!(s.contains("'search'"), "{s}");
+    }
+
+    #[test]
+    fn infeasible_reports_both_sides() {
+        let s = ApiError::Infeasible {
+            needed: 100,
+            available: 64,
+        }
+        .to_string();
+        assert!(s.contains("100") && s.contains("64"), "{s}");
+    }
+}

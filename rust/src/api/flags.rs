@@ -1,0 +1,341 @@
+//! Per-subcommand CLI flag registry. Two bugs in the historical parser are
+//! fixed here:
+//!
+//! 1. A boolean switch followed by a positional argument swallowed the
+//!    positional (`lrmp search --live resnet18` parsed `live=resnet18`) —
+//!    the registry tells the parser which flags are switches.
+//! 2. Typo'd flags silently fell back to defaults — unknown flags are now
+//!    rejected with the subcommand's valid flag list.
+
+use crate::api::{ApiError, ApiResult};
+use crate::cli::Args;
+
+/// Whether a flag consumes a value or is a boolean switch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlagKind {
+    Value,
+    Switch,
+}
+
+/// One registered flag.
+#[derive(Clone, Copy, Debug)]
+pub struct FlagDef {
+    pub name: &'static str,
+    pub kind: FlagKind,
+    pub help: &'static str,
+}
+
+const fn val(name: &'static str, help: &'static str) -> FlagDef {
+    FlagDef {
+        name,
+        kind: FlagKind::Value,
+        help,
+    }
+}
+
+const fn switch(name: &'static str, help: &'static str) -> FlagDef {
+    FlagDef {
+        name,
+        kind: FlagKind::Switch,
+        help,
+    }
+}
+
+/// One subcommand and its flags.
+#[derive(Clone, Copy, Debug)]
+pub struct SubcommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub flags: &'static [FlagDef],
+    /// Maximum positional arguments accepted (e.g. `inspect FILE`).
+    pub max_positional: usize,
+}
+
+impl SubcommandSpec {
+    pub fn flag_names(&self) -> Vec<&'static str> {
+        self.flags.iter().map(|f| f.name).collect()
+    }
+
+    pub fn switch_names(&self) -> Vec<&'static str> {
+        self.flags
+            .iter()
+            .filter(|f| f.kind == FlagKind::Switch)
+            .map(|f| f.name)
+            .collect()
+    }
+}
+
+const SEARCH_FLAGS: &[FlagDef] = &[
+    val("net", "benchmark network (default resnet18)"),
+    val("objective", "latency|throughput (default latency)"),
+    val("episodes", "search episodes (default 120)"),
+    val("budget-start", "initial budget fraction (default 0.35)"),
+    val("budget-end", "final budget fraction (default 0.20)"),
+    val("lambda", "accuracy reward weight (default 2.0)"),
+    val("alpha", "performance reward weight (default 1.0)"),
+    val("tiles", "tile budget override (default: 8-bit baseline tiles)"),
+    val("updates", "DDPG updates per episode (default 8)"),
+    val("seed", "search PRNG seed"),
+    val("samples", "live-eval test samples (default 512)"),
+    val("noise", "score under analog noise: 'typical' or a sigma"),
+    val("out", "write the Deployment artifact to this file"),
+    switch("live", "use live PJRT accuracy (MLP benchmarks only)"),
+];
+
+const SWEEP_AREA_FLAGS: &[FlagDef] = &[
+    val("net", "benchmark network (default resnet18)"),
+    val("episodes", "episodes per ablation cell (default 24)"),
+    val("seed", "search PRNG seed"),
+];
+
+const SIMULATE_FLAGS: &[FlagDef] = &[
+    val("net", "benchmark network (default resnet18)"),
+    val("deployment", "simulate a saved Deployment artifact"),
+];
+
+const SERVE_FLAGS: &[FlagDef] = &[
+    val("deployment", "serve a saved Deployment artifact"),
+    val("net", "network for uniform-policy serving (default mlp-tiny)"),
+    val("requests", "total requests to issue (default 1024)"),
+    val("clients", "concurrent client threads (default 4)"),
+    val("wbits", "uniform weight bits when no --deployment (default 8)"),
+    val("abits", "uniform activation bits when no --deployment (default 8)"),
+    val("max-batch", "batcher flush size (default 256)"),
+    val("max-wait-ms", "batcher flush deadline in ms (default 4)"),
+    val("backend", "auto|live|sim (default auto)"),
+];
+
+const INSPECT_FLAGS: &[FlagDef] = &[val("deployment", "artifact to inspect (or positional FILE)")];
+
+/// Every subcommand of the `lrmp` binary.
+pub const SUBCOMMANDS: &[SubcommandSpec] = &[
+    SubcommandSpec {
+        name: "tables",
+        help: "print Table I (microarchitecture) and Table II (tile counts)",
+        flags: &[],
+        max_positional: 0,
+    },
+    SubcommandSpec {
+        name: "motivate",
+        help: "the §III / Fig 2 worked example",
+        flags: &[],
+        max_positional: 0,
+    },
+    SubcommandSpec {
+        name: "search",
+        help: "run the LRMP search and emit a Deployment artifact",
+        flags: SEARCH_FLAGS,
+        max_positional: 0,
+    },
+    SubcommandSpec {
+        name: "sweep-area",
+        help: "the Fig 8 area-sensitivity ablation",
+        flags: SWEEP_AREA_FLAGS,
+        max_positional: 0,
+    },
+    SubcommandSpec {
+        name: "simulate",
+        help: "event-driven validation of the cost model",
+        flags: SIMULATE_FLAGS,
+        max_positional: 0,
+    },
+    SubcommandSpec {
+        name: "demo",
+        help: "run the L1 crossbar kernels through PJRT",
+        flags: &[],
+        max_positional: 0,
+    },
+    SubcommandSpec {
+        name: "serve",
+        help: "closed-loop load test of the serving coordinator",
+        flags: SERVE_FLAGS,
+        max_positional: 0,
+    },
+    SubcommandSpec {
+        name: "inspect",
+        help: "print a saved Deployment artifact",
+        flags: INSPECT_FLAGS,
+        max_positional: 1,
+    },
+];
+
+/// Look a subcommand spec up by name.
+pub fn spec_for(name: &str) -> Option<&'static SubcommandSpec> {
+    SUBCOMMANDS.iter().find(|s| s.name == name)
+}
+
+/// Names of every subcommand (for usage/error messages).
+pub fn subcommand_names() -> Vec<&'static str> {
+    SUBCOMMANDS.iter().map(|s| s.name).collect()
+}
+
+/// Parse raw CLI arguments against the registry: resolve the subcommand,
+/// parse flags with its switch set, and reject unknown flags or excess
+/// positionals. `Ok(None)` means no subcommand was given (caller prints
+/// usage).
+pub fn parse(raw: &[String]) -> ApiResult<Option<(&'static SubcommandSpec, Args)>> {
+    let Some(first) = raw.first() else {
+        return Ok(None);
+    };
+    if first.starts_with("--") {
+        return Err(ApiError::UnknownSubcommand {
+            name: first.clone(),
+            valid: subcommand_names(),
+        });
+    }
+    let spec = spec_for(first).ok_or_else(|| ApiError::UnknownSubcommand {
+        name: first.clone(),
+        valid: subcommand_names(),
+    })?;
+    // A value flag with no value (end of line, or followed by another
+    // `--flag`) must error, not silently parse as the string "true".
+    for (i, token) in raw.iter().enumerate() {
+        let Some(stripped) = token.strip_prefix("--") else {
+            continue;
+        };
+        if stripped.contains('=') {
+            continue;
+        }
+        let is_value_flag = spec
+            .flags
+            .iter()
+            .any(|f| f.name == stripped && f.kind == FlagKind::Value);
+        if is_value_flag {
+            let has_value = raw.get(i + 1).map_or(false, |n| !n.starts_with("--"));
+            if !has_value {
+                return Err(ApiError::InvalidConfig(format!(
+                    "flag --{stripped} requires a value"
+                )));
+            }
+        }
+    }
+    let args = Args::parse_with_switches(raw.iter().cloned(), &spec.switch_names());
+    for (flag, value) in &args.flags {
+        let Some(def) = spec.flags.iter().find(|f| f.name == flag) else {
+            return Err(ApiError::UnknownFlag {
+                subcommand: spec.name.to_string(),
+                flag: flag.clone(),
+                valid: spec.flag_names(),
+            });
+        };
+        // A switch spelled `--flag=value` only accepts boolean spellings;
+        // anything else must error, not silently read as false.
+        if def.kind == FlagKind::Switch
+            && !matches!(value.as_str(), "true" | "false" | "1" | "0")
+        {
+            return Err(ApiError::InvalidConfig(format!(
+                "switch --{flag} accepts true|false, got '{value}'"
+            )));
+        }
+    }
+    if args.positional.len() > spec.max_positional {
+        return Err(ApiError::InvalidConfig(format!(
+            "'{}' accepts at most {} positional argument(s), got {:?}",
+            spec.name, spec.max_positional, args.positional
+        )));
+    }
+    Ok(Some((spec, args)))
+}
+
+/// Render the usage block from the registry (single source of truth).
+pub fn usage() -> String {
+    let mut out = String::from("usage: lrmp <subcommand> [--flag value] [--switch]\n\n");
+    for s in SUBCOMMANDS {
+        out.push_str(&format!("  {:10} {}\n", s.name, s.help));
+        for f in s.flags {
+            let form = match f.kind {
+                FlagKind::Value => format!("--{} VALUE", f.name),
+                FlagKind::Switch => format!("--{}", f.name),
+            };
+            out.push_str(&format!("    {:22} {}\n", form, f.help));
+        }
+    }
+    out.push_str("\nsee rust/src/api/README.md for the search -> simulate -> serve flow");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn no_args_is_usage() {
+        assert!(parse(&raw(&[])).unwrap().is_none());
+    }
+
+    #[test]
+    fn unknown_subcommand_lists_valid_ones() {
+        let e = parse(&raw(&["serch"])).unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("serch") && s.contains("search") && s.contains("serve"), "{s}");
+    }
+
+    #[test]
+    fn unknown_flag_rejected_with_alternatives() {
+        let e = parse(&raw(&["search", "--episode", "3"])).unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("--episode ") || s.contains("--episode for"), "{s}");
+        assert!(s.contains("--episodes"), "{s}");
+    }
+
+    #[test]
+    fn switch_does_not_swallow_following_value() {
+        // The historical bug: `--live mlp` parsed as live=mlp. With the
+        // registry, --live is a switch, so `mlp` would become a positional
+        // (and search takes none -> rejected loudly, not silently).
+        let e = parse(&raw(&["search", "--live", "mlp"])).unwrap_err();
+        assert!(e.to_string().contains("positional"), "{e}");
+        // The supported spelling works.
+        let (_, a) = parse(&raw(&["search", "--live", "--net", "mlp"]))
+            .unwrap()
+            .unwrap();
+        assert!(a.bool("live"));
+        assert_eq!(a.str("net", ""), "mlp");
+    }
+
+    #[test]
+    fn flagless_subcommands_reject_any_flag() {
+        let e = parse(&raw(&["tables", "--net", "mlp"])).unwrap_err();
+        assert!(e.to_string().contains("takes no flags"), "{e}");
+    }
+
+    #[test]
+    fn switch_with_non_boolean_value_is_rejected() {
+        let e = parse(&raw(&["search", "--live=yes"])).unwrap_err();
+        assert!(e.to_string().contains("--live accepts true|false"), "{e}");
+        assert!(parse(&raw(&["search", "--live=false"])).is_ok());
+    }
+
+    #[test]
+    fn value_flag_without_value_is_rejected() {
+        // Trailing value flag (forgotten filename).
+        let e = parse(&raw(&["search", "--net", "mlp", "--out"])).unwrap_err();
+        assert!(e.to_string().contains("--out requires a value"), "{e}");
+        // Value flag swallowing another flag.
+        let e = parse(&raw(&["search", "--net", "--live"])).unwrap_err();
+        assert!(e.to_string().contains("--net requires a value"), "{e}");
+        // Negative numbers are values, not flags.
+        assert!(parse(&raw(&["search", "--lambda", "-2.5"])).is_ok());
+        // `--flag=value` is always fine.
+        assert!(parse(&raw(&["search", "--out=dep.json"])).is_ok());
+    }
+
+    #[test]
+    fn inspect_accepts_one_positional() {
+        let (_, a) = parse(&raw(&["inspect", "dep.json"])).unwrap().unwrap();
+        assert_eq!(a.positional, vec!["dep.json"]);
+        assert!(parse(&raw(&["inspect", "a.json", "b.json"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_every_subcommand() {
+        let u = usage();
+        for s in subcommand_names() {
+            assert!(u.contains(s), "usage missing {s}");
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! `lrmp::api` — the public facade of the crate.
+//!
+//! The paper's pipeline (§IV, Fig 3) is *artifact-centric*: the RL/ILP
+//! search produces a replication + mixed-precision design that the chip
+//! then serves. This module makes that flow first-class:
+//!
+//! - [`Session`]: fluent builder configuring one search
+//!   (`Session::new("mlp")?.objective(..).episodes(..).search()?`)
+//! - [`Deployment`]: the versioned, JSON-round-trippable design artifact
+//!   (`save` / `load` / `validate`) passed between phases
+//! - [`Session::simulate`] / [`Session::serve`]: downstream phases that
+//!   consume the same artifact
+//! - [`ApiError`]: typed errors at the public boundary
+//! - [`flags`]: the CLI flag registry shared by the `lrmp` binary
+//!
+//! See `rust/src/api/README.md` for the schema and the end-to-end flow.
+
+pub mod deployment;
+pub mod error;
+pub mod flags;
+pub mod session;
+
+pub use deployment::{Deployment, PredictedMetrics, Provenance, SCHEMA_VERSION};
+pub use error::{ApiError, ApiResult};
+pub use session::{ServeBackend, Session, SimulationReport, SimulationRow};

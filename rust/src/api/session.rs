@@ -1,0 +1,437 @@
+//! The fluent entry point of the crate: configure a search with a builder,
+//! get back a [`Deployment`] artifact, and hand the same artifact to
+//! `simulate` (event-driven cross-validation) or `serve` (the batching
+//! coordinator).
+//!
+//! ```no_run
+//! use lrmp::api::Session;
+//! use lrmp::replication::Objective;
+//!
+//! let dep = Session::new("mlp")?
+//!     .objective(Objective::Latency)
+//!     .episodes(300)
+//!     .seed(42)
+//!     .search()?;
+//! dep.save(std::path::Path::new("dep.json"))?;
+//! # Ok::<(), lrmp::api::ApiError>(())
+//! ```
+
+use crate::api::{ApiError, ApiResult, Deployment};
+use crate::arch::ChipConfig;
+use crate::coordinator::{batcher::BatchPolicy, Server};
+use crate::cost::{CostModel, NetworkCost};
+use crate::lrmp::{AccuracyProvider, LiveAccuracy, Lrmp, SearchConfig, SearchResult};
+use crate::nets::{self, Network};
+use crate::quant::nonideal::{NoisySurrogate, NonidealParams};
+use crate::quant::{Policy, SqnrSurrogate, MIN_BITS};
+use crate::replication::Objective;
+use crate::runtime::simnet::SimBackend;
+use crate::runtime::{self, engine::Engine};
+use crate::sim;
+use std::path::PathBuf;
+
+/// Where the episode rewards' accuracy term comes from.
+#[derive(Clone, Debug)]
+enum AccuracySource {
+    /// SQNR surrogate calibrated per benchmark (default).
+    Surrogate,
+    /// Surrogate under analog non-idealities.
+    Noisy(NonidealParams),
+    /// Live quantized inference through the PJRT artifacts (MLP path).
+    Live,
+}
+
+/// Which execution backend `serve` should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// Live PJRT engine when artifacts are present and compatible,
+    /// otherwise the deterministic sim backend.
+    Auto,
+    /// PJRT engine only (error when artifacts are unavailable).
+    Live,
+    /// Pure-rust quantized-forward sim backend only.
+    Sim,
+}
+
+/// Builder for one search run plus the artifact-centric phase entry points.
+#[derive(Clone, Debug)]
+pub struct Session {
+    net: Network,
+    chip: ChipConfig,
+    cfg: SearchConfig,
+    accuracy: AccuracySource,
+    live_samples: usize,
+    live_finetune_steps: Option<usize>,
+    artifacts_dir: Option<PathBuf>,
+}
+
+impl Session {
+    /// Start a session on a named benchmark network.
+    pub fn new(net: &str) -> ApiResult<Session> {
+        let network = nets::by_name(net).ok_or_else(|| ApiError::UnknownNetwork {
+            name: net.to_string(),
+        })?;
+        Ok(Session::with_network(network))
+    }
+
+    /// Start a session on an explicit network description.
+    pub fn with_network(net: Network) -> Session {
+        Session {
+            net,
+            chip: ChipConfig::paper_scaled(),
+            cfg: SearchConfig::default(),
+            accuracy: AccuracySource::Surrogate,
+            live_samples: 512,
+            live_finetune_steps: None,
+            artifacts_dir: None,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Builder knobs
+    // ------------------------------------------------------------------
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.cfg.objective = objective;
+        self
+    }
+
+    pub fn episodes(mut self, episodes: usize) -> Self {
+        self.cfg.episodes = episodes;
+        self
+    }
+
+    /// Override the tile budget (default: the 8-bit baseline's tiles).
+    pub fn tiles(mut self, n_tiles: u64) -> Self {
+        self.cfg.n_tiles = Some(n_tiles);
+        self
+    }
+
+    /// Budget schedule as fractions of the baseline metric.
+    pub fn budget(mut self, start: f64, end: f64) -> Self {
+        self.cfg.budget_start = start;
+        self.cfg.budget_end = end;
+        self
+    }
+
+    /// Reward weights λ (accuracy) and α (performance) of Eqn 8.
+    pub fn weights(mut self, lambda: f64, alpha: f64) -> Self {
+        self.cfg.lambda = lambda;
+        self.cfg.alpha = alpha;
+        self
+    }
+
+    pub fn updates_per_episode(mut self, updates: usize) -> Self {
+        self.cfg.updates_per_episode = updates;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Search on a different chip configuration.
+    pub fn chip(mut self, chip: ChipConfig) -> Self {
+        self.chip = chip;
+        self
+    }
+
+    /// Route the accuracy reward through live PJRT evaluation (`true`) or
+    /// the SQNR surrogate (`false`, the default).
+    pub fn live(mut self, live: bool) -> Self {
+        self.accuracy = if live {
+            AccuracySource::Live
+        } else {
+            AccuracySource::Surrogate
+        };
+        self
+    }
+
+    /// Test samples per live evaluation (0 = full test set).
+    pub fn samples(mut self, samples: usize) -> Self {
+        self.live_samples = samples;
+        self
+    }
+
+    /// Finetuning steps for the live path's final accuracy (default 60).
+    pub fn finetune_steps(mut self, steps: usize) -> Self {
+        self.live_finetune_steps = Some(steps);
+        self
+    }
+
+    /// Score policies under analog non-idealities.
+    pub fn noise(mut self, params: NonidealParams) -> Self {
+        self.accuracy = AccuracySource::Noisy(params);
+        self
+    }
+
+    /// Override the PJRT artifacts directory (default: `$LRMP_ARTIFACTS`
+    /// or `<crate>/artifacts`).
+    pub fn artifacts_dir(mut self, dir: PathBuf) -> Self {
+        self.artifacts_dir = Some(dir);
+        self
+    }
+
+    // ------------------------------------------------------------------
+    // Phase 1: search
+    // ------------------------------------------------------------------
+
+    /// Run the search and return the Deployment artifact.
+    pub fn search(self) -> ApiResult<Deployment> {
+        self.search_detailed().map(|(dep, _)| dep)
+    }
+
+    /// Run the search and also return the full result (trajectory etc.).
+    pub fn search_detailed(self) -> ApiResult<(Deployment, SearchResult)> {
+        self.check_config()?;
+        let artifacts = self
+            .artifacts_dir
+            .clone()
+            .unwrap_or_else(runtime::default_artifacts_dir);
+        let mut provider: Box<dyn AccuracyProvider> = match &self.accuracy {
+            AccuracySource::Surrogate => Box::new(SqnrSurrogate::for_benchmark(&self.net)),
+            AccuracySource::Noisy(params) => Box::new(NoisySurrogate::new(
+                &self.net,
+                SqnrSurrogate::for_benchmark(&self.net),
+                *params,
+            )),
+            AccuracySource::Live => {
+                if !self.net.name.starts_with("MLP") {
+                    return Err(ApiError::InvalidConfig(format!(
+                        "live accuracy is available for the MLP benchmarks only, not {}",
+                        self.net.name
+                    )));
+                }
+                let ev = crate::accuracy::Evaluator::new(&artifacts)
+                    .map_err(|e| ApiError::Runtime(format!("{e:#}")))?;
+                let mut live = LiveAccuracy::new(ev, self.live_samples);
+                if let Some(steps) = self.live_finetune_steps {
+                    live.finetune_steps = steps;
+                }
+                Box::new(live)
+            }
+        };
+        let model = CostModel::new(self.chip.clone());
+        let search = Lrmp::new(&model, &self.net, self.cfg.clone());
+        let outcome = search
+            .search(provider.as_mut())
+            .map_err(|e| ApiError::Search(format!("{e:#}")))?;
+        Ok((outcome.deployment, outcome.result))
+    }
+
+    fn check_config(&self) -> ApiResult<()> {
+        let errs = self.chip.validate();
+        if !errs.is_empty() {
+            return Err(ApiError::Validation(errs));
+        }
+        if self.net.num_layers() == 0 {
+            return Err(ApiError::InvalidConfig("network has no layers".into()));
+        }
+        if self.cfg.episodes == 0 {
+            return Err(ApiError::InvalidConfig("episodes must be >= 1".into()));
+        }
+        if !(self.cfg.budget_start > 0.0 && self.cfg.budget_end > 0.0) {
+            return Err(ApiError::InvalidConfig(
+                "budget fractions must be positive".into(),
+            ));
+        }
+        // The budget must admit one instance of every layer even at the
+        // most aggressive quantization, or no episode can be feasible.
+        if let Some(n_tiles) = self.cfg.n_tiles {
+            let model = CostModel::new(self.chip.clone());
+            let nl = self.net.num_layers();
+            let min_policy = Policy::uniform(nl, MIN_BITS, MIN_BITS);
+            let needed: u64 = model
+                .layers(&self.net, &min_policy)
+                .iter()
+                .map(|c| c.tiles)
+                .sum();
+            if n_tiles < needed {
+                return Err(ApiError::Infeasible {
+                    needed,
+                    available: n_tiles,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Phase 2: simulate
+    // ------------------------------------------------------------------
+
+    /// Validate a Deployment and cross-check its analytical latency against
+    /// the event-driven simulator.
+    pub fn simulate(dep: &Deployment) -> ApiResult<SimulationReport> {
+        let cost = dep.validate()?;
+        let net = nets::by_name(&dep.net).ok_or_else(|| ApiError::UnknownNetwork {
+            name: dep.net.clone(),
+        })?;
+        let model = CostModel::new(dep.chip.clone());
+        let sims = sim::simulate_network(&model, &net, &dep.policy, &dep.replication);
+        // Compare like-for-like: the event simulator deals a single
+        // inference's W² input vectors across the r replicas, so a layer
+        // can only exploit min(r, W²) of its replication factor within one
+        // inference (an FC layer streams one vector — its extra replicas
+        // buy pipelined throughput across requests, not latency). Using
+        // Eqn 7's T_l/r here would make every replicated FC layer read as
+        // an r× model error.
+        let rows = net
+            .layers
+            .iter()
+            .zip(&cost.layers)
+            .zip(&dep.replication)
+            .zip(&sims)
+            .map(|(((l, lc), &r), s)| {
+                let eff_r = r.min(l.num_vectors()).max(1);
+                SimulationRow {
+                    layer: l.name.clone(),
+                    analytic_cycles: lc.total_cycles() as f64 / eff_r as f64,
+                    simulated_cycles: s.makespan,
+                }
+            })
+            .collect::<Vec<_>>();
+        let simulated_total_cycles = sims.iter().map(|s| s.makespan).sum();
+        // Sum the same eff_r-corrected per-row quantities, so the totals
+        // line compares like-for-like too (Eqn 5's Σ T_l/r_l remains
+        // available as `cost.total_cycles`).
+        let analytic_total_cycles = rows.iter().map(|r| r.analytic_cycles).sum();
+        Ok(SimulationReport {
+            rows,
+            analytic_total_cycles,
+            simulated_total_cycles,
+            cost,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Phase 3: serve
+    // ------------------------------------------------------------------
+
+    /// Serve a Deployment: validate it, pick an execution backend, and
+    /// start the batching coordinator with the artifact's policy.
+    pub fn serve(dep: &Deployment, batch_policy: BatchPolicy) -> ApiResult<Server> {
+        Session::serve_with(dep, batch_policy, ServeBackend::Auto)
+    }
+
+    /// [`Session::serve`] with an explicit backend choice.
+    pub fn serve_with(
+        dep: &Deployment,
+        batch_policy: BatchPolicy,
+        backend: ServeBackend,
+    ) -> ApiResult<Server> {
+        dep.validate()?;
+        let net = nets::by_name(&dep.net).ok_or_else(|| ApiError::UnknownNetwork {
+            name: dep.net.clone(),
+        })?;
+
+        let artifacts = runtime::default_artifacts_dir();
+        let live_possible = artifacts.join("manifest.json").exists();
+        match backend {
+            ServeBackend::Live => Session::serve_live(dep, batch_policy, artifacts),
+            ServeBackend::Sim => Session::serve_sim(dep, &net, batch_policy),
+            ServeBackend::Auto => {
+                if live_possible {
+                    match Session::serve_live(dep, batch_policy, artifacts) {
+                        Ok(server) => Ok(server),
+                        // Artifacts present but unusable (e.g. offline xla
+                        // stub): fall back to the sim backend, but keep the
+                        // live failure's root cause if that fails too.
+                        Err(live_err) => Session::serve_sim(dep, &net, batch_policy)
+                            .map_err(|sim_err| {
+                                ApiError::Runtime(format!(
+                                    "live backend failed ({live_err}); \
+                                     sim fallback also failed ({sim_err})"
+                                ))
+                            }),
+                    }
+                } else {
+                    Session::serve_sim(dep, &net, batch_policy)
+                }
+            }
+        }
+    }
+
+    fn serve_live(
+        dep: &Deployment,
+        batch_policy: BatchPolicy,
+        artifacts: PathBuf,
+    ) -> ApiResult<Server> {
+        let engine =
+            Engine::start(artifacts).map_err(|e| ApiError::Runtime(format!("{e:#}")))?;
+        if engine.num_layers != dep.policy.len() {
+            return Err(ApiError::InvalidConfig(format!(
+                "deployment policy has {} layers but the compiled engine has {} \
+                 (search the engine's network, e.g. --net mlp-tiny)",
+                dep.policy.len(),
+                engine.num_layers
+            )));
+        }
+        Ok(Server::start(engine, &dep.policy, batch_policy))
+    }
+
+    fn serve_sim(
+        dep: &Deployment,
+        net: &Network,
+        batch_policy: BatchPolicy,
+    ) -> ApiResult<Server> {
+        let backend = SimBackend::from_network(net, 16, dep.provenance.seed)
+            .map_err(ApiError::Runtime)?;
+        Ok(Server::start(backend, &dep.policy, batch_policy))
+    }
+}
+
+/// One layer of a [`SimulationReport`].
+#[derive(Clone, Debug)]
+pub struct SimulationRow {
+    pub layer: String,
+    /// Analytical latency T_l divided by the replication the simulator can
+    /// exploit within one inference, min(r_l, W²), cycles.
+    pub analytic_cycles: f64,
+    /// Event-driven pipelined makespan, cycles.
+    pub simulated_cycles: u64,
+}
+
+/// Analytical-vs-simulated cross-check of a Deployment.
+#[derive(Clone, Debug)]
+pub struct SimulationReport {
+    pub rows: Vec<SimulationRow>,
+    /// Σ of the rows' eff_r-corrected analytic cycles (directly comparable
+    /// to `simulated_total_cycles`; Eqn 5's Σ T_l/r_l is `cost.total_cycles`).
+    pub analytic_total_cycles: f64,
+    pub simulated_total_cycles: u64,
+    /// The re-validated cost breakdown.
+    pub cost: NetworkCost,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_network_is_typed() {
+        assert!(matches!(
+            Session::new("alexnet"),
+            Err(ApiError::UnknownNetwork { .. })
+        ));
+    }
+
+    #[test]
+    fn zero_episodes_rejected() {
+        let s = Session::new("mlp").unwrap().episodes(0);
+        assert!(matches!(s.search(), Err(ApiError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn impossible_tile_budget_rejected_up_front() {
+        let s = Session::new("mlp").unwrap().episodes(3).tiles(5);
+        assert!(matches!(s.search(), Err(ApiError::Infeasible { .. })));
+    }
+
+    #[test]
+    fn live_on_conv_net_rejected() {
+        let s = Session::new("resnet18").unwrap().episodes(1).live(true);
+        assert!(matches!(s.search(), Err(ApiError::InvalidConfig(_))));
+    }
+}

@@ -4,6 +4,7 @@
 //! Flash ADCs, digital vector modules, and shared transport buses.
 
 use crate::util::ceil_div;
+use crate::util::json::Json;
 
 /// Full chip configuration. Field names follow Table I of the paper.
 #[derive(Clone, Debug, PartialEq)]
@@ -120,6 +121,57 @@ impl ChipConfig {
         self.row_parallelism * ((1u64 << self.device_bits) - 1) * ((1u64 << self.dac_bits) - 1)
     }
 
+    /// Serialize every Table I field (the `chip` block of a Deployment).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tile_size", Json::Num(self.tile_size as f64)),
+            ("n_tiles", Json::Num(self.n_tiles as f64)),
+            ("n_vector_modules", Json::Num(self.n_vector_modules as f64)),
+            ("lanes_per_vm", Json::Num(self.lanes_per_vm as f64)),
+            ("device_bits", Json::Num(self.device_bits as f64)),
+            ("row_parallelism", Json::Num(self.row_parallelism as f64)),
+            ("dac_bits", Json::Num(self.dac_bits as f64)),
+            ("adcs_per_tile", Json::Num(self.adcs_per_tile as f64)),
+            ("adc_bits", Json::Num(self.adc_bits as f64)),
+            ("tile_power_w", Json::Num(self.tile_power_w)),
+            ("clock_hz", Json::Num(self.clock_hz)),
+            ("sram_per_vm_bytes", Json::Num(self.sram_per_vm_bytes as f64)),
+            ("in_bus_lanes", Json::Num(self.in_bus_lanes as f64)),
+            ("in_bus_bits", Json::Num(self.in_bus_bits as f64)),
+            ("out_bus_lanes", Json::Num(self.out_bus_lanes as f64)),
+            ("out_bus_bits", Json::Num(self.out_bus_bits as f64)),
+            ("tile_phase_cycles", Json::Num(self.tile_phase_cycles as f64)),
+            ("sram_access_j", Json::Num(self.sram_access_j)),
+            ("sram_leak_w_per_vm", Json::Num(self.sram_leak_w_per_vm)),
+        ])
+    }
+
+    /// Deserialize a `to_json` chip block. `None` if any field is missing
+    /// or has the wrong type.
+    pub fn from_json(j: &Json) -> Option<ChipConfig> {
+        Some(ChipConfig {
+            tile_size: j.get("tile_size").as_u64()?,
+            n_tiles: j.get("n_tiles").as_u64()?,
+            n_vector_modules: j.get("n_vector_modules").as_u64()?,
+            lanes_per_vm: j.get("lanes_per_vm").as_u64()?,
+            device_bits: j.get("device_bits").as_u32()?,
+            row_parallelism: j.get("row_parallelism").as_u64()?,
+            dac_bits: j.get("dac_bits").as_u32()?,
+            adcs_per_tile: j.get("adcs_per_tile").as_u64()?,
+            adc_bits: j.get("adc_bits").as_u32()?,
+            tile_power_w: j.get("tile_power_w").as_f64()?,
+            clock_hz: j.get("clock_hz").as_f64()?,
+            sram_per_vm_bytes: j.get("sram_per_vm_bytes").as_u64()?,
+            in_bus_lanes: j.get("in_bus_lanes").as_u64()?,
+            in_bus_bits: j.get("in_bus_bits").as_u64()?,
+            out_bus_lanes: j.get("out_bus_lanes").as_u64()?,
+            out_bus_bits: j.get("out_bus_bits").as_u64()?,
+            tile_phase_cycles: j.get("tile_phase_cycles").as_u64()?,
+            sram_access_j: j.get("sram_access_j").as_f64()?,
+            sram_leak_w_per_vm: j.get("sram_leak_w_per_vm").as_f64()?,
+        })
+    }
+
     /// Validate internal consistency; returns a list of violations.
     pub fn validate(&self) -> Vec<String> {
         let mut errs = Vec::new();
@@ -194,6 +246,20 @@ mod tests {
         assert_eq!(c.row_phases(100_000), 29); // clamped to tile rows
         // ISSCC'22 base: 144 tiles per vector module.
         assert_eq!(ChipConfig::isscc22_base().tiles_per_cluster(), 144);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_all_fields() {
+        let c = ChipConfig::paper_scaled();
+        let j = c.to_json();
+        assert_eq!(ChipConfig::from_json(&j), Some(c));
+        // A missing field must be rejected, not defaulted.
+        let mut o = match j {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.remove("adc_bits");
+        assert_eq!(ChipConfig::from_json(&Json::Obj(o)), None);
     }
 
     #[test]

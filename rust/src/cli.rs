@@ -1,5 +1,12 @@
 //! Minimal subcommand + `--flag value` argument parser (clap is unavailable
 //! offline). Supports `--key value`, `--key=value`, and boolean `--switch`.
+//!
+//! Whether a bare `--flag` is a switch or expects a value is ambiguous from
+//! syntax alone, so [`Args::parse_with_switches`] takes an explicit switch
+//! set (the per-subcommand registry in `api::flags` provides it). A switch
+//! never consumes the following token, which fixes the historical
+//! `--live resnet18` → `live=resnet18` mis-parse. [`Args::parse`] keeps the
+//! registry-free behavior for tools without a flag spec.
 
 use std::collections::BTreeMap;
 
@@ -11,17 +18,28 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of raw arguments (without argv[0]).
+    /// Parse from an iterator of raw arguments (without argv[0]), with no
+    /// known switch set: a bare `--flag` greedily takes the next token as
+    /// its value unless that token is itself a `--flag`.
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        Args::parse_with_switches(raw, &[])
+    }
+
+    /// Parse with an explicit set of boolean switches: a flag named in
+    /// `switches` never consumes the next token (it is recorded as
+    /// `"true"` unless spelled `--flag=value`).
+    pub fn parse_with_switches<I: IntoIterator<Item = String>>(
+        raw: I,
+        switches: &[&str],
+    ) -> Args {
         let mut out = Args::default();
         let mut iter = raw.into_iter().peekable();
         while let Some(arg) = iter.next() {
             if let Some(stripped) = arg.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map_or(false, |n| !n.starts_with("--"))
+                } else if !switches.contains(&stripped)
+                    && iter.peek().map_or(false, |n| !n.starts_with("--"))
                 {
                     let v = iter.next().unwrap();
                     out.flags.insert(stripped.to_string(), v);
@@ -72,6 +90,18 @@ impl Args {
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
     }
+
+    /// Checked variant of the typed getters: absent → `default`, present
+    /// but unparseable → `Err` naming the flag (a typo'd value must not
+    /// silently fall back to the default).
+    pub fn parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("invalid value '{v}' for --{key}")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +141,58 @@ mod tests {
         let a = parse(&["x", "--live", "--net", "mlp"]);
         assert!(a.bool("live"));
         assert_eq!(a.str("net", ""), "mlp");
+    }
+
+    fn parse_sw(args: &[&str], switches: &[&str]) -> Args {
+        Args::parse_with_switches(args.iter().map(|s| s.to_string()), switches)
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // --k v and --k=v are equivalent.
+        let a = parse_sw(&["search", "--episodes", "40", "--net=mlp"], &[]);
+        assert_eq!(a.usize("episodes", 0), 40);
+        assert_eq!(a.str("net", ""), "mlp");
+    }
+
+    #[test]
+    fn registered_switch_never_swallows_positional() {
+        // The historical bug: `--live resnet18` parsed as live=resnet18.
+        let a = parse_sw(&["search", "--live", "resnet18"], &["live"]);
+        assert!(a.bool("live"));
+        assert_eq!(a.positional, vec!["resnet18"]);
+        // Without the registry the old greedy behavior is preserved.
+        let b = parse_sw(&["search", "--live", "resnet18"], &[]);
+        assert_eq!(b.str("live", ""), "resnet18");
+    }
+
+    #[test]
+    fn switch_with_explicit_value_still_works() {
+        let a = parse_sw(&["search", "--live=false"], &["live"]);
+        assert!(!a.bool("live"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse_sw(&["x", "--lambda", "-2.5", "--seed", "-3"], &[]);
+        assert_eq!(a.f64("lambda", 0.0), -2.5);
+        assert_eq!(a.str("seed", ""), "-3");
+    }
+
+    #[test]
+    fn switch_at_end_of_line() {
+        let a = parse_sw(&["search", "--net", "mlp", "--live"], &["live"]);
+        assert!(a.bool("live"));
+        assert_eq!(a.str("net", ""), "mlp");
+    }
+
+    #[test]
+    fn parsed_rejects_malformed_values_but_defaults_when_absent() {
+        let a = parse(&["search", "--episodes", "2O", "--lambda", "1.5"]);
+        // Typo'd value ('2O' with a letter O) must error, not default.
+        let err = a.parsed::<usize>("episodes", 120).unwrap_err();
+        assert!(err.contains("--episodes") && err.contains("2O"), "{err}");
+        assert_eq!(a.parsed::<f64>("lambda", 2.0), Ok(1.5));
+        assert_eq!(a.parsed::<u64>("seed", 7), Ok(7)); // absent -> default
     }
 }

@@ -22,6 +22,48 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+/// An execution backend the coordinator can serve batches on. The PJRT
+/// [`Engine`] is the live implementation; `runtime::simnet::SimBackend` is
+/// the deterministic pure-rust stand-in used when artifacts (or the XLA
+/// runtime itself) are unavailable.
+pub trait InferenceBackend: Send + 'static {
+    /// Human-readable backend identifier (reported in logs/metrics).
+    fn backend_name(&self) -> &'static str;
+    /// Number of quantizable layers (bit-vector length of the ABI).
+    fn num_layers(&self) -> usize;
+    /// Features per input sample.
+    fn input_dim(&self) -> usize;
+    /// Logits per output row.
+    fn num_classes(&self) -> usize;
+    /// Fixed batch size the backend executes.
+    fn eval_batch(&self) -> usize;
+    /// Quantized inference on one fixed-size batch: `x` is
+    /// `[eval_batch · input_dim]`, bit vectors are per-layer; returns
+    /// logits `[eval_batch · num_classes]`.
+    fn eval(&mut self, x: Vec<f32>, w_bits: Vec<f32>, a_bits: Vec<f32>) -> Result<Vec<f32>>;
+}
+
+impl InferenceBackend for Engine {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+    fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+    fn eval(&mut self, x: Vec<f32>, w_bits: Vec<f32>, a_bits: Vec<f32>) -> Result<Vec<f32>> {
+        Engine::eval(self, x, w_bits, a_bits)
+    }
+}
+
 /// One inference request: a single input sample.
 struct Request {
     x: Vec<f32>,
@@ -35,16 +77,38 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     worker: Option<JoinHandle<()>>,
     pub metrics: Arc<Mutex<ServeMetrics>>,
+    /// The per-layer policy this server executes (exactly what the
+    /// Deployment artifact specified).
+    pub policy: Policy,
+    /// `InferenceBackend::backend_name` of the executing backend.
+    pub backend_name: &'static str,
     input_dim: usize,
 }
 
 impl Server {
-    /// Start serving over `engine` with quantization `policy`.
-    pub fn start(engine: Engine, policy: &Policy, batch_policy: BatchPolicy) -> Server {
+    /// Start serving over `backend` with quantization `policy`.
+    ///
+    /// # Panics
+    ///
+    /// Panics when `policy.len() != backend.num_layers()` — a programming
+    /// error at this internal layer. The `api::Session::serve*` facade
+    /// validates the artifact against the backend first and returns a
+    /// typed `ApiError` instead; go through it for untrusted inputs.
+    pub fn start<B: InferenceBackend>(
+        backend: B,
+        policy: &Policy,
+        batch_policy: BatchPolicy,
+    ) -> Server {
+        assert_eq!(
+            policy.len(),
+            backend.num_layers(),
+            "policy layers must match the backend's layers"
+        );
         let (tx, rx) = mpsc::channel::<Request>();
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
-        let input_dim = engine.input_dim;
+        let input_dim = backend.input_dim();
+        let backend_name = backend.backend_name();
         let (wb, ab): (Vec<f32>, Vec<f32>) = (
             policy.layers.iter().map(|l| l.w_bits as f32).collect(),
             policy.layers.iter().map(|l| l.a_bits as f32).collect(),
@@ -53,13 +117,15 @@ impl Server {
         let metrics2 = Arc::clone(&metrics);
         let worker = std::thread::Builder::new()
             .name("lrmp-server".into())
-            .spawn(move || serve_loop(engine, rx, stop2, metrics2, wb, ab, batch_policy))
+            .spawn(move || serve_loop(backend, rx, stop2, metrics2, wb, ab, batch_policy))
             .expect("spawn server");
         Server {
             tx,
             stop,
             worker: Some(worker),
             metrics,
+            policy: policy.clone(),
+            backend_name,
             input_dim,
         }
     }
@@ -107,6 +173,11 @@ impl Server {
     pub fn snapshot_metrics(&self) -> ServeMetrics {
         self.metrics.lock().unwrap().clone()
     }
+
+    /// Features per request sample.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
 }
 
 impl Drop for Server {
@@ -121,8 +192,8 @@ impl Drop for Server {
     }
 }
 
-fn serve_loop(
-    engine: Engine,
+fn serve_loop<B: InferenceBackend>(
+    mut engine: B,
     rx: mpsc::Receiver<Request>,
     stop: Arc<AtomicBool>,
     metrics: Arc<Mutex<ServeMetrics>>,
@@ -130,9 +201,9 @@ fn serve_loop(
     ab: Vec<f32>,
     batch_policy: BatchPolicy,
 ) {
-    let b = engine.eval_batch;
-    let dim = engine.input_dim;
-    let classes = engine.num_classes;
+    let b = engine.eval_batch();
+    let dim = engine.input_dim();
+    let classes = engine.num_classes();
     let mut batcher = Batcher::new(batch_policy, b);
     loop {
         if stop.load(Ordering::SeqCst) {

@@ -251,6 +251,16 @@ impl SearchResult {
     }
 }
 
+/// A finished search together with its serializable [`Deployment`]
+/// artifact — what the public facade hands to `simulate`/`serve`.
+///
+/// [`Deployment`]: crate::api::Deployment
+#[derive(Debug)]
+pub struct SearchOutcome {
+    pub result: SearchResult,
+    pub deployment: crate::api::Deployment,
+}
+
 /// The LRMP search loop.
 pub struct Lrmp<'a> {
     pub model: &'a CostModel,
@@ -269,9 +279,36 @@ impl<'a> Lrmp<'a> {
             .tiles_at_uniform(self.model.chip.tile_size, 8, self.model.chip.device_bits)
     }
 
+    /// The tile budget this search enforces: the explicit override, or the
+    /// paper's 8-bit-baseline default (single definition — `run` and the
+    /// artifact both use it).
+    pub fn effective_tiles(&self) -> u64 {
+        self.cfg.n_tiles.unwrap_or_else(|| self.baseline_tiles())
+    }
+
+    /// Run the search and package the best design as a [`SearchOutcome`]
+    /// whose `deployment` artifact can be saved, validated, simulated, and
+    /// served (the facade entry point; `run` returns the bare result).
+    ///
+    /// [`SearchOutcome`]: SearchOutcome
+    pub fn search(&self, provider: &mut dyn AccuracyProvider) -> Result<SearchOutcome> {
+        let provider_name = provider.name().to_string();
+        let result = self.run(provider)?;
+        let n_tiles = self.effective_tiles();
+        let deployment = crate::api::Deployment::from_search(
+            self.net,
+            &self.model.chip,
+            &self.cfg,
+            n_tiles,
+            &provider_name,
+            &result,
+        );
+        Ok(SearchOutcome { result, deployment })
+    }
+
     pub fn run(&self, provider: &mut dyn AccuracyProvider) -> Result<SearchResult> {
         let cfg = &self.cfg;
-        let n_tiles = cfg.n_tiles.unwrap_or_else(|| self.baseline_tiles());
+        let n_tiles = self.effective_tiles();
         let baseline = self.model.baseline(self.net);
         let base_metric = match cfg.objective {
             Objective::Latency => baseline.total_cycles,
@@ -390,8 +427,12 @@ impl<'a> Lrmp<'a> {
             agent.decay_noise();
         }
 
-        let (best_reward, best_policy, best_plan, best_accuracy) =
-            best.expect("at least one episode must be feasible");
+        let (best_reward, best_policy, best_plan, best_accuracy) = best.ok_or_else(|| {
+            anyhow::anyhow!(
+                "search found no feasible episode: the performance budget cannot \
+                 be met within {n_tiles} tiles"
+            )
+        })?;
         let finetuned_accuracy = provider.finetuned(&best_policy)?;
         let optimized = self
             .model

@@ -1,75 +1,94 @@
-//! `lrmp` — command-line front end of the LRMP reproduction.
+//! `lrmp` — command-line front end of the LRMP reproduction, built on the
+//! `lrmp::api` facade. The three phases compose on one serializable
+//! Deployment artifact (search → simulate/inspect → serve):
 //!
-//! Subcommands:
 //!   tables                         print Table I (microarchitecture) and
 //!                                  Table II (baseline tile counts)
 //!   motivate                       the §III / Fig 2 worked example
 //!   search    --net N --objective latency|throughput [--episodes E]
-//!             [--live] [--tiles T] [--out FILE]      run the LRMP search
+//!             [--live] [--tiles T] [--noise S] [--out dep.json]
+//!                                  run the LRMP search; --out writes the
+//!                                  versioned Deployment artifact
 //!   sweep-area --net N             the Fig 8 area-sensitivity ablation
-//!   simulate  --net N              event-driven validation of the cost model
+//!   simulate  [--net N | --deployment dep.json]
+//!                                  event-driven validation of the cost
+//!                                  model (optionally on a saved artifact)
 //!   demo                           run the L1 crossbar kernels through PJRT
-//!   serve     [--requests R] [--clients C] [--wbits W] [--abits A]
+//!   serve     [--deployment dep.json | --net N --wbits W --abits A]
+//!             [--requests R] [--clients C] [--backend auto|live|sim]
 //!                                  closed-loop load test of the serving
-//!                                  coordinator (dynamic batcher + engine)
+//!                                  coordinator, executing the artifact's
+//!                                  per-layer policy
+//!   inspect   dep.json             validate + print a saved artifact
 //!
-//! `--live` routes the accuracy term through the PJRT artifacts (MLP path);
-//! otherwise the SQNR surrogate is used (DESIGN.md §4).
+//! The flag registry lives in `lrmp::api::flags`: unknown flags are
+//! rejected with the valid list, and boolean switches (e.g. `--live`) never
+//! swallow the next argument. Round trip example:
+//!
+//!   lrmp search --net mlp --episodes 3 --out dep.json
+//!   lrmp inspect dep.json
+//!   lrmp serve --deployment dep.json --requests 64
 
-use anyhow::{bail, Context, Result};
-use lrmp::accuracy::Evaluator;
+use anyhow::Result;
+use lrmp::api::{flags, ApiError, Deployment, ServeBackend, Session, SCHEMA_VERSION};
 use lrmp::arch::ChipConfig;
 use lrmp::bench_harness::Table;
 use lrmp::cli::Args;
+use lrmp::coordinator::batcher::BatchPolicy;
 use lrmp::cost::CostModel;
-use lrmp::lrmp::{ablation, AccuracyProvider, LiveAccuracy, Lrmp, SearchConfig};
-use lrmp::quant::{Policy, SqnrSurrogate};
+use lrmp::lrmp::ablation;
+use lrmp::quant::Policy;
 use lrmp::replication::Objective;
 use lrmp::util::prng::Rng;
-use lrmp::{nets, runtime, sim};
+use lrmp::{nets, runtime};
+use std::path::Path;
 
 fn main() {
-    let args = Args::from_env();
-    let code = match run(&args) {
-        Ok(()) => 0,
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let code = match flags::parse(&raw) {
+        Ok(None) => {
+            eprintln!("{}", flags::usage());
+            0
+        }
+        Ok(Some((spec, args))) => match run(spec.name, &args) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
         Err(e) => {
-            eprintln!("error: {e:#}");
-            1
+            eprintln!("error: {e}");
+            eprintln!("run `lrmp` without arguments for usage");
+            2
         }
     };
     std::process::exit(code);
 }
 
-fn run(args: &Args) -> Result<()> {
-    match args.subcommand.as_deref() {
-        Some("tables") => cmd_tables(),
-        Some("motivate") => cmd_motivate(),
-        Some("search") => cmd_search(args),
-        Some("sweep-area") => cmd_sweep_area(args),
-        Some("simulate") => cmd_simulate(args),
-        Some("demo") => cmd_demo(),
-        Some("serve") => cmd_serve(args),
-        _ => {
-            eprintln!(
-                "usage: lrmp <tables|motivate|search|sweep-area|simulate|demo|serve> [flags]\n\
-                 see `rust/src/main.rs` header for the flag list"
-            );
-            Ok(())
-        }
+fn run(subcommand: &str, args: &Args) -> Result<()> {
+    match subcommand {
+        "tables" => cmd_tables(),
+        "motivate" => cmd_motivate(),
+        "search" => cmd_search(args),
+        "sweep-area" => cmd_sweep_area(args),
+        "simulate" => cmd_simulate(args),
+        "demo" => cmd_demo(),
+        "serve" => cmd_serve(args),
+        "inspect" => cmd_inspect(args),
+        other => unreachable!("registry admitted unknown subcommand {other}"),
     }
 }
 
-fn net_arg(args: &Args) -> Result<lrmp::nets::Network> {
-    let name = args.str("net", "resnet18");
-    nets::by_name(&name).with_context(|| format!("unknown network '{name}'"))
+fn objective_arg(args: &Args) -> Result<Objective, ApiError> {
+    let name = args.str("objective", "latency");
+    name.parse()
+        .map_err(|_| ApiError::UnknownObjective { name })
 }
 
-fn objective_arg(args: &Args) -> Result<Objective> {
-    match args.str("objective", "latency").as_str() {
-        "latency" => Ok(Objective::Latency),
-        "throughput" => Ok(Objective::Throughput),
-        o => bail!("unknown objective '{o}' (latency|throughput)"),
-    }
+/// `Args::parsed` with the error lifted into the typed API error.
+fn parsed<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T, ApiError> {
+    args.parsed(key, default).map_err(ApiError::InvalidConfig)
 }
 
 fn cmd_tables() -> Result<()> {
@@ -151,52 +170,48 @@ fn cmd_motivate() -> Result<()> {
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
-    let net = net_arg(args)?;
-    let model = CostModel::paper();
-    let cfg = SearchConfig {
-        objective: objective_arg(args)?,
-        episodes: args.usize("episodes", 120),
-        budget_start: args.f64("budget-start", 0.35),
-        budget_end: args.f64("budget-end", 0.20),
-        lambda: args.f64("lambda", 2.0),
-        alpha: args.f64("alpha", 1.0),
-        n_tiles: args.flags.get("tiles").and_then(|v| v.parse().ok()),
-        updates_per_episode: args.usize("updates", 8),
-        seed: args.u64("seed", 0xA11CE),
-    };
-    let search = Lrmp::new(&model, &net, cfg);
-
-    let mut provider: Box<dyn AccuracyProvider> = if args.bool("live") {
-        if !net.name.starts_with("MLP") {
-            bail!("--live accuracy is available for the MLP benchmarks only");
-        }
-        let ev = Evaluator::new(&runtime::default_artifacts_dir())?;
-        Box::new(LiveAccuracy::new(ev, args.usize("samples", 512)))
-    } else if args.flags.contains_key("noise") {
-        // Noise-aware search: score policies under analog non-idealities
-        // (`--noise typical` or `--noise <sigma_device>`).
-        use lrmp::quant::nonideal::{NoisySurrogate, NonidealParams};
-        let params = match args.str("noise", "typical").as_str() {
+    if args.bool("live") && args.flags.contains_key("noise") {
+        return Err(ApiError::InvalidConfig(
+            "--live and --noise are mutually exclusive accuracy sources".into(),
+        )
+        .into());
+    }
+    let mut session = Session::new(&args.str("net", "resnet18"))?
+        .objective(objective_arg(args)?)
+        .episodes(parsed(args, "episodes", 120)?)
+        .budget(
+            parsed(args, "budget-start", 0.35)?,
+            parsed(args, "budget-end", 0.20)?,
+        )
+        .weights(parsed(args, "lambda", 2.0)?, parsed(args, "alpha", 1.0)?)
+        .updates_per_episode(parsed(args, "updates", 8)?)
+        .seed(parsed(args, "seed", 0xA11CE)?)
+        .samples(parsed(args, "samples", 512)?)
+        .live(args.bool("live"));
+    if args.flags.contains_key("tiles") {
+        session = session.tiles(parsed(args, "tiles", 0u64)?);
+    }
+    if let Some(spec) = args.flags.get("noise") {
+        use lrmp::quant::nonideal::NonidealParams;
+        let params = match spec.as_str() {
             "typical" => NonidealParams::typical_rram(),
             s => NonidealParams {
-                sigma_device: s.parse().context("--noise expects 'typical' or a sigma")?,
+                sigma_device: s.parse().map_err(|_| {
+                    ApiError::InvalidConfig(format!(
+                        "--noise expects 'typical' or a sigma, got '{s}'"
+                    ))
+                })?,
                 ..NonidealParams::ideal()
             },
         };
-        Box::new(NoisySurrogate::new(
-            &net,
-            SqnrSurrogate::for_benchmark(&net),
-            params,
-        ))
-    } else {
-        Box::new(SqnrSurrogate::for_benchmark(&net))
-    };
+        session = session.noise(params);
+    }
 
-    let res = search.run(provider.as_mut())?;
+    let (dep, res) = session.search_detailed()?;
     println!(
         "{} [{}] latency x{:.2}  throughput x{:.2}  energy x{:.2}  acc {:.4} -> {:.4} (finetuned)",
-        net.name,
-        provider.name(),
+        dep.net,
+        dep.provenance.accuracy_provider,
         res.latency_improvement(),
         res.throughput_improvement(),
         res.energy_improvement(),
@@ -204,14 +219,19 @@ fn cmd_search(args: &Args) -> Result<()> {
         res.finetuned_accuracy,
     );
     if let Some(out) = args.flags.get("out") {
-        std::fs::write(out, res.to_json().pretty())?;
-        println!("wrote {out}");
+        dep.save(Path::new(out))?;
+        println!(
+            "wrote deployment artifact {out} (schema v{SCHEMA_VERSION}, {}/{} tiles) — \
+             next: `lrmp inspect {out}` or `lrmp serve --deployment {out}`",
+            dep.tiles_used, dep.n_tiles
+        );
     }
     Ok(())
 }
 
 fn cmd_sweep_area(args: &Args) -> Result<()> {
-    let net = net_arg(args)?;
+    let name = args.str("net", "resnet18");
+    let net = nets::by_name(&name).ok_or(ApiError::UnknownNetwork { name })?;
     let model = CostModel::paper();
     let base_tiles = net.tiles_at_uniform(model.chip.tile_size, 8, model.chip.device_bits);
     let mut t = Table::new(&["tiles/baseline", "mode", "latency x", "tiles used"]);
@@ -221,8 +241,8 @@ fn cmd_sweep_area(args: &Args) -> Result<()> {
             &model,
             &net,
             n_tiles,
-            args.u64("seed", 7),
-            args.usize("episodes", 24),
+            parsed(args, "seed", 7)?,
+            parsed(args, "episodes", 24)?,
         ) {
             match result {
                 Some((lat_x, used)) => t.row(&[
@@ -244,59 +264,123 @@ fn cmd_sweep_area(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The artifact a subcommand should operate on: `--deployment FILE` when
+/// given, otherwise a fixed-policy artifact for `--net`. Flags that would
+/// override the artifact's fixed design (`conflicts`) are rejected rather
+/// than silently ignored.
+fn deployment_arg(
+    args: &Args,
+    default_net: &str,
+    wb: u32,
+    ab: u32,
+    conflicts: &[&str],
+) -> Result<Deployment> {
+    if let Some(f) = args.flags.get("deployment") {
+        if let Some(c) = conflicts.iter().find(|c| args.flags.contains_key(**c)) {
+            return Err(ApiError::InvalidConfig(format!(
+                "--deployment and --{c} are mutually exclusive \
+                 (the artifact already fixes the design)"
+            ))
+            .into());
+        }
+        let dep = Deployment::load(Path::new(f))?;
+        return Ok(dep);
+    }
+    let name = args.str("net", default_net);
+    let net = nets::by_name(&name).ok_or(ApiError::UnknownNetwork { name })?;
+    let nl = net.num_layers();
+    let dep = Deployment::from_policy(
+        &net.name,
+        &ChipConfig::paper_scaled(),
+        Objective::Latency,
+        Policy::uniform(nl, wb, ab),
+        vec![1; nl],
+        None,
+    )?;
+    Ok(dep)
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let net = net_arg(args)?;
-    let model = CostModel::paper();
-    let policy = Policy::baseline(net.num_layers());
-    let repl = vec![1u64; net.num_layers()];
-    let cost = model.network(&net, &policy, &repl);
-    let sims = sim::simulate_network(&model, &net, &policy, &repl);
-    let mut t = Table::new(&["layer", "analytic (cyc)", "simulated (cyc)", "ratio"]);
-    for ((l, c), s) in net.layers.iter().zip(&cost.layers).zip(&sims) {
+    let dep = deployment_arg(args, "resnet18", 8, 8, &["net"])?;
+    let report = Session::simulate(&dep)?;
+    println!(
+        "{} [{}] — event-driven cross-check of the analytical model",
+        dep.net, dep.objective
+    );
+    let mut t = Table::new(&["layer", "w/a", "r", "analytic (cyc)", "simulated (cyc)", "ratio"]);
+    for ((row, p), &r) in report
+        .rows
+        .iter()
+        .zip(&dep.policy.layers)
+        .zip(&dep.replication)
+    {
         t.row(&[
-            l.name.clone(),
-            c.total_cycles().to_string(),
-            s.makespan.to_string(),
-            format!("{:.3}", s.makespan as f64 / c.total_cycles() as f64),
+            row.layer.clone(),
+            format!("{}/{}", p.w_bits, p.a_bits),
+            r.to_string(),
+            format!("{:.0}", row.analytic_cycles),
+            row.simulated_cycles.to_string(),
+            format!(
+                "{:.3}",
+                row.simulated_cycles as f64 / row.analytic_cycles.max(1.0)
+            ),
         ]);
     }
     t.print();
-    let sim_total: u64 = sims.iter().map(|s| s.makespan).sum();
     println!(
         "total: analytic {:.2} Mcyc, simulated {:.2} Mcyc (pipelined stages overlap)",
-        cost.total_cycles / 1e6,
-        sim_total as f64 / 1e6
+        report.analytic_total_cycles / 1e6,
+        report.simulated_total_cycles as f64 / 1e6
     );
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use lrmp::coordinator::{batcher::BatchPolicy, Server};
-    use std::sync::Arc;
-    let engine = lrmp::runtime::engine::Engine::start(runtime::default_artifacts_dir())?;
-    let nl = engine.num_layers;
-    let dim = engine.input_dim;
-    let wb = args.u64("wbits", 8).clamp(2, 8) as u32;
-    let ab = args.u64("abits", 8).clamp(2, 8) as u32;
-    let requests = args.usize("requests", 1024);
-    let clients = args.usize("clients", 4);
-    let policy = Policy::uniform(nl, wb, ab);
-    let server = Arc::new(Server::start(
-        engine,
-        &policy,
+    let backend = match args.str("backend", "auto").as_str() {
+        "auto" => ServeBackend::Auto,
+        "live" => ServeBackend::Live,
+        "sim" => ServeBackend::Sim,
+        other => {
+            return Err(
+                ApiError::InvalidConfig(format!("--backend must be auto|live|sim, got '{other}'"))
+                    .into(),
+            )
+        }
+    };
+    let wb = parsed::<u64>(args, "wbits", 8)?.clamp(2, 8) as u32;
+    let ab = parsed::<u64>(args, "abits", 8)?.clamp(2, 8) as u32;
+    let dep = deployment_arg(args, "mlp-tiny", wb, ab, &["net", "wbits", "abits"])?;
+
+    let requests = parsed(args, "requests", 1024usize)?;
+    let clients = parsed(args, "clients", 4usize)?.max(1);
+    let server = Session::serve_with(
+        &dep,
         BatchPolicy {
-            max_batch: args.usize("max-batch", 256),
-            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 4)),
+            max_batch: parsed(args, "max-batch", 256usize)?,
+            max_wait: std::time::Duration::from_millis(parsed(args, "max-wait-ms", 4)?),
         },
-    ));
+        backend,
+    )?;
+    let bits: Vec<String> = server
+        .policy
+        .layers
+        .iter()
+        .map(|l| format!("{}/{}", l.w_bits, l.a_bits))
+        .collect();
     println!(
-        "serving quantized MLP (w{wb}/a{ab}) — {clients} clients x {} requests",
+        "serving {} [{} backend] — per-layer w/a bits {:?} — {clients} clients x {} requests",
+        dep.net,
+        server.backend_name,
+        bits,
         requests / clients
     );
+
+    let dim = server.input_dim();
+    let server = std::sync::Arc::new(server);
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let server = Arc::clone(&server);
+        let server = std::sync::Arc::clone(&server);
         let per = requests / clients;
         handles.push(std::thread::spawn(move || {
             let mut rng = Rng::new(c as u64 + 1);
@@ -326,6 +410,87 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if args.positional.first().is_some() && args.flags.contains_key("deployment") {
+        return Err(ApiError::InvalidConfig(
+            "give the file either positionally or via --deployment, not both".into(),
+        )
+        .into());
+    }
+    let file = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.flags.get("deployment").cloned())
+        .ok_or_else(|| {
+            ApiError::InvalidConfig("inspect needs a file: `lrmp inspect dep.json`".into())
+        })?;
+    let dep = Deployment::load(Path::new(&file))?;
+    let cost = dep.validate()?;
+    let net = nets::by_name(&dep.net).expect("validate checked the net");
+    let p = &dep.predicted;
+
+    println!("deployment {file} (schema v{})", dep.schema_version);
+    println!(
+        "  net         {} ({} layers), objective {}",
+        dep.net,
+        net.num_layers(),
+        dep.objective
+    );
+    println!(
+        "  provenance  {} episodes, seed {}, provider {}, crate v{}",
+        dep.provenance.episodes,
+        dep.provenance.seed,
+        dep.provenance.accuracy_provider,
+        dep.provenance.crate_version
+    );
+    println!(
+        "  tiles       {} used / {} budget (chip has {})",
+        dep.tiles_used, dep.n_tiles, dep.chip.n_tiles
+    );
+    println!(
+        "  latency     {:.3} ms ({:.2} Mcyc), x{:.2} vs 8-bit baseline",
+        p.latency_s * 1e3,
+        p.total_cycles / 1e6,
+        p.latency_improvement()
+    );
+    println!(
+        "  throughput  {:.1} inf/s, x{:.2} vs baseline",
+        p.throughput_inf_s,
+        p.throughput_improvement()
+    );
+    println!(
+        "  energy      {:.3} mJ/inf, x{:.2} vs baseline",
+        p.energy_j * 1e3,
+        p.energy_improvement()
+    );
+    println!(
+        "  accuracy    {:.4} baseline -> {:.4} searched -> {:.4} finetuned",
+        p.baseline_accuracy, p.searched_accuracy, p.finetuned_accuracy
+    );
+    println!("  validation  cost model re-run OK ({} tiles)", cost.tiles_used);
+
+    let mut t = Table::new(&["layer", "w", "a", "r", "tiles", "eff cycles"]);
+    for (((l, pr), &r), lc) in net
+        .layers
+        .iter()
+        .zip(&dep.policy.layers)
+        .zip(&dep.replication)
+        .zip(&cost.layers)
+    {
+        t.row(&[
+            l.name.clone(),
+            pr.w_bits.to_string(),
+            pr.a_bits.to_string(),
+            r.to_string(),
+            (lc.tiles * r).to_string(),
+            format!("{:.0}", lc.total_cycles() as f64 / r as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
 fn cmd_demo() -> Result<()> {
     let engine = lrmp::runtime::engine::Engine::start(runtime::default_artifacts_dir())?;
     let (b, r, n) = engine.demo_shape;
@@ -341,7 +506,7 @@ fn cmd_demo() -> Result<()> {
             &exact[..4.min(exact.len())]
         );
         if !agree {
-            bail!("kernel mismatch at w={wb} a={ab}");
+            anyhow::bail!("kernel mismatch at w={wb} a={ab}");
         }
     }
     Ok(())

@@ -12,7 +12,7 @@
 //! the same packing family ISAAC-style compilers use.
 
 use crate::arch::ChipConfig;
-use thiserror::Error;
+use std::fmt;
 
 /// One placed instance: which clusters host how many of its tiles.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -40,11 +40,22 @@ pub struct ChipPlacement {
     pub cluster_capacity: u64,
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum PlacementError {
-    #[error("demand {demand} tiles exceeds chip capacity {capacity}")]
     OverCapacity { demand: u64, capacity: u64 },
 }
+
+impl fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlacementError::OverCapacity { demand, capacity } => {
+                write!(f, "demand {demand} tiles exceeds chip capacity {capacity}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 /// Place `(layer, replication, tiles_per_instance)` demands onto the chip.
 pub fn place(

@@ -221,19 +221,31 @@ pub fn paper_benchmarks() -> Vec<Network> {
     ]
 }
 
+/// The benchmark registry: (canonical CLI name, extra aliases,
+/// constructor). Single source of truth for both `by_name` resolution and
+/// the name lists printed in error/usage messages.
+const REGISTRY: &[(&str, &[&str], fn() -> Network)] = &[
+    ("mlp", &["mlp_mnist"], mlp_mnist),
+    ("mlp-tiny", &["mlp_tiny"], mlp_tiny),
+    ("resnet18", &["rn18"], resnet::resnet18),
+    ("resnet34", &["rn34"], resnet::resnet34),
+    ("resnet50", &["rn50"], resnet::resnet50),
+    ("resnet101", &["rn101"], resnet::resnet101),
+    ("vgg16", &[], vgg16),
+];
+
+/// Canonical CLI spellings of every benchmark `by_name` resolves.
+pub fn known_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|&(canon, _, _)| canon).collect()
+}
+
 /// Look a benchmark up by (case-insensitive) name.
 pub fn by_name(name: &str) -> Option<Network> {
     let n = name.to_ascii_lowercase();
-    match n.as_str() {
-        "mlp" | "mlp_mnist" => Some(mlp_mnist()),
-        "mlp_tiny" | "mlp-tiny" => Some(mlp_tiny()),
-        "resnet18" | "rn18" => Some(resnet::resnet18()),
-        "resnet34" | "rn34" => Some(resnet::resnet34()),
-        "resnet50" | "rn50" => Some(resnet::resnet50()),
-        "resnet101" | "rn101" => Some(resnet::resnet101()),
-        "vgg16" => Some(vgg16()),
-        _ => None,
-    }
+    REGISTRY
+        .iter()
+        .find(|(canon, aliases, _)| *canon == n || aliases.contains(&n.as_str()))
+        .map(|&(_, _, ctor)| ctor())
 }
 
 #[cfg(test)]
@@ -305,5 +317,16 @@ mod tests {
         assert_eq!(by_name("mlp").unwrap().name, "MLP");
         assert_eq!(by_name("vgg16").unwrap().name, "VGG16");
         assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn known_names_all_resolve_and_roundtrip() {
+        for name in known_names() {
+            let net = by_name(name)
+                .unwrap_or_else(|| panic!("registry entry '{name}' must resolve"));
+            // The canonical display name must resolve back to the same net.
+            assert_eq!(by_name(&net.name).unwrap().name, net.name);
+        }
+        assert_eq!(known_names().len(), 7);
     }
 }

@@ -14,7 +14,7 @@
 use crate::cost::LayerCost;
 use crate::lp::mckp::{self, Choice};
 use crate::lp::{Lp, Rel};
-use thiserror::Error;
+use std::fmt;
 
 /// Optimization objective (paper: latencyOptim / throughputOptim).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,13 +23,55 @@ pub enum Objective {
     Throughput,
 }
 
-#[derive(Debug, Error)]
+impl Objective {
+    /// The canonical CLI / artifact spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Throughput => "throughput",
+        }
+    }
+}
+
+impl fmt::Display for Objective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Objective {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "latency" => Ok(Objective::Latency),
+            "throughput" => Ok(Objective::Throughput),
+            other => Err(format!(
+                "unknown objective '{other}' (latency|throughput)"
+            )),
+        }
+    }
+}
+
+#[derive(Debug)]
 pub enum ReplicationError {
-    #[error("infeasible: one instance of every layer needs {needed} tiles but only {available} are available")]
     Infeasible { needed: u64, available: u64 },
-    #[error("network has no layers")]
     Empty,
 }
+
+impl fmt::Display for ReplicationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplicationError::Infeasible { needed, available } => write!(
+                f,
+                "infeasible: one instance of every layer needs {needed} tiles \
+                 but only {available} are available"
+            ),
+            ReplicationError::Empty => write!(f, "network has no layers"),
+        }
+    }
+}
+
+impl std::error::Error for ReplicationError {}
 
 /// Result of a replication optimization.
 #[derive(Clone, Debug)]

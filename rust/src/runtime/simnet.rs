@@ -1,0 +1,259 @@
+//! Deterministic pure-rust execution backend for the serving coordinator.
+//!
+//! The live path executes quantized inference through compiled PJRT
+//! artifacts; when those (or the XLA runtime itself) are unavailable, the
+//! serving stack would previously be untestable offline. [`SimBackend`]
+//! closes that gap: it builds a synthetic-weight MLP from a network
+//! *geometry* (`nets::Network`, linear layers only) and executes the same
+//! quantized-forward ABI — per-layer `w_bits`/`a_bits` vectors, fixed-size
+//! batches — with fake-quantization identical in structure to the Pallas
+//! kernels (symmetric per-tensor weight quantization, post-ReLU activation
+//! quantization).
+//!
+//! Weights are synthetic (seeded He-scaled Gaussians), so logits carry no
+//! trained meaning; what the backend faithfully reproduces is everything
+//! the coordinator cares about: shapes, batching, per-layer bit-width
+//! plumbing, determinism, and failure modes.
+
+use crate::nets::{LayerKind, Network};
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+/// Pure-rust quantized-MLP backend (see module docs).
+pub struct SimBackend {
+    name: String,
+    /// Per-layer (in_features, out_features).
+    dims: Vec<(usize, usize)>,
+    /// Row-major [in][out] synthetic weights per layer.
+    weights: Vec<Vec<f32>>,
+    eval_batch: usize,
+    /// Cached quantized weights for the last-seen `w_bits` vector.
+    cache: Option<(Vec<f32>, Vec<Vec<f32>>)>,
+}
+
+impl SimBackend {
+    /// Build from a network geometry. Only fully-connected networks are
+    /// supported (conv benchmarks are served by the live engine only).
+    pub fn from_network(net: &Network, eval_batch: usize, seed: u64) -> Result<SimBackend, String> {
+        if net.layers.is_empty() {
+            return Err("network has no layers".into());
+        }
+        if eval_batch == 0 {
+            return Err("eval_batch must be >= 1".into());
+        }
+        let mut dims = Vec::with_capacity(net.layers.len());
+        for l in &net.layers {
+            match l.kind {
+                LayerKind::Linear { in_f, out_f } => {
+                    dims.push((in_f as usize, out_f as usize));
+                }
+                LayerKind::Conv2d { .. } => {
+                    return Err(format!(
+                        "sim backend serves fully-connected networks only; \
+                         {} has conv layer '{}'",
+                        net.name, l.name
+                    ));
+                }
+            }
+        }
+        for w in dims.windows(2) {
+            if w[0].1 != w[1].0 {
+                return Err(format!(
+                    "layer dims do not chain: {} outputs vs {} inputs",
+                    w[0].1, w[1].0
+                ));
+            }
+        }
+        let mut rng = Rng::new(seed ^ 0x51A1_BACC);
+        let weights = dims
+            .iter()
+            .map(|&(inf, outf)| {
+                let scale = (2.0 / inf as f64).sqrt();
+                (0..inf * outf)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect()
+            })
+            .collect();
+        Ok(SimBackend {
+            name: net.name.clone(),
+            dims,
+            weights,
+            eval_batch,
+            cache: None,
+        })
+    }
+
+    /// The network name this backend was built from.
+    pub fn network_name(&self) -> &str {
+        &self.name
+    }
+
+    fn quantized_weights(&mut self, w_bits: &[f32]) -> &[Vec<f32>] {
+        let stale = match &self.cache {
+            Some((bits, _)) => bits.as_slice() != w_bits,
+            None => true,
+        };
+        if stale {
+            let q = self
+                .weights
+                .iter()
+                .zip(w_bits)
+                .map(|(w, &b)| quantize_symmetric(w, b as u32))
+                .collect();
+            self.cache = Some((w_bits.to_vec(), q));
+        }
+        &self.cache.as_ref().unwrap().1
+    }
+}
+
+/// Symmetric per-tensor fake-quantization to `bits` (signed levels).
+fn quantize_symmetric(w: &[f32], bits: u32) -> Vec<f32> {
+    let max = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if max == 0.0 || bits >= 24 {
+        return w.to_vec();
+    }
+    let levels = ((1u32 << (bits.max(1) - 1)) - 1).max(1) as f32;
+    let scale = max / levels;
+    w.iter().map(|&v| (v / scale).round() * scale).collect()
+}
+
+/// Fake-quantization of activations to `bits`. Hidden layers are post-ReLU
+/// (non-negative → unsigned grid with 2^b − 1 levels); the first layer sees
+/// raw client data, so signed inputs fall back to a symmetric signed grid.
+fn quantize_activations(h: &mut [f32], bits: u32) {
+    let max_abs = h.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 || bits >= 24 {
+        return;
+    }
+    let signed = h.iter().any(|&v| v < 0.0);
+    let levels = if signed {
+        ((1u64 << (bits.max(1) - 1)) - 1).max(1) as f32
+    } else {
+        ((1u64 << bits) - 1).max(1) as f32
+    };
+    let scale = max_abs / levels;
+    for v in h.iter_mut() {
+        *v = (*v / scale).round() * scale;
+    }
+}
+
+impl crate::coordinator::InferenceBackend for SimBackend {
+    fn backend_name(&self) -> &'static str {
+        "sim"
+    }
+    fn num_layers(&self) -> usize {
+        self.dims.len()
+    }
+    fn input_dim(&self) -> usize {
+        self.dims[0].0
+    }
+    fn num_classes(&self) -> usize {
+        self.dims[self.dims.len() - 1].1
+    }
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn eval(&mut self, x: Vec<f32>, w_bits: Vec<f32>, a_bits: Vec<f32>) -> Result<Vec<f32>> {
+        let b = self.eval_batch;
+        let (dim, classes) = (self.dims[0].0, self.dims[self.dims.len() - 1].1);
+        if x.len() != b * dim {
+            bail!("sim eval expects exactly {}x{} inputs, got {}", b, dim, x.len());
+        }
+        if w_bits.len() != self.dims.len() || a_bits.len() != self.dims.len() {
+            bail!(
+                "bit vectors must have {} entries, got w={} a={}",
+                self.dims.len(),
+                w_bits.len(),
+                a_bits.len()
+            );
+        }
+        let n_layers = self.dims.len();
+        let dims = self.dims.clone();
+        let weights = self.quantized_weights(&w_bits);
+
+        let mut h = x;
+        for (l, (&(inf, outf), w)) in dims.iter().zip(weights).enumerate() {
+            // Quantize this layer's input activations to a_bits[l].
+            quantize_activations(&mut h, a_bits[l] as u32);
+            let mut out = vec![0f32; b * outf];
+            for row in 0..b {
+                let xin = &h[row * inf..(row + 1) * inf];
+                let yout = &mut out[row * outf..(row + 1) * outf];
+                for (i, &xi) in xin.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w[i * outf..(i + 1) * outf];
+                    for (yj, &wj) in yout.iter_mut().zip(wrow) {
+                        *yj += xi * wj;
+                    }
+                }
+            }
+            if l + 1 < n_layers {
+                for v in out.iter_mut() {
+                    *v = v.max(0.0); // ReLU on hidden layers
+                }
+            }
+            h = out;
+        }
+        debug_assert_eq!(h.len(), b * classes);
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InferenceBackend;
+    use crate::nets;
+
+    fn backend() -> SimBackend {
+        SimBackend::from_network(&nets::mlp_tiny(), 4, 7).unwrap()
+    }
+
+    #[test]
+    fn geometry_follows_the_network() {
+        let b = backend();
+        assert_eq!(b.num_layers(), 4);
+        assert_eq!(b.input_dim(), 256);
+        assert_eq!(b.num_classes(), 10);
+        assert_eq!(b.eval_batch(), 4);
+    }
+
+    #[test]
+    fn conv_networks_are_rejected() {
+        let err = SimBackend::from_network(&nets::resnet::resnet18(), 4, 7).unwrap_err();
+        assert!(err.contains("conv"), "{err}");
+    }
+
+    #[test]
+    fn eval_is_deterministic_and_shaped() {
+        let mut a = backend();
+        let mut b = backend();
+        let x: Vec<f32> = (0..4 * 256).map(|i| (i % 17) as f32 / 17.0).collect();
+        let bits = vec![8.0f32; 4];
+        let ya = a.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+        let yb = b.eval(x, bits.clone(), bits).unwrap();
+        assert_eq!(ya.len(), 4 * 10);
+        assert_eq!(ya, yb);
+        assert!(ya.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn bit_widths_change_the_outputs() {
+        let mut b = backend();
+        let x: Vec<f32> = (0..4 * 256).map(|i| ((i * 31) % 101) as f32 / 101.0).collect();
+        let y8 = b
+            .eval(x.clone(), vec![8.0; 4], vec![8.0; 4])
+            .unwrap();
+        let y2 = b.eval(x, vec![2.0; 4], vec![2.0; 4]).unwrap();
+        assert_ne!(y8, y2, "quantization must affect the forward pass");
+    }
+
+    #[test]
+    fn wrong_batch_size_is_rejected() {
+        let mut b = backend();
+        assert!(b.eval(vec![0.0; 10], vec![8.0; 4], vec![8.0; 4]).is_err());
+    }
+}

@@ -15,12 +15,19 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------- accessors ----------
@@ -41,6 +48,9 @@ impl Json {
     }
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
+    }
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_u64().and_then(|v| u32::try_from(v).ok())
     }
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -100,6 +110,16 @@ impl Json {
             return Err(p.err("trailing characters"));
         }
         Ok(v)
+    }
+
+    // ---------- file convenience ----------
+    /// Write to a file (pretty-printed, trailing newline).
+    pub fn to_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use anyhow::Context;
+        let mut text = self.pretty();
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing {path:?}"))?;
+        Ok(())
     }
 
     // ---------- writing ----------

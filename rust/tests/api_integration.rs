@@ -1,0 +1,178 @@
+//! Facade integration tests that run fully offline (no PJRT artifacts):
+//! the search → Deployment → save/load/validate → simulate → serve pipeline
+//! over the SQNR surrogate and the deterministic sim serving backend.
+
+use lrmp::api::{ApiError, Deployment, ServeBackend, Session};
+use lrmp::coordinator::batcher::BatchPolicy;
+use lrmp::replication::Objective;
+use std::time::Duration;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("lrmp-api-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A short real search on the paper's MNIST MLP (surrogate accuracy).
+fn searched_mlp() -> Deployment {
+    Session::new("mlp")
+        .expect("mlp is a known benchmark")
+        .objective(Objective::Latency)
+        .episodes(3)
+        .updates_per_episode(1)
+        .seed(0xC0FFEE)
+        .search()
+        .expect("3-episode search must succeed")
+}
+
+#[test]
+fn session_smoke_search_on_mlp() {
+    let dep = searched_mlp();
+    assert_eq!(dep.net, "MLP");
+    assert_eq!(dep.schema_version, lrmp::api::SCHEMA_VERSION);
+    assert_eq!(dep.policy.len(), 5);
+    assert_eq!(dep.replication.len(), 5);
+    assert!(dep.tiles_used <= dep.n_tiles);
+    assert!(dep.replication.iter().all(|&r| r >= 1));
+    assert_eq!(dep.provenance.episodes, 3);
+    assert_eq!(dep.provenance.seed, 0xC0FFEE);
+    assert_eq!(dep.provenance.accuracy_provider, "sqnr-surrogate");
+    // The searched design must beat the 8-bit baseline on its objective.
+    assert!(
+        dep.predicted.latency_improvement() > 1.0,
+        "latency improvement {}",
+        dep.predicted.latency_improvement()
+    );
+}
+
+#[test]
+fn deployment_roundtrips_through_json_file() {
+    let dep = searched_mlp();
+    let path = tmp("roundtrip.json");
+    dep.save(&path).expect("save");
+    let loaded = Deployment::load(&path).expect("load");
+    assert_eq!(dep, loaded, "save -> load must be deep-equal");
+    // And the loaded artifact still passes cost-model re-validation.
+    let cost = loaded.validate().expect("validate");
+    assert_eq!(cost.tiles_used, loaded.tiles_used);
+}
+
+#[test]
+fn validate_rejects_over_budget_artifact() {
+    let mut dep = searched_mlp();
+    // Tamper: shrink the budget below the plan's demand.
+    dep.n_tiles = dep.tiles_used - 1;
+    match dep.validate() {
+        Err(ApiError::Infeasible { needed, available }) => {
+            assert_eq!(needed, dep.tiles_used);
+            assert_eq!(available, dep.n_tiles);
+        }
+        other => panic!("expected Infeasible, got {other:?}"),
+    }
+}
+
+#[test]
+fn validate_rejects_tampered_replication() {
+    let mut dep = searched_mlp();
+    // Inflate a replication factor: either the tile budget bursts or the
+    // recorded tiles/latency no longer match the cost model.
+    dep.replication[0] += 500;
+    assert!(dep.validate().is_err());
+}
+
+#[test]
+fn simulate_cross_checks_the_artifact() {
+    let dep = searched_mlp();
+    let report = Session::simulate(&dep).expect("simulate");
+    assert_eq!(report.rows.len(), 5);
+    assert!(report.simulated_total_cycles > 0);
+    // analytic_cycles is T_l / min(r, W²) — the replication the event
+    // simulator can exploit within one inference — so simulated/analytic
+    // must sit near 1 for every layer (stage rounding adds a few cycles).
+    for row in &report.rows {
+        let ratio = row.simulated_cycles as f64 / row.analytic_cycles.max(1.0);
+        assert!(
+            (0.5..=1.02).contains(&ratio)
+                || (row.simulated_cycles as f64) <= row.analytic_cycles + 8.0,
+            "{}: simulated {} vs analytic {} (ratio {ratio})",
+            row.layer,
+            row.simulated_cycles,
+            row.analytic_cycles
+        );
+    }
+}
+
+#[test]
+fn serve_executes_the_searched_policy_on_the_sim_backend() {
+    // mlp-tiny keeps the quantized forward pass cheap in debug builds.
+    let dep = Session::new("mlp-tiny")
+        .unwrap()
+        .episodes(2)
+        .updates_per_episode(1)
+        .seed(7)
+        .search()
+        .expect("search");
+    let server = Session::serve_with(
+        &dep,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        ServeBackend::Sim,
+    )
+    .expect("serve");
+
+    // The served policy is exactly the searched policy (the acceptance
+    // criterion of the artifact-centric pipeline).
+    assert_eq!(server.policy, dep.policy);
+    assert_eq!(server.backend_name, "sim");
+
+    let dim = server.input_dim();
+    assert_eq!(dim, 256);
+    for i in 0..32 {
+        let x: Vec<f32> = (0..dim).map(|j| ((i + j) % 13) as f32 / 13.0).collect();
+        let logits = server.infer(x).expect("infer");
+        assert_eq!(logits.len(), 10);
+    }
+    let m = server.snapshot_metrics();
+    assert_eq!(m.requests, 32);
+    assert!(m.batches >= 1);
+    assert_eq!(m.failures, 0);
+}
+
+#[test]
+fn serve_rejects_wrong_input_dim() {
+    let dep = Deployment::from_policy(
+        "mlp-tiny",
+        &lrmp::arch::ChipConfig::paper_scaled(),
+        Objective::Latency,
+        lrmp::quant::Policy::baseline(4),
+        vec![1; 4],
+        None,
+    )
+    .unwrap();
+    let server =
+        Session::serve_with(&dep, BatchPolicy::default(), ServeBackend::Sim).unwrap();
+    assert!(server.infer(vec![0.0; 3]).is_err());
+}
+
+#[test]
+fn fixed_policy_deployment_serves_uniform_bits() {
+    let dep = Deployment::from_policy(
+        "mlp-tiny",
+        &lrmp::arch::ChipConfig::paper_scaled(),
+        Objective::Throughput,
+        lrmp::quant::Policy::uniform(4, 5, 6),
+        vec![1; 4],
+        None,
+    )
+    .unwrap();
+    assert_eq!(dep.provenance.accuracy_provider, "fixed-policy");
+    let server =
+        Session::serve_with(&dep, BatchPolicy::default(), ServeBackend::Sim).unwrap();
+    assert!(server
+        .policy
+        .layers
+        .iter()
+        .all(|l| l.w_bits == 5 && l.a_bits == 6));
+}

@@ -1,12 +1,10 @@
 //! End-to-end integration: the full LRMP search with the *live* accuracy
 //! path — DDPG episodes whose rewards come from quantized inference executed
 //! through PJRT artifacts (rust → XLA → Pallas-authored HLO), with LP
-//! replication on the cost model. Requires `make artifacts`.
+//! replication on the cost model — driven through the `lrmp::api` facade.
+//! Requires `make artifacts` (skipped with a clear message otherwise).
 
-use lrmp::accuracy::Evaluator;
-use lrmp::cost::CostModel;
-use lrmp::lrmp::{LiveAccuracy, Lrmp, SearchConfig};
-use lrmp::nets;
+use lrmp::api::Session;
 use lrmp::replication::Objective;
 use lrmp::runtime;
 
@@ -24,23 +22,19 @@ fn artifacts() -> Option<std::path::PathBuf> {
 fn live_search_improves_latency_at_near_iso_accuracy() {
     let Some(dir) = artifacts() else { return };
     // The live path uses the scaled MLP geometry that matches the artifacts.
-    let net = nets::mlp_tiny();
-    let model = CostModel::paper();
-    let cfg = SearchConfig {
-        objective: Objective::Latency,
-        episodes: 10,
-        updates_per_episode: 3,
-        budget_start: 0.5,
-        budget_end: 0.35,
-        seed: 0xBEEF,
-        ..Default::default()
-    };
-    let search = Lrmp::new(&model, &net, cfg);
-    let ev = Evaluator::new(&dir).expect("evaluator");
-    let mut provider = LiveAccuracy::new(ev, 512);
-    provider.finetune_steps = 25;
-
-    let res = search.run(&mut provider).expect("search");
+    let (dep, res) = Session::new("mlp-tiny")
+        .expect("mlp-tiny is a known benchmark")
+        .objective(Objective::Latency)
+        .episodes(10)
+        .updates_per_episode(3)
+        .budget(0.5, 0.35)
+        .seed(0xBEEF)
+        .samples(512)
+        .live(true)
+        .finetune_steps(25)
+        .artifacts_dir(dir)
+        .search_detailed()
+        .expect("search");
 
     // Performance: the budget forces ≥ 2× latency improvement.
     assert!(
@@ -49,7 +43,7 @@ fn live_search_improves_latency_at_near_iso_accuracy() {
         res.latency_improvement()
     );
     // Area: never exceeds the 8-bit baseline tile count (paper's constraint).
-    assert!(res.best_plan.tiles_used <= search.baseline_tiles());
+    assert!(dep.tiles_used <= dep.n_tiles);
     // Accuracy: near iso-accuracy after finetuning (paper: <1% loss; allow
     // 5 points on this tiny budget of episodes/steps).
     assert!(
@@ -61,4 +55,8 @@ fn live_search_improves_latency_at_near_iso_accuracy() {
     // The trajectory was actually explored.
     assert_eq!(res.trajectory.len(), 10);
     assert!(res.trajectory.iter().any(|e| e.feasible));
+
+    // The artifact records the live provider and validates cleanly.
+    assert_eq!(dep.provenance.accuracy_provider, "live-pjrt");
+    dep.validate().expect("searched artifact must validate");
 }

@@ -1,0 +1,178 @@
+//! Minimal, offline-vendored subset of the `anyhow` API.
+//!
+//! The build environment has no network access, so the crate is re-created
+//! in-tree with exactly the surface the repository uses:
+//!
+//! - [`Error`]: an erased error value holding a human-readable context chain
+//! - [`Result<T>`]: `std::result::Result<T, Error>`
+//! - [`anyhow!`] / [`bail!`]: format-style construction / early return
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`
+//!
+//! Formatting matches the real crate where it matters to callers: `{}`
+//! prints the outermost message, `{:#}` prints the whole chain joined with
+//! `": "`, and `{:?}` prints the message plus a `Caused by:` section.
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An erased error: an ordered context chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with the erased error as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach displayable context to fallible values.
+pub trait Context<T, E> {
+    /// Wrap the error with `context`.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            None::<u32>.context("value missing")
+        }
+        assert_eq!(format!("{:#}", f(true).unwrap_err()), "flag was true");
+        assert_eq!(format!("{:#}", f(false).unwrap_err()), "value missing");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.root_cause(), "x = 3");
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "no such file");
+    }
+}
