@@ -1,0 +1,293 @@
+//! Sim-backend hot-path benchmark: the naive triple-loop quantized matmul
+//! vs the blocked kernel (`runtime::gemm`) over the paper MLP's layer
+//! shapes, plus end-to-end `SimBackend` eval latency per network. Emits a
+//! machine-readable `BENCH_simnet.json` (schema documented in
+//! `rust/src/api/README.md`) that the CI `bench-smoke` job uploads.
+//!
+//! Plain `fn main` bench (`harness = false`):
+//!
+//!   cargo bench --bench bench_simnet -- [--quick] [--out FILE]
+//!
+//! `--quick` shrinks the sample budgets for the CI smoke job. The run
+//! **fails (exit 1) if the blocked kernel's output ever diverges bitwise
+//! from the naive reference** — correctness is the CI gate, the latency
+//! numbers are the uploaded artifact.
+
+use lrmp::bench_harness::{fmt_time, Bencher, Table};
+use lrmp::cli::Args;
+use lrmp::coordinator::InferenceBackend;
+use lrmp::nets;
+use lrmp::runtime::gemm::{self, ConvGeom, PackedMat};
+use lrmp::runtime::simnet::SimBackend;
+use lrmp::util::json::Json;
+use lrmp::util::prng::Rng;
+use std::time::Duration;
+
+/// One naive-vs-blocked GEMM comparison row.
+struct GemmRow {
+    name: String,
+    m: usize,
+    k: usize,
+    n: usize,
+    naive: lrmp::bench_harness::BenchResult,
+    blocked: lrmp::bench_harness::BenchResult,
+    bit_exact: bool,
+}
+
+impl GemmRow {
+    fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+    fn speedup(&self) -> f64 {
+        self.naive.mean() / self.blocked.mean().max(1e-12)
+    }
+    fn gflops(&self, r: &lrmp::bench_harness::BenchResult) -> f64 {
+        self.flops() / r.mean().max(1e-12) / 1e9
+    }
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    // `cargo bench` forwards a bare `--bench` to harness=false targets.
+    let args = Args::parse_with_switches(raw, &["quick", "bench"]);
+    let quick = args.bool("quick");
+    let out_path = args.str("out", "BENCH_simnet.json");
+
+    let bench = if quick {
+        Bencher {
+            warmup: Duration::from_millis(10),
+            min_time: Duration::from_millis(60),
+            min_samples: 3,
+            max_samples: 40,
+        }
+    } else {
+        Bencher::default()
+    };
+
+    println!(
+        "=== sim backend hot path: naive vs blocked quantized matmul ===\n\
+         (threads {}, {} profile)\n",
+        gemm::worker_threads(),
+        if quick { "quick" } else { "full" }
+    );
+
+    // --- GEMM kernel comparison over the paper MLP's layer shapes ------
+    let batch = 16usize;
+    let dims = [784usize, 1024, 4096, 4096, 1024, 10];
+    let mut rng = Rng::new(0xBE7C);
+    let mut rows: Vec<GemmRow> = Vec::new();
+    for (l, w) in dims.windows(2).enumerate() {
+        let (k, n) = (w[0], w[1]);
+        // Post-ReLU-like inputs: ~1/3 exact zeros, the rest positive.
+        let x: Vec<f32> = (0..batch * k)
+            .map(|i| {
+                if i % 3 == 0 {
+                    0.0
+                } else {
+                    (rng.f64() * 0.9 + 0.05) as f32
+                }
+            })
+            .collect();
+        let wm: Vec<f32> = (0..k * n).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let packed = PackedMat::pack(&wm, k, n);
+
+        let mut y_naive = vec![0f32; batch * n];
+        let mut y_blocked = vec![0f32; batch * n];
+        gemm::matmul_naive(&x, &wm, batch, k, n, &mut y_naive);
+        gemm::matmul_blocked(&x, &packed, batch, &mut y_blocked);
+        let bit_exact = bits_of(&y_naive) == bits_of(&y_blocked);
+
+        let name = format!("fc{} {}x{}x{}", l + 1, batch, k, n);
+        let naive = bench.run(&format!("{name} naive"), || {
+            gemm::matmul_naive(&x, &wm, batch, k, n, &mut y_naive);
+        });
+        let blocked = bench.run(&format!("{name} blocked"), || {
+            gemm::matmul_blocked(&x, &packed, batch, &mut y_blocked);
+        });
+        rows.push(GemmRow {
+            name,
+            m: batch,
+            k,
+            n,
+            naive,
+            blocked,
+            bit_exact,
+        });
+    }
+
+    let naive_total: f64 = rows.iter().map(|r| r.naive.mean()).sum();
+    let blocked_total: f64 = rows.iter().map(|r| r.blocked.mean()).sum();
+    let mlp_speedup = naive_total / blocked_total.max(1e-12);
+
+    let mut t = Table::new(&["shape", "naive", "blocked", "speedup", "GFLOP/s", "bit-exact"]);
+    for r in &rows {
+        t.row(&[
+            r.name.clone(),
+            fmt_time(r.naive.mean()),
+            fmt_time(r.blocked.mean()),
+            format!("x{:.2}", r.speedup()),
+            format!("{:.2}", r.gflops(&r.blocked)),
+            r.bit_exact.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nMLP eval path (sum of layer GEMMs, batch {batch}): naive {} vs blocked {} -> x{:.2}\n",
+        fmt_time(naive_total),
+        fmt_time(blocked_total),
+        mlp_speedup
+    );
+
+    // --- conv lowering correctness (im2col + blocked vs direct conv) ---
+    let conv_exact = conv_lowering_bit_exact();
+    println!("conv lowering im2col+blocked == direct reference: {conv_exact}\n");
+
+    // --- end-to-end SimBackend eval latency per network ----------------
+    let net_bench = if quick {
+        Bencher {
+            warmup: Duration::from_millis(10),
+            min_time: Duration::from_millis(80),
+            min_samples: 3,
+            max_samples: 20,
+        }
+    } else {
+        Bencher::quick()
+    };
+    let mut net_rows = Vec::new();
+    for name in ["mlp-tiny", "mlp", "conv-tiny"] {
+        let net = nets::by_name(name).expect("bench nets are registered");
+        let b = 16usize;
+        let mut backend = SimBackend::from_network(&net, b, 7).expect("sim-supported net");
+        let dim = backend.input_dim();
+        let nl = backend.num_layers();
+        let x: Vec<f32> = (0..b * dim).map(|i| ((i * 31) % 97) as f32 / 97.0).collect();
+        let (wb, ab) = (vec![5.0f32; nl], vec![6.0f32; nl]);
+        let res = net_bench.run(&format!("eval {} b={b}", net.name), || {
+            let y = backend.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
+            std::hint::black_box(y);
+        });
+        println!(
+            "  -> {} {:.1} inferences/s (p95 {})",
+            net.name,
+            b as f64 / res.mean().max(1e-12),
+            fmt_time(res.p95())
+        );
+        net_rows.push((net.name.clone(), b, nl, res));
+    }
+
+    // --- machine-readable artifact -------------------------------------
+    let gemm_json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("m", Json::Num(r.m as f64)),
+                    ("k", Json::Num(r.k as f64)),
+                    ("n", Json::Num(r.n as f64)),
+                    ("naive_mean_s", Json::Num(r.naive.mean())),
+                    ("naive_p50_s", Json::Num(r.naive.p50())),
+                    ("blocked_mean_s", Json::Num(r.blocked.mean())),
+                    ("blocked_p50_s", Json::Num(r.blocked.p50())),
+                    ("speedup", Json::Num(r.speedup())),
+                    ("gflops_naive", Json::Num(r.gflops(&r.naive))),
+                    ("gflops_blocked", Json::Num(r.gflops(&r.blocked))),
+                    ("bit_exact", Json::Bool(r.bit_exact)),
+                ])
+            })
+            .collect(),
+    );
+    let nets_json = Json::Arr(
+        net_rows
+            .iter()
+            .map(|(name, b, nl, res)| {
+                Json::obj(vec![
+                    ("net", Json::Str(name.clone())),
+                    ("eval_batch", Json::Num(*b as f64)),
+                    ("layers", Json::Num(*nl as f64)),
+                    ("mean_s", Json::Num(res.mean())),
+                    ("p50_s", Json::Num(res.p50())),
+                    ("p95_s", Json::Num(res.p95())),
+                    ("samples", Json::Num(res.samples.len() as f64)),
+                    ("inf_per_s", Json::Num(*b as f64 / res.mean().max(1e-12))),
+                ])
+            })
+            .collect(),
+    );
+    let report = Json::obj(vec![
+        ("kind", Json::Str("lrmp-bench-simnet".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::Num(gemm::worker_threads() as f64)),
+        ("gemm", gemm_json),
+        ("mlp_gemm_speedup", Json::Num(mlp_speedup)),
+        ("conv_lowering_bit_exact", Json::Bool(conv_exact)),
+        ("nets", nets_json),
+    ]);
+    report.to_file(std::path::Path::new(&out_path)).expect("write bench json");
+    println!("\nwrote {out_path}");
+
+    // --- CI gate: bitwise correctness, not speed -----------------------
+    let gemm_exact = rows.iter().all(|r| r.bit_exact);
+    if !gemm_exact || !conv_exact {
+        eprintln!("FAIL: blocked kernel diverged from the naive reference");
+        std::process::exit(1);
+    }
+    if mlp_speedup < 1.0 {
+        // Not a failure (CI runners are noisy 2-core VMs) but worth flagging.
+        println!("note: blocked kernel slower than naive on this machine");
+    }
+}
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Fixed-seed conv lowering check: im2col + blocked matmul must equal the
+/// direct-convolution reference bit for bit (same reduction order).
+fn conv_lowering_bit_exact() -> bool {
+    let g = ConvGeom {
+        in_c: 8,
+        out_c: 16,
+        kernel: 3,
+        stride: 1,
+        padding: 1,
+        in_hw: 12,
+        out_hw: 12,
+    };
+    let mut rng = Rng::new(0x5EED);
+    let x: Vec<f32> = (0..g.in_features())
+        .map(|i| {
+            if i % 5 == 0 {
+                0.0
+            } else {
+                (rng.normal() * 0.5) as f32
+            }
+        })
+        .collect();
+    let w: Vec<f32> = (0..g.patch_len() * g.out_c)
+        .map(|_| (rng.normal() * 0.2) as f32)
+        .collect();
+
+    let npos = g.num_positions();
+    let mut direct = vec![0f32; g.out_c * npos];
+    gemm::conv2d_ref(&x, &w, &g, &mut direct);
+
+    let packed = PackedMat::pack(&w, g.patch_len(), g.out_c);
+    let mut lowered = vec![0f32; g.out_c * npos];
+    let chunk = 32usize;
+    let mut patches = vec![0f32; chunk * g.patch_len()];
+    let mut prod = vec![0f32; chunk * g.out_c];
+    let mut pos0 = 0;
+    while pos0 < npos {
+        let m = chunk.min(npos - pos0);
+        gemm::im2col_chunk(&x, &g, pos0, m, &mut patches[..m * g.patch_len()]);
+        gemm::matmul_blocked(&patches[..m * g.patch_len()], &packed, m, &mut prod[..m * g.out_c]);
+        for p in 0..m {
+            for oc in 0..g.out_c {
+                lowered[oc * npos + pos0 + p] = prod[p * g.out_c + oc];
+            }
+        }
+        pos0 += m;
+    }
+    bits_of(&direct) == bits_of(&lowered)
+}

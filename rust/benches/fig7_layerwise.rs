@@ -82,14 +82,25 @@ fn main() {
 
     println!("\n=== paper vs measured ===\n");
     let mut s = Table::new(&["quantity", "paper", "ours"]);
-    s.row(&["baseline bottleneck".into(), "conv1 (first layer)".into(),
-        net.layers[b].name.clone()]);
+    s.row(&[
+        "baseline bottleneck".into(),
+        "conv1 (first layer)".into(),
+        net.layers[b].name.clone(),
+    ]);
     s.row(&["latencyOptim total latency x".into(), "~5".into(), format!("{lat_total_x:.2}")]);
     s.row(&["latencyOptim bottleneck x".into(), "~14".into(), format!("{lat_bneck_x:.2}")]);
-    s.row(&["latencyOptim bottleneck copies".into(), "14 (13 extra)".into(), lat_copies.to_string()]);
+    s.row(&[
+        "latencyOptim bottleneck copies".into(),
+        "14 (13 extra)".into(),
+        lat_copies.to_string(),
+    ]);
     s.row(&["throughputOptim total latency x".into(), "~4.7".into(), format!("{thr_total_x:.2}")]);
     s.row(&["throughputOptim bottleneck x".into(), "~19".into(), format!("{thr_bneck_x:.2}")]);
-    s.row(&["throughputOptim bottleneck copies".into(), "19 (18 extra)".into(), thr_copies.to_string()]);
+    s.row(&[
+        "throughputOptim bottleneck copies".into(),
+        "19 (18 extra)".into(),
+        thr_copies.to_string(),
+    ]);
     s.print();
 
     // Shape assertions (guaranteed by optimality on a shared policy).

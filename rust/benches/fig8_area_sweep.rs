@@ -71,7 +71,9 @@ fn main() {
     let repl_1x = get(&at_1x, "repl-only").expect("repl-only feasible at 1.0x");
     let joint_1x = get(&at_1x, "joint").expect("joint feasible at 1.0x");
 
-    println!("\npaper anchors: quant-only −18.5% (x1.23), repl-only −32% (x1.47), joint −49% (x1.96+)");
+    println!(
+        "\npaper anchors: quant-only −18.5% (x1.23), repl-only −32% (x1.47), joint −49% (x1.96+)"
+    );
     println!(
         "ours at 1.0x area: quant-only x{:.2}, repl-only x{:.2}, joint x{:.2}",
         quant_1x.0, repl_1x.0, joint_1x.0

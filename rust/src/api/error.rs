@@ -26,6 +26,14 @@ pub enum ApiError {
     },
     /// A builder/CLI parameter is out of range or inconsistent.
     InvalidConfig(String),
+    /// The network is known but the chosen execution backend cannot run it
+    /// (e.g. the sim backend on a residual topology). `reason` is the
+    /// backend's capability-query explanation.
+    UnsupportedNetwork {
+        backend: &'static str,
+        net: String,
+        reason: String,
+    },
     /// A replication plan does not fit the tile budget.
     Infeasible { needed: u64, available: u64 },
     /// Deployment artifact written by an unsupported schema.
@@ -80,6 +88,10 @@ impl fmt::Display for ApiError {
                 }
             }
             ApiError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            ApiError::UnsupportedNetwork { backend, net, reason } => write!(
+                f,
+                "the {backend} backend cannot serve '{net}': {reason}"
+            ),
             ApiError::Infeasible { needed, available } => write!(
                 f,
                 "plan needs {needed} tiles but the budget is {available}"
@@ -123,6 +135,17 @@ mod tests {
         assert!(s.contains("--episode "), "{s}");
         assert!(s.contains("--episodes"), "{s}");
         assert!(s.contains("'search'"), "{s}");
+    }
+
+    #[test]
+    fn unsupported_network_names_backend_and_reason() {
+        let s = ApiError::UnsupportedNetwork {
+            backend: "sim",
+            net: "ResNet18".into(),
+            reason: "residual projection".into(),
+        }
+        .to_string();
+        assert!(s.contains("sim") && s.contains("ResNet18") && s.contains("residual"), "{s}");
     }
 
     #[test]

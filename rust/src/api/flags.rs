@@ -103,6 +103,7 @@ const SERVE_FLAGS: &[FlagDef] = &[
     val("max-batch", "batcher flush size (default 256)"),
     val("max-wait-ms", "batcher flush deadline in ms (default 4)"),
     val("backend", "auto|live|sim (default auto)"),
+    val("eval-batch", "sim backend batch size (default 16, conv nets 2)"),
 ];
 
 const INSPECT_FLAGS: &[FlagDef] = &[val("deployment", "artifact to inspect (or positional FILE)")];
@@ -201,7 +202,7 @@ pub fn parse(raw: &[String]) -> ApiResult<Option<(&'static SubcommandSpec, Args)
             .iter()
             .any(|f| f.name == stripped && f.kind == FlagKind::Value);
         if is_value_flag {
-            let has_value = raw.get(i + 1).map_or(false, |n| !n.starts_with("--"));
+            let has_value = raw.get(i + 1).is_some_and(|n| !n.starts_with("--"));
             if !has_value {
                 return Err(ApiError::InvalidConfig(format!(
                     "flag --{stripped} requires a value"

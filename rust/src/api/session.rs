@@ -53,6 +53,17 @@ pub enum ServeBackend {
     Sim,
 }
 
+/// Execution knobs for [`Session::serve_opts`]; `Default` picks them all
+/// automatically.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeOptions {
+    /// Fixed batch size the sim backend executes (`None`: 16 for FC nets,
+    /// 2 for conv nets, whose per-sample FLOPs are orders of magnitude
+    /// higher). Ignored by the live backend (its AOT artifact fixes the
+    /// batch shape).
+    pub eval_batch: Option<usize>,
+}
+
 /// Builder for one search run plus the artifact-centric phase entry points.
 #[derive(Clone, Debug)]
 pub struct Session {
@@ -321,6 +332,19 @@ impl Session {
         batch_policy: BatchPolicy,
         backend: ServeBackend,
     ) -> ApiResult<Server> {
+        Session::serve_opts(dep, batch_policy, backend, ServeOptions::default())
+    }
+
+    /// [`Session::serve_with`] plus execution knobs ([`ServeOptions`]).
+    pub fn serve_opts(
+        dep: &Deployment,
+        batch_policy: BatchPolicy,
+        backend: ServeBackend,
+        opts: ServeOptions,
+    ) -> ApiResult<Server> {
+        if opts.eval_batch == Some(0) {
+            return Err(ApiError::InvalidConfig("eval batch must be >= 1".into()));
+        }
         dep.validate()?;
         let net = nets::by_name(&dep.net).ok_or_else(|| ApiError::UnknownNetwork {
             name: dep.net.clone(),
@@ -330,7 +354,7 @@ impl Session {
         let live_possible = artifacts.join("manifest.json").exists();
         match backend {
             ServeBackend::Live => Session::serve_live(dep, batch_policy, artifacts),
-            ServeBackend::Sim => Session::serve_sim(dep, &net, batch_policy),
+            ServeBackend::Sim => Session::serve_sim(dep, &net, batch_policy, opts),
             ServeBackend::Auto => {
                 if live_possible {
                     match Session::serve_live(dep, batch_policy, artifacts) {
@@ -338,7 +362,7 @@ impl Session {
                         // Artifacts present but unusable (e.g. offline xla
                         // stub): fall back to the sim backend, but keep the
                         // live failure's root cause if that fails too.
-                        Err(live_err) => Session::serve_sim(dep, &net, batch_policy)
+                        Err(live_err) => Session::serve_sim(dep, &net, batch_policy, opts)
                             .map_err(|sim_err| {
                                 ApiError::Runtime(format!(
                                     "live backend failed ({live_err}); \
@@ -347,7 +371,7 @@ impl Session {
                             }),
                     }
                 } else {
-                    Session::serve_sim(dep, &net, batch_policy)
+                    Session::serve_sim(dep, &net, batch_policy, opts)
                 }
             }
         }
@@ -375,10 +399,34 @@ impl Session {
         dep: &Deployment,
         net: &Network,
         batch_policy: BatchPolicy,
+        opts: ServeOptions,
     ) -> ApiResult<Server> {
-        let backend = SimBackend::from_network(net, 16, dep.provenance.seed)
+        // Capability query first: an unsupported topology (e.g. ResNet
+        // residual projections) is a typed error, not a runtime string.
+        SimBackend::supports(net).map_err(|reason| ApiError::UnsupportedNetwork {
+            backend: "sim",
+            net: net.name.clone(),
+            reason,
+        })?;
+        let eval_batch = opts.eval_batch.unwrap_or_else(|| default_sim_batch(net));
+        let backend = SimBackend::from_network(net, eval_batch, dep.provenance.seed)
             .map_err(ApiError::Runtime)?;
         Ok(Server::start(backend, &dep.policy, batch_policy))
+    }
+}
+
+/// Default sim-backend batch: FC nets amortize the weight stream well at
+/// 16; conv nets carry orders of magnitude more FLOPs per sample, so a
+/// small fixed batch keeps offline serve latency per flush sane.
+fn default_sim_batch(net: &Network) -> usize {
+    let conv = net
+        .layers
+        .iter()
+        .any(|l| matches!(l.kind, nets::LayerKind::Conv2d { .. }));
+    if conv {
+        2
+    } else {
+        16
     }
 }
 
@@ -433,5 +481,51 @@ mod tests {
     fn live_on_conv_net_rejected() {
         let s = Session::new("resnet18").unwrap().episodes(1).live(true);
         assert!(matches!(s.search(), Err(ApiError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn sim_serving_a_residual_net_is_a_typed_unsupported_error() {
+        let nl = nets::resnet::resnet18().num_layers();
+        let dep = Deployment::from_policy(
+            "resnet18",
+            &ChipConfig::paper_scaled(),
+            Objective::Latency,
+            Policy::baseline(nl),
+            vec![1; nl],
+            None,
+        )
+        .unwrap();
+        let err = Session::serve_with(&dep, BatchPolicy::default(), ServeBackend::Sim)
+            .map(|_| ())
+            .unwrap_err();
+        match err {
+            ApiError::UnsupportedNetwork { backend, net, reason } => {
+                assert_eq!(backend, "sim");
+                assert_eq!(net, "ResNet18");
+                assert!(reason.contains("sequential"), "{reason}");
+            }
+            other => panic!("expected UnsupportedNetwork, got {other}"),
+        }
+    }
+
+    #[test]
+    fn zero_eval_batch_rejected() {
+        let nl = nets::conv_tiny().num_layers();
+        let dep = Deployment::from_policy(
+            "conv-tiny",
+            &ChipConfig::paper_scaled(),
+            Objective::Latency,
+            Policy::baseline(nl),
+            vec![1; nl],
+            None,
+        )
+        .unwrap();
+        let opts = ServeOptions {
+            eval_batch: Some(0),
+        };
+        let err = Session::serve_opts(&dep, BatchPolicy::default(), ServeBackend::Sim, opts)
+            .map(|_| ())
+            .unwrap_err();
+        assert!(matches!(err, ApiError::InvalidConfig(_)));
     }
 }

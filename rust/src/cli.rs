@@ -39,7 +39,7 @@ impl Args {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if !switches.contains(&stripped)
-                    && iter.peek().map_or(false, |n| !n.starts_with("--"))
+                    && iter.peek().is_some_and(|n| !n.starts_with("--"))
                 {
                     let v = iter.next().unwrap();
                     out.flags.insert(stripped.to_string(), v);

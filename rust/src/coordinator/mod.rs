@@ -25,7 +25,9 @@ use std::time::Instant;
 /// An execution backend the coordinator can serve batches on. The PJRT
 /// [`Engine`] is the live implementation; `runtime::simnet::SimBackend` is
 /// the deterministic pure-rust stand-in used when artifacts (or the XLA
-/// runtime itself) are unavailable.
+/// runtime itself) are unavailable — it executes fully-connected *and*
+/// sequential conv networks (im2col-lowered onto the blocked quantized
+/// matmul kernel in `runtime::gemm`).
 pub trait InferenceBackend: Send + 'static {
     /// Human-readable backend identifier (reported in logs/metrics).
     fn backend_name(&self) -> &'static str;

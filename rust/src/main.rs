@@ -16,9 +16,11 @@
 //!   demo                           run the L1 crossbar kernels through PJRT
 //!   serve     [--deployment dep.json | --net N --wbits W --abits A]
 //!             [--requests R] [--clients C] [--backend auto|live|sim]
+//!             [--eval-batch B]
 //!                                  closed-loop load test of the serving
 //!                                  coordinator, executing the artifact's
-//!                                  per-layer policy
+//!                                  per-layer policy (the sim backend runs
+//!                                  FC and sequential conv nets offline)
 //!   inspect   dep.json             validate + print a saved artifact
 //!
 //! The flag registry lives in `lrmp::api::flags`: unknown flags are
@@ -30,7 +32,7 @@
 //!   lrmp serve --deployment dep.json --requests 64
 
 use anyhow::Result;
-use lrmp::api::{flags, ApiError, Deployment, ServeBackend, Session, SCHEMA_VERSION};
+use lrmp::api::{flags, ApiError, Deployment, ServeBackend, ServeOptions, Session, SCHEMA_VERSION};
 use lrmp::arch::ChipConfig;
 use lrmp::bench_harness::Table;
 use lrmp::cli::Args;
@@ -353,13 +355,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let requests = parsed(args, "requests", 1024usize)?;
     let clients = parsed(args, "clients", 4usize)?.max(1);
-    let server = Session::serve_with(
+    let eval_batch = if args.flags.contains_key("eval-batch") {
+        Some(parsed(args, "eval-batch", 16usize)?)
+    } else {
+        None
+    };
+    let opts = ServeOptions { eval_batch };
+    let server = Session::serve_opts(
         &dep,
         BatchPolicy {
             max_batch: parsed(args, "max-batch", 256usize)?,
             max_wait: std::time::Duration::from_millis(parsed(args, "max-wait-ms", 4)?),
         },
         backend,
+        opts,
     )?;
     let bits: Vec<String> = server
         .policy
@@ -469,6 +478,10 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         p.baseline_accuracy, p.searched_accuracy, p.finetuned_accuracy
     );
     println!("  validation  cost model re-run OK ({} tiles)", cost.tiles_used);
+    match lrmp::runtime::simnet::SimBackend::supports(&net) {
+        Ok(()) => println!("  sim backend supported (servable offline via --backend sim)"),
+        Err(reason) => println!("  sim backend unsupported: {reason}"),
+    }
 
     let mut t = Table::new(&["layer", "w", "a", "r", "tiles", "eff cycles"]);
     for (((l, pr), &r), lc) in net

@@ -177,6 +177,21 @@ pub fn mlp_tiny() -> Network {
     }
 }
 
+/// Miniature sequential conv net (conv→conv→pool→FC over 8×8 RGB inputs):
+/// the smallest geometry that exercises the sim backend's full conv path —
+/// im2col lowering, inter-layer pooling, CHW flattening — at unit-test and
+/// CI-smoke cost.
+pub fn conv_tiny() -> Network {
+    Network {
+        name: "Conv-tiny".to_string(),
+        layers: vec![
+            Layer::conv("conv1", 3, 8, 3, 1, 1, 8),
+            Layer::conv("conv2", 8, 8, 3, 1, 1, 8),
+            Layer::linear("fc", 8 * 4 * 4, 10),
+        ],
+    }
+}
+
 /// VGG-16 ImageNet geometry (not in the paper's suite; included to show the
 /// toolchain generalizes beyond it — its 25088→4096 FC dominates tiles).
 pub fn vgg16() -> Network {
@@ -227,6 +242,7 @@ pub fn paper_benchmarks() -> Vec<Network> {
 const REGISTRY: &[(&str, &[&str], fn() -> Network)] = &[
     ("mlp", &["mlp_mnist"], mlp_mnist),
     ("mlp-tiny", &["mlp_tiny"], mlp_tiny),
+    ("conv-tiny", &["conv_tiny"], conv_tiny),
     ("resnet18", &["rn18"], resnet::resnet18),
     ("resnet34", &["rn34"], resnet::resnet34),
     ("resnet50", &["rn50"], resnet::resnet50),
@@ -316,7 +332,19 @@ mod tests {
         assert_eq!(by_name("ResNet18").unwrap().name, "ResNet18");
         assert_eq!(by_name("mlp").unwrap().name, "MLP");
         assert_eq!(by_name("vgg16").unwrap().name, "VGG16");
+        assert_eq!(by_name("conv-tiny").unwrap().name, "Conv-tiny");
         assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn conv_tiny_geometry_chains() {
+        let n = conv_tiny();
+        assert_eq!(n.num_layers(), 3);
+        // conv2 keeps the 8×8 grid; the FC flattens an 8ch 4×4 volume, so
+        // a 2×2 pool sits between them.
+        assert_eq!(n.layers[1].out_hw(), 8);
+        assert_eq!(n.layers[2].lowered_rows(), 128);
+        assert_eq!(n.total_params(), 27 * 8 + 72 * 8 + 128 * 10);
     }
 
     #[test]
@@ -327,6 +355,6 @@ mod tests {
             // The canonical display name must resolve back to the same net.
             assert_eq!(by_name(&net.name).unwrap().name, net.name);
         }
-        assert_eq!(known_names().len(), 7);
+        assert_eq!(known_names().len(), 8);
     }
 }

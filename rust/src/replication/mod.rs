@@ -223,7 +223,7 @@ pub fn throughput_optim(
         }
         Some(total)
     };
-    let feasible = |m: f64| tiles_needed(m).map_or(false, |t| t <= n_tiles);
+    let feasible = |m: f64| tiles_needed(m).is_some_and(|t| t <= n_tiles);
 
     // Binary search the smallest feasible candidate.
     let (mut lo, mut hi) = (0usize, candidates.len() - 1);

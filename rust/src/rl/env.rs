@@ -49,7 +49,10 @@ pub fn observation(net: &Network, l: usize, prev_action: (f64, f64)) -> Vec<f64>
 pub fn action_to_bits(a: (f64, f64)) -> LayerPrecision {
     let span = (MAX_BITS - MIN_BITS) as f64;
     let to_bits = |v: f64| (MIN_BITS as f64 + (v.clamp(0.0, 1.0) * span).round()) as u32;
-    LayerPrecision::new(to_bits(a.0).clamp(MIN_BITS, MAX_BITS), to_bits(a.1).clamp(MIN_BITS, MAX_BITS))
+    LayerPrecision::new(
+        to_bits(a.0).clamp(MIN_BITS, MAX_BITS),
+        to_bits(a.1).clamp(MIN_BITS, MAX_BITS),
+    )
 }
 
 /// The post-replication performance metric the budget applies to.

@@ -1,0 +1,506 @@
+//! Quantized-matmul kernels shared by the FC and conv (im2col) paths of the
+//! offline sim backend.
+//!
+//! Two kernels compute `out[m×n] = x[m×k] · w[k×n]`:
+//!
+//! - [`matmul_naive`]: the reference triple loop (the historical
+//!   `SimBackend` hot path) — axpy over the output row, inputs equal to
+//!   exactly zero skipped.
+//! - [`matmul_blocked`]: a cache-blocked kernel over a column-panel
+//!   *packed* weight layout ([`PackedMat`]), register-tiled over a local
+//!   accumulator and split across threads by batch rows for large shapes.
+//!
+//! Both kernels accumulate every output element over the reduction index in
+//! the same ascending order with the same skip-exact-zero rule, so their
+//! results agree **bit for bit** (floating-point addition is not
+//! associative, but neither kernel ever reassociates: blocking only changes
+//! *when* a partial sum is resumed, never the order of its terms; and
+//! `acc + ±0.0 == acc` bitwise for every value the kernels can produce,
+//! since a running sum that starts at +0.0 can never become -0.0). The
+//! bench harness and CI smoke job exploit this: any divergence between the
+//! kernels is a hard failure, not a tolerance judgement. Inputs are assumed
+//! finite (synthetic quantized weights and activations always are).
+//!
+//! The module also hosts the conv lowering helpers: [`im2col_chunk`]
+//! (patch-matrix construction, chunked so the scratch buffer stays
+//! cache-sized even for 224×224 inputs) and the direct-convolution
+//! reference [`conv2d_ref`] used by the tests — written with the same
+//! reduction order, so im2col + matmul matches it bit for bit as well.
+
+/// Column-panel width of the packed weight layout, in f32 lanes.
+pub const PANEL_COLS: usize = 64;
+/// Reduction-dimension block: rows of a panel processed per pass while the
+/// panel block (`BLOCK_ROWS × PANEL_COLS × 4` bytes = 16 KiB) stays L1-hot.
+pub const BLOCK_ROWS: usize = 64;
+/// Below this many flops (2·m·k·n) the kernel stays single-threaded:
+/// thread-spawn overhead would dominate.
+const MT_MIN_FLOPS: usize = 1 << 24;
+/// Upper bound on worker threads (beyond this, memory bandwidth saturates).
+const MT_MAX_THREADS: usize = 16;
+
+/// A weight matrix packed into column panels: panel `p` holds columns
+/// `[p·PANEL_COLS, min((p+1)·PANEL_COLS, cols))`, stored row-major within
+/// the panel. Successive reduction rows of a panel are contiguous, so the
+/// blocked kernel streams weights linearly instead of striding by `cols`.
+#[derive(Clone, Debug)]
+pub struct PackedMat {
+    /// Reduction dimension (input features / lowered rows).
+    pub rows: usize,
+    /// Output dimension (output features / lowered cols).
+    pub cols: usize,
+    data: Vec<f32>,
+}
+
+impl PackedMat {
+    /// Pack a row-major `rows × cols` matrix into column panels.
+    pub fn pack(w: &[f32], rows: usize, cols: usize) -> PackedMat {
+        assert_eq!(w.len(), rows * cols, "weight buffer must be rows*cols");
+        let mut data = vec![0f32; rows * cols];
+        let mut off = 0;
+        let mut j0 = 0;
+        while j0 < cols {
+            let pw = PANEL_COLS.min(cols - j0);
+            for i in 0..rows {
+                data[off..off + pw].copy_from_slice(&w[i * cols + j0..i * cols + j0 + pw]);
+                off += pw;
+            }
+            j0 += pw;
+        }
+        PackedMat { rows, cols, data }
+    }
+
+    /// Unpack back to the row-major layout (tests / debugging).
+    pub fn unpack(&self) -> Vec<f32> {
+        let (rows, cols) = (self.rows, self.cols);
+        let mut w = vec![0f32; rows * cols];
+        let mut off = 0;
+        let mut j0 = 0;
+        while j0 < cols {
+            let pw = PANEL_COLS.min(cols - j0);
+            for i in 0..rows {
+                w[i * cols + j0..i * cols + j0 + pw].copy_from_slice(&self.data[off..off + pw]);
+                off += pw;
+            }
+            j0 += pw;
+        }
+        w
+    }
+}
+
+/// Reference kernel: `out[m×n] = x[m×k] · w[k×n]` with `w` row-major.
+/// Inputs equal to exactly 0.0 are skipped (post-ReLU activations are
+/// sparse); adding their ±0.0 products would be a bitwise no-op anyway.
+pub fn matmul_naive(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * k, "x must be m*k");
+    assert_eq!(w.len(), k * n, "w must be k*n");
+    assert_eq!(out.len(), m * n, "out must be m*n");
+    out.fill(0.0);
+    for row in 0..m {
+        let xin = &x[row * k..(row + 1) * k];
+        let yout = &mut out[row * n..(row + 1) * n];
+        for (i, &xi) in xin.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * n..(i + 1) * n];
+            for (yj, &wj) in yout.iter_mut().zip(wrow) {
+                *yj += xi * wj;
+            }
+        }
+    }
+}
+
+/// Blocked kernel: `out[m×n] = x[m×k] · w` over the packed layout, with the
+/// thread count chosen automatically (`LRMP_SIM_THREADS` overrides).
+/// Bit-for-bit identical to [`matmul_naive`] (see module docs).
+pub fn matmul_blocked(x: &[f32], w: &PackedMat, m: usize, out: &mut [f32]) {
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(w.rows)
+        .saturating_mul(w.cols);
+    let threads = if flops < MT_MIN_FLOPS {
+        1
+    } else {
+        default_threads().min(m)
+    };
+    matmul_blocked_threads(x, w, m, threads.max(1), out);
+}
+
+/// [`matmul_blocked`] with an explicit worker count (1 = fully sequential).
+/// The thread split is by batch rows, so every output element is still
+/// computed by exactly one worker in the canonical reduction order —
+/// results are identical for every `threads` value.
+pub fn matmul_blocked_threads(
+    x: &[f32],
+    w: &PackedMat,
+    m: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let (k, n) = (w.rows, w.cols);
+    assert_eq!(x.len(), m * k, "x must be m*k");
+    assert_eq!(out.len(), m * n, "out must be m*n");
+    out.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, m);
+    if threads == 1 {
+        gemm_task(x, m, k, n, &w.data, out);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    let data = w.data.as_slice();
+    std::thread::scope(|s| {
+        for (xc, oc) in x.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            let rows = oc.len() / n;
+            s.spawn(move || gemm_task(xc, rows, k, n, data, oc));
+        }
+    });
+}
+
+/// Compute `out[rows×n] = x[rows×k] · packed` for one worker's row chunk.
+/// `out` must be zeroed. Loop nest: column panel → reduction block → row,
+/// so a 16 KiB panel block is reused across every row while L1-hot, and the
+/// per-(row, panel) accumulator lives in registers across the block.
+fn gemm_task(x: &[f32], rows: usize, k: usize, n: usize, data: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * n);
+    let mut acc = [0f32; PANEL_COLS];
+    let mut j0 = 0;
+    let mut poff = 0;
+    while j0 < n {
+        let pw = PANEL_COLS.min(n - j0);
+        let panel = &data[poff..poff + k * pw];
+        let mut i0 = 0;
+        while i0 < k {
+            let ib = BLOCK_ROWS.min(k - i0);
+            for row in 0..rows {
+                let xrow = &x[row * k + i0..row * k + i0 + ib];
+                let orow = &mut out[row * n + j0..row * n + j0 + pw];
+                let acc = &mut acc[..pw];
+                acc.copy_from_slice(orow);
+                for (di, &xi) in xrow.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let wrow = &panel[(i0 + di) * pw..(i0 + di + 1) * pw];
+                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                        *a += xi * wv;
+                    }
+                }
+                orow.copy_from_slice(acc);
+            }
+            i0 += ib;
+        }
+        j0 += pw;
+        poff += k * pw;
+    }
+}
+
+/// The worker count [`matmul_blocked`] uses for large shapes
+/// (`LRMP_SIM_THREADS` override honored) — exposed for bench reporting.
+pub fn worker_threads() -> usize {
+    default_threads()
+}
+
+/// Worker count: `LRMP_SIM_THREADS` when set, else the machine parallelism.
+fn default_threads() -> usize {
+    std::env::var("LRMP_SIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        })
+        .clamp(1, MT_MAX_THREADS)
+}
+
+// ----------------------------------------------------------------------
+// Conv lowering (im2col) helpers
+// ----------------------------------------------------------------------
+
+/// Geometry of one 2-D convolution lowering (square input, H = W).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub in_c: usize,
+    pub out_c: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub in_hw: usize,
+    pub out_hw: usize,
+}
+
+impl ConvGeom {
+    /// Lowered patch length R = K²·C — rows of the lowered weight matrix,
+    /// ordered channel-major: r = (c·K + ky)·K + kx.
+    pub fn patch_len(&self) -> usize {
+        self.in_c * self.kernel * self.kernel
+    }
+
+    /// Input feature count C·H·W of one CHW sample.
+    pub fn in_features(&self) -> usize {
+        self.in_c * self.in_hw * self.in_hw
+    }
+
+    /// Output positions W² of one sample.
+    pub fn num_positions(&self) -> usize {
+        self.out_hw * self.out_hw
+    }
+}
+
+/// Build im2col patch rows for output positions `[pos0, pos0 + npos)` of
+/// one CHW sample `x` into `patches` (`npos × patch_len`, row-major).
+/// Positions are row-major over the output grid (pos = oy·out_hw + ox);
+/// out-of-bounds taps read the zero padding.
+pub fn im2col_chunk(x: &[f32], g: &ConvGeom, pos0: usize, npos: usize, patches: &mut [f32]) {
+    let pl = g.patch_len();
+    assert_eq!(x.len(), g.in_features(), "sample must be in_c*in_hw^2");
+    assert_eq!(patches.len(), npos * pl, "patch buffer must be npos*patch_len");
+    assert!(pos0 + npos <= g.num_positions(), "positions out of range");
+    for p in 0..npos {
+        let pos = pos0 + p;
+        let (oy, ox) = (pos / g.out_hw, pos % g.out_hw);
+        let dst = &mut patches[p * pl..(p + 1) * pl];
+        let mut d = 0;
+        for c in 0..g.in_c {
+            let plane = &x[c * g.in_hw * g.in_hw..(c + 1) * g.in_hw * g.in_hw];
+            for ky in 0..g.kernel {
+                let iy = (oy * g.stride + ky) as isize - g.padding as isize;
+                let in_row = iy >= 0 && (iy as usize) < g.in_hw;
+                for kx in 0..g.kernel {
+                    let ix = (ox * g.stride + kx) as isize - g.padding as isize;
+                    dst[d] = if in_row && ix >= 0 && (ix as usize) < g.in_hw {
+                        plane[iy as usize * g.in_hw + ix as usize]
+                    } else {
+                        0.0
+                    };
+                    d += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Direct-convolution reference (tests only): `x` is one CHW sample, `w`
+/// the row-major lowered `patch_len × out_c` weight matrix, `out` the CHW
+/// `out_c × out_hw²` result. The reduction runs in the same channel-major
+/// tap order as [`im2col_chunk`] + [`matmul_naive`] with the same
+/// skip-exact-zero rule, so the two paths agree bit for bit.
+pub fn conv2d_ref(x: &[f32], w: &[f32], g: &ConvGeom, out: &mut [f32]) {
+    let pl = g.patch_len();
+    assert_eq!(x.len(), g.in_features(), "sample must be in_c*in_hw^2");
+    assert_eq!(w.len(), pl * g.out_c, "w must be patch_len*out_c");
+    assert_eq!(out.len(), g.out_c * g.num_positions(), "out must be out_c*out_hw^2");
+    for oc in 0..g.out_c {
+        for oy in 0..g.out_hw {
+            for ox in 0..g.out_hw {
+                let mut acc = 0f32;
+                let mut r = 0;
+                for c in 0..g.in_c {
+                    let plane = &x[c * g.in_hw * g.in_hw..(c + 1) * g.in_hw * g.in_hw];
+                    for ky in 0..g.kernel {
+                        let iy = (oy * g.stride + ky) as isize - g.padding as isize;
+                        let in_row = iy >= 0 && (iy as usize) < g.in_hw;
+                        for kx in 0..g.kernel {
+                            let ix = (ox * g.stride + kx) as isize - g.padding as isize;
+                            if in_row && ix >= 0 && (ix as usize) < g.in_hw {
+                                let v = plane[iy as usize * g.in_hw + ix as usize];
+                                if v != 0.0 {
+                                    acc += v * w[r * g.out_c + oc];
+                                }
+                            }
+                            r += 1;
+                        }
+                    }
+                }
+                out[(oc * g.out_hw + oy) * g.out_hw + ox] = acc;
+            }
+        }
+    }
+}
+
+/// Channel-wise `f × f` max pooling with stride `f` over a CHW sample
+/// (`hw` divisible by `f`); writes the pooled CHW sample into `out`.
+pub fn max_pool(x: &[f32], channels: usize, hw: usize, f: usize, out: &mut [f32]) {
+    assert!(f >= 1 && hw % f == 0, "pool factor must divide the grid");
+    let o = hw / f;
+    assert_eq!(x.len(), channels * hw * hw, "input must be c*hw^2");
+    assert_eq!(out.len(), channels * o * o, "output must be c*(hw/f)^2");
+    for c in 0..channels {
+        let plane = &x[c * hw * hw..(c + 1) * hw * hw];
+        for oy in 0..o {
+            for ox in 0..o {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..f {
+                    for dx in 0..f {
+                        m = m.max(plane[(oy * f + dy) * hw + ox * f + dx]);
+                    }
+                }
+                out[(c * o + oy) * o + ox] = m;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_mat(rng: &mut Rng, len: usize, zero_every: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                if zero_every > 0 && i % zero_every == 0 {
+                    0.0
+                } else {
+                    (rng.normal() * 0.5) as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pack_roundtrips() {
+        let mut rng = Rng::new(11);
+        for &(rows, cols) in &[(1usize, 1usize), (3, 5), (64, 64), (17, 130), (5, 200)] {
+            let w = random_mat(&mut rng, rows * cols, 0);
+            let packed = PackedMat::pack(&w, rows, cols);
+            assert_eq!(packed.unpack(), w, "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_bit_for_bit_across_odd_shapes() {
+        // Shapes chosen to straddle the panel/block boundaries: below,
+        // exactly at, and not-a-multiple-of PANEL_COLS/BLOCK_ROWS.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (2, 64, 64),
+            (4, 65, 63),
+            (1, 100, 130),
+            (5, 129, 65),
+            (17, 23, 31),
+            (16, 200, 70),
+        ];
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &shapes {
+            let x = random_mat(&mut rng, m * k, 3); // every 3rd input exactly 0
+            let w = random_mat(&mut rng, k * n, 0);
+            let packed = PackedMat::pack(&w, k, n);
+            let mut naive = vec![0f32; m * n];
+            let mut blocked = vec![0f32; m * n];
+            matmul_naive(&x, &w, m, k, n, &mut naive);
+            matmul_blocked_threads(&x, &packed, m, 1, &mut blocked);
+            let nb = naive.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            let bb = blocked.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(nb, bb, "bitwise divergence at shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn thread_split_does_not_change_results() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (9, 150, 140);
+        let x = random_mat(&mut rng, m * k, 4);
+        let w = random_mat(&mut rng, k * n, 0);
+        let packed = PackedMat::pack(&w, k, n);
+        let mut seq = vec![0f32; m * n];
+        matmul_blocked_threads(&x, &packed, m, 1, &mut seq);
+        for threads in [2, 3, 8, 64] {
+            let mut mt = vec![0f32; m * n];
+            matmul_blocked_threads(&x, &packed, m, threads, &mut mt);
+            assert_eq!(seq, mt, "threads={threads}");
+        }
+        // The auto-threaded entry point agrees too.
+        let mut auto = vec![0f32; m * n];
+        matmul_blocked(&x, &packed, m, &mut auto);
+        assert_eq!(seq, auto);
+    }
+
+    #[test]
+    fn im2col_matmul_matches_direct_conv_bit_for_bit() {
+        // Fixed-seed 3-channel 6x6 input, 4 output channels, stride 2,
+        // asymmetric coverage of the zero padding.
+        let g = ConvGeom {
+            in_c: 3,
+            out_c: 4,
+            kernel: 3,
+            stride: 2,
+            padding: 1,
+            in_hw: 6,
+            out_hw: 3,
+        };
+        let mut rng = Rng::new(42);
+        let x = random_mat(&mut rng, g.in_features(), 5);
+        let w = random_mat(&mut rng, g.patch_len() * g.out_c, 0);
+
+        let mut direct = vec![0f32; g.out_c * g.num_positions()];
+        conv2d_ref(&x, &w, &g, &mut direct);
+
+        // Lowered path, chunked to exercise the pos0 offsets.
+        let npos = g.num_positions();
+        let mut lowered = vec![0f32; g.out_c * npos];
+        let chunk = 4;
+        let mut patches = vec![0f32; chunk * g.patch_len()];
+        let mut prod = vec![0f32; chunk * g.out_c];
+        let packed = PackedMat::pack(&w, g.patch_len(), g.out_c);
+        let mut pos0 = 0;
+        while pos0 < npos {
+            let mchunk = chunk.min(npos - pos0);
+            im2col_chunk(&x, &g, pos0, mchunk, &mut patches[..mchunk * g.patch_len()]);
+            matmul_blocked(
+                &patches[..mchunk * g.patch_len()],
+                &packed,
+                mchunk,
+                &mut prod[..mchunk * g.out_c],
+            );
+            for p in 0..mchunk {
+                for oc in 0..g.out_c {
+                    lowered[oc * npos + pos0 + p] = prod[p * g.out_c + oc];
+                }
+            }
+            pos0 += mchunk;
+        }
+        let db = direct.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let lb = lowered.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(db, lb, "im2col+matmul must equal direct convolution");
+    }
+
+    #[test]
+    fn im2col_stride_one_padding_keeps_geometry() {
+        // 1 channel, 3x3 kernel, pad 1, stride 1: the center patch of a
+        // one-hot input picks up exactly the kernel taps.
+        let g = ConvGeom {
+            in_c: 1,
+            out_c: 1,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+            in_hw: 4,
+            out_hw: 4,
+        };
+        let mut x = vec![0f32; 16];
+        x[5] = 1.0; // (y=1, x=1)
+        let mut patches = vec![0f32; g.num_positions() * g.patch_len()];
+        im2col_chunk(&x, &g, 0, g.num_positions(), &mut patches);
+        // Output position (1,1) sees the hot pixel at its center tap (1,1).
+        let pos = 5; // oy=1, ox=1
+        let patch = &patches[pos * 9..(pos + 1) * 9];
+        assert_eq!(patch[4], 1.0);
+        assert_eq!(patch.iter().filter(|&&v| v != 0.0).count(), 1);
+        // Corner position (0,0): the hot pixel lands at tap (2,2).
+        let corner = &patches[0..9];
+        assert_eq!(corner[8], 1.0);
+    }
+
+    #[test]
+    fn max_pool_reduces_grid() {
+        // 1 channel 4x4 ramp; 2x2 max pooling keeps each window's max.
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut out = vec![0f32; 4];
+        max_pool(&x, 1, 4, 2, &mut out);
+        assert_eq!(out, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+}

@@ -7,6 +7,7 @@
 //! /opt/xla-example/README.md and DESIGN.md §1).
 
 pub mod engine;
+pub mod gemm;
 pub mod simnet;
 
 use crate::util::io::Tensor;

@@ -3,82 +3,127 @@
 //! The live path executes quantized inference through compiled PJRT
 //! artifacts; when those (or the XLA runtime itself) are unavailable, the
 //! serving stack would previously be untestable offline. [`SimBackend`]
-//! closes that gap: it builds a synthetic-weight MLP from a network
-//! *geometry* (`nets::Network`, linear layers only) and executes the same
-//! quantized-forward ABI — per-layer `w_bits`/`a_bits` vectors, fixed-size
-//! batches — with fake-quantization identical in structure to the Pallas
-//! kernels (symmetric per-tensor weight quantization, post-ReLU activation
-//! quantization).
+//! closes that gap: it builds synthetic weights from a network *geometry*
+//! (`nets::Network`) and executes the same quantized-forward ABI — per-layer
+//! `w_bits`/`a_bits` vectors, fixed-size batches — with fake-quantization
+//! identical in structure to the Pallas kernels (symmetric per-tensor
+//! weight quantization, post-ReLU activation quantization).
+//!
+//! Fully-connected layers run directly through the blocked matmul kernel
+//! (`runtime::gemm`); conv layers are lowered to im2col + the same kernel,
+//! exactly the paper's §II view of a conv as a lowered R×N weight matrix
+//! streaming W² input vectors. Inter-layer max pooling is inferred from the
+//! geometry (the benchmark nets list only weight-bearing layers, so a
+//! spatial shrink between consecutive convs — or a conv followed by a
+//! smaller FC — implies the pooling stage that the real nets put there).
+//! Networks whose layers do not chain sequentially (e.g. ResNet residual
+//! projections) are rejected by the [`SimBackend::supports`] capability
+//! query, which callers use to report a typed error *before* building a
+//! backend.
 //!
 //! Weights are synthetic (seeded He-scaled Gaussians), so logits carry no
 //! trained meaning; what the backend faithfully reproduces is everything
 //! the coordinator cares about: shapes, batching, per-layer bit-width
 //! plumbing, determinism, and failure modes.
 
-use crate::nets::{LayerKind, Network};
+use crate::nets::{Layer, LayerKind, Network};
+use crate::runtime::gemm::{self, ConvGeom, PackedMat};
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
 
-/// Pure-rust quantized-MLP backend (see module docs).
+/// Output positions lowered per im2col + matmul call: bounds the patch
+/// scratch buffer to ~`CONV_CHUNK · patch_len` floats regardless of the
+/// input resolution (a full 224×224 im2col would be hundreds of MB).
+const CONV_CHUNK: usize = 128;
+
+/// How one network layer executes on the sim backend.
+#[derive(Clone, Copy, Debug)]
+enum LayerExec {
+    /// Dense layer: one matmul over the batch.
+    Fc { in_f: usize, out_f: usize },
+    /// Conv layer lowered to im2col + matmul, followed by `pool × pool`
+    /// max pooling (1 = none) to reach the next layer's input grid.
+    Conv { geom: ConvGeom, pool: usize },
+}
+
+impl LayerExec {
+    /// (lowered rows, lowered cols) of the layer's weight matrix — the
+    /// same R×N the paper's tile equation sees (`nets::Layer::lowered_*`).
+    fn lowered_dims(&self) -> (usize, usize) {
+        match *self {
+            LayerExec::Fc { in_f, out_f } => (in_f, out_f),
+            LayerExec::Conv { geom, .. } => (geom.patch_len(), geom.out_c),
+        }
+    }
+
+    fn in_features(&self) -> usize {
+        match *self {
+            LayerExec::Fc { in_f, .. } => in_f,
+            LayerExec::Conv { geom, .. } => geom.in_features(),
+        }
+    }
+
+    fn out_features(&self) -> usize {
+        match *self {
+            LayerExec::Fc { out_f, .. } => out_f,
+            LayerExec::Conv { geom, pool } => {
+                let s = geom.out_hw / pool;
+                geom.out_c * s * s
+            }
+        }
+    }
+}
+
+/// Pure-rust quantized-forward backend (see module docs).
 pub struct SimBackend {
     name: String,
-    /// Per-layer (in_features, out_features).
-    dims: Vec<(usize, usize)>,
-    /// Row-major [in][out] synthetic weights per layer.
+    layers: Vec<LayerExec>,
+    /// Row-major lowered [rows][cols] synthetic weights per layer.
     weights: Vec<Vec<f32>>,
     eval_batch: usize,
-    /// Cached quantized weights for the last-seen `w_bits` vector.
-    cache: Option<(Vec<f32>, Vec<Vec<f32>>)>,
+    input_dim: usize,
+    num_classes: usize,
+    /// Packed quantized weights for the last-seen `w_bits` vector.
+    cache: Option<(Vec<f32>, Vec<PackedMat>)>,
 }
 
 impl SimBackend {
-    /// Build from a network geometry. Only fully-connected networks are
-    /// supported (conv benchmarks are served by the live engine only).
+    /// Capability query: can the sim backend execute this network? `Err`
+    /// carries the precise reason (e.g. a residual projection that breaks
+    /// the sequential chain); `serve` surfaces it as a typed `ApiError`
+    /// instead of a runtime string.
+    pub fn supports(net: &Network) -> Result<(), String> {
+        plan(net).map(|_| ())
+    }
+
+    /// Build from a network geometry. Any network accepted by
+    /// [`SimBackend::supports`] works — fully-connected chains and
+    /// sequential conv topologies (MLPs, VGG-style nets).
     pub fn from_network(net: &Network, eval_batch: usize, seed: u64) -> Result<SimBackend, String> {
-        if net.layers.is_empty() {
-            return Err("network has no layers".into());
-        }
         if eval_batch == 0 {
             return Err("eval_batch must be >= 1".into());
         }
-        let mut dims = Vec::with_capacity(net.layers.len());
-        for l in &net.layers {
-            match l.kind {
-                LayerKind::Linear { in_f, out_f } => {
-                    dims.push((in_f as usize, out_f as usize));
-                }
-                LayerKind::Conv2d { .. } => {
-                    return Err(format!(
-                        "sim backend serves fully-connected networks only; \
-                         {} has conv layer '{}'",
-                        net.name, l.name
-                    ));
-                }
-            }
-        }
-        for w in dims.windows(2) {
-            if w[0].1 != w[1].0 {
-                return Err(format!(
-                    "layer dims do not chain: {} outputs vs {} inputs",
-                    w[0].1, w[1].0
-                ));
-            }
-        }
+        let layers = plan(net)?;
         let mut rng = Rng::new(seed ^ 0x51A1_BACC);
-        let weights = dims
+        let weights = layers
             .iter()
-            .map(|&(inf, outf)| {
-                let scale = (2.0 / inf as f64).sqrt();
-                (0..inf * outf)
+            .map(|l| {
+                let (rows, cols) = l.lowered_dims();
+                let scale = (2.0 / rows as f64).sqrt();
+                (0..rows * cols)
                     .map(|_| (rng.normal() * scale) as f32)
                     .collect()
             })
             .collect();
+        let input_dim = layers[0].in_features();
+        let num_classes = layers[layers.len() - 1].out_features();
         Ok(SimBackend {
             name: net.name.clone(),
-            dims,
+            layers,
             weights,
             eval_batch,
+            input_dim,
+            num_classes,
             cache: None,
         })
     }
@@ -88,21 +133,239 @@ impl SimBackend {
         &self.name
     }
 
-    fn quantized_weights(&mut self, w_bits: &[f32]) -> &[Vec<f32>] {
+    fn quantized_weights(&mut self, w_bits: &[f32]) -> &[PackedMat] {
         let stale = match &self.cache {
             Some((bits, _)) => bits.as_slice() != w_bits,
             None => true,
         };
         if stale {
-            let q = self
+            let packed = self
                 .weights
                 .iter()
+                .zip(&self.layers)
                 .zip(w_bits)
-                .map(|(w, &b)| quantize_symmetric(w, b as u32))
+                .map(|((w, l), &b)| {
+                    let (rows, cols) = l.lowered_dims();
+                    PackedMat::pack(&quantize_symmetric(w, b as u32), rows, cols)
+                })
                 .collect();
-            self.cache = Some((w_bits.to_vec(), q));
+            self.cache = Some((w_bits.to_vec(), packed));
         }
         &self.cache.as_ref().unwrap().1
+    }
+}
+
+/// Resolve a network into per-layer execution plans, or explain why the
+/// sim backend cannot run it. Checks that consecutive layers chain (channel
+/// and feature counts match) and infers inter-layer pooling factors.
+fn plan(net: &Network) -> Result<Vec<LayerExec>, String> {
+    if net.layers.is_empty() {
+        return Err(format!("network '{}' has no layers", net.name));
+    }
+    let mut execs: Vec<LayerExec> = Vec::with_capacity(net.layers.len());
+    // What the previous layer produces: feature count, CHW grid when the
+    // producer is spatial, and the producer's name (for error messages).
+    let mut prev: Option<(usize, Option<(usize, usize)>, &str)> = None;
+    for (idx, l) in net.layers.iter().enumerate() {
+        let exec = match l.kind {
+            LayerKind::Linear { in_f, out_f } => {
+                let (in_f, out_f) = (in_f as usize, out_f as usize);
+                if in_f == 0 || out_f == 0 {
+                    return Err(format!("{}: layer '{}' has a zero dim", net.name, l.name));
+                }
+                if let Some((feat, _, pname)) = prev {
+                    if feat != in_f {
+                        return Err(format!(
+                            "{}: layer '{}' expects {} input features but '{}' produces {}",
+                            net.name, l.name, in_f, pname, feat
+                        ));
+                    }
+                }
+                LayerExec::Fc { in_f, out_f }
+            }
+            LayerKind::Conv2d {
+                in_c,
+                out_c,
+                kernel,
+                stride,
+                padding,
+                in_hw,
+            } => {
+                let geom = ConvGeom {
+                    in_c: in_c as usize,
+                    out_c: out_c as usize,
+                    kernel: kernel as usize,
+                    stride: stride as usize,
+                    padding: padding as usize,
+                    in_hw: in_hw as usize,
+                    out_hw: l.out_hw() as usize,
+                };
+                if geom.in_c == 0
+                    || geom.out_c == 0
+                    || geom.kernel == 0
+                    || geom.stride == 0
+                    || geom.out_hw == 0
+                {
+                    return Err(format!("{}: layer '{}' has a zero dim", net.name, l.name));
+                }
+                if let Some((feat, grid, pname)) = prev {
+                    match grid {
+                        Some((c, hw)) if (c, hw) != (geom.in_c, geom.in_hw) => {
+                            return Err(format!(
+                                "{}: layer '{}' expects {}ch@{}x{} but '{}' produces \
+                                 {}ch@{}x{} — sim backend executes sequential \
+                                 topologies only",
+                                net.name,
+                                l.name,
+                                geom.in_c,
+                                geom.in_hw,
+                                geom.in_hw,
+                                pname,
+                                c,
+                                hw,
+                                hw
+                            ));
+                        }
+                        None if feat != geom.in_features() => {
+                            return Err(format!(
+                                "{}: layer '{}' expects {} input features but '{}' \
+                                 produces {}",
+                                net.name,
+                                l.name,
+                                geom.in_features(),
+                                pname,
+                                feat
+                            ));
+                        }
+                        _ => {}
+                    }
+                }
+                let pool = match net.layers.get(idx + 1) {
+                    None => 1,
+                    Some(next) => pool_factor(&geom, l, next, &net.name)?,
+                };
+                LayerExec::Conv { geom, pool }
+            }
+        };
+        prev = Some(match exec {
+            LayerExec::Fc { out_f, .. } => (out_f, None, l.name.as_str()),
+            LayerExec::Conv { geom, pool } => {
+                let s = geom.out_hw / pool;
+                (geom.out_c * s * s, Some((geom.out_c, s)), l.name.as_str())
+            }
+        });
+        execs.push(exec);
+    }
+    Ok(execs)
+}
+
+/// Inter-layer pooling factor between a conv layer and its successor: the
+/// integer grid shrink that makes the conv's output match the successor's
+/// expected input (1 when the grids already agree).
+fn pool_factor(g: &ConvGeom, l: &Layer, next: &Layer, net: &str) -> Result<usize, String> {
+    let target_hw = match next.kind {
+        LayerKind::Conv2d { in_c, in_hw, .. } => {
+            if in_c as usize != g.out_c {
+                return Err(format!(
+                    "{net}: conv '{}' produces {} channels but '{}' expects {} — \
+                     sim backend executes sequential topologies only",
+                    l.name, g.out_c, next.name, in_c
+                ));
+            }
+            in_hw as usize
+        }
+        LayerKind::Linear { in_f, .. } => {
+            // The FC layer flattens a CHW volume: in_f = out_c · s².
+            let in_f = in_f as usize;
+            let s = if in_f % g.out_c == 0 {
+                integer_sqrt(in_f / g.out_c)
+            } else {
+                None
+            };
+            match s {
+                Some(s) => s,
+                None => {
+                    return Err(format!(
+                        "{net}: FC layer '{}' input {} does not flatten the {} \
+                         channels conv '{}' produces",
+                        next.name, in_f, g.out_c, l.name
+                    ));
+                }
+            }
+        }
+    };
+    if target_hw == 0 || target_hw > g.out_hw || g.out_hw % target_hw != 0 {
+        return Err(format!(
+            "{net}: conv '{}' output grid {}x{} cannot pool down to the {}x{} \
+             grid '{}' expects",
+            l.name, g.out_hw, g.out_hw, target_hw, target_hw, next.name
+        ));
+    }
+    Ok(g.out_hw / target_hw)
+}
+
+/// Exact integer square root, if `n` is a perfect square.
+fn integer_sqrt(n: usize) -> Option<usize> {
+    let s = (n as f64).sqrt().round() as usize;
+    if s.checked_mul(s) == Some(n) {
+        Some(s)
+    } else {
+        None
+    }
+}
+
+/// One conv layer over the batch: per sample, chunked im2col + blocked
+/// matmul into a CHW activation volume, then optional ReLU and pooling.
+fn conv_forward(
+    h: &[f32],
+    b: usize,
+    g: &ConvGeom,
+    pool: usize,
+    w: &PackedMat,
+    relu: bool,
+) -> Vec<f32> {
+    let in_feat = g.in_features();
+    let npos = g.num_positions();
+    let pl = g.patch_len();
+    let pooled_hw = g.out_hw / pool;
+    let out_feat = g.out_c * pooled_hw * pooled_hw;
+    let chunk = CONV_CHUNK.min(npos);
+    let mut out = vec![0f32; b * out_feat];
+    let mut patches = vec![0f32; chunk * pl];
+    let mut prod = vec![0f32; chunk * g.out_c];
+    let mut conv_out = vec![0f32; g.out_c * npos];
+    for s in 0..b {
+        let xs = &h[s * in_feat..(s + 1) * in_feat];
+        let mut pos0 = 0;
+        while pos0 < npos {
+            let m = chunk.min(npos - pos0);
+            gemm::im2col_chunk(xs, g, pos0, m, &mut patches[..m * pl]);
+            gemm::matmul_blocked(&patches[..m * pl], w, m, &mut prod[..m * g.out_c]);
+            // The matmul emits position-major rows (HWC); the activation
+            // layout between layers is CHW, so transpose while scattering.
+            for (p, row) in prod[..m * g.out_c].chunks_exact(g.out_c).enumerate() {
+                for (oc, &v) in row.iter().enumerate() {
+                    conv_out[oc * npos + pos0 + p] = v;
+                }
+            }
+            pos0 += m;
+        }
+        if relu {
+            relu_inplace(&mut conv_out);
+        }
+        let dst = &mut out[s * out_feat..(s + 1) * out_feat];
+        if pool == 1 {
+            dst.copy_from_slice(&conv_out);
+        } else {
+            gemm::max_pool(&conv_out, g.out_c, g.out_hw, pool, dst);
+        }
+    }
+    out
+}
+
+fn relu_inplace(h: &mut [f32]) {
+    for v in h.iter_mut() {
+        *v = v.max(0.0);
     }
 }
 
@@ -142,13 +405,13 @@ impl crate::coordinator::InferenceBackend for SimBackend {
         "sim"
     }
     fn num_layers(&self) -> usize {
-        self.dims.len()
+        self.layers.len()
     }
     fn input_dim(&self) -> usize {
-        self.dims[0].0
+        self.input_dim
     }
     fn num_classes(&self) -> usize {
-        self.dims[self.dims.len() - 1].1
+        self.num_classes
     }
     fn eval_batch(&self) -> usize {
         self.eval_batch
@@ -156,46 +419,38 @@ impl crate::coordinator::InferenceBackend for SimBackend {
 
     fn eval(&mut self, x: Vec<f32>, w_bits: Vec<f32>, a_bits: Vec<f32>) -> Result<Vec<f32>> {
         let b = self.eval_batch;
-        let (dim, classes) = (self.dims[0].0, self.dims[self.dims.len() - 1].1);
+        let (dim, classes) = (self.input_dim, self.num_classes);
         if x.len() != b * dim {
             bail!("sim eval expects exactly {}x{} inputs, got {}", b, dim, x.len());
         }
-        if w_bits.len() != self.dims.len() || a_bits.len() != self.dims.len() {
+        if w_bits.len() != self.layers.len() || a_bits.len() != self.layers.len() {
             bail!(
                 "bit vectors must have {} entries, got w={} a={}",
-                self.dims.len(),
+                self.layers.len(),
                 w_bits.len(),
                 a_bits.len()
             );
         }
-        let n_layers = self.dims.len();
-        let dims = self.dims.clone();
-        let weights = self.quantized_weights(&w_bits);
+        let n_layers = self.layers.len();
+        let layers = self.layers.clone();
+        let packed = self.quantized_weights(&w_bits);
 
         let mut h = x;
-        for (l, (&(inf, outf), w)) in dims.iter().zip(weights).enumerate() {
+        for (l, (exec, w)) in layers.iter().zip(packed).enumerate() {
             // Quantize this layer's input activations to a_bits[l].
             quantize_activations(&mut h, a_bits[l] as u32);
-            let mut out = vec![0f32; b * outf];
-            for row in 0..b {
-                let xin = &h[row * inf..(row + 1) * inf];
-                let yout = &mut out[row * outf..(row + 1) * outf];
-                for (i, &xi) in xin.iter().enumerate() {
-                    if xi == 0.0 {
-                        continue;
+            let relu = l + 1 < n_layers; // ReLU on hidden layers only
+            h = match *exec {
+                LayerExec::Fc { out_f, .. } => {
+                    let mut out = vec![0f32; b * out_f];
+                    gemm::matmul_blocked(&h, w, b, &mut out);
+                    if relu {
+                        relu_inplace(&mut out);
                     }
-                    let wrow = &w[i * outf..(i + 1) * outf];
-                    for (yj, &wj) in yout.iter_mut().zip(wrow) {
-                        *yj += xi * wj;
-                    }
+                    out
                 }
-            }
-            if l + 1 < n_layers {
-                for v in out.iter_mut() {
-                    *v = v.max(0.0); // ReLU on hidden layers
-                }
-            }
-            h = out;
+                LayerExec::Conv { geom, pool } => conv_forward(&h, b, &geom, pool, w, relu),
+            };
         }
         debug_assert_eq!(h.len(), b * classes);
         Ok(h)
@@ -222,9 +477,47 @@ mod tests {
     }
 
     #[test]
-    fn conv_networks_are_rejected() {
-        let err = SimBackend::from_network(&nets::resnet::resnet18(), 4, 7).unwrap_err();
-        assert!(err.contains("conv"), "{err}");
+    fn sequential_conv_networks_are_supported() {
+        assert!(SimBackend::supports(&nets::conv_tiny()).is_ok());
+        assert!(SimBackend::supports(&nets::vgg16()).is_ok());
+        assert!(SimBackend::supports(&nets::mlp_mnist()).is_ok());
+    }
+
+    #[test]
+    fn residual_networks_are_rejected_with_a_reason() {
+        // ResNet downsample projections branch off the sequential chain.
+        let err = SimBackend::supports(&nets::resnet::resnet18()).unwrap_err();
+        assert!(err.contains("sequential"), "{err}");
+        assert!(err.contains("downsample"), "{err}");
+        // from_network reports the same reason.
+        let err2 = SimBackend::from_network(&nets::resnet::resnet18(), 4, 7).unwrap_err();
+        assert_eq!(err, err2);
+    }
+
+    #[test]
+    fn channel_mismatch_is_rejected() {
+        let net = nets::Network {
+            name: "bad-chain".into(),
+            layers: vec![
+                nets::Layer::conv("c1", 3, 4, 3, 1, 1, 8),
+                nets::Layer::conv("c2", 8, 4, 3, 1, 1, 8),
+            ],
+        };
+        let err = SimBackend::supports(&net).unwrap_err();
+        assert!(err.contains("channels"), "{err}");
+    }
+
+    #[test]
+    fn non_square_flatten_is_rejected() {
+        let net = nets::Network {
+            name: "bad-flatten".into(),
+            layers: vec![
+                nets::Layer::conv("c1", 3, 4, 3, 1, 1, 8),
+                nets::Layer::linear("fc", 4 * 3, 10), // 3 is not a square
+            ],
+        };
+        let err = SimBackend::supports(&net).unwrap_err();
+        assert!(err.contains("flatten"), "{err}");
     }
 
     #[test]
@@ -241,14 +534,41 @@ mod tests {
     }
 
     #[test]
+    fn conv_eval_is_deterministic_and_shaped() {
+        let net = nets::conv_tiny();
+        let nl = net.num_layers();
+        let mut a = SimBackend::from_network(&net, 2, 9).unwrap();
+        let mut b = SimBackend::from_network(&net, 2, 9).unwrap();
+        assert_eq!(a.input_dim(), 3 * 8 * 8);
+        assert_eq!(a.num_classes(), 10);
+        let x: Vec<f32> = (0..2 * 192).map(|i| ((i * 7) % 23) as f32 / 23.0 - 0.3).collect();
+        let bits = vec![8.0f32; nl];
+        let ya = a.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+        let yb = b.eval(x, bits.clone(), bits).unwrap();
+        assert_eq!(ya.len(), 2 * 10);
+        assert_eq!(ya, yb);
+        assert!(ya.iter().all(|v| v.is_finite()));
+        assert!(ya.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
     fn bit_widths_change_the_outputs() {
         let mut b = backend();
         let x: Vec<f32> = (0..4 * 256).map(|i| ((i * 31) % 101) as f32 / 101.0).collect();
-        let y8 = b
-            .eval(x.clone(), vec![8.0; 4], vec![8.0; 4])
-            .unwrap();
+        let y8 = b.eval(x.clone(), vec![8.0; 4], vec![8.0; 4]).unwrap();
         let y2 = b.eval(x, vec![2.0; 4], vec![2.0; 4]).unwrap();
         assert_ne!(y8, y2, "quantization must affect the forward pass");
+    }
+
+    #[test]
+    fn conv_bit_widths_change_the_outputs() {
+        let net = nets::conv_tiny();
+        let nl = net.num_layers();
+        let mut b = SimBackend::from_network(&net, 2, 5).unwrap();
+        let x: Vec<f32> = (0..2 * 192).map(|i| ((i * 13) % 31) as f32 / 31.0).collect();
+        let y8 = b.eval(x.clone(), vec![8.0; nl], vec![8.0; nl]).unwrap();
+        let y2 = b.eval(x, vec![2.0; nl], vec![2.0; nl]).unwrap();
+        assert_ne!(y8, y2, "quantization must affect the conv forward pass");
     }
 
     #[test]
