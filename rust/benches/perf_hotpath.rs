@@ -14,6 +14,8 @@ use lrmp::replication::{self, LayerSummary, Objective};
 use lrmp::rl::ddpg::{Ddpg, DdpgConfig, Transition};
 use lrmp::rl::env::OBS_DIM;
 use lrmp::runtime;
+use lrmp::runtime::gemm::{self, PackedMat};
+use lrmp::runtime::pool::WorkerPool;
 use lrmp::sim;
 use lrmp::util::json::Json;
 use lrmp::util::prng::Rng;
@@ -118,6 +120,45 @@ fn main() {
     println!(
         "  -> {:.2} M events/s (target ≥ 0.1 M)\n",
         sim_res.events as f64 / r.mean() / 1e6
+    );
+
+    // --- sim serving hot path: pool dispatch vs thread::scope spawn ---
+    let threads = gemm::worker_threads();
+    let pool = WorkerPool::new(threads);
+    let parts = threads.max(2);
+    let r = b.run("pool: dispatch trivial job (persistent workers)", || {
+        pool.run(parts, |p| {
+            std::hint::black_box(p);
+        });
+    });
+    let pool_us = r.mean() * 1e6;
+    let r = b.run("pool: thread::scope spawn equivalent", || {
+        std::thread::scope(|s| {
+            for p in 0..parts {
+                s.spawn(move || std::hint::black_box(p));
+            }
+        });
+    });
+    println!(
+        "  -> pool dispatch {pool_us:.1} us vs scope spawn {:.1} us ({parts} parts, \
+         {threads} threads)\n",
+        r.mean() * 1e6
+    );
+    let (m, k, n) = (16usize, 1024usize, 1024usize);
+    let x: Vec<f32> = (0..m * k).map(|i| ((i * 7) % 19) as f32 / 19.0).collect();
+    let wm: Vec<f32> = (0..k * n).map(|i| ((i * 11) % 23) as f32 / 23.0 - 0.5).collect();
+    let packed = PackedMat::pack(&wm, k, n);
+    let mut y = vec![0f32; m * n];
+    let r = b.run("gemm: scope kernel 16x1024x1024", || {
+        gemm::matmul_blocked(&x, &packed, m, &mut y);
+    });
+    let scope_s = r.mean();
+    let r = b.run("gemm: pooled tiled kernel 16x1024x1024", || {
+        gemm::matmul_pooled(&x, &packed, m, &pool, &mut y);
+    });
+    println!(
+        "  -> pooled kernel x{:.2} over the scope kernel on the serving shape\n",
+        scope_s / r.mean().max(1e-12)
     );
 
     // --- JSON substrate ---

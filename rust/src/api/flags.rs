@@ -104,6 +104,7 @@ const SERVE_FLAGS: &[FlagDef] = &[
     val("max-wait-ms", "batcher flush deadline in ms (default 4)"),
     val("backend", "auto|live|sim (default auto)"),
     val("eval-batch", "sim backend batch size (default 16, conv nets 2)"),
+    val("threads", "sim kernel pool workers (default: machine parallelism)"),
 ];
 
 const INSPECT_FLAGS: &[FlagDef] = &[val("deployment", "artifact to inspect (or positional FILE)")];

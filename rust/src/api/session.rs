@@ -62,6 +62,12 @@ pub struct ServeOptions {
     /// higher). Ignored by the live backend (its AOT artifact fixes the
     /// batch shape).
     pub eval_batch: Option<usize>,
+    /// Worker threads of the sim backend's persistent kernel pool
+    /// (`None`: machine parallelism, `LRMP_SIM_THREADS` override honored;
+    /// clamped to `runtime::pool::MAX_THREADS`). `serve` reports the
+    /// effective count so perf runs are reproducible from logs. Ignored
+    /// by the live backend.
+    pub threads: Option<usize>,
 }
 
 /// Builder for one search run plus the artifact-centric phase entry points.
@@ -345,6 +351,9 @@ impl Session {
         if opts.eval_batch == Some(0) {
             return Err(ApiError::InvalidConfig("eval batch must be >= 1".into()));
         }
+        if opts.threads == Some(0) {
+            return Err(ApiError::InvalidConfig("threads must be >= 1".into()));
+        }
         dep.validate()?;
         let net = nets::by_name(&dep.net).ok_or_else(|| ApiError::UnknownNetwork {
             name: dep.net.clone(),
@@ -409,8 +418,9 @@ impl Session {
             reason,
         })?;
         let eval_batch = opts.eval_batch.unwrap_or_else(|| default_sim_batch(net));
-        let backend = SimBackend::from_network(net, eval_batch, dep.provenance.seed)
-            .map_err(ApiError::Runtime)?;
+        let backend =
+            SimBackend::from_network_opts(net, eval_batch, dep.provenance.seed, opts.threads)
+                .map_err(ApiError::Runtime)?;
         Ok(Server::start(backend, &dep.policy, batch_policy))
     }
 }
@@ -522,10 +532,41 @@ mod tests {
         .unwrap();
         let opts = ServeOptions {
             eval_batch: Some(0),
+            ..ServeOptions::default()
         };
         let err = Session::serve_opts(&dep, BatchPolicy::default(), ServeBackend::Sim, opts)
             .map(|_| ())
             .unwrap_err();
         assert!(matches!(err, ApiError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn zero_threads_rejected_and_explicit_count_is_surfaced() {
+        let nl = nets::mlp_tiny().num_layers();
+        let dep = Deployment::from_policy(
+            "mlp-tiny",
+            &ChipConfig::paper_scaled(),
+            Objective::Latency,
+            Policy::baseline(nl),
+            vec![1; nl],
+            None,
+        )
+        .unwrap();
+        let bad = ServeOptions {
+            threads: Some(0),
+            ..ServeOptions::default()
+        };
+        let err = Session::serve_opts(&dep, BatchPolicy::default(), ServeBackend::Sim, bad)
+            .map(|_| ())
+            .unwrap_err();
+        assert!(matches!(err, ApiError::InvalidConfig(_)));
+
+        let opts = ServeOptions {
+            threads: Some(3),
+            ..ServeOptions::default()
+        };
+        let server =
+            Session::serve_opts(&dep, BatchPolicy::default(), ServeBackend::Sim, opts).unwrap();
+        assert_eq!(server.exec_threads, 3, "effective thread count must be surfaced");
     }
 }

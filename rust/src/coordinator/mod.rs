@@ -39,6 +39,12 @@ pub trait InferenceBackend: Send + 'static {
     fn num_classes(&self) -> usize;
     /// Fixed batch size the backend executes.
     fn eval_batch(&self) -> usize;
+    /// Worker threads the backend's kernels fan out across (1 = inline;
+    /// the sim backend reports its persistent pool size). Surfaced in the
+    /// serve output so perf runs are reproducible from logs.
+    fn worker_threads(&self) -> usize {
+        1
+    }
     /// Quantized inference on one fixed-size batch: `x` is
     /// `[eval_batch · input_dim]`, bit vectors are per-layer; returns
     /// logits `[eval_batch · num_classes]`.
@@ -84,6 +90,9 @@ pub struct Server {
     pub policy: Policy,
     /// `InferenceBackend::backend_name` of the executing backend.
     pub backend_name: &'static str,
+    /// `InferenceBackend::worker_threads` of the executing backend: how
+    /// many threads its kernels fan out across (1 = inline execution).
+    pub exec_threads: usize,
     input_dim: usize,
 }
 
@@ -111,6 +120,7 @@ impl Server {
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let input_dim = backend.input_dim();
         let backend_name = backend.backend_name();
+        let exec_threads = backend.worker_threads();
         let (wb, ab): (Vec<f32>, Vec<f32>) = (
             policy.layers.iter().map(|l| l.w_bits as f32).collect(),
             policy.layers.iter().map(|l| l.a_bits as f32).collect(),
@@ -128,6 +138,7 @@ impl Server {
             metrics,
             policy: policy.clone(),
             backend_name,
+            exec_threads,
             input_dim,
         }
     }

@@ -360,7 +360,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         None
     };
-    let opts = ServeOptions { eval_batch };
+    let threads = if args.flags.contains_key("threads") {
+        Some(parsed(args, "threads", 0usize)?)
+    } else {
+        None
+    };
+    let opts = ServeOptions {
+        eval_batch,
+        threads,
+    };
     let server = Session::serve_opts(
         &dep,
         BatchPolicy {
@@ -376,10 +384,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .iter()
         .map(|l| format!("{}/{}", l.w_bits, l.a_bits))
         .collect();
+    // Surface the effective kernel thread count and whether the
+    // persistent pool is fanning work out, so a perf run's configuration
+    // is reproducible from its log alone.
+    let pool_state = if server.exec_threads > 1 {
+        "persistent pool active"
+    } else {
+        "inline, no pool fan-out"
+    };
     println!(
-        "serving {} [{} backend] — per-layer w/a bits {:?} — {clients} clients x {} requests",
+        "serving {} [{} backend, {} kernel thread(s), {pool_state}] — per-layer w/a bits {:?} \
+         — {clients} clients x {} requests",
         dep.net,
         server.backend_name,
+        server.exec_threads,
         bits,
         requests / clients
     );
@@ -479,8 +497,12 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     );
     println!("  validation  cost model re-run OK ({} tiles)", cost.tiles_used);
     match lrmp::runtime::simnet::SimBackend::supports(&net) {
-        Ok(()) => println!("  sim backend supported (servable offline via --backend sim)"),
-        Err(reason) => println!("  sim backend unsupported: {reason}"),
+        Ok(()) => println!(
+            "  sim backend  supported (servable offline via --backend sim; kernel pool \
+             defaults to {} thread(s), override with serve --threads N)",
+            lrmp::runtime::pool::default_threads()
+        ),
+        Err(reason) => println!("  sim backend  unsupported: {reason}"),
     }
 
     let mut t = Table::new(&["layer", "w", "a", "r", "tiles", "eff cycles"]);

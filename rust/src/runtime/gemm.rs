@@ -1,25 +1,37 @@
 //! Quantized-matmul kernels shared by the FC and conv (im2col) paths of the
 //! offline sim backend.
 //!
-//! Two kernels compute `out[m×n] = x[m×k] · w[k×n]`:
+//! Three kernels compute `out[m×n] = x[m×k] · w[k×n]`:
 //!
 //! - [`matmul_naive`]: the reference triple loop (the historical
 //!   `SimBackend` hot path) — axpy over the output row, inputs equal to
 //!   exactly zero skipped.
-//! - [`matmul_blocked`]: a cache-blocked kernel over a column-panel
-//!   *packed* weight layout ([`PackedMat`]), register-tiled over a local
-//!   accumulator and split across threads by batch rows for large shapes.
+//! - [`matmul_blocked`]: the PR 2 kernel — cache-blocked over a
+//!   column-panel *packed* weight layout ([`PackedMat`]), one scalar
+//!   accumulator row, split across fresh `thread::scope` workers by batch
+//!   rows for large shapes. Kept as the bench comparator for the pooled
+//!   kernel (its per-call spawn/join is exactly the overhead the pool
+//!   removes).
+//! - [`matmul_pooled`]: the serving hot-path kernel — the same packed
+//!   layout driven through a register-tiled microkernel
+//!   ([`TILE_ROWS`]`×`[`TILE_COLS`] accumulator tiles whose fixed-size
+//!   inner loops autovectorize on stable Rust) and fanned out over a
+//!   persistent [`WorkerPool`](crate::runtime::pool::WorkerPool) instead
+//!   of per-call thread spawns.
 //!
-//! Both kernels accumulate every output element over the reduction index in
-//! the same ascending order with the same skip-exact-zero rule, so their
-//! results agree **bit for bit** (floating-point addition is not
-//! associative, but neither kernel ever reassociates: blocking only changes
-//! *when* a partial sum is resumed, never the order of its terms; and
-//! `acc + ±0.0 == acc` bitwise for every value the kernels can produce,
-//! since a running sum that starts at +0.0 can never become -0.0). The
-//! bench harness and CI smoke job exploit this: any divergence between the
-//! kernels is a hard failure, not a tolerance judgement. Inputs are assumed
-//! finite (synthetic quantized weights and activations always are).
+//! All kernels accumulate every output element over the reduction index in
+//! the same ascending order, so their results agree **bit for bit**
+//! (floating-point addition is not associative, but no kernel ever
+//! reassociates: blocking only changes *when* a partial sum is resumed,
+//! never the order of its terms). The naive kernel skips inputs equal to
+//! exactly zero while the tiled microkernel adds them branchlessly; both
+//! are bitwise no-ops because `acc + ±0.0 == acc` for every value the
+//! kernels can produce — a running sum that starts at +0.0 can never
+//! become -0.0 (IEEE 754: `a + b == -0.0` only when both addends are
+//! -0.0). The bench harness and CI smoke job exploit this: any divergence
+//! between the kernels is a hard failure, not a tolerance judgement.
+//! Inputs are assumed finite (synthetic quantized weights and activations
+//! always are).
 //!
 //! The module also hosts the conv lowering helpers: [`im2col_chunk`]
 //! (patch-matrix construction, chunked so the scratch buffer stays
@@ -27,16 +39,27 @@
 //! reference [`conv2d_ref`] used by the tests — written with the same
 //! reduction order, so im2col + matmul matches it bit for bit as well.
 
+use crate::runtime::pool::{self, WorkerPool};
+
 /// Column-panel width of the packed weight layout, in f32 lanes.
 pub const PANEL_COLS: usize = 64;
 /// Reduction-dimension block: rows of a panel processed per pass while the
 /// panel block (`BLOCK_ROWS × PANEL_COLS × 4` bytes = 16 KiB) stays L1-hot.
 pub const BLOCK_ROWS: usize = 64;
-/// Below this many flops (2·m·k·n) the kernel stays single-threaded:
+/// Microkernel register-tile height: batch rows whose accumulators live in
+/// registers together, so each streamed weight row is reused this many
+/// times per load.
+pub const TILE_ROWS: usize = 4;
+/// Microkernel register-tile width in f32 lanes (two 8-lane vectors); the
+/// fixed-size inner loops over this width autovectorize on stable Rust.
+pub const TILE_COLS: usize = 16;
+/// Below this many flops (2·m·k·n) the scope kernel stays single-threaded:
 /// thread-spawn overhead would dominate.
 const MT_MIN_FLOPS: usize = 1 << 24;
-/// Upper bound on worker threads (beyond this, memory bandwidth saturates).
-const MT_MAX_THREADS: usize = 16;
+/// Multithreading threshold of the pooled kernel. Waking parked workers
+/// costs microseconds instead of the scope kernel's spawn/join, so the
+/// pool pays off on much smaller shapes.
+const POOL_MIN_FLOPS: usize = 1 << 21;
 
 /// A weight matrix packed into column panels: panel `p` holds columns
 /// `[p·PANEL_COLS, min((p+1)·PANEL_COLS, cols))`, stored row-major within
@@ -121,7 +144,7 @@ pub fn matmul_blocked(x: &[f32], w: &PackedMat, m: usize, out: &mut [f32]) {
     let threads = if flops < MT_MIN_FLOPS {
         1
     } else {
-        default_threads().min(m)
+        pool::default_threads().min(m)
     };
     matmul_blocked_threads(x, w, m, threads.max(1), out);
 }
@@ -198,21 +221,202 @@ fn gemm_task(x: &[f32], rows: usize, k: usize, n: usize, data: &[f32], out: &mut
     }
 }
 
-/// The worker count [`matmul_blocked`] uses for large shapes
-/// (`LRMP_SIM_THREADS` override honored) — exposed for bench reporting.
+/// The worker count [`matmul_blocked`] and default-built pools use for
+/// large shapes (`LRMP_SIM_THREADS` override honored) — exposed for bench
+/// reporting.
 pub fn worker_threads() -> usize {
-    default_threads()
+    pool::default_threads()
 }
 
-/// Worker count: `LRMP_SIM_THREADS` when set, else the machine parallelism.
-fn default_threads() -> usize {
-    std::env::var("LRMP_SIM_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-        })
-        .clamp(1, MT_MAX_THREADS)
+// ----------------------------------------------------------------------
+// Pooled, register-tiled kernel (the serving hot path)
+// ----------------------------------------------------------------------
+
+/// Output base pointer smuggled into a pool closure; every part writes a
+/// disjoint range, so sharing the pointer across workers is sound. Also
+/// used by `runtime::simnet`'s parallel-over-samples conv path.
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Pooled kernel: `out[m×n] = x[m×k] · w` over the packed layout through
+/// the register-tiled microkernel, fanned out across `pool` for large
+/// shapes (small ones run inline — waking workers costs more than the
+/// matmul). Bit-for-bit identical to [`matmul_naive`] (see module docs).
+pub fn matmul_pooled(x: &[f32], w: &PackedMat, m: usize, pool: &WorkerPool, out: &mut [f32]) {
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(w.rows)
+        .saturating_mul(w.cols);
+    let threads = if flops < POOL_MIN_FLOPS {
+        1
+    } else {
+        pool.threads().min(m)
+    };
+    matmul_pooled_threads(x, w, m, pool, threads.max(1), out);
+}
+
+/// [`matmul_pooled`] with an explicit worker count (1 = fully inline on
+/// the calling thread). The split is by batch rows in [`TILE_ROWS`]
+/// multiples and every output element is computed by exactly one part in
+/// the canonical reduction order — results are identical for every
+/// `threads` value and equal to the other kernels bit for bit.
+pub fn matmul_pooled_threads(
+    x: &[f32],
+    w: &PackedMat,
+    m: usize,
+    pool: &WorkerPool,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let (k, n) = (w.rows, w.cols);
+    assert_eq!(x.len(), m * k, "x must be m*k");
+    assert_eq!(out.len(), m * n, "out must be m*n");
+    out.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, m);
+    let data = w.data.as_slice();
+    if threads == 1 {
+        gemm_chunk_tiled(x, m, k, n, data, out);
+        return;
+    }
+    // ~2 parts per thread so a worker that finishes early steals another
+    // chunk; chunks are TILE_ROWS multiples to keep full register tiles.
+    let target = threads * 2;
+    let mut rows_per = (m + target - 1) / target;
+    rows_per = ((rows_per + TILE_ROWS - 1) / TILE_ROWS) * TILE_ROWS;
+    let parts = (m + rows_per - 1) / rows_per;
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(parts, |p| {
+        let r0 = p * rows_per;
+        let rows = rows_per.min(m - r0);
+        let xs = &x[r0 * k..(r0 + rows) * k];
+        // SAFETY: part `p` owns rows [r0, r0 + rows) of `out` exclusively
+        // (parts tile the row range without overlap), and `out` outlives
+        // `pool.run`, which blocks until every part has finished.
+        let os = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), rows * n) };
+        gemm_chunk_tiled(xs, rows, k, n, data, os);
+    });
+}
+
+/// Register-tiled microkernel over one chunk of batch rows; `out` must be
+/// zeroed. Loop nest: column panel → reduction block → TILE_COLS column
+/// slice → TILE_ROWS row tile, so a 4 KiB weight slice stays L1-hot while
+/// every full tile keeps a TILE_ROWS×TILE_COLS accumulator in registers
+/// and reuses each streamed weight row TILE_ROWS times.
+fn gemm_chunk_tiled(x: &[f32], rows: usize, k: usize, n: usize, data: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * n);
+    let mut j0 = 0;
+    let mut poff = 0;
+    while j0 < n {
+        let pw = PANEL_COLS.min(n - j0);
+        let panel = &data[poff..poff + k * pw];
+        let mut i0 = 0;
+        while i0 < k {
+            let ib = BLOCK_ROWS.min(k - i0);
+            let mut jc = 0;
+            while jc < pw {
+                let nc = TILE_COLS.min(pw - jc);
+                let mut r0 = 0;
+                if nc == TILE_COLS {
+                    while r0 + TILE_ROWS <= rows {
+                        tile_mxn::<TILE_COLS>(x, k, r0, i0, ib, panel, pw, jc, out, n, j0);
+                        r0 += TILE_ROWS;
+                    }
+                } else if nc == 8 {
+                    while r0 + TILE_ROWS <= rows {
+                        tile_mxn::<8>(x, k, r0, i0, ib, panel, pw, jc, out, n, j0);
+                        r0 += TILE_ROWS;
+                    }
+                }
+                while r0 < rows {
+                    tile_edge_row(x, k, r0, i0, ib, panel, pw, jc, nc, out, n, j0);
+                    r0 += 1;
+                }
+                jc += nc;
+            }
+            i0 += ib;
+        }
+        j0 += pw;
+        poff += k * pw;
+    }
+}
+
+/// One full TILE_ROWS×NC register tile: resume the partial sums from
+/// `out`, stream `ib` weight rows through them, store back. `NC` is a
+/// compile-time constant (16 or 8) so the inner loops fully unroll into
+/// broadcast + mul + add vector bodies. Zero inputs are *not* skipped —
+/// adding `xi·w` with `xi == ±0.0` is a bitwise no-op (see module docs),
+/// and branchless bodies vectorize.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_mxn<const NC: usize>(
+    x: &[f32],
+    k: usize,
+    r0: usize,
+    i0: usize,
+    ib: usize,
+    panel: &[f32],
+    pw: usize,
+    jc: usize,
+    out: &mut [f32],
+    n: usize,
+    j0: usize,
+) {
+    let mut acc = [[0f32; NC]; TILE_ROWS];
+    for (r, a) in acc.iter_mut().enumerate() {
+        let base = (r0 + r) * n + j0 + jc;
+        a.copy_from_slice(&out[base..base + NC]);
+    }
+    for di in 0..ib {
+        let wbase = (i0 + di) * pw + jc;
+        let wrow = &panel[wbase..wbase + NC];
+        for (r, a) in acc.iter_mut().enumerate() {
+            let xi = x[(r0 + r) * k + i0 + di];
+            for (av, &wv) in a.iter_mut().zip(wrow) {
+                *av += xi * wv;
+            }
+        }
+    }
+    for (r, a) in acc.iter().enumerate() {
+        let base = (r0 + r) * n + j0 + jc;
+        out[base..base + NC].copy_from_slice(a);
+    }
+}
+
+/// Scalar edge path for leftover rows and odd column-slice widths; same
+/// ascending reduction order as the tiles (skipping exact zeros, which is
+/// bitwise equivalent — see module docs).
+#[allow(clippy::too_many_arguments)]
+fn tile_edge_row(
+    x: &[f32],
+    k: usize,
+    row: usize,
+    i0: usize,
+    ib: usize,
+    panel: &[f32],
+    pw: usize,
+    jc: usize,
+    nc: usize,
+    out: &mut [f32],
+    n: usize,
+    j0: usize,
+) {
+    let base = row * n + j0 + jc;
+    for di in 0..ib {
+        let xi = x[row * k + i0 + di];
+        if xi == 0.0 {
+            continue;
+        }
+        let wbase = (i0 + di) * pw + jc;
+        let wrow = &panel[wbase..wbase + nc];
+        for (o, &wv) in out[base..base + nc].iter_mut().zip(wrow) {
+            *o += xi * wv;
+        }
+    }
 }
 
 // ----------------------------------------------------------------------
@@ -417,6 +621,96 @@ mod tests {
         let mut auto = vec![0f32; m * n];
         matmul_blocked(&x, &packed, m, &mut auto);
         assert_eq!(seq, auto);
+    }
+
+    #[test]
+    fn pooled_matches_naive_bit_for_bit_across_odd_shapes_and_threads() {
+        // Shapes straddle every tile boundary: below/at/not-a-multiple-of
+        // TILE_ROWS, TILE_COLS, the 8-wide tile, PANEL_COLS and
+        // BLOCK_ROWS; thread counts include odd and above-m values.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 65, 63),
+            (5, 129, 65),
+            (17, 23, 31),
+            (16, 200, 70),
+            (3, 70, 8),
+            (9, 64, 24),
+            (7, 40, 5),
+            (21, 90, 130),
+        ];
+        let mut rng = Rng::new(23);
+        let pool = crate::runtime::pool::WorkerPool::new(4);
+        for &(m, k, n) in &shapes {
+            let x = random_mat(&mut rng, m * k, 3); // every 3rd input exactly 0
+            let w = random_mat(&mut rng, k * n, 0);
+            let packed = PackedMat::pack(&w, k, n);
+            let mut naive = vec![0f32; m * n];
+            matmul_naive(&x, &w, m, k, n, &mut naive);
+            let nb = naive.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            for threads in [1usize, 2, 4, 7] {
+                let mut pooled = vec![0f32; m * n];
+                matmul_pooled_threads(&x, &packed, m, &pool, threads, &mut pooled);
+                let pb = pooled.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(nb, pb, "divergence at {m}x{k}x{n} threads={threads}");
+            }
+            // The auto-threaded entry point agrees too.
+            let mut auto = vec![0f32; m * n];
+            matmul_pooled(&x, &packed, m, &pool, &mut auto);
+            assert_eq!(naive, auto, "auto divergence at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn pooled_conv_lowering_matches_direct_conv_bit_for_bit() {
+        // im2col + the pooled tiled kernel must equal the direct-conv
+        // reference, chunked to exercise the pos0 offsets.
+        let g = ConvGeom {
+            in_c: 3,
+            out_c: 4,
+            kernel: 3,
+            stride: 2,
+            padding: 1,
+            in_hw: 6,
+            out_hw: 3,
+        };
+        let mut rng = Rng::new(99);
+        let x = random_mat(&mut rng, g.in_features(), 5);
+        let w = random_mat(&mut rng, g.patch_len() * g.out_c, 0);
+
+        let mut direct = vec![0f32; g.out_c * g.num_positions()];
+        conv2d_ref(&x, &w, &g, &mut direct);
+
+        let pool = crate::runtime::pool::WorkerPool::new(3);
+        let npos = g.num_positions();
+        let mut lowered = vec![0f32; g.out_c * npos];
+        let chunk = 4;
+        let mut patches = vec![0f32; chunk * g.patch_len()];
+        let mut prod = vec![0f32; chunk * g.out_c];
+        let packed = PackedMat::pack(&w, g.patch_len(), g.out_c);
+        let mut pos0 = 0;
+        while pos0 < npos {
+            let m = chunk.min(npos - pos0);
+            im2col_chunk(&x, &g, pos0, m, &mut patches[..m * g.patch_len()]);
+            matmul_pooled_threads(
+                &patches[..m * g.patch_len()],
+                &packed,
+                m,
+                &pool,
+                2,
+                &mut prod[..m * g.out_c],
+            );
+            for p in 0..m {
+                for oc in 0..g.out_c {
+                    lowered[oc * npos + pos0 + p] = prod[p * g.out_c + oc];
+                }
+            }
+            pos0 += m;
+        }
+        let db = direct.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let lb = lowered.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(db, lb, "pooled im2col path must equal direct convolution");
     }
 
     #[test]

@@ -5,9 +5,35 @@
 //! Interchange is HLO *text* — xla_extension 0.5.1 rejects jax ≥ 0.5's
 //! 64-bit-instruction-id protos; the text parser reassigns ids (see
 //! /opt/xla-example/README.md and DESIGN.md §1).
+//!
+//! # The sim hot path
+//!
+//! When PJRT artifacts are absent, serving runs on the offline sim stack,
+//! whose layering is the crate's performance-critical core (every search
+//! episode and every offline `serve` request funnels through it):
+//!
+//! - [`pool`] — a persistent worker-thread pool, created once per
+//!   `SimBackend` and reused by every matmul of every eval. Workers park
+//!   on a condvar between jobs and claim row-chunk tickets dynamically,
+//!   so dispatch costs a wake-up instead of a `thread::scope` spawn.
+//! - [`gemm`] — the quantized-matmul kernels over a column-panel packed
+//!   weight layout: `matmul_naive` (reference), `matmul_blocked` (the
+//!   PR 2 scope kernel, kept as comparator) and `matmul_pooled` (the hot
+//!   path: register-tiled 4×16 microkernel fanned across the pool). All
+//!   three agree bit for bit; CI gates on it.
+//! - [`simnet`] — `SimBackend`, the deterministic quantized-forward
+//!   backend. Per-layer packed-weight caching (one layer's `w_bits`
+//!   change repacks only that layer), a construction-time scratch arena
+//!   (activation ping-pong + conv im2col/product/CHW slots), and logits
+//!   returned in the request's own buffer make steady-state eval
+//!   allocation-free.
+//!
+//! `cargo bench --bench bench_simnet` measures the stack and emits
+//! `BENCH_simnet.json` (schema in `rust/src/api/README.md`).
 
 pub mod engine;
 pub mod gemm;
+pub mod pool;
 pub mod simnet;
 
 use crate::util::io::Tensor;

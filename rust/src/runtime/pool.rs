@@ -1,0 +1,352 @@
+//! Persistent worker-thread pool for the sim serving hot path.
+//!
+//! `runtime::gemm::matmul_blocked_threads` (the PR 2 kernel) spawns fresh
+//! `thread::scope` workers for *every* matmul — tens of microseconds of
+//! spawn/join per call, which dominates small and medium shapes. A
+//! [`WorkerPool`] is created **once** (per `SimBackend`) and reused across
+//! every matmul and eval call: workers park on a condvar between jobs, so
+//! dispatching work costs one mutex round trip and a wake-up instead of a
+//! thread spawn.
+//!
+//! The job model is deliberately tiny: [`WorkerPool::run`] takes a number
+//! of *parts* and a `Fn(usize)` body; workers (plus the calling thread)
+//! claim part indices from a shared ticket counter until all parts are
+//! done. Ticket claiming gives cheap dynamic load balancing — a worker
+//! that finishes its row chunk early steals the next one — without any
+//! per-job allocation, so the steady-state serving path stays
+//! allocation-free.
+//!
+//! Borrowed data crosses into the workers through a lifetime-erased raw
+//! pointer (`RawJob`). This is sound because `run` neither returns nor
+//! unwinds until every part has finished executing (`active == 0`) — part
+//! bodies run under `catch_unwind`, so a panicking part still decrements
+//! the counter and the panic is re-raised on the submitting thread only
+//! after the job has drained. The closure — and everything it borrows —
+//! therefore strictly outlives all worker accesses; the `F: Sync` bound
+//! makes the shared calls themselves safe.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Upper bound on pool workers (beyond this, the quantized-matmul kernels
+/// saturate memory bandwidth — same bound the PR 2 scope kernel used).
+pub const MAX_THREADS: usize = 16;
+
+/// Worker count a pool gets by default: `LRMP_SIM_THREADS` when set, else
+/// the machine parallelism, clamped to `1..=MAX_THREADS`.
+pub fn default_threads() -> usize {
+    std::env::var("LRMP_SIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        })
+        .clamp(1, MAX_THREADS)
+}
+
+/// A lifetime-erased in-flight job: `data` points at the caller's closure,
+/// `call` is the monomorphized trampoline that invokes it.
+#[derive(Clone, Copy)]
+struct RawJob {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    parts: usize,
+}
+
+// SAFETY: `data` points at an `F: Fn(usize) + Sync` that the submitting
+// `run` call keeps alive (it blocks until `active == 0`), and `Sync` makes
+// invoking it from several threads at once sound.
+unsafe impl Send for RawJob {}
+
+/// Shared scheduler state, guarded by one mutex (jobs are coarse row
+/// chunks, so the lock is uncontended in practice).
+#[derive(Default)]
+struct Slot {
+    /// Bumped once per job so parked workers can tell a new job from the
+    /// one they just finished claiming parts of.
+    epoch: u64,
+    job: Option<RawJob>,
+    /// Next unclaimed part index (the ticket counter).
+    next_part: usize,
+    /// Parts claimed-or-pending; the job is done when this reaches 0.
+    active: usize,
+    /// Set when any part of the current job panicked (the decrement still
+    /// happens, so the job drains instead of wedging the pool).
+    poisoned: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// `run` parks here while workers finish the last parts.
+    done: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads; see the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Build a pool that executes jobs on `threads` threads total: the
+    /// calling thread participates in every [`WorkerPool::run`], so
+    /// `threads - 1` workers are spawned (`threads == 1` spawns none and
+    /// runs everything inline).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("lrmp-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            workers,
+            threads,
+        }
+    }
+
+    /// Total threads that execute a job (spawned workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(0), f(1), …, f(parts - 1)` across the pool and the
+    /// calling thread, returning once **all** parts have finished. Part
+    /// indices are claimed dynamically, each runs exactly once, and no
+    /// ordering between parts is guaranteed — the body must only touch
+    /// data disjoint per part (or otherwise safe to share).
+    ///
+    /// With a single-thread pool or a single part the body runs inline on
+    /// the calling thread. No allocation happens on the non-panicking
+    /// path.
+    ///
+    /// A panic in any part body is re-raised on the calling thread once
+    /// the whole job has drained (like `thread::scope`, no part is left
+    /// running when the panic propagates), and the pool stays usable.
+    ///
+    /// `run` must not be called again (on the same pool) from *inside* a
+    /// part body: the nested call would wait for the outer job to drain,
+    /// which cannot happen while the body is still running — a deadlock.
+    /// Callers that fan out nested work (e.g. the conv path's
+    /// per-sample loop) run their inner kernels inline instead.
+    pub fn run<F: Fn(usize) + Sync>(&self, parts: usize, f: F) {
+        if parts == 0 {
+            return;
+        }
+        if self.workers.is_empty() || parts == 1 {
+            for p in 0..parts {
+                f(p);
+            }
+            return;
+        }
+        /// Trampoline: recover the concrete closure type and invoke it.
+        unsafe fn call<F: Fn(usize) + Sync>(data: *const (), part: usize) {
+            let f = unsafe { &*data.cast::<F>() };
+            f(part);
+        }
+        let job = RawJob {
+            data: (&f as *const F).cast(),
+            call: call::<F>,
+            parts,
+        };
+        let shared = &*self.shared;
+        let mut s = shared.slot.lock().unwrap();
+        // Serialize concurrent submitters: a job may only be installed
+        // once the previous one has fully drained (`job == None`), which
+        // also guarantees the ticket counter always belongs to *this* job
+        // for as long as any of its parts are unclaimed or running.
+        while s.job.is_some() {
+            s = shared.done.wait(s).unwrap();
+        }
+        s.epoch = s.epoch.wrapping_add(1);
+        s.next_part = 0;
+        s.active = parts;
+        s.poisoned = false;
+        s.job = Some(job);
+        shared.work.notify_all();
+        // The calling thread claims parts alongside the workers. A panic
+        // in the body is caught so the unwind cannot escape `run` while
+        // workers still hold the lifetime-erased closure; it is re-raised
+        // below, after the job has fully drained.
+        let mut payload: Option<Box<dyn std::any::Any + Send>> = None;
+        while s.next_part < parts {
+            let part = s.next_part;
+            s.next_part += 1;
+            drop(s);
+            let res = panic::catch_unwind(AssertUnwindSafe(|| f(part)));
+            s = shared.slot.lock().unwrap();
+            if let Err(p) = res {
+                s.poisoned = true;
+                payload = Some(p);
+            }
+            s.active -= 1;
+            if s.active == 0 {
+                s.job = None;
+                shared.done.notify_all();
+            }
+        }
+        // Wait for the workers to finish their in-flight parts; only then
+        // may `f` (and everything it borrows) go out of scope.
+        while s.active > 0 {
+            s = shared.done.wait(s).unwrap();
+        }
+        let poisoned = s.poisoned;
+        drop(s);
+        if let Some(p) = payload {
+            panic::resume_unwind(p);
+        }
+        if poisoned {
+            panic!("a WorkerPool job panicked on a worker thread");
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    let mut s = shared.slot.lock().unwrap();
+    loop {
+        while !s.shutdown && (s.job.is_none() || s.epoch == seen) {
+            s = shared.work.wait(s).unwrap();
+        }
+        if s.shutdown {
+            return;
+        }
+        seen = s.epoch;
+        let job = s.job.expect("checked above");
+        while s.next_part < job.parts {
+            let part = s.next_part;
+            s.next_part += 1;
+            drop(s);
+            // SAFETY: the submitting `run` keeps the closure alive until
+            // `active == 0`, which cannot happen before this part's
+            // decrement below. A panicking body is caught so the
+            // decrement always happens (a lost decrement would wedge the
+            // submitter forever); the submitter re-raises.
+            let res = panic::catch_unwind(AssertUnwindSafe(|| unsafe {
+                (job.call)(job.data, part)
+            }));
+            s = shared.slot.lock().unwrap();
+            if res.is_err() {
+                s.poisoned = true;
+            }
+            s.active -= 1;
+            if s.active == 0 {
+                s.job = None;
+                shared.done.notify_all();
+            }
+        }
+        // All parts claimed: park until the next epoch (lock still held).
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            s.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn runs_every_part_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), |p| {
+            hits[p].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn borrowed_disjoint_writes_survive_reuse() {
+        // The pool is reused across many jobs (the serving pattern) and
+        // writes borrowed, per-part-disjoint data.
+        let pool = WorkerPool::new(3);
+        for round in 0..50u64 {
+            let mut out = vec![0u64; 16];
+            {
+                let chunks: Vec<&mut [u64]> = out.chunks_mut(4).collect();
+                let cells: Vec<Mutex<&mut [u64]>> = chunks.into_iter().map(Mutex::new).collect();
+                pool.run(cells.len(), |p| {
+                    for v in cells[p].lock().unwrap().iter_mut() {
+                        *v = round + p as u64;
+                    }
+                });
+            }
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, round + (i / 4) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut sum = 0usize;
+        {
+            let cell = Mutex::new(&mut sum);
+            pool.run(10, |p| {
+                **cell.lock().unwrap() += p;
+            });
+        }
+        assert_eq!(sum, 45);
+    }
+
+    #[test]
+    fn panicking_part_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        let res = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |p| {
+                if p == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must reach the submitter");
+        // The job drained instead of wedging the pool: the next run works.
+        let hits: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), |p| {
+            hits[p].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn zero_parts_is_a_noop_and_drop_joins() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, |_| panic!("no parts, no calls"));
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn default_threads_is_positive_and_clamped() {
+        let t = default_threads();
+        assert!((1..=MAX_THREADS).contains(&t));
+    }
+}

@@ -73,12 +73,35 @@ fn vgg16_deployment_is_servable_offline() {
     assert!(SimBackend::supports(&nets::vgg16()).is_ok());
     let opts = ServeOptions {
         eval_batch: Some(1),
+        ..ServeOptions::default()
     };
     let server = Session::serve_opts(&dep, BatchPolicy::default(), ServeBackend::Sim, opts)
         .expect("vgg16 must be sim-servable");
     assert_eq!(server.backend_name, "sim");
     assert_eq!(server.input_dim(), 3 * 224 * 224);
     assert_eq!(server.policy.len(), 16);
+}
+
+#[test]
+fn serving_is_invariant_across_kernel_thread_counts() {
+    // The pooled kernels must not let the thread split leak into the
+    // logits: the same request served through 1-, 2- and 7-thread pools
+    // (7 exceeds the eval batch) answers bit-for-bit identically.
+    let dep = fixed_dep("conv-tiny");
+    let x: Vec<f32> = (0..192).map(|j| ((j * 5) % 13) as f32 / 13.0).collect();
+    let mut answers: Vec<Vec<f32>> = Vec::new();
+    for threads in [1usize, 2, 7] {
+        let opts = ServeOptions {
+            threads: Some(threads),
+            ..ServeOptions::default()
+        };
+        let server =
+            Session::serve_opts(&dep, BatchPolicy::default(), ServeBackend::Sim, opts).unwrap();
+        assert_eq!(server.exec_threads, threads);
+        answers.push(server.infer(x.clone()).unwrap());
+    }
+    assert_eq!(answers[0], answers[1], "1 vs 2 threads");
+    assert_eq!(answers[0], answers[2], "1 vs 7 threads");
 }
 
 #[test]
