@@ -1,12 +1,15 @@
 //! Sim-backend hot-path benchmark: the naive triple-loop quantized matmul
 //! vs the PR 2 blocked `thread::scope` kernel vs the pooled register-tiled
 //! kernel (`runtime::gemm` + `runtime::pool`), plus end-to-end `SimBackend`
-//! steady-state eval latency per network — the pooled serving path against
-//! the preserved PR 2 legacy path on identical inputs. A counting global
-//! allocator measures allocations per eval (zero after warmup is the
-//! contract on the FC path). Emits a machine-readable `BENCH_simnet.json`
-//! (schema v2, documented in `rust/src/api/README.md`) that the CI
-//! `bench-smoke` job uploads and gates on.
+//! steady-state eval latency per network — the graph-schedule serving path
+//! against the straight-line reference executor (`eval_reference`: fresh
+//! buffers per node, naive kernel) on identical inputs. Networks include
+//! `resnet-tiny`, so the residual path (skip slots, bit-exact adds) is
+//! covered. A counting global allocator measures allocations per eval
+//! (zero after warmup is the contract on the FC path, and the bench
+//! **fails** if an FC net allocates). Emits a machine-readable
+//! `BENCH_simnet.json` (schema v3, documented in `rust/src/api/README.md`)
+//! that the CI `bench-smoke` job uploads and gates on.
 //!
 //! Plain `fn main` bench (`harness = false`):
 //!
@@ -15,8 +18,9 @@
 //!
 //! `--quick` shrinks the sample budgets for the CI smoke job. The run
 //! **fails (exit 1)** if any kernel's output diverges bitwise from the
-//! naive reference, if the pooled and legacy eval paths disagree on any
-//! logit, or — when `--baseline` points at a *calibrated* committed
+//! naive reference, if the graph and reference executors disagree on any
+//! logit (residual adds included), if an FC net's steady-state eval
+//! allocates, or — when `--baseline` points at a *calibrated* committed
 //! `BENCH_simnet.json` — if the pooled aggregate GFLOP/s regressed more
 //! than 20% against it. `--summary` additionally writes the baseline
 //! comparison as markdown (CI appends it to the job summary).
@@ -24,7 +28,7 @@
 use lrmp::bench_harness::{fmt_time, Bencher, Table};
 use lrmp::cli::Args;
 use lrmp::coordinator::InferenceBackend;
-use lrmp::nets;
+use lrmp::nets::{self, LayerKind};
 use lrmp::runtime::gemm::{self, ConvGeom, PackedMat};
 use lrmp::runtime::pool::WorkerPool;
 use lrmp::runtime::simnet::SimBackend;
@@ -91,20 +95,23 @@ impl GemmRow {
     }
 }
 
-/// One network's steady-state eval comparison (pooled vs PR 2 legacy).
+/// One network's steady-state eval comparison: the graph-schedule serving
+/// path vs the straight-line reference executor.
 struct NetRow {
     net: String,
     b: usize,
     nl: usize,
+    residual_adds: usize,
+    has_conv: bool,
     pooled: lrmp::bench_harness::BenchResult,
-    legacy: lrmp::bench_harness::BenchResult,
+    reference: lrmp::bench_harness::BenchResult,
     allocs_per_eval: f64,
     logits_exact: bool,
 }
 
 impl NetRow {
     fn eval_p50_speedup(&self) -> f64 {
-        self.legacy.p50() / self.pooled.p50().max(1e-12)
+        self.reference.p50() / self.pooled.p50().max(1e-12)
     }
 }
 
@@ -231,7 +238,10 @@ fn main() {
     println!("conv lowering scope kernel == direct reference:  {conv_exact}");
     println!("conv lowering pooled kernel == direct reference: {pooled_conv_exact}\n");
 
-    // --- end-to-end SimBackend steady-state eval, pooled vs PR 2 -------
+    // --- end-to-end SimBackend steady-state eval: graph vs reference ---
+    // `resnet-tiny` covers the residual path: its logits ride through two
+    // Add nodes, and the bitwise gate below compares them against the
+    // straight-line reference executor.
     let net_bench = if quick {
         Bencher {
             warmup: Duration::from_millis(10),
@@ -243,54 +253,61 @@ fn main() {
         Bencher::quick()
     };
     let mut net_rows: Vec<NetRow> = Vec::new();
-    for name in ["mlp-tiny", "mlp", "conv-tiny"] {
+    for name in ["mlp-tiny", "mlp", "conv-tiny", "resnet-tiny"] {
         let net = nets::by_name(name).expect("bench nets are registered");
         let b = 16usize;
         let mut backend = SimBackend::from_network(&net, b, 7).expect("sim-supported net");
-        let mut legacy = SimBackend::from_network(&net, b, 7).expect("sim-supported net");
-        legacy.set_legacy_scope_kernel(true);
         let dim = backend.input_dim();
         let nl = backend.num_layers();
+        let residual_adds = backend.graph().residual_adds();
+        let has_conv = net
+            .layers
+            .iter()
+            .any(|l| matches!(l.kind, LayerKind::Conv2d { .. }));
         let x: Vec<f32> = (0..b * dim).map(|i| ((i * 31) % 97) as f32 / 97.0).collect();
         let (wb, ab) = (vec![5.0f32; nl], vec![6.0f32; nl]);
 
-        // The two paths must agree on every logit bit before they race.
+        // The two executors must agree on every logit bit before they race.
         let yp = backend.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
-        let yl = legacy.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
-        let logits_exact = bits_of(&yp) == bits_of(&yl);
+        let yr = backend.eval_reference(&x, &wb, &ab);
+        let logits_exact = bits_of(&yp) == bits_of(&yr);
 
-        let pooled = net_bench.run(&format!("eval {} pooled b={b}", net.name), || {
+        let pooled = net_bench.run(&format!("eval {} graph b={b}", net.name), || {
             let y = backend.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
             std::hint::black_box(y);
         });
-        let legacy_res = net_bench.run(&format!("eval {} legacy b={b}", net.name), || {
-            let y = legacy.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
+        let reference = net_bench.run(&format!("eval {} reference b={b}", net.name), || {
+            let y = backend.eval_reference(&x, &wb, &ab);
             std::hint::black_box(y);
         });
         let allocs = allocs_per_eval(&mut backend, &x, &wb, &ab);
         println!(
-            "  -> {} {:.1} inferences/s pooled (p50 {}, p95 {}), x{:.2} over the PR 2 \
-             kernel, {:.1} allocs/eval, logits bit-exact {}",
+            "  -> {} {:.1} inferences/s graph path (p50 {}, p95 {}), x{:.2} over the \
+             straight-line reference, {:.1} allocs/eval, {} residual add(s), logits \
+             bit-exact {}",
             net.name,
             b as f64 / pooled.mean().max(1e-12),
             fmt_time(pooled.p50()),
             fmt_time(pooled.p95()),
-            legacy_res.p50() / pooled.p50().max(1e-12),
+            reference.p50() / pooled.p50().max(1e-12),
             allocs,
+            residual_adds,
             logits_exact
         );
         net_rows.push(NetRow {
             net: net.name.clone(),
             b,
             nl,
+            residual_adds,
+            has_conv,
             pooled,
-            legacy: legacy_res,
+            reference,
             allocs_per_eval: allocs,
             logits_exact,
         });
     }
 
-    // --- machine-readable artifact (schema v2) -------------------------
+    // --- machine-readable artifact (schema v3) -------------------------
     let gemm_json = Json::Arr(
         rows.iter()
             .map(|r| {
@@ -324,15 +341,16 @@ fn main() {
                     ("net", Json::Str(r.net.clone())),
                     ("eval_batch", Json::Num(r.b as f64)),
                     ("layers", Json::Num(r.nl as f64)),
+                    ("residual_adds", Json::Num(r.residual_adds as f64)),
                     ("mean_s", Json::Num(r.pooled.mean())),
                     ("p50_s", Json::Num(r.pooled.p50())),
                     ("p95_s", Json::Num(r.pooled.p95())),
                     ("samples", Json::Num(r.pooled.samples.len() as f64)),
                     ("inf_per_s", Json::Num(r.b as f64 / r.pooled.mean().max(1e-12))),
-                    ("legacy_mean_s", Json::Num(r.legacy.mean())),
-                    ("legacy_p50_s", Json::Num(r.legacy.p50())),
-                    ("legacy_p95_s", Json::Num(r.legacy.p95())),
-                    ("eval_p50_speedup_vs_legacy", Json::Num(r.eval_p50_speedup())),
+                    ("ref_mean_s", Json::Num(r.reference.mean())),
+                    ("ref_p50_s", Json::Num(r.reference.p50())),
+                    ("ref_p95_s", Json::Num(r.reference.p95())),
+                    ("eval_p50_speedup_vs_ref", Json::Num(r.eval_p50_speedup())),
                     ("allocs_per_eval", Json::Num(r.allocs_per_eval)),
                     ("logits_bit_exact", Json::Bool(r.logits_exact)),
                 ])
@@ -341,7 +359,7 @@ fn main() {
     );
     let report = Json::obj(vec![
         ("kind", Json::Str("lrmp-bench-simnet".into())),
-        ("schema_version", Json::Num(2.0)),
+        ("schema_version", Json::Num(3.0)),
         ("calibrated", Json::Bool(true)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(threads as f64)),
@@ -377,7 +395,22 @@ fn main() {
     let gemm_exact = rows.iter().all(|r| r.blocked_exact && r.pooled_exact);
     let nets_exact = net_rows.iter().all(|r| r.logits_exact);
     if !gemm_exact || !conv_exact || !pooled_conv_exact || !nets_exact {
-        eprintln!("FAIL: a kernel diverged from the naive reference or the legacy eval path");
+        eprintln!(
+            "FAIL: a kernel diverged from the naive reference or the graph executor \
+             diverged from the straight-line reference"
+        );
+        std::process::exit(1);
+    }
+    // The FC path's zero-allocation contract is a hard gate; conv paths
+    // are recorded (their sample fan-out makes the contract machine-
+    // dependent only via the pool threshold, but the FC path never
+    // legitimately allocates).
+    let fc_allocs_ok = net_rows
+        .iter()
+        .filter(|r| !r.has_conv)
+        .all(|r| r.allocs_per_eval == 0.0);
+    if !fc_allocs_ok {
+        eprintln!("FAIL: an FC net's steady-state eval allocated (contract is 0 allocs/eval)");
         std::process::exit(1);
     }
     if !baseline_ok {
@@ -394,7 +427,7 @@ fn bits_of(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
 
-/// Allocations per eval in steady state: warm the scratch/caches, then
+/// Allocations per eval in steady state: warm the arena/caches, then
 /// count allocator hits across a window of evals whose inputs were cloned
 /// *before* the window (the returned logits ride in the request's own
 /// buffer, so the contract is zero on the FC path).
@@ -447,8 +480,8 @@ fn compare_with_baseline(path: &str, rows: &[GemmRow], pooled_gflops_mean: f64) 
     let base_mean = base.get("pooled_gflops_mean").as_f64();
     if !calibrated || base_mean.is_none() {
         md += "committed baseline is a seed placeholder (`calibrated: false`) — record-only \
-               run.\nRefresh it by committing a CI bench artifact as `BENCH_simnet.json` at \
-               the repo root.\n";
+               run.\nRefresh it by dispatching the `calibrate-baseline` workflow (or commit a \
+               CI bench artifact as `BENCH_simnet.json` at the repo root by hand).\n";
         return BaselineVerdict { summary: md, ok: true };
     }
     let base_mean = base_mean.unwrap();

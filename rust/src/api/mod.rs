@@ -22,4 +22,6 @@ pub mod session;
 
 pub use deployment::{Deployment, PredictedMetrics, Provenance, SCHEMA_VERSION};
 pub use error::{ApiError, ApiResult};
-pub use session::{ServeBackend, ServeOptions, Session, SimulationReport, SimulationRow};
+pub use session::{
+    default_sim_batch, ServeBackend, ServeOptions, Session, SimulationReport, SimulationRow,
+};

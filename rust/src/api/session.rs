@@ -410,8 +410,10 @@ impl Session {
         batch_policy: BatchPolicy,
         opts: ServeOptions,
     ) -> ApiResult<Server> {
-        // Capability query first: an unsupported topology (e.g. ResNet
-        // residual projections) is a typed error, not a runtime string.
+        // Capability query first: a topology the graph IR cannot lower
+        // (e.g. a shape-changing residual block with no projection) is a
+        // typed error, not a runtime string. Residual ResNets lower fine
+        // since PR 4.
         SimBackend::supports(net).map_err(|reason| ApiError::UnsupportedNetwork {
             backend: "sim",
             net: net.name.clone(),
@@ -427,8 +429,10 @@ impl Session {
 
 /// Default sim-backend batch: FC nets amortize the weight stream well at
 /// 16; conv nets carry orders of magnitude more FLOPs per sample, so a
-/// small fixed batch keeps offline serve latency per flush sane.
-fn default_sim_batch(net: &Network) -> usize {
+/// small fixed batch keeps offline serve latency per flush sane. Public
+/// so the CLI can report the effective batch (and arena bytes) without
+/// building a backend.
+pub fn default_sim_batch(net: &Network) -> usize {
     let conv = net
         .layers
         .iter()
@@ -494,10 +498,13 @@ mod tests {
     }
 
     #[test]
-    fn sim_serving_a_residual_net_is_a_typed_unsupported_error() {
-        let nl = nets::resnet::resnet18().num_layers();
+    fn sim_serving_a_residual_net_works_offline() {
+        // Residual ResNets lower into the graph IR since PR 4: serving a
+        // resnet-tiny artifact through the sim backend round-trips a
+        // request with finite logits.
+        let nl = nets::resnet::resnet_tiny().num_layers();
         let dep = Deployment::from_policy(
-            "resnet18",
+            "resnet-tiny",
             &ChipConfig::paper_scaled(),
             Objective::Latency,
             Policy::baseline(nl),
@@ -505,17 +512,14 @@ mod tests {
             None,
         )
         .unwrap();
-        let err = Session::serve_with(&dep, BatchPolicy::default(), ServeBackend::Sim)
-            .map(|_| ())
-            .unwrap_err();
-        match err {
-            ApiError::UnsupportedNetwork { backend, net, reason } => {
-                assert_eq!(backend, "sim");
-                assert_eq!(net, "ResNet18");
-                assert!(reason.contains("sequential"), "{reason}");
-            }
-            other => panic!("expected UnsupportedNetwork, got {other}"),
-        }
+        let server =
+            Session::serve_with(&dep, BatchPolicy::default(), ServeBackend::Sim).unwrap();
+        assert_eq!(server.backend_name, "sim");
+        assert_eq!(server.input_dim(), 3 * 8 * 8);
+        let x: Vec<f32> = (0..192).map(|j| (j % 7) as f32 / 7.0).collect();
+        let logits = server.infer(x).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -25,8 +25,9 @@ use std::time::Instant;
 /// An execution backend the coordinator can serve batches on. The PJRT
 /// [`Engine`] is the live implementation; `runtime::simnet::SimBackend` is
 /// the deterministic pure-rust stand-in used when artifacts (or the XLA
-/// runtime itself) are unavailable — it executes fully-connected *and*
-/// sequential conv networks (im2col-lowered onto the blocked quantized
+/// runtime itself) are unavailable — it executes any network that lowers
+/// into the `runtime::graph` IR: fully-connected chains, sequential conv
+/// nets, and residual ResNets (im2col-lowered onto the pooled quantized
 /// matmul kernel in `runtime::gemm`).
 pub trait InferenceBackend: Send + 'static {
     /// Human-readable backend identifier (reported in logs/metrics).

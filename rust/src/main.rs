@@ -20,7 +20,8 @@
 //!                                  closed-loop load test of the serving
 //!                                  coordinator, executing the artifact's
 //!                                  per-layer policy (the sim backend runs
-//!                                  FC and sequential conv nets offline)
+//!                                  FC, sequential conv, and residual
+//!                                  ResNet nets offline via the graph IR)
 //!   inspect   dep.json             validate + print a saved artifact
 //!
 //! The flag registry lives in `lrmp::api::flags`: unknown flags are
@@ -91,6 +92,23 @@ fn objective_arg(args: &Args) -> Result<Objective, ApiError> {
 /// `Args::parsed` with the error lifted into the typed API error.
 fn parsed<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T, ApiError> {
     args.parsed(key, default).map_err(ApiError::InvalidConfig)
+}
+
+/// One-line summary of a lowered graph schedule, shared by `inspect` and
+/// `serve` so the two can never drift. The KiB figure covers the
+/// activation slot arena only (graph-level; staging/conv scratch belong
+/// to a built backend — see `SimBackend::schedule_summary`).
+fn schedule_line(g: &lrmp::runtime::graph::Graph, batch: usize) -> String {
+    format!(
+        "{} nodes ({} weight, {} residual add(s), {} pool(s)); \
+         {} slot(s), ~{} KiB slot arena at batch {batch}",
+        g.num_nodes(),
+        g.weight_nodes(),
+        g.residual_adds(),
+        g.pool_nodes(),
+        g.num_slots(),
+        g.arena_floats_per_sample() * batch * 4 / 1024,
+    )
 }
 
 fn cmd_tables() -> Result<()> {
@@ -401,6 +419,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bits,
         requests / clients
     );
+    // The sim backend executes a compiled graph schedule; report it so a
+    // serve run's execution shape is reproducible from its log alone.
+    if server.backend_name == "sim" {
+        if let Some(net) = nets::by_name(&dep.net) {
+            if let Ok(g) = lrmp::runtime::graph::lower(&net) {
+                let batch = eval_batch.unwrap_or_else(|| lrmp::api::default_sim_batch(&net));
+                println!("schedule: {}", schedule_line(&g, batch));
+            }
+        }
+    }
 
     let dim = server.input_dim();
     let server = std::sync::Arc::new(server);
@@ -496,12 +524,16 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         p.baseline_accuracy, p.searched_accuracy, p.finetuned_accuracy
     );
     println!("  validation  cost model re-run OK ({} tiles)", cost.tiles_used);
-    match lrmp::runtime::simnet::SimBackend::supports(&net) {
-        Ok(()) => println!(
-            "  sim backend  supported (servable offline via --backend sim; kernel pool \
-             defaults to {} thread(s), override with serve --threads N)",
-            lrmp::runtime::pool::default_threads()
-        ),
+    match lrmp::runtime::graph::lower(&net) {
+        Ok(g) => {
+            println!(
+                "  sim backend  supported (servable offline via --backend sim; kernel pool \
+                 defaults to {} thread(s), override with serve --threads N)",
+                lrmp::runtime::pool::default_threads()
+            );
+            let batch = lrmp::api::default_sim_batch(&net);
+            println!("  schedule     {}", schedule_line(&g, batch));
+        }
         Err(reason) => println!("  sim backend  unsupported: {reason}"),
     }
 

@@ -243,6 +243,7 @@ const REGISTRY: &[(&str, &[&str], fn() -> Network)] = &[
     ("mlp", &["mlp_mnist"], mlp_mnist),
     ("mlp-tiny", &["mlp_tiny"], mlp_tiny),
     ("conv-tiny", &["conv_tiny"], conv_tiny),
+    ("resnet-tiny", &["resnet_tiny", "rn-tiny"], resnet::resnet_tiny),
     ("resnet18", &["rn18"], resnet::resnet18),
     ("resnet34", &["rn34"], resnet::resnet34),
     ("resnet50", &["rn50"], resnet::resnet50),
@@ -333,6 +334,7 @@ mod tests {
         assert_eq!(by_name("mlp").unwrap().name, "MLP");
         assert_eq!(by_name("vgg16").unwrap().name, "VGG16");
         assert_eq!(by_name("conv-tiny").unwrap().name, "Conv-tiny");
+        assert_eq!(by_name("resnet-tiny").unwrap().name, "ResNet-tiny");
         assert!(by_name("alexnet").is_none());
     }
 
@@ -355,6 +357,6 @@ mod tests {
             // The canonical display name must resolve back to the same net.
             assert_eq!(by_name(&net.name).unwrap().name, net.name);
         }
-        assert_eq!(known_names().len(), 8);
+        assert_eq!(known_names().len(), 9);
     }
 }

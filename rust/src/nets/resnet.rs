@@ -105,6 +105,28 @@ fn resnet_bottleneck(name: &str, blocks: [u64; 4]) -> Network {
     }
 }
 
+/// Miniature residual net over 8×8 RGB inputs: a stem conv, one
+/// identity-skip basic block, one stride-2 block with a 1×1 downsample
+/// projection, then a global pool + FC. The smallest geometry that
+/// exercises the graph IR's full residual path — identity skips,
+/// projected skips, the post-add ReLU, and the block-recovery naming
+/// convention (`layerS.B.convK` / `layerS.B.downsample`) — at unit-test
+/// and CI-smoke cost. Follows torchvision naming like its big siblings.
+pub fn resnet_tiny() -> Network {
+    Network {
+        name: "ResNet-tiny".to_string(),
+        layers: vec![
+            Layer::conv("conv1", 3, 8, 3, 1, 1, 8),
+            Layer::conv("layer1.0.conv1", 8, 8, 3, 1, 1, 8),
+            Layer::conv("layer1.0.conv2", 8, 8, 3, 1, 1, 8),
+            Layer::conv("layer2.0.conv1", 8, 16, 3, 2, 1, 8),
+            Layer::conv("layer2.0.conv2", 16, 16, 3, 1, 1, 4),
+            Layer::conv("layer2.0.downsample", 8, 16, 1, 2, 0, 8),
+            Layer::linear("fc", 16, 10),
+        ],
+    }
+}
+
 pub fn resnet18() -> Network {
     resnet_basic("ResNet18", [2, 2, 2, 2])
 }
@@ -173,6 +195,22 @@ mod tests {
             assert_eq!(v0, 12544);
             assert!(net.layers[1..].iter().all(|l| l.num_vectors() <= v0));
         }
+    }
+
+    #[test]
+    fn resnet_tiny_geometry_chains() {
+        let n = resnet_tiny();
+        assert_eq!(n.num_layers(), 7);
+        // Stride-2 block halves the grid; the downsample projection
+        // matches it exactly.
+        assert_eq!(n.layers[3].out_hw(), 4);
+        assert_eq!(n.layers[5].out_hw(), 4);
+        // fc flattens the globally pooled 16-channel volume.
+        assert_eq!(n.layers[6].lowered_rows(), 16);
+        assert_eq!(
+            n.total_params(),
+            27 * 8 + 72 * 8 + 72 * 8 + 72 * 16 + 144 * 16 + 8 * 16 + 16 * 10
+        );
     }
 
     #[test]

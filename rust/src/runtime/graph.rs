@@ -1,0 +1,1206 @@
+//! Graph IR of the offline sim executor.
+//!
+//! The flat `Vec<Layer>` walk the sim backend used through PR 3 could only
+//! express sequential topologies, so the paper's headline residual
+//! benchmarks (ResNets are three of its five DNNs) were rejected outright.
+//! This module is the replacement substrate: networks **lower** into a
+//! small dataflow graph whose nodes are the six ops the benchmarks need —
+//! [`Op::Input`], [`Op::MatMul`], [`Op::Conv`], [`Op::Pool`], [`Op::Add`]
+//! (the residual merge) and [`Op::Output`] — and the executor walks a
+//! precomputed topological **schedule** instead of the layer list.
+//!
+//! [`Graph::compile`] is the single constructor: it validates the node
+//! list (op arities, dangling input references, exactly one `Input` and
+//! one `Output`, acyclicity via Kahn's algorithm, feature-count agreement
+//! along every edge), fixes a deterministic schedule (ready nodes are
+//! taken in ascending id order), and runs a **buffer-liveness** pass that
+//! assigns every value-producing node an arena *slot*: a node claims a
+//! free slot at its schedule position and its inputs' slots are recycled
+//! at their last use. A skip-connection tensor therefore keeps its own
+//! slot alive across the whole block while the trunk ping-pongs between
+//! two — the sequential two-buffer scheme of PR 3 falls out as the
+//! degenerate case. Slot *sizes* (max per-sample features over the nodes
+//! sharing the slot) are part of the compiled graph, so `SimBackend` can
+//! allocate the whole arena at construction time and keep steady-state
+//! eval allocation-free.
+//!
+//! [`lower`] turns a `nets::Network` (an ordered list of weight-bearing
+//! layers) into a graph. Sequential chains lower exactly as before —
+//! consecutive layers must agree on features/geometry, and an integer
+//! grid shrink between a conv and its successor becomes an explicit
+//! [`Op::Pool`] node. Residual blocks are recovered from the benchmark
+//! naming convention (torchvision's, which `nets::resnet` follows):
+//! consecutive layers sharing a dotted prefix *whose suffixes are block
+//! members* — `convK` or `downsample` — form one block
+//! (`layer2.0.conv1`, `layer2.0.conv2`, `layer2.0.downsample`); a shared
+//! prefix alone is not enough, so dotted names outside the convention
+//! keep straight-line semantics. The `*.downsample` layer, if present,
+//! is the 1×1 projection applied to the block input, every other
+//! conv chains on the trunk, and the block ends in `Add(trunk, skip)`
+//! followed by ReLU (the He et al. ordering: no ReLU on the trunk's last
+//! conv or the projection, ReLU after the merge — dropped when the block
+//! is the network's final group, so logits keep their sign). All shape
+//! constraints
+//! are checked during lowering, so `SimBackend::supports` is literally
+//! "does this network lower?" — there is no topology blacklist.
+//!
+//! Failure is always a typed [`GraphError`]; `Display` renders the
+//! operator-facing reason (`serve` lifts it into
+//! `ApiError::UnsupportedNetwork`).
+
+use crate::nets::{Layer, LayerKind, Network};
+use crate::runtime::gemm::ConvGeom;
+use std::fmt;
+
+/// Index of a node within its [`Graph`] (dense, 0-based).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeId(pub usize);
+
+/// One graph operation. Weight-bearing ops (`MatMul`, `Conv`) carry the
+/// index of their layer in the source `Network` — the executor's weight
+/// store, packed cache and the serving ABI's per-layer bit vectors are
+/// all indexed by it.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// The request buffer; `features` per sample. No inputs.
+    Input { features: usize },
+    /// Dense layer `x[b×in_f] · w[in_f×out_f]`.
+    MatMul {
+        layer: usize,
+        in_f: usize,
+        out_f: usize,
+    },
+    /// 2-D convolution, executed as im2col + matmul; output is the full
+    /// CHW grid (`out_c × out_hw²` per sample) — pooling is a separate
+    /// node.
+    Conv { layer: usize, geom: ConvGeom },
+    /// Channel-wise `factor × factor` max pooling (stride = factor) over
+    /// a CHW input of `channels × hw²`.
+    Pool {
+        channels: usize,
+        hw: usize,
+        factor: usize,
+    },
+    /// Elementwise residual add of two equal-shaped inputs.
+    Add,
+    /// Marks the logits; aliases its single input's buffer. No consumers.
+    Output,
+}
+
+impl Op {
+    fn name(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "Input",
+            Op::MatMul { .. } => "MatMul",
+            Op::Conv { .. } => "Conv",
+            Op::Pool { .. } => "Pool",
+            Op::Add => "Add",
+            Op::Output => "Output",
+        }
+    }
+
+    fn arity(&self) -> usize {
+        match self {
+            Op::Input { .. } => 0,
+            Op::Add => 2,
+            _ => 1,
+        }
+    }
+
+    /// Index of the weight-bearing source layer, if any.
+    pub fn layer_index(&self) -> Option<usize> {
+        match *self {
+            Op::MatMul { layer, .. } | Op::Conv { layer, .. } => Some(layer),
+            _ => None,
+        }
+    }
+}
+
+/// One node: an op, its input edges, and whether a ReLU is fused onto the
+/// output.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub relu: bool,
+}
+
+impl Node {
+    pub fn new(op: Op, inputs: Vec<NodeId>, relu: bool) -> Node {
+        Node { op, inputs, relu }
+    }
+}
+
+/// Typed failure of [`Graph::compile`] or [`lower`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphError {
+    /// The node list is empty.
+    Empty,
+    /// No `Input` node / more than one.
+    MissingInput,
+    MultipleInputs { first: usize, second: usize },
+    /// No `Output` node / more than one.
+    MissingOutput,
+    MultipleOutputs { first: usize, second: usize },
+    /// Node `node` references input id `input` which does not exist.
+    DanglingInput { node: usize, input: usize },
+    /// Node has the wrong number of inputs for its op.
+    BadArity {
+        node: usize,
+        op: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// The `Output` node is consumed by another node.
+    OutputConsumed { node: usize },
+    /// The graph contains a cycle through `node` (no topological order).
+    Cycle { node: usize },
+    /// An edge's feature counts disagree (`node`'s input `input` produces
+    /// `got` features per sample, the op expects `expected`).
+    ShapeMismatch {
+        node: usize,
+        input: usize,
+        expected: usize,
+        got: usize,
+    },
+    /// A `Pool` node's factor does not divide its grid.
+    BadPool {
+        node: usize,
+        hw: usize,
+        factor: usize,
+    },
+    /// The network cannot lower into the IR; the string is the
+    /// operator-facing reason (`SimBackend::supports` surfaces it).
+    Unsupported(String),
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Empty => write!(f, "graph has no nodes"),
+            GraphError::MissingInput => write!(f, "graph has no Input node"),
+            GraphError::MultipleInputs { first, second } => {
+                write!(f, "graph has multiple Input nodes (#{first}, #{second})")
+            }
+            GraphError::MissingOutput => write!(f, "graph has no Output node"),
+            GraphError::MultipleOutputs { first, second } => {
+                write!(f, "graph has multiple Output nodes (#{first}, #{second})")
+            }
+            GraphError::DanglingInput { node, input } => {
+                write!(f, "node #{node} references dangling input #{input}")
+            }
+            GraphError::BadArity {
+                node,
+                op,
+                expected,
+                got,
+            } => write!(f, "node #{node} ({op}) expects {expected} input(s), got {got}"),
+            GraphError::OutputConsumed { node } => {
+                write!(f, "node #{node} consumes the Output node")
+            }
+            GraphError::Cycle { node } => {
+                write!(f, "graph has a cycle through node #{node}")
+            }
+            GraphError::ShapeMismatch {
+                node,
+                input,
+                expected,
+                got,
+            } => write!(
+                f,
+                "node #{node} expects {expected} features from input #{input}, got {got}"
+            ),
+            GraphError::BadPool { node, hw, factor } => write!(
+                f,
+                "node #{node}: pool factor {factor} does not divide the {hw}x{hw} grid"
+            ),
+            GraphError::Unsupported(reason) => write!(f, "{reason}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// A compiled, validated, scheduled graph (see module docs).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    /// Per-sample output feature count of every node.
+    feats: Vec<usize>,
+    /// Execution order (topological, deterministic).
+    schedule: Vec<NodeId>,
+    /// Arena slot of every node (`None` for `Input`/`Output`, which alias
+    /// the request buffer / their producer's slot).
+    slot_of: Vec<Option<usize>>,
+    /// Per-slot per-sample capacity in f32s (max over assigned nodes).
+    slot_feats: Vec<usize>,
+    input: NodeId,
+    output: NodeId,
+}
+
+impl Graph {
+    /// Validate + schedule + liveness-allocate a node list. The only way
+    /// to obtain a `Graph`; every structural error is a typed
+    /// [`GraphError`].
+    pub fn compile(nodes: Vec<Node>) -> Result<Graph, GraphError> {
+        if nodes.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let n = nodes.len();
+        let (mut input, mut output) = (None::<usize>, None::<usize>);
+        for (i, node) in nodes.iter().enumerate() {
+            if node.inputs.len() != node.op.arity() {
+                return Err(GraphError::BadArity {
+                    node: i,
+                    op: node.op.name(),
+                    expected: node.op.arity(),
+                    got: node.inputs.len(),
+                });
+            }
+            for &NodeId(j) in &node.inputs {
+                if j >= n {
+                    return Err(GraphError::DanglingInput { node: i, input: j });
+                }
+                if matches!(nodes[j].op, Op::Output) {
+                    return Err(GraphError::OutputConsumed { node: i });
+                }
+            }
+            match node.op {
+                Op::Input { .. } => match input {
+                    None => input = Some(i),
+                    Some(first) => {
+                        return Err(GraphError::MultipleInputs { first, second: i })
+                    }
+                },
+                Op::Output => match output {
+                    None => output = Some(i),
+                    Some(first) => {
+                        return Err(GraphError::MultipleOutputs { first, second: i })
+                    }
+                },
+                _ => {}
+            }
+        }
+        let input = NodeId(input.ok_or(GraphError::MissingInput)?);
+        let output = NodeId(output.ok_or(GraphError::MissingOutput)?);
+
+        // Kahn topological sort, ready nodes taken in ascending id order
+        // so the schedule (and therefore slot assignment and execution)
+        // is deterministic.
+        let mut indeg: Vec<usize> = nodes.iter().map(|nd| nd.inputs.len()).collect();
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in nodes.iter().enumerate() {
+            for &NodeId(j) in &node.inputs {
+                consumers[j].push(i);
+            }
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut schedule: Vec<NodeId> = Vec::with_capacity(n);
+        while let Some(&i) = ready.first() {
+            // Take the smallest ready id (ready is kept sorted).
+            ready.remove(0);
+            schedule.push(NodeId(i));
+            for &c in &consumers[i] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    let pos = ready.partition_point(|&r| r < c);
+                    ready.insert(pos, c);
+                }
+            }
+        }
+        if schedule.len() != n {
+            let stuck = (0..n).find(|&i| indeg[i] > 0).unwrap_or(0);
+            return Err(GraphError::Cycle { node: stuck });
+        }
+
+        // Shape inference + per-edge feature checks, in schedule order so
+        // every producer is resolved before its consumers.
+        let mut feats = vec![0usize; n];
+        for &NodeId(i) in &schedule {
+            let node = &nodes[i];
+            let got = |slot: usize| feats[node.inputs[slot].0];
+            let f = match node.op {
+                Op::Input { features } => features,
+                Op::MatMul { in_f, out_f, .. } => {
+                    if got(0) != in_f {
+                        return Err(GraphError::ShapeMismatch {
+                            node: i,
+                            input: node.inputs[0].0,
+                            expected: in_f,
+                            got: got(0),
+                        });
+                    }
+                    out_f
+                }
+                Op::Conv { ref geom, .. } => {
+                    if got(0) != geom.in_features() {
+                        return Err(GraphError::ShapeMismatch {
+                            node: i,
+                            input: node.inputs[0].0,
+                            expected: geom.in_features(),
+                            got: got(0),
+                        });
+                    }
+                    geom.out_c * geom.num_positions()
+                }
+                Op::Pool {
+                    channels,
+                    hw,
+                    factor,
+                } => {
+                    if factor == 0 || hw == 0 || hw % factor != 0 {
+                        return Err(GraphError::BadPool {
+                            node: i,
+                            hw,
+                            factor,
+                        });
+                    }
+                    if got(0) != channels * hw * hw {
+                        return Err(GraphError::ShapeMismatch {
+                            node: i,
+                            input: node.inputs[0].0,
+                            expected: channels * hw * hw,
+                            got: got(0),
+                        });
+                    }
+                    let s = hw / factor;
+                    channels * s * s
+                }
+                Op::Add => {
+                    if got(0) != got(1) {
+                        return Err(GraphError::ShapeMismatch {
+                            node: i,
+                            input: node.inputs[1].0,
+                            expected: got(0),
+                            got: got(1),
+                        });
+                    }
+                    got(0)
+                }
+                Op::Output => got(0),
+            };
+            feats[i] = f;
+        }
+
+        // Buffer liveness: walk the schedule, claim a free slot for each
+        // value-producing node, recycle inputs' slots at their last use.
+        // A node's slot is claimed *before* its inputs are released, so a
+        // node never aliases any of its own inputs.
+        let mut last_use = vec![0usize; n];
+        for (pos, &NodeId(i)) in schedule.iter().enumerate() {
+            last_use[i] = pos; // a node with no consumers dies immediately
+            for &NodeId(j) in &nodes[i].inputs {
+                last_use[j] = pos;
+            }
+        }
+        let mut slot_of: Vec<Option<usize>> = vec![None; n];
+        let mut slot_feats: Vec<usize> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        for (pos, &NodeId(i)) in schedule.iter().enumerate() {
+            let needs_slot = !matches!(nodes[i].op, Op::Input { .. } | Op::Output);
+            if needs_slot {
+                let s = free.pop().unwrap_or_else(|| {
+                    slot_feats.push(0);
+                    slot_feats.len() - 1
+                });
+                slot_feats[s] = slot_feats[s].max(feats[i]);
+                slot_of[i] = Some(s);
+            }
+            for &NodeId(j) in &nodes[i].inputs {
+                if last_use[j] == pos {
+                    if let Some(s) = slot_of[j] {
+                        if !free.contains(&s) {
+                            free.push(s);
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(Graph {
+            nodes,
+            feats,
+            schedule,
+            slot_of,
+            slot_feats,
+            input,
+            output,
+        })
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    /// Topological execution order.
+    pub fn schedule(&self) -> &[NodeId] {
+        &self.schedule
+    }
+
+    /// Per-sample output feature count of a node.
+    pub fn out_features(&self, id: NodeId) -> usize {
+        self.feats[id.0]
+    }
+
+    /// Arena slot of a node (`None`: `Input` aliases the request buffer,
+    /// `Output` aliases its producer's buffer).
+    pub fn slot_of(&self, id: NodeId) -> Option<usize> {
+        self.slot_of[id.0]
+    }
+
+    /// Number of arena slots the liveness pass allocated.
+    pub fn num_slots(&self) -> usize {
+        self.slot_feats.len()
+    }
+
+    /// Per-slot per-sample f32 capacity.
+    pub fn slot_feats(&self) -> &[usize] {
+        &self.slot_feats
+    }
+
+    /// Σ slot capacities: the activation arena's per-sample float count.
+    pub fn arena_floats_per_sample(&self) -> usize {
+        self.slot_feats.iter().sum()
+    }
+
+    pub fn input(&self) -> NodeId {
+        self.input
+    }
+
+    pub fn output(&self) -> NodeId {
+        self.output
+    }
+
+    /// Number of residual merges ([`Op::Add`] nodes).
+    pub fn residual_adds(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n.op, Op::Add)).count()
+    }
+
+    /// Number of [`Op::Pool`] nodes.
+    pub fn pool_nodes(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Pool { .. }))
+            .count()
+    }
+
+    /// Number of weight-bearing nodes (`MatMul` + `Conv`).
+    pub fn weight_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.layer_index().is_some()).count()
+    }
+}
+
+// ----------------------------------------------------------------------
+// Lowering: nets::Network -> Graph
+// ----------------------------------------------------------------------
+
+/// What a node produces, as the lowering tracks it: a flat feature vector
+/// or a CHW grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Shape {
+    Flat(usize),
+    Chw { c: usize, hw: usize },
+}
+
+impl Shape {
+    fn features(self) -> usize {
+        match self {
+            Shape::Flat(f) => f,
+            Shape::Chw { c, hw } => c * hw * hw,
+        }
+    }
+}
+
+/// Lower a benchmark network into the graph IR, or explain why it cannot
+/// execute on the sim backend. This is the whole capability story:
+/// `SimBackend::supports` is `lower(net).map(|_| ())`.
+pub fn lower(net: &Network) -> Result<Graph, GraphError> {
+    if net.layers.is_empty() {
+        return Err(GraphError::Unsupported(format!(
+            "network '{}' has no layers",
+            net.name
+        )));
+    }
+    let groups = group_blocks(net);
+    let mut lw = Lowering {
+        net,
+        nodes: Vec::with_capacity(net.layers.len() + groups.len() + 2),
+        cur: NodeId(0),
+        cur_shape: Shape::Flat(0),
+        cur_name: "input",
+    };
+
+    // The Input node takes its shape from the first weight-bearing layer.
+    let first = &net.layers[groups[0].layers[0]];
+    let in_shape = match first.kind {
+        LayerKind::Conv2d { in_c, in_hw, .. } => Shape::Chw {
+            c: in_c as usize,
+            hw: in_hw as usize,
+        },
+        LayerKind::Linear { in_f, .. } => Shape::Flat(in_f as usize),
+    };
+    lw.cur_shape = in_shape;
+    lw.nodes.push(Node::new(
+        Op::Input {
+            features: in_shape.features(),
+        },
+        vec![],
+        false,
+    ));
+
+    let last_layer = net.layers.len() - 1;
+    for group in &groups {
+        if group.residual {
+            // A block holding the network's last layer feeds Output: no
+            // ReLU on its merge (same "hidden layers only" rule as the
+            // sequential path — logits keep their sign).
+            let is_last = group.layers.contains(&last_layer);
+            lw.lower_block(group, is_last)?;
+        } else {
+            for &li in &group.layers {
+                lw.lower_sequential(li, li == last_layer)?;
+            }
+        }
+    }
+
+    let out = lw.cur;
+    lw.nodes.push(Node::new(Op::Output, vec![out], false));
+    Graph::compile(lw.nodes)
+}
+
+/// One maximal run of layers sharing a dotted name prefix; `residual`
+/// when the run matches the torchvision block convention
+/// (`layerS.B.convK` / `layerS.B.downsample`).
+struct BlockGroup {
+    layers: Vec<usize>,
+    residual: bool,
+}
+
+/// Is `name` a torchvision residual-block *member* name: a dotted prefix
+/// plus a `convK` trunk member (literally `conv` + digits) or the
+/// `downsample` projection? Only such members assemble into residual
+/// blocks — a shared dotted prefix alone (e.g. `stage.0`/`stage.1`) or a
+/// merely conv-ish suffix (`convert1`) is not enough, so arbitrary
+/// sequential nets with dotted names keep their PR 3 straight-line
+/// semantics instead of silently gaining an Add.
+fn block_member_suffix(name: &str) -> Option<&str> {
+    let (_, suffix) = name.rsplit_once('.')?;
+    let is_conv_k = suffix
+        .strip_prefix("conv")
+        .is_some_and(|k| !k.is_empty() && k.bytes().all(|b| b.is_ascii_digit()));
+    (is_conv_k || suffix == "downsample").then_some(suffix)
+}
+
+/// Group consecutive layers by their dotted name prefix. A run of two or
+/// more layers whose suffixes are all block members (`convK` /
+/// `downsample`) is a residual block; everything else lowers
+/// sequentially.
+fn group_blocks(net: &Network) -> Vec<BlockGroup> {
+    let key = |name: &str| -> Option<String> {
+        block_member_suffix(name)?;
+        name.rsplit_once('.').map(|(prefix, _)| prefix.to_string())
+    };
+    let mut groups: Vec<(Option<String>, Vec<usize>)> = Vec::new();
+    for (i, l) in net.layers.iter().enumerate() {
+        let k = key(&l.name);
+        match groups.last_mut() {
+            Some((prev, idxs)) if k.is_some() && *prev == k => idxs.push(i),
+            _ => groups.push((k, vec![i])),
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(k, layers)| BlockGroup {
+            residual: k.is_some() && layers.len() > 1,
+            layers,
+        })
+        .collect()
+}
+
+/// Lowering state: the node list under construction plus the "current"
+/// node — the value the next layer consumes.
+struct Lowering<'a> {
+    net: &'a Network,
+    nodes: Vec<Node>,
+    cur: NodeId,
+    cur_shape: Shape,
+    cur_name: &'a str,
+}
+
+impl<'a> Lowering<'a> {
+    fn push(&mut self, op: Op, inputs: Vec<NodeId>, relu: bool) -> NodeId {
+        self.nodes.push(Node::new(op, inputs, relu));
+        NodeId(self.nodes.len() - 1)
+    }
+
+    fn err(&self, msg: String) -> GraphError {
+        GraphError::Unsupported(format!("{}: {}", self.net.name, msg))
+    }
+
+    /// Geometry of a conv layer, with the zero-dim guard.
+    fn conv_geom(&self, l: &Layer) -> Result<ConvGeom, GraphError> {
+        let LayerKind::Conv2d {
+            in_c,
+            out_c,
+            kernel,
+            stride,
+            padding,
+            in_hw,
+        } = l.kind
+        else {
+            unreachable!("conv_geom called on a non-conv layer");
+        };
+        let geom = ConvGeom {
+            in_c: in_c as usize,
+            out_c: out_c as usize,
+            kernel: kernel as usize,
+            stride: stride as usize,
+            padding: padding as usize,
+            in_hw: in_hw as usize,
+            out_hw: l.out_hw() as usize,
+        };
+        if geom.in_c == 0
+            || geom.out_c == 0
+            || geom.kernel == 0
+            || geom.stride == 0
+            || geom.out_hw == 0
+        {
+            return Err(self.err(format!("layer '{}' has a zero dim", l.name)));
+        }
+        Ok(geom)
+    }
+
+    /// Bridge the current value to a consumer expecting `want_c` channels
+    /// on a `want_hw × want_hw` grid, inserting a max-pool node when the
+    /// grids differ by an integer factor. `who` names the consumer for
+    /// error messages.
+    fn bridge_to_grid(
+        &mut self,
+        want_c: usize,
+        want_hw: usize,
+        who: &str,
+    ) -> Result<(), GraphError> {
+        match self.cur_shape {
+            Shape::Flat(feat) => {
+                // A flat producer can feed a conv only if the feature
+                // counts line up exactly (the net's own input, typically).
+                if feat != want_c * want_hw * want_hw {
+                    return Err(self.err(format!(
+                        "layer '{who}' expects {} input features but '{}' produces {feat}",
+                        want_c * want_hw * want_hw,
+                        self.cur_name
+                    )));
+                }
+                self.cur_shape = Shape::Chw {
+                    c: want_c,
+                    hw: want_hw,
+                };
+                Ok(())
+            }
+            Shape::Chw { c, hw } => {
+                if c != want_c {
+                    return Err(self.err(format!(
+                        "conv '{}' produces {c} channels but '{who}' expects {want_c} — \
+                         the topologies the sim backend can lower must chain on channels",
+                        self.cur_name
+                    )));
+                }
+                if hw == want_hw {
+                    return Ok(());
+                }
+                if want_hw == 0 || hw < want_hw || hw % want_hw != 0 {
+                    return Err(self.err(format!(
+                        "conv '{}' output grid {hw}x{hw} cannot pool down to the \
+                         {want_hw}x{want_hw} grid '{who}' expects",
+                        self.cur_name
+                    )));
+                }
+                let factor = hw / want_hw;
+                let cur = self.cur;
+                self.cur = self.push(
+                    Op::Pool {
+                        channels: c,
+                        hw,
+                        factor,
+                    },
+                    vec![cur],
+                    false,
+                );
+                self.cur_shape = Shape::Chw { c, hw: want_hw };
+                Ok(())
+            }
+        }
+    }
+
+    /// Lower one layer of a sequential group onto the trunk.
+    fn lower_sequential(&mut self, li: usize, is_last: bool) -> Result<(), GraphError> {
+        let l = &self.net.layers[li];
+        let relu = !is_last; // ReLU on hidden layers only
+        match l.kind {
+            LayerKind::Linear { in_f, out_f } => {
+                let (in_f, out_f) = (in_f as usize, out_f as usize);
+                if in_f == 0 || out_f == 0 {
+                    return Err(self.err(format!("layer '{}' has a zero dim", l.name)));
+                }
+                // An FC after a spatial producer flattens a pooled CHW
+                // volume: in_f = c · s² for an integer grid s.
+                if let Shape::Chw { c, hw } = self.cur_shape {
+                    let s = if in_f % c == 0 {
+                        integer_sqrt(in_f / c)
+                    } else {
+                        None
+                    };
+                    let Some(s) = s else {
+                        return Err(self.err(format!(
+                            "FC layer '{}' input {in_f} does not flatten the {c} \
+                             channels conv '{}' produces",
+                            l.name, self.cur_name
+                        )));
+                    };
+                    self.bridge_to_grid(c, s, &l.name)?;
+                }
+                if self.cur_shape.features() != in_f {
+                    return Err(self.err(format!(
+                        "layer '{}' expects {in_f} input features but '{}' produces {}",
+                        l.name,
+                        self.cur_name,
+                        self.cur_shape.features()
+                    )));
+                }
+                let cur = self.cur;
+                self.cur = self.push(
+                    Op::MatMul {
+                        layer: li,
+                        in_f,
+                        out_f,
+                    },
+                    vec![cur],
+                    relu,
+                );
+                self.cur_shape = Shape::Flat(out_f);
+            }
+            LayerKind::Conv2d { .. } => {
+                let geom = self.conv_geom(l)?;
+                self.bridge_to_grid(geom.in_c, geom.in_hw, &l.name)?;
+                let cur = self.cur;
+                self.cur = self.push(Op::Conv { layer: li, geom }, vec![cur], relu);
+                self.cur_shape = Shape::Chw {
+                    c: geom.out_c,
+                    hw: geom.out_hw,
+                };
+            }
+        }
+        self.cur_name = &l.name;
+        Ok(())
+    }
+
+    /// Lower one residual block: trunk convs chain from the block input,
+    /// the optional `*.downsample` layer projects the block input, and
+    /// the block ends in `Add(trunk, skip)` + ReLU (no ReLU when the
+    /// block is the network's final group — logits keep their sign).
+    fn lower_block(&mut self, group: &BlockGroup, is_last: bool) -> Result<(), GraphError> {
+        let is_proj = |li: &usize| self.net.layers[*li].name.ends_with("downsample");
+        let projs: Vec<usize> = group.layers.iter().copied().filter(|li| is_proj(li)).collect();
+        let trunk: Vec<usize> = group
+            .layers
+            .iter()
+            .copied()
+            .filter(|li| !is_proj(li))
+            .collect();
+        let block_name = &self.net.layers[group.layers[0]].name;
+        if projs.len() > 1 {
+            return Err(self.err(format!(
+                "residual block of '{block_name}' has {} downsample projections \
+                 (at most one is supported)",
+                projs.len()
+            )));
+        }
+        if trunk.is_empty() {
+            return Err(self.err(format!(
+                "residual block of '{block_name}' has no trunk layers"
+            )));
+        }
+        for &li in group.layers.iter() {
+            if !matches!(self.net.layers[li].kind, LayerKind::Conv2d { .. }) {
+                return Err(self.err(format!(
+                    "residual block layer '{}' is not a conv — only conv residual \
+                     blocks lower",
+                    self.net.layers[li].name
+                )));
+            }
+        }
+
+        // Bridge the trunk's first conv (possibly inserting a pool) —
+        // the bridged value is the block input both branches read.
+        let first = &self.net.layers[trunk[0]];
+        let first_geom = self.conv_geom(first)?;
+        self.bridge_to_grid(first_geom.in_c, first_geom.in_hw, &first.name)?;
+        let block_in = self.cur;
+        let block_in_shape = self.cur_shape;
+        let block_in_name = self.cur_name;
+
+        // Trunk: convs chain exactly (no pooling inside a block); ReLU on
+        // every trunk conv except the last (it fires after the add).
+        for (pos, &li) in trunk.iter().enumerate() {
+            let l = &self.net.layers[li];
+            let geom = self.conv_geom(l)?;
+            let Shape::Chw { c, hw } = self.cur_shape else {
+                unreachable!("trunk convs always follow a spatial value");
+            };
+            if (c, hw) != (geom.in_c, geom.in_hw) {
+                return Err(self.err(format!(
+                    "residual trunk conv '{}' expects {}ch@{}x{} but '{}' produces \
+                     {c}ch@{hw}x{hw}",
+                    l.name, geom.in_c, geom.in_hw, geom.in_hw, self.cur_name
+                )));
+            }
+            let relu = pos + 1 < trunk.len();
+            let cur = self.cur;
+            self.cur = self.push(Op::Conv { layer: li, geom }, vec![cur], relu);
+            self.cur_shape = Shape::Chw {
+                c: geom.out_c,
+                hw: geom.out_hw,
+            };
+            self.cur_name = &l.name;
+        }
+        let trunk_out = self.cur;
+        let trunk_shape = self.cur_shape;
+
+        // Skip branch: the projection conv over the block input, or the
+        // identity when shapes already agree.
+        let skip = match projs.first() {
+            Some(&li) => {
+                let l = &self.net.layers[li];
+                let geom = self.conv_geom(l)?;
+                let Shape::Chw { c, hw } = block_in_shape else {
+                    return Err(self.err(format!(
+                        "downsample '{}' needs a spatial block input",
+                        l.name
+                    )));
+                };
+                if (c, hw) != (geom.in_c, geom.in_hw) {
+                    return Err(self.err(format!(
+                        "downsample '{}' expects {}ch@{}x{} but the block input \
+                         '{block_in_name}' is {c}ch@{hw}x{hw}",
+                        l.name, geom.in_c, geom.in_hw, geom.in_hw
+                    )));
+                }
+                let out_shape = Shape::Chw {
+                    c: geom.out_c,
+                    hw: geom.out_hw,
+                };
+                if out_shape != trunk_shape {
+                    return Err(self.err(format!(
+                        "downsample '{}' produces {}ch@{}x{} but the trunk ends with \
+                         {} features — residual shapes must match",
+                        l.name,
+                        geom.out_c,
+                        geom.out_hw,
+                        geom.out_hw,
+                        trunk_shape.features(),
+                    )));
+                }
+                self.push(Op::Conv { layer: li, geom }, vec![block_in], false)
+            }
+            None => {
+                if block_in_shape != trunk_shape {
+                    return Err(self.err(format!(
+                        "residual block of '{block_name}' changes shape \
+                         ({} -> {} features) but has no downsample projection",
+                        block_in_shape.features(),
+                        trunk_shape.features()
+                    )));
+                }
+                block_in
+            }
+        };
+
+        // The merge: Add(trunk, skip) + ReLU (He et al. ordering); a
+        // terminal block's merge feeds Output, so its ReLU is dropped.
+        self.cur = self.push(Op::Add, vec![trunk_out, skip], !is_last);
+        self.cur_shape = trunk_shape;
+        self.cur_name = block_name;
+        Ok(())
+    }
+}
+
+/// Exact integer square root, if `n` is a perfect square.
+fn integer_sqrt(n: usize) -> Option<usize> {
+    let s = (n as f64).sqrt().round() as usize;
+    if s.checked_mul(s) == Some(n) {
+        Some(s)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    fn input(features: usize) -> Node {
+        Node::new(Op::Input { features }, vec![], false)
+    }
+
+    fn matmul(layer: usize, in_f: usize, out_f: usize, from: usize, relu: bool) -> Node {
+        Node::new(
+            Op::MatMul { layer, in_f, out_f },
+            vec![NodeId(from)],
+            relu,
+        )
+    }
+
+    #[test]
+    fn empty_graph_is_typed() {
+        assert_eq!(Graph::compile(vec![]).unwrap_err(), GraphError::Empty);
+    }
+
+    #[test]
+    fn dangling_input_is_typed() {
+        let nodes = vec![
+            input(4),
+            matmul(0, 4, 4, 9, false), // node #9 does not exist
+            Node::new(Op::Output, vec![NodeId(1)], false),
+        ];
+        assert_eq!(
+            Graph::compile(nodes).unwrap_err(),
+            GraphError::DanglingInput { node: 1, input: 9 }
+        );
+    }
+
+    #[test]
+    fn cycle_is_typed() {
+        // 1 and 2 feed each other: no topological order exists.
+        let nodes = vec![
+            input(4),
+            Node::new(Op::Add, vec![NodeId(0), NodeId(2)], false),
+            Node::new(Op::Add, vec![NodeId(1), NodeId(1)], false),
+            Node::new(Op::Output, vec![NodeId(2)], false),
+        ];
+        assert!(matches!(
+            Graph::compile(nodes).unwrap_err(),
+            GraphError::Cycle { .. }
+        ));
+    }
+
+    #[test]
+    fn arity_and_output_rules_are_enforced() {
+        let bad_add = vec![
+            input(4),
+            Node::new(Op::Add, vec![NodeId(0)], false),
+            Node::new(Op::Output, vec![NodeId(1)], false),
+        ];
+        assert!(matches!(
+            Graph::compile(bad_add).unwrap_err(),
+            GraphError::BadArity { node: 1, .. }
+        ));
+        let no_output = vec![input(4), matmul(0, 4, 2, 0, false)];
+        assert_eq!(
+            Graph::compile(no_output).unwrap_err(),
+            GraphError::MissingOutput
+        );
+        let consumed = vec![
+            input(4),
+            Node::new(Op::Output, vec![NodeId(0)], false),
+            Node::new(Op::Add, vec![NodeId(1), NodeId(1)], false),
+        ];
+        assert!(matches!(
+            Graph::compile(consumed).unwrap_err(),
+            GraphError::OutputConsumed { .. } | GraphError::MultipleOutputs { .. }
+        ));
+    }
+
+    #[test]
+    fn edge_shape_mismatch_is_typed() {
+        let nodes = vec![
+            input(4),
+            matmul(0, 8, 2, 0, false), // expects 8, input has 4
+            Node::new(Op::Output, vec![NodeId(1)], false),
+        ];
+        assert!(matches!(
+            Graph::compile(nodes).unwrap_err(),
+            GraphError::ShapeMismatch {
+                node: 1,
+                expected: 8,
+                got: 4,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn sequential_chain_reuses_two_slots() {
+        // A 4-layer chain must ping-pong between exactly two arena slots.
+        let g = lower(&nets::mlp_tiny()).unwrap();
+        assert_eq!(g.num_slots(), 2);
+        assert_eq!(g.residual_adds(), 0);
+        assert_eq!(g.weight_nodes(), 4);
+        // Input + 4 matmuls + Output.
+        assert_eq!(g.num_nodes(), 6);
+        assert_eq!(g.out_features(g.output()), 10);
+    }
+
+    #[test]
+    fn diamond_keeps_the_skip_tensor_alive_in_its_own_slot() {
+        // input -> m0 -> m1 -> add(m1, m0-skip): the skip (m0) must hold
+        // its slot across m1, so three slots exist.
+        let nodes = vec![
+            input(4),
+            matmul(0, 4, 4, 0, true),
+            matmul(1, 4, 4, 1, false),
+            Node::new(Op::Add, vec![NodeId(2), NodeId(1)], true),
+            Node::new(Op::Output, vec![NodeId(3)], false),
+        ];
+        let g = Graph::compile(nodes).unwrap();
+        assert_eq!(g.residual_adds(), 1);
+        assert_eq!(g.num_slots(), 3);
+        // The skip's slot differs from both the trunk's and the add's.
+        let (s1, s2, s3) = (
+            g.slot_of(NodeId(1)).unwrap(),
+            g.slot_of(NodeId(2)).unwrap(),
+            g.slot_of(NodeId(3)).unwrap(),
+        );
+        assert_ne!(s1, s2);
+        assert_ne!(s1, s3);
+        assert_ne!(s2, s3);
+    }
+
+    #[test]
+    fn resnet18_lowers_with_eight_residual_blocks() {
+        let g = lower(&nets::resnet::resnet18()).unwrap();
+        assert_eq!(g.residual_adds(), 8);
+        // 20 convs + 1 fc are all weight-bearing.
+        assert_eq!(g.weight_nodes(), 21);
+        // Stem pool (112 -> 56) + global pool before the FC (7 -> 1).
+        assert_eq!(g.pool_nodes(), 2);
+        assert_eq!(g.out_features(g.output()), 1000);
+    }
+
+    #[test]
+    fn resnet50_bottlenecks_lower() {
+        let g = lower(&nets::resnet::resnet50()).unwrap();
+        assert_eq!(g.residual_adds(), 16);
+        assert_eq!(g.weight_nodes(), 54);
+        assert_eq!(g.out_features(g.output()), 1000);
+    }
+
+    #[test]
+    fn resnet_tiny_lowers_with_identity_and_projected_skips() {
+        let g = lower(&nets::resnet::resnet_tiny()).unwrap();
+        assert_eq!(g.residual_adds(), 2);
+        assert_eq!(g.weight_nodes(), 7);
+        // Global 4x pool between the last add and the FC.
+        assert_eq!(g.pool_nodes(), 1);
+        assert_eq!(g.out_features(g.input()), 3 * 8 * 8);
+        assert_eq!(g.out_features(g.output()), 10);
+    }
+
+    #[test]
+    fn vgg16_lowers_sequentially_with_pools() {
+        let g = lower(&nets::vgg16()).unwrap();
+        assert_eq!(g.residual_adds(), 0);
+        assert_eq!(g.weight_nodes(), 16);
+        // VGG pools after conv2/4/7/10/13 (the last one folded into the
+        // 14x14 -> 7x7 shrink the first FC implies).
+        assert_eq!(g.pool_nodes(), 5);
+    }
+
+    #[test]
+    fn terminal_residual_block_keeps_logit_signs() {
+        // A net whose last group is a residual block must not ReLU-clamp
+        // its logits: the merge feeding Output carries no fused ReLU.
+        let net = nets::Network {
+            name: "headless".into(),
+            layers: vec![
+                nets::Layer::conv("stem", 3, 4, 3, 1, 1, 4),
+                nets::Layer::conv("b.0.conv1", 4, 4, 3, 1, 1, 4),
+                nets::Layer::conv("b.0.conv2", 4, 4, 3, 1, 1, 4),
+            ],
+        };
+        let g = lower(&net).unwrap();
+        assert_eq!(g.residual_adds(), 1);
+        let out_src = g.node(g.output()).inputs[0];
+        assert!(matches!(g.node(out_src).op, Op::Add));
+        assert!(!g.node(out_src).relu, "terminal merge must not ReLU");
+        // Non-terminal merges keep the post-add ReLU.
+        let g2 = lower(&nets::resnet::resnet_tiny()).unwrap();
+        let relu_adds = (0..g2.num_nodes())
+            .filter(|&i| matches!(g2.node(NodeId(i)).op, Op::Add))
+            .filter(|&i| g2.node(NodeId(i)).relu)
+            .count();
+        assert_eq!(relu_adds, 2);
+    }
+
+    #[test]
+    fn conv_like_suffixes_outside_convk_stay_sequential() {
+        // `convert1`/`convert2` share a dotted prefix and start with
+        // "conv", but are not convK members: no block may be inferred.
+        let net = nets::Network {
+            name: "convish".into(),
+            layers: vec![
+                nets::Layer::conv("enc.convert1", 3, 4, 3, 1, 1, 8),
+                nets::Layer::conv("enc.convert2", 4, 4, 3, 1, 1, 8),
+                nets::Layer::linear("fc", 4 * 8 * 8, 10),
+            ],
+        };
+        let g = lower(&net).unwrap();
+        assert_eq!(g.residual_adds(), 0, "convert* must not form a block");
+    }
+
+    #[test]
+    fn dotted_names_outside_the_block_convention_stay_sequential() {
+        // A shared dotted prefix alone must NOT fuse an Add: only
+        // convK/downsample suffixes assemble into residual blocks.
+        let net = nets::Network {
+            name: "dotted-seq".into(),
+            layers: vec![
+                nets::Layer::conv("stage.0", 3, 4, 3, 1, 1, 8),
+                nets::Layer::conv("stage.1", 4, 4, 3, 1, 1, 8),
+                nets::Layer::linear("head.fc", 4 * 8 * 8, 10),
+            ],
+        };
+        let g = lower(&net).unwrap();
+        assert_eq!(g.residual_adds(), 0, "no Add may be inferred");
+        assert_eq!(g.weight_nodes(), 3);
+    }
+
+    #[test]
+    fn broken_chain_still_fails_with_a_reason() {
+        let net = nets::Network {
+            name: "bad-chain".into(),
+            layers: vec![
+                nets::Layer::conv("c1", 3, 4, 3, 1, 1, 8),
+                nets::Layer::conv("c2", 8, 4, 3, 1, 1, 8),
+            ],
+        };
+        let err = lower(&net).unwrap_err();
+        assert!(err.to_string().contains("channels"), "{err}");
+    }
+
+    #[test]
+    fn shape_changing_block_without_projection_fails() {
+        let net = nets::Network {
+            name: "bad-resnet".into(),
+            layers: vec![
+                nets::Layer::conv("block.0.conv1", 3, 8, 3, 2, 1, 8),
+                nets::Layer::conv("block.0.conv2", 8, 8, 3, 1, 1, 4),
+            ],
+        };
+        let err = lower(&net).unwrap_err();
+        assert!(err.to_string().contains("downsample"), "{err}");
+    }
+
+    #[test]
+    fn liveness_sizes_slots_to_their_largest_tenant() {
+        let g = lower(&nets::mlp_tiny()).unwrap();
+        // Layer outputs are 512, 512, 128, 10; two slots ping-pong so
+        // both must hold 512.
+        assert_eq!(g.slot_feats().iter().max(), Some(&512));
+        assert_eq!(g.arena_floats_per_sample(), 512 + 512);
+    }
+}

@@ -12,6 +12,11 @@
 //! whose layering is the crate's performance-critical core (every search
 //! episode and every offline `serve` request funnels through it):
 //!
+//! - [`graph`] — the graph IR: networks (sequential *and* residual)
+//!   lower into a small dataflow graph (`Input`/`MatMul`/`Conv`/`Pool`/
+//!   `Add`/`Output`), compiled into a topological schedule with
+//!   buffer-liveness arena slots. `SimBackend::supports` is "does this
+//!   network lower?" — no topology blacklist.
 //! - [`pool`] — a persistent worker-thread pool, created once per
 //!   `SimBackend` and reused by every matmul of every eval. Workers park
 //!   on a condvar between jobs and claim row-chunk tickets dynamically,
@@ -22,17 +27,20 @@
 //!   path: register-tiled 4×16 microkernel fanned across the pool). All
 //!   three agree bit for bit; CI gates on it.
 //! - [`simnet`] — `SimBackend`, the deterministic quantized-forward
-//!   backend. Per-layer packed-weight caching (one layer's `w_bits`
-//!   change repacks only that layer), a construction-time scratch arena
-//!   (activation ping-pong + conv im2col/product/CHW slots), and logits
-//!   returned in the request's own buffer make steady-state eval
-//!   allocation-free.
+//!   backend executing the compiled schedule. Per-layer packed-weight
+//!   caching (one layer's `w_bits` change repacks only that layer), a
+//!   construction-time arena sized by the graph's liveness pass (skip
+//!   tensors hold their own slots), and logits returned in the request's
+//!   own buffer make steady-state eval allocation-free. Its
+//!   `eval_reference` straight-line executor is the bitwise comparator
+//!   the bench and CI gate on.
 //!
 //! `cargo bench --bench bench_simnet` measures the stack and emits
-//! `BENCH_simnet.json` (schema in `rust/src/api/README.md`).
+//! `BENCH_simnet.json` (schema v3 in `rust/src/api/README.md`).
 
 pub mod engine;
 pub mod gemm;
+pub mod graph;
 pub mod pool;
 pub mod simnet;
 

@@ -139,6 +139,17 @@ impl WorkerPool {
     /// the whole job has drained (like `thread::scope`, no part is left
     /// running when the panic propagates), and the pool stays usable.
     ///
+    /// Concurrent `run` calls from *different* threads are memory-safe
+    /// (submitters serialize on the job slot) but panic **attribution**
+    /// across them is best-effort: the shared `poisoned` flag is reset
+    /// by the next job's install, so a worker-side panic in submitter
+    /// A's job can be missed (or observed by B) when B installs between
+    /// A's drain and A's wake-up. Every in-tree pool has exactly one
+    /// submitting thread (`SimBackend::eval` takes `&mut self`), so this
+    /// cannot occur today; fixing it for multi-submitter use means
+    /// carrying a per-job poison flag in `RawJob` (pointing at the
+    /// submitter's stack) and keying the drain wait on the job epoch.
+    ///
     /// `run` must not be called again (on the same pool) from *inside* a
     /// part body: the nested call would wait for the outer job to drain,
     /// which cannot happen while the body is still running — a deadlock.

@@ -9,17 +9,20 @@
 //! identical in structure to the Pallas kernels (symmetric per-tensor
 //! weight quantization, post-ReLU activation quantization).
 //!
-//! Fully-connected layers run directly through the pooled register-tiled
-//! matmul kernel (`runtime::gemm`); conv layers are lowered to im2col +
-//! the same kernel, exactly the paper's §II view of a conv as a lowered
-//! R×N weight matrix streaming W² input vectors. Inter-layer max pooling
-//! is inferred from the geometry (the benchmark nets list only
-//! weight-bearing layers, so a spatial shrink between consecutive convs —
-//! or a conv followed by a smaller FC — implies the pooling stage that the
-//! real nets put there). Networks whose layers do not chain sequentially
-//! (e.g. ResNet residual projections) are rejected by the
-//! [`SimBackend::supports`] capability query, which callers use to report
-//! a typed error *before* building a backend.
+//! # Graph execution
+//!
+//! Since PR 4 the backend executes a compiled [`runtime::graph`] schedule
+//! instead of walking the flat layer list, so residual topologies (the
+//! paper's ResNet benchmarks) serve offline alongside the FC and
+//! sequential conv nets. Construction lowers the network into the IR
+//! (`graph::lower`) — [`SimBackend::supports`] is literally "does this
+//! network lower?", with the typed `GraphError` reason surfaced — and
+//! eval walks the topological schedule: `MatMul` nodes run the pooled
+//! register-tiled kernel, `Conv` nodes lower to im2col + the same kernel
+//! (the paper's §II view of a conv as a lowered R×N weight matrix
+//! streaming W² input vectors), `Pool` nodes max-pool CHW grids, and
+//! `Add` nodes merge residual branches elementwise (ReLU after the merge,
+//! the He et al. ordering).
 //!
 //! # The steady-state hot path
 //!
@@ -27,28 +30,35 @@
 //! loop allocates nothing after warmup:
 //!
 //! - one persistent [`WorkerPool`] is created per backend and reused by
-//!   every matmul of every eval (the PR 2 kernel spawned `thread::scope`
-//!   workers per matmul);
-//! - activations ping-pong between two preallocated scratch buffers, and
-//!   the conv path's im2col/product/CHW buffers live in a per-backend
-//!   arena sized at construction (wide conv batches fan the *samples*
-//!   across the pool, each part owning one arena slot);
+//!   every matmul of every eval;
+//! - activations live in an **arena** whose slots the graph's buffer-
+//!   liveness pass assigned: a sequential chain ping-pongs between two
+//!   slots, a skip-connection tensor holds its own slot across the block,
+//!   and every slot's capacity is fixed at construction;
+//! - each weight-bearing node quantizes its input into one shared
+//!   *staging* buffer (a buffer can feed several consumers — the trunk
+//!   and the skip — so in-place quantization would corrupt the second
+//!   reader);
 //! - packed quantized weights are cached **per layer**, keyed by that
-//!   layer's `w_bits`: changing one layer's bits repacks only that layer
-//!   (the PR 2 cache invalidated the whole net on any change).
+//!   layer's `w_bits`: changing one layer's bits repacks only that layer.
 //!
-//! The logits are handed back in the request's own input buffer, so the
-//! scratch never leaves the backend. [`SimBackend::set_legacy_scope_kernel`]
-//! keeps the PR 2 path callable as a bench comparator; both paths produce
-//! bit-for-bit identical logits.
+//! The logits are handed back in the request's own buffer, so the
+//! scratch never leaves the backend.
+//!
+//! [`SimBackend::eval_reference`] is the straight-line comparator: the
+//! same schedule executed with fresh allocations per node and the naive
+//! reference kernel. Both paths produce bit-for-bit identical logits
+//! (all kernels share one reduction order — see `runtime::gemm`); the
+//! bench and CI smoke job gate on it, residual adds included.
 //!
 //! Weights are synthetic (seeded He-scaled Gaussians), so logits carry no
 //! trained meaning; what the backend faithfully reproduces is everything
 //! the coordinator cares about: shapes, batching, per-layer bit-width
 //! plumbing, determinism, and failure modes.
 
-use crate::nets::{Layer, LayerKind, Network};
+use crate::nets::Network;
 use crate::runtime::gemm::{self, ConvGeom, PackedMat, SendPtr};
+use crate::runtime::graph::{self, Graph, Op};
 use crate::runtime::pool::{self, WorkerPool};
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
@@ -63,44 +73,6 @@ const CONV_CHUNK: usize = 128;
 /// part, inner matmuls inline — the pool does not nest).
 const CONV_MT_MIN_FLOPS: usize = 1 << 21;
 
-/// How one network layer executes on the sim backend.
-#[derive(Clone, Copy, Debug)]
-enum LayerExec {
-    /// Dense layer: one matmul over the batch.
-    Fc { in_f: usize, out_f: usize },
-    /// Conv layer lowered to im2col + matmul, followed by `pool × pool`
-    /// max pooling (1 = none) to reach the next layer's input grid.
-    Conv { geom: ConvGeom, pool: usize },
-}
-
-impl LayerExec {
-    /// (lowered rows, lowered cols) of the layer's weight matrix — the
-    /// same R×N the paper's tile equation sees (`nets::Layer::lowered_*`).
-    fn lowered_dims(&self) -> (usize, usize) {
-        match *self {
-            LayerExec::Fc { in_f, out_f } => (in_f, out_f),
-            LayerExec::Conv { geom, .. } => (geom.patch_len(), geom.out_c),
-        }
-    }
-
-    fn in_features(&self) -> usize {
-        match *self {
-            LayerExec::Fc { in_f, .. } => in_f,
-            LayerExec::Conv { geom, .. } => geom.in_features(),
-        }
-    }
-
-    fn out_features(&self) -> usize {
-        match *self {
-            LayerExec::Fc { out_f, .. } => out_f,
-            LayerExec::Conv { geom, pool } => {
-                let s = geom.out_hw / pool;
-                geom.out_c * s * s
-            }
-        }
-    }
-}
-
 /// One layer's packed-weight cache entry (see `ensure_packed`).
 struct PackedLayer {
     /// `w_bits` the cached pack was quantized at (meaningless when `mat`
@@ -112,50 +84,78 @@ struct PackedLayer {
     mat: Option<PackedMat>,
 }
 
-/// Conv-lowering arena: `parts` slots of im2col patches, matmul product
-/// and CHW activation buffers, sized once at construction.
+/// Conv-lowering scratch: `parts` slots of im2col patches and matmul
+/// product buffers, sized once at construction.
 struct ConvScratch {
     patches: Vec<f32>,
     prod: Vec<f32>,
-    chw: Vec<f32>,
 }
 
-/// Reusable eval scratch (see the module docs).
-struct Scratch {
-    act_a: Vec<f32>,
-    act_b: Vec<f32>,
-    conv: ConvScratch,
+/// Where a node's value lives during eval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BufRef {
+    /// The request's own buffer (the `Input` node).
+    Request,
+    /// Arena slot `i`.
+    Slot(usize),
+}
+
+/// Compiled-schedule summary (`inspect`/`serve` print it).
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleSummary {
+    /// Total IR nodes (incl. `Input`/`Output`).
+    pub nodes: usize,
+    /// Weight-bearing nodes (`MatMul` + `Conv`).
+    pub weight_nodes: usize,
+    /// Residual merges (`Add` nodes).
+    pub residual_adds: usize,
+    /// Max-pool nodes.
+    pub pool_nodes: usize,
+    /// Arena slots the liveness pass allocated.
+    pub slots: usize,
+    /// Bytes of activation arena + staging + conv scratch at this
+    /// backend's batch size.
+    pub arena_bytes: usize,
 }
 
 /// Pure-rust quantized-forward backend (see module docs).
 pub struct SimBackend {
     name: String,
-    layers: Vec<LayerExec>,
-    /// Row-major lowered [rows][cols] synthetic f32 master weights.
+    graph: Graph,
+    /// Per network layer: lowered (rows, cols) of the weight matrix.
+    dims: Vec<(usize, usize)>,
+    /// Row-major lowered [rows][cols] synthetic f32 master weights, one
+    /// per network layer (same index space as the serving bit vectors).
     weights: Vec<Vec<f32>>,
     /// Per-layer quantized packed-weight cache.
     packed: Vec<PackedLayer>,
-    scratch: Scratch,
+    /// Activation arena: one buffer per liveness slot, capacity fixed at
+    /// construction.
+    slots: Vec<Vec<f32>>,
+    /// Quantization staging buffer (each weight-bearing node quantizes
+    /// its input here; inputs can have several consumers).
+    staged: Vec<f32>,
+    conv: ConvScratch,
     pool: WorkerPool,
     eval_batch: usize,
     input_dim: usize,
     num_classes: usize,
-    /// Bench comparator switch: route evals through the PR 2 hot path.
-    legacy_scope_kernel: bool,
 }
 
 impl SimBackend {
-    /// Capability query: can the sim backend execute this network? `Err`
-    /// carries the precise reason (e.g. a residual projection that breaks
-    /// the sequential chain); `serve` surfaces it as a typed `ApiError`
-    /// instead of a runtime string.
+    /// Capability query: can the sim backend execute this network? The
+    /// answer is derived from graph lowering — `Err` carries the typed
+    /// `GraphError`'s rendering (e.g. a shape-changing residual block
+    /// with no downsample projection); `serve` surfaces it as a typed
+    /// `ApiError` instead of a runtime string.
     pub fn supports(net: &Network) -> Result<(), String> {
-        plan(net).map(|_| ())
+        graph::lower(net).map(|_| ()).map_err(|e| e.to_string())
     }
 
     /// Build from a network geometry. Any network accepted by
-    /// [`SimBackend::supports`] works — fully-connected chains and
-    /// sequential conv topologies (MLPs, VGG-style nets).
+    /// [`SimBackend::supports`] works — fully-connected chains,
+    /// sequential conv topologies (MLPs, VGG-style nets) and residual
+    /// nets (ResNets).
     pub fn from_network(net: &Network, eval_batch: usize, seed: u64) -> Result<SimBackend, String> {
         SimBackend::from_network_opts(net, eval_batch, seed, None)
     }
@@ -163,7 +163,7 @@ impl SimBackend {
     /// [`SimBackend::from_network`] with an explicit kernel worker-thread
     /// count (`None`: machine parallelism with the `LRMP_SIM_THREADS`
     /// override, clamped to `pool::MAX_THREADS`). The persistent worker
-    /// pool and every scratch buffer are created here, once; steady-state
+    /// pool and every arena buffer are created here, once; steady-state
     /// eval calls allocate nothing.
     pub fn from_network_opts(
         net: &Network,
@@ -179,43 +179,50 @@ impl SimBackend {
             Some(t) => t.min(pool::MAX_THREADS),
             None => pool::default_threads(),
         };
-        let layers = plan(net)?;
-        let mut rng = Rng::new(seed ^ 0x51A1_BACC);
-        let weights: Vec<Vec<f32>> = layers
+        let graph = graph::lower(net).map_err(|e| e.to_string())?;
+        let dims: Vec<(usize, usize)> = net
+            .layers
             .iter()
-            .map(|l| {
-                let (rows, cols) = l.lowered_dims();
+            .map(|l| (l.lowered_rows() as usize, l.lowered_cols() as usize))
+            .collect();
+        let mut rng = Rng::new(seed ^ 0x51A1_BACC);
+        let weights: Vec<Vec<f32>> = dims
+            .iter()
+            .map(|&(rows, cols)| {
                 let scale = (2.0 / rows as f64).sqrt();
                 (0..rows * cols)
                     .map(|_| (rng.normal() * scale) as f32)
                     .collect()
             })
             .collect();
-        let input_dim = layers[0].in_features();
-        let num_classes = layers[layers.len() - 1].out_features();
+        let input_dim = graph.out_features(graph.input());
+        let num_classes = graph.out_features(graph.output());
 
         let b = eval_batch;
-        let act_max = layers.iter().map(|l| b * l.out_features()).max().unwrap_or(0);
+        let slots: Vec<Vec<f32>> = graph
+            .slot_feats()
+            .iter()
+            .map(|&f| Vec::with_capacity(b * f))
+            .collect();
+        // Staging: the largest input any weight-bearing node quantizes.
+        let staged_max = graph
+            .schedule()
+            .iter()
+            .map(|&id| graph.node(id))
+            .filter(|n| n.op.layer_index().is_some())
+            .map(|n| graph.out_features(n.inputs[0]))
+            .max()
+            .unwrap_or(0);
         let parts_max = threads.min(b).max(1);
-        let (mut patches_max, mut prod_max, mut chw_max) = (0usize, 0usize, 0usize);
-        for l in &layers {
-            if let LayerExec::Conv { geom, .. } = *l {
+        let (mut patches_max, mut prod_max) = (0usize, 0usize);
+        for &id in graph.schedule() {
+            if let Op::Conv { geom, .. } = graph.node(id).op {
                 let chunk = CONV_CHUNK.min(geom.num_positions());
                 patches_max = patches_max.max(chunk * geom.patch_len());
                 prod_max = prod_max.max(chunk * geom.out_c);
-                chw_max = chw_max.max(geom.out_c * geom.num_positions());
             }
         }
-        let scratch = Scratch {
-            act_a: vec![0f32; act_max],
-            act_b: vec![0f32; act_max],
-            conv: ConvScratch {
-                patches: vec![0f32; parts_max * patches_max],
-                prod: vec![0f32; parts_max * prod_max],
-                chw: vec![0f32; parts_max * chw_max],
-            },
-        };
-        let packed = layers
+        let packed = dims
             .iter()
             .map(|_| PackedLayer {
                 bits: -1.0,
@@ -225,15 +232,20 @@ impl SimBackend {
             .collect();
         Ok(SimBackend {
             name: net.name.clone(),
-            layers,
+            graph,
+            dims,
             weights,
             packed,
-            scratch,
+            slots,
+            staged: Vec::with_capacity(b * staged_max),
+            conv: ConvScratch {
+                patches: Vec::with_capacity(parts_max * patches_max),
+                prod: Vec::with_capacity(parts_max * prod_max),
+            },
             pool: WorkerPool::new(threads),
             eval_batch,
             input_dim,
             num_classes,
-            legacy_scope_kernel: false,
         })
     }
 
@@ -247,18 +259,37 @@ impl SimBackend {
         self.pool.threads()
     }
 
+    /// The compiled graph this backend executes.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
     /// Times each layer's packed weights have been built — the probe the
     /// per-layer cache-invalidation test and the bench read.
     pub fn pack_counts(&self) -> Vec<u64> {
         self.packed.iter().map(|p| p.packs).collect()
     }
 
-    /// Route evals through the PR 2 hot path (`thread::scope` spawns per
-    /// matmul, fresh buffers per layer, scalar kernel). Kept callable so
-    /// the bench can measure pooled-vs-legacy on identical inputs; both
-    /// paths produce bit-for-bit identical logits. Never the default.
-    pub fn set_legacy_scope_kernel(&mut self, legacy: bool) {
-        self.legacy_scope_kernel = legacy;
+    /// Programmatic summary of the compiled schedule and the *actual*
+    /// scratch footprint (slot arena + staging + conv scratch) of this
+    /// backend. The CLI's `inspect`/`serve` print a graph-level schedule
+    /// line instead — `inspect` never builds a backend (constructing
+    /// resnet18's weights just to print a line would cost seconds), so
+    /// its figure covers the slot arena only.
+    pub fn schedule_summary(&self) -> ScheduleSummary {
+        let g = &self.graph;
+        let arena_floats: usize = self.slots.iter().map(|s| s.capacity()).sum::<usize>()
+            + self.staged.capacity()
+            + self.conv.patches.capacity()
+            + self.conv.prod.capacity();
+        ScheduleSummary {
+            nodes: g.num_nodes(),
+            weight_nodes: g.weight_nodes(),
+            residual_adds: g.residual_adds(),
+            pool_nodes: g.pool_nodes(),
+            slots: g.num_slots(),
+            arena_bytes: arena_floats * std::mem::size_of::<f32>(),
+        }
     }
 
     /// Per-layer packed-weight cache: repack **only** the layers whose
@@ -270,7 +301,7 @@ impl SimBackend {
             if entry.mat.is_some() && entry.bits == bits {
                 continue;
             }
-            let (rows, cols) = self.layers[i].lowered_dims();
+            let (rows, cols) = self.dims[i];
             let q = quantize_symmetric(&self.weights[i], bits as u32);
             entry.mat = Some(PackedMat::pack(&q, rows, cols));
             entry.bits = bits;
@@ -278,208 +309,125 @@ impl SimBackend {
         }
     }
 
-    /// The PR 2 eval path, preserved as the bench comparator: per-layer
-    /// fresh activation buffers, conv scratch allocated per call, matmuls
-    /// through the per-call `thread::scope` kernel.
-    fn eval_legacy(&mut self, x: Vec<f32>, w_bits: &[f32], a_bits: &[f32]) -> Result<Vec<f32>> {
-        self.ensure_packed(w_bits);
+    /// The straight-line reference executor: the same schedule, executed
+    /// with fresh buffers per node and the naive reference kernel — no
+    /// pool, no arena, no packed cache. Bit-for-bit identical to
+    /// [`InferenceBackend::eval`] (all kernels share one reduction
+    /// order); the bench and the property tests gate on it.
+    pub fn eval_reference(&self, x: &[f32], w_bits: &[f32], a_bits: &[f32]) -> Vec<f32> {
         let b = self.eval_batch;
-        let n_layers = self.layers.len();
-        let Self { layers, packed, .. } = self;
-        let mut h = x;
-        for l in 0..n_layers {
-            let exec = layers[l];
-            let w = packed[l].mat.as_ref().expect("packed above");
-            quantize_activations(&mut h, a_bits[l] as u32);
-            let relu = l + 1 < n_layers; // ReLU on hidden layers only
-            h = match exec {
-                LayerExec::Fc { out_f, .. } => {
+        assert_eq!(x.len(), b * self.input_dim, "reference eval batch shape");
+        assert_eq!(w_bits.len(), self.dims.len(), "w_bits length");
+        assert_eq!(a_bits.len(), self.dims.len(), "a_bits length");
+        let g = &self.graph;
+        let mut values: Vec<Vec<f32>> = vec![Vec::new(); g.num_nodes()];
+        for &id in g.schedule() {
+            let node = g.node(id);
+            let out = match node.op {
+                Op::Input { .. } => x.to_vec(),
+                Op::MatMul { layer, in_f, out_f } => {
+                    let mut src = values[node.inputs[0].0].clone();
+                    quantize_activations(&mut src, a_bits[layer] as u32);
+                    let qw = quantize_symmetric(&self.weights[layer], w_bits[layer] as u32);
                     let mut out = vec![0f32; b * out_f];
-                    gemm::matmul_blocked(&h, w, b, &mut out);
-                    if relu {
-                        relu_inplace(&mut out);
+                    gemm::matmul_naive(&src, &qw, b, in_f, out_f, &mut out);
+                    out
+                }
+                Op::Conv { layer, geom } => {
+                    let mut src = values[node.inputs[0].0].clone();
+                    quantize_activations(&mut src, a_bits[layer] as u32);
+                    let qw = quantize_symmetric(&self.weights[layer], w_bits[layer] as u32);
+                    conv_reference(&src, b, &geom, &qw)
+                }
+                Op::Pool {
+                    channels,
+                    hw,
+                    factor,
+                } => {
+                    let src = &values[node.inputs[0].0];
+                    let (inf, s) = (channels * hw * hw, hw / factor);
+                    let of = channels * s * s;
+                    let mut out = vec![0f32; b * of];
+                    for i in 0..b {
+                        gemm::max_pool(
+                            &src[i * inf..(i + 1) * inf],
+                            channels,
+                            hw,
+                            factor,
+                            &mut out[i * of..(i + 1) * of],
+                        );
                     }
                     out
                 }
-                LayerExec::Conv { geom, pool: pf } => {
-                    conv_forward_legacy(&h, b, &geom, pf, w, relu)
+                Op::Add => {
+                    let a = &values[node.inputs[0].0];
+                    let c = &values[node.inputs[1].0];
+                    a.iter().zip(c).map(|(&x, &y)| x + y).collect()
                 }
+                Op::Output => values[node.inputs[0].0].clone(),
             };
+            values[id.0] = out;
+            if node.relu {
+                relu_inplace(&mut values[id.0]);
+            }
         }
-        Ok(h)
+        std::mem::take(&mut values[g.output().0])
     }
 }
 
-/// Resolve a network into per-layer execution plans, or explain why the
-/// sim backend cannot run it. Checks that consecutive layers chain (channel
-/// and feature counts match) and infers inter-layer pooling factors.
-fn plan(net: &Network) -> Result<Vec<LayerExec>, String> {
-    if net.layers.is_empty() {
-        return Err(format!("network '{}' has no layers", net.name));
-    }
-    let mut execs: Vec<LayerExec> = Vec::with_capacity(net.layers.len());
-    // What the previous layer produces: feature count, CHW grid when the
-    // producer is spatial, and the producer's name (for error messages).
-    let mut prev: Option<(usize, Option<(usize, usize)>, &str)> = None;
-    for (idx, l) in net.layers.iter().enumerate() {
-        let exec = match l.kind {
-            LayerKind::Linear { in_f, out_f } => {
-                let (in_f, out_f) = (in_f as usize, out_f as usize);
-                if in_f == 0 || out_f == 0 {
-                    return Err(format!("{}: layer '{}' has a zero dim", net.name, l.name));
-                }
-                if let Some((feat, _, pname)) = prev {
-                    if feat != in_f {
-                        return Err(format!(
-                            "{}: layer '{}' expects {} input features but '{}' produces {}",
-                            net.name, l.name, in_f, pname, feat
-                        ));
-                    }
-                }
-                LayerExec::Fc { in_f, out_f }
-            }
-            LayerKind::Conv2d {
-                in_c,
-                out_c,
-                kernel,
-                stride,
-                padding,
-                in_hw,
-            } => {
-                let geom = ConvGeom {
-                    in_c: in_c as usize,
-                    out_c: out_c as usize,
-                    kernel: kernel as usize,
-                    stride: stride as usize,
-                    padding: padding as usize,
-                    in_hw: in_hw as usize,
-                    out_hw: l.out_hw() as usize,
-                };
-                if geom.in_c == 0
-                    || geom.out_c == 0
-                    || geom.kernel == 0
-                    || geom.stride == 0
-                    || geom.out_hw == 0
-                {
-                    return Err(format!("{}: layer '{}' has a zero dim", net.name, l.name));
-                }
-                if let Some((feat, grid, pname)) = prev {
-                    match grid {
-                        Some((c, hw)) if (c, hw) != (geom.in_c, geom.in_hw) => {
-                            return Err(format!(
-                                "{}: layer '{}' expects {}ch@{}x{} but '{}' produces \
-                                 {}ch@{}x{} — sim backend executes sequential \
-                                 topologies only",
-                                net.name,
-                                l.name,
-                                geom.in_c,
-                                geom.in_hw,
-                                geom.in_hw,
-                                pname,
-                                c,
-                                hw,
-                                hw
-                            ));
-                        }
-                        None if feat != geom.in_features() => {
-                            return Err(format!(
-                                "{}: layer '{}' expects {} input features but '{}' \
-                                 produces {}",
-                                net.name,
-                                l.name,
-                                geom.in_features(),
-                                pname,
-                                feat
-                            ));
-                        }
-                        _ => {}
-                    }
-                }
-                let pool = match net.layers.get(idx + 1) {
-                    None => 1,
-                    Some(next) => pool_factor(&geom, l, next, &net.name)?,
-                };
-                LayerExec::Conv { geom, pool }
-            }
-        };
-        prev = Some(match exec {
-            LayerExec::Fc { out_f, .. } => (out_f, None, l.name.as_str()),
-            LayerExec::Conv { geom, pool } => {
-                let s = geom.out_hw / pool;
-                (geom.out_c * s * s, Some((geom.out_c, s)), l.name.as_str())
-            }
-        });
-        execs.push(exec);
-    }
-    Ok(execs)
+/// Quantize `src` into the staging buffer (resize within the capacity
+/// fixed at construction — no alloc in steady state). A producer buffer
+/// can feed several consumers (trunk + skip), so quantization must never
+/// happen in place.
+fn stage_quantized(staged: &mut Vec<f32>, src: &[f32], bits: u32) {
+    staged.resize(src.len(), 0.0);
+    staged.copy_from_slice(src);
+    quantize_activations(staged, bits);
 }
 
-/// Inter-layer pooling factor between a conv layer and its successor: the
-/// integer grid shrink that makes the conv's output match the successor's
-/// expected input (1 when the grids already agree).
-fn pool_factor(g: &ConvGeom, l: &Layer, next: &Layer, net: &str) -> Result<usize, String> {
-    let target_hw = match next.kind {
-        LayerKind::Conv2d { in_c, in_hw, .. } => {
-            if in_c as usize != g.out_c {
-                return Err(format!(
-                    "{net}: conv '{}' produces {} channels but '{}' expects {} — \
-                     sim backend executes sequential topologies only",
-                    l.name, g.out_c, next.name, in_c
-                ));
-            }
-            in_hw as usize
+/// Borrow slot `src` immutably and slot `dst` mutably (resized to
+/// `dst_len`) at the same time; `x` serves the `Request` buffer case.
+fn src_dst<'a>(
+    slots: &'a mut [Vec<f32>],
+    x: &'a [f32],
+    src: BufRef,
+    dst: usize,
+    dst_len: usize,
+) -> (&'a [f32], &'a mut [f32]) {
+    match src {
+        BufRef::Request => {
+            let d = &mut slots[dst];
+            d.resize(dst_len, 0.0);
+            (x, d.as_mut_slice())
         }
-        LayerKind::Linear { in_f, .. } => {
-            // The FC layer flattens a CHW volume: in_f = out_c · s².
-            let in_f = in_f as usize;
-            let s = if in_f % g.out_c == 0 {
-                integer_sqrt(in_f / g.out_c)
+        BufRef::Slot(s) => {
+            assert_ne!(s, dst, "liveness must never alias a node with its input");
+            if s < dst {
+                let (left, right) = slots.split_at_mut(dst);
+                let d = &mut right[0];
+                d.resize(dst_len, 0.0);
+                (left[s].as_slice(), d.as_mut_slice())
             } else {
-                None
-            };
-            match s {
-                Some(s) => s,
-                None => {
-                    return Err(format!(
-                        "{net}: FC layer '{}' input {} does not flatten the {} \
-                         channels conv '{}' produces",
-                        next.name, in_f, g.out_c, l.name
-                    ));
-                }
+                let (left, right) = slots.split_at_mut(s);
+                let d = &mut left[dst];
+                d.resize(dst_len, 0.0);
+                (right[0].as_slice(), d.as_mut_slice())
             }
         }
-    };
-    if target_hw == 0 || target_hw > g.out_hw || g.out_hw % target_hw != 0 {
-        return Err(format!(
-            "{net}: conv '{}' output grid {}x{} cannot pool down to the {}x{} \
-             grid '{}' expects",
-            l.name, g.out_hw, g.out_hw, target_hw, target_hw, next.name
-        ));
-    }
-    Ok(g.out_hw / target_hw)
-}
-
-/// Exact integer square root, if `n` is a perfect square.
-fn integer_sqrt(n: usize) -> Option<usize> {
-    let s = (n as f64).sqrt().round() as usize;
-    if s.checked_mul(s) == Some(n) {
-        Some(s)
-    } else {
-        None
     }
 }
 
-/// One conv layer over the batch through the pooled hot path: every
-/// buffer comes from the backend's arena. Wide batches fan the samples
-/// across the pool (one arena slot per part, inner matmuls inline);
+/// One conv node over the batch through the pooled hot path: every
+/// buffer comes from the backend's scratch. Wide batches fan the samples
+/// across the pool (one scratch slot per part, inner matmuls inline);
 /// narrow ones run the sample loop inline and let the per-chunk matmul
-/// split across the pool instead.
+/// split across the pool instead. Writes the full CHW grid (pooling is a
+/// separate graph node).
 #[allow(clippy::too_many_arguments)]
 fn conv_forward(
     h: &[f32],
     b: usize,
     g: &ConvGeom,
-    pf: usize,
     w: &PackedMat,
     relu: bool,
     pool: &WorkerPool,
@@ -489,12 +437,11 @@ fn conv_forward(
     let in_feat = g.in_features();
     let npos = g.num_positions();
     let pl = g.patch_len();
-    let pooled_hw = g.out_hw / pf;
-    let out_feat = g.out_c * pooled_hw * pooled_hw;
+    let out_feat = g.out_c * npos;
     debug_assert_eq!(h.len(), b * in_feat);
     debug_assert_eq!(out.len(), b * out_feat);
     let chunk = CONV_CHUNK.min(npos);
-    let (ppl, prl, cl) = (chunk * pl, chunk * g.out_c, g.out_c * npos);
+    let (ppl, prl) = (chunk * pl, chunk * g.out_c);
     let flops = 2usize
         .saturating_mul(b)
         .saturating_mul(npos)
@@ -508,15 +455,13 @@ fn conv_forward(
     // Within preallocated capacity (sized at construction): no alloc.
     scr.patches.resize(parts * ppl, 0.0);
     scr.prod.resize(parts * prl, 0.0);
-    scr.chw.resize(parts * cl, 0.0);
     if parts == 1 {
         let patches = &mut scr.patches[..ppl];
         let prod = &mut scr.prod[..prl];
-        let chw = &mut scr.chw[..cl];
         for s in 0..b {
             let xs = &h[s * in_feat..(s + 1) * in_feat];
             let dst = &mut out[s * out_feat..(s + 1) * out_feat];
-            conv_one_sample(xs, g, pf, w, relu, pool, true, patches, prod, chw, dst);
+            conv_one_sample(xs, g, w, relu, pool, true, patches, prod, dst);
         }
         return;
     }
@@ -524,43 +469,39 @@ fn conv_forward(
     let nparts = (b + per - 1) / per;
     let pptr = SendPtr(scr.patches.as_mut_ptr());
     let rptr = SendPtr(scr.prod.as_mut_ptr());
-    let cptr = SendPtr(scr.chw.as_mut_ptr());
     let optr = SendPtr(out.as_mut_ptr());
     pool.run(nparts, |p| {
-        // SAFETY: part `p` exclusively owns arena slot `p` and the output
-        // rows of samples [s0, s1) — parts tile both without overlap, and
-        // all four buffers outlive `pool.run`, which blocks until every
-        // part has finished.
+        // SAFETY: part `p` exclusively owns scratch slot `p` and the
+        // output rows of samples [s0, s1) — parts tile both without
+        // overlap, and all three buffers outlive `pool.run`, which blocks
+        // until every part has finished.
         let patches = unsafe { std::slice::from_raw_parts_mut(pptr.0.add(p * ppl), ppl) };
         let prod = unsafe { std::slice::from_raw_parts_mut(rptr.0.add(p * prl), prl) };
-        let chw = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(p * cl), cl) };
         let s0 = p * per;
         let s1 = (s0 + per).min(b);
         for s in s0..s1 {
             let xs = &h[s * in_feat..(s + 1) * in_feat];
             let dst =
                 unsafe { std::slice::from_raw_parts_mut(optr.0.add(s * out_feat), out_feat) };
-            conv_one_sample(xs, g, pf, w, relu, pool, false, patches, prod, chw, dst);
+            conv_one_sample(xs, g, w, relu, pool, false, patches, prod, dst);
         }
     });
 }
 
-/// Lower one CHW sample: chunked im2col + tiled matmul into the CHW
-/// scratch, then optional ReLU and pooling into `dst`. `split` lets the
+/// Lower one CHW sample: chunked im2col + tiled matmul scattered straight
+/// into the CHW destination, then optional ReLU. `split` lets the
 /// per-chunk matmul fan out across the pool (must be `false` when the
 /// caller is itself a pool part — the pool does not nest).
 #[allow(clippy::too_many_arguments)]
 fn conv_one_sample(
     xs: &[f32],
     g: &ConvGeom,
-    pf: usize,
     w: &PackedMat,
     relu: bool,
     pool: &WorkerPool,
     split: bool,
     patches: &mut [f32],
     prod: &mut [f32],
-    chw: &mut [f32],
     dst: &mut [f32],
 ) {
     let npos = g.num_positions();
@@ -586,64 +527,43 @@ fn conv_one_sample(
         // layout between layers is CHW, so transpose while scattering.
         for (p, row) in prod[..m * g.out_c].chunks_exact(g.out_c).enumerate() {
             for (oc, &v) in row.iter().enumerate() {
-                chw[oc * npos + pos0 + p] = v;
+                dst[oc * npos + pos0 + p] = v;
             }
         }
         pos0 += m;
     }
     if relu {
-        relu_inplace(chw);
-    }
-    if pf == 1 {
-        dst.copy_from_slice(chw);
-    } else {
-        gemm::max_pool(chw, g.out_c, g.out_hw, pf, dst);
+        relu_inplace(dst);
     }
 }
 
-/// The PR 2 conv path (bench comparator): per sample, chunked im2col +
-/// scope-kernel matmul into a freshly allocated CHW volume, then optional
-/// ReLU and pooling.
-fn conv_forward_legacy(
-    h: &[f32],
-    b: usize,
-    g: &ConvGeom,
-    pool: usize,
-    w: &PackedMat,
-    relu: bool,
-) -> Vec<f32> {
+/// Reference-path conv over the batch: chunked im2col + the naive kernel
+/// on the row-major quantized weights, fresh buffers per call. Same
+/// reduction and scatter order as [`conv_forward`], so the two agree bit
+/// for bit.
+fn conv_reference(h: &[f32], b: usize, g: &ConvGeom, qw: &[f32]) -> Vec<f32> {
     let in_feat = g.in_features();
     let npos = g.num_positions();
     let pl = g.patch_len();
-    let pooled_hw = g.out_hw / pool;
-    let out_feat = g.out_c * pooled_hw * pooled_hw;
+    let out_feat = g.out_c * npos;
     let chunk = CONV_CHUNK.min(npos);
     let mut out = vec![0f32; b * out_feat];
     let mut patches = vec![0f32; chunk * pl];
     let mut prod = vec![0f32; chunk * g.out_c];
-    let mut conv_out = vec![0f32; g.out_c * npos];
     for s in 0..b {
         let xs = &h[s * in_feat..(s + 1) * in_feat];
+        let dst = &mut out[s * out_feat..(s + 1) * out_feat];
         let mut pos0 = 0;
         while pos0 < npos {
             let m = chunk.min(npos - pos0);
             gemm::im2col_chunk(xs, g, pos0, m, &mut patches[..m * pl]);
-            gemm::matmul_blocked(&patches[..m * pl], w, m, &mut prod[..m * g.out_c]);
+            gemm::matmul_naive(&patches[..m * pl], qw, m, pl, g.out_c, &mut prod[..m * g.out_c]);
             for (p, row) in prod[..m * g.out_c].chunks_exact(g.out_c).enumerate() {
                 for (oc, &v) in row.iter().enumerate() {
-                    conv_out[oc * npos + pos0 + p] = v;
+                    dst[oc * npos + pos0 + p] = v;
                 }
             }
             pos0 += m;
-        }
-        if relu {
-            relu_inplace(&mut conv_out);
-        }
-        let dst = &mut out[s * out_feat..(s + 1) * out_feat];
-        if pool == 1 {
-            dst.copy_from_slice(&conv_out);
-        } else {
-            gemm::max_pool(&conv_out, g.out_c, g.out_hw, pool, dst);
         }
     }
     out
@@ -691,7 +611,7 @@ impl crate::coordinator::InferenceBackend for SimBackend {
         "sim"
     }
     fn num_layers(&self) -> usize {
-        self.layers.len()
+        self.dims.len()
     }
     fn input_dim(&self) -> usize {
         self.input_dim
@@ -712,62 +632,130 @@ impl crate::coordinator::InferenceBackend for SimBackend {
         if x.len() != b * dim {
             bail!("sim eval expects exactly {}x{} inputs, got {}", b, dim, x.len());
         }
-        if w_bits.len() != self.layers.len() || a_bits.len() != self.layers.len() {
+        if w_bits.len() != self.dims.len() || a_bits.len() != self.dims.len() {
             bail!(
                 "bit vectors must have {} entries, got w={} a={}",
-                self.layers.len(),
+                self.dims.len(),
                 w_bits.len(),
                 a_bits.len()
             );
         }
-        if self.legacy_scope_kernel {
-            return self.eval_legacy(x, &w_bits, &a_bits);
-        }
         self.ensure_packed(&w_bits);
-        let n_layers = self.layers.len();
         let Self {
-            layers,
+            graph,
             packed,
-            scratch,
+            slots,
+            staged,
+            conv,
             pool,
             ..
         } = self;
-        let Scratch { act_a, act_b, conv } = scratch;
-        let (mut cur, mut nxt): (&mut Vec<f32>, &mut Vec<f32>) = (act_a, act_b);
-        for l in 0..n_layers {
-            let exec = layers[l];
-            let w = packed[l].mat.as_ref().expect("packed above");
-            let relu = l + 1 < n_layers; // ReLU on hidden layers only
-            let out_len = b * exec.out_features();
-            nxt.resize(out_len, 0.0); // within preallocated capacity
-            {
-                // Layer 0 reads the request's own buffer; later layers
-                // read the previous layer's scratch.
-                let src: &mut Vec<f32> = if l == 0 { &mut x } else { &mut *cur };
-                quantize_activations(src, a_bits[l] as u32);
-                match exec {
-                    LayerExec::Fc { .. } => {
-                        gemm::matmul_pooled(src, w, b, pool, nxt);
-                        if relu {
-                            relu_inplace(nxt);
+        for &id in graph.schedule() {
+            let node = graph.node(id);
+            match node.op {
+                Op::Input { .. } | Op::Output => {}
+                Op::MatMul { layer, in_f, out_f } => {
+                    {
+                        let src = match graph.slot_of(node.inputs[0]) {
+                            Some(s) => &slots[s][..b * in_f],
+                            None => &x[..b * in_f],
+                        };
+                        stage_quantized(staged, src, a_bits[layer] as u32);
+                    }
+                    let w = packed[layer].mat.as_ref().expect("packed above");
+                    let dst = &mut slots[graph.slot_of(id).expect("MatMul has a slot")];
+                    dst.resize(b * out_f, 0.0); // within preallocated capacity
+                    gemm::matmul_pooled(staged, w, b, pool, dst);
+                    if node.relu {
+                        relu_inplace(dst);
+                    }
+                }
+                Op::Conv { layer, geom } => {
+                    let in_f = geom.in_features();
+                    {
+                        let src = match graph.slot_of(node.inputs[0]) {
+                            Some(s) => &slots[s][..b * in_f],
+                            None => &x[..b * in_f],
+                        };
+                        stage_quantized(staged, src, a_bits[layer] as u32);
+                    }
+                    let w = packed[layer].mat.as_ref().expect("packed above");
+                    let dst = &mut slots[graph.slot_of(id).expect("Conv has a slot")];
+                    dst.resize(b * geom.out_c * geom.num_positions(), 0.0);
+                    conv_forward(staged, b, &geom, w, node.relu, pool, conv, dst);
+                }
+                Op::Pool {
+                    channels,
+                    hw,
+                    factor,
+                } => {
+                    let (inf, s) = (channels * hw * hw, hw / factor);
+                    let of = channels * s * s;
+                    let dst_slot = graph.slot_of(id).expect("Pool has a slot");
+                    let src_ref = match graph.slot_of(node.inputs[0]) {
+                        Some(sl) => BufRef::Slot(sl),
+                        None => BufRef::Request,
+                    };
+                    let (src, dst) = src_dst(slots, &x, src_ref, dst_slot, b * of);
+                    for i in 0..b {
+                        gemm::max_pool(
+                            &src[i * inf..(i + 1) * inf],
+                            channels,
+                            hw,
+                            factor,
+                            &mut dst[i * of..(i + 1) * of],
+                        );
+                    }
+                    // (Pool nodes are never fused with ReLU by the
+                    // lowering; max-pooling a post-ReLU grid is already
+                    // non-negative.)
+                    if node.relu {
+                        relu_inplace(dst);
+                    }
+                }
+                Op::Add => {
+                    let feat = graph.out_features(id);
+                    let len = b * feat;
+                    let dst_slot = graph.slot_of(id).expect("Add has a slot");
+                    for (pass, &inp) in node.inputs.iter().enumerate() {
+                        let src_ref = match graph.slot_of(inp) {
+                            Some(sl) => BufRef::Slot(sl),
+                            None => BufRef::Request,
+                        };
+                        let (src, dst) = src_dst(slots, &x, src_ref, dst_slot, len);
+                        if pass == 0 {
+                            dst.copy_from_slice(&src[..len]);
+                        } else {
+                            for (d, &v) in dst.iter_mut().zip(&src[..len]) {
+                                *d += v;
+                            }
                         }
                     }
-                    LayerExec::Conv { geom, pool: pf } => {
-                        conv_forward(src, b, &geom, pf, w, relu, pool, conv, nxt);
+                    if node.relu {
+                        let dst = &mut slots[dst_slot];
+                        relu_inplace(dst);
                     }
                 }
             }
-            std::mem::swap(&mut cur, &mut nxt);
         }
-        // Hand the logits back in the request's own buffer: the scratch
+        // Hand the logits back in the request's own buffer: the arena
         // never leaves the backend, so steady-state eval allocates
         // nothing as long as b·classes fits the input's own capacity
         // b·input_dim — true for every benchmark net. A net with
         // classes > input_dim would regrow the (per-request) buffer on
         // every eval; the bench's allocs_per_eval counter would expose
         // that.
-        x.resize(b * classes, 0.0);
-        x.copy_from_slice(&cur[..b * classes]);
+        let out_src = graph.node(graph.output()).inputs[0];
+        match graph.slot_of(out_src) {
+            Some(s) => {
+                let logits = &slots[s];
+                x.resize(b * classes, 0.0);
+                x.copy_from_slice(&logits[..b * classes]);
+            }
+            // Degenerate Input -> Output graph: the logits already live
+            // in the request buffer.
+            None => x.truncate(b * classes),
+        }
         Ok(x)
     }
 }
@@ -793,21 +781,15 @@ mod tests {
     }
 
     #[test]
-    fn sequential_conv_networks_are_supported() {
+    fn sequential_and_residual_networks_are_supported() {
         assert!(SimBackend::supports(&nets::conv_tiny()).is_ok());
         assert!(SimBackend::supports(&nets::vgg16()).is_ok());
         assert!(SimBackend::supports(&nets::mlp_mnist()).is_ok());
-    }
-
-    #[test]
-    fn residual_networks_are_rejected_with_a_reason() {
-        // ResNet downsample projections branch off the sequential chain.
-        let err = SimBackend::supports(&nets::resnet::resnet18()).unwrap_err();
-        assert!(err.contains("sequential"), "{err}");
-        assert!(err.contains("downsample"), "{err}");
-        // from_network reports the same reason.
-        let err2 = SimBackend::from_network(&nets::resnet::resnet18(), 4, 7).unwrap_err();
-        assert_eq!(err, err2);
+        // Residual topologies lower into the graph IR since PR 4.
+        assert!(SimBackend::supports(&nets::resnet::resnet_tiny()).is_ok());
+        assert!(SimBackend::supports(&nets::resnet::resnet18()).is_ok());
+        assert!(SimBackend::supports(&nets::resnet::resnet50()).is_ok());
+        assert!(SimBackend::supports(&nets::resnet::resnet101()).is_ok());
     }
 
     #[test]
@@ -821,6 +803,9 @@ mod tests {
         };
         let err = SimBackend::supports(&net).unwrap_err();
         assert!(err.contains("channels"), "{err}");
+        // from_network reports the same reason.
+        let err2 = SimBackend::from_network(&net, 4, 7).unwrap_err();
+        assert_eq!(err, err2);
     }
 
     #[test]
@@ -874,11 +859,37 @@ mod tests {
     }
 
     #[test]
+    fn residual_eval_is_deterministic_and_reports_schedule() {
+        // ResNet-tiny executes offline; its logits are finite, non-zero
+        // and deterministic, and the schedule summary reflects the
+        // residual topology. (Skip *contribution* is covered by the
+        // bitwise graph-vs-reference gates in tests/graph_ir.rs.)
+        let net = nets::resnet::resnet_tiny();
+        let nl = net.num_layers();
+        let mut a = SimBackend::from_network(&net, 2, 13).unwrap();
+        let mut b = SimBackend::from_network(&net, 2, 13).unwrap();
+        assert_eq!(a.input_dim(), 3 * 8 * 8);
+        assert_eq!(a.num_classes(), 10);
+        let s = a.schedule_summary();
+        assert_eq!(s.residual_adds, 2);
+        assert!(s.slots >= 3, "skip tensors need their own slot: {s:?}");
+        assert!(s.arena_bytes > 0);
+        let x: Vec<f32> = (0..2 * 192).map(|i| ((i * 5) % 29) as f32 / 29.0 - 0.2).collect();
+        let bits = vec![8.0f32; nl];
+        let ya = a.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+        let yb = b.eval(x, bits.clone(), bits).unwrap();
+        assert_eq!(ya.len(), 2 * 10);
+        assert_eq!(ya, yb);
+        assert!(ya.iter().all(|v| v.is_finite()));
+        assert!(ya.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
     fn eval_is_invariant_across_worker_thread_counts() {
         // Pooled execution must be bitwise identical however the rows and
         // samples are fanned out — including thread counts that exceed
         // the batch and odd counts on odd shapes.
-        for net in [nets::mlp_tiny(), nets::conv_tiny()] {
+        for net in [nets::mlp_tiny(), nets::conv_tiny(), nets::resnet::resnet_tiny()] {
             let nl = net.num_layers();
             let dim = SimBackend::from_network(&net, 3, 11).unwrap().input_dim();
             let x: Vec<f32> = (0..3 * dim).map(|i| ((i * 13) % 41) as f32 / 41.0 - 0.2).collect();
@@ -903,21 +914,19 @@ mod tests {
     }
 
     #[test]
-    fn legacy_scope_kernel_matches_the_pooled_path_bit_for_bit() {
-        for net in [nets::mlp_tiny(), nets::conv_tiny()] {
+    fn reference_executor_matches_the_pooled_path_bit_for_bit() {
+        for net in [nets::mlp_tiny(), nets::conv_tiny(), nets::resnet::resnet_tiny()] {
             let nl = net.num_layers();
             let mut pooled = SimBackend::from_network(&net, 2, 3).unwrap();
-            let mut legacy = SimBackend::from_network(&net, 2, 3).unwrap();
-            legacy.set_legacy_scope_kernel(true);
             let dim = pooled.input_dim();
             let x: Vec<f32> = (0..2 * dim).map(|i| ((i * 29) % 53) as f32 / 53.0).collect();
             let bits = vec![5.0f32; nl];
-            let yp = pooled.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
-            let yl = legacy.eval(x, bits.clone(), bits).unwrap();
+            let yr = pooled.eval_reference(&x, &bits, &bits);
+            let yp = pooled.eval(x, bits.clone(), bits).unwrap();
             assert_eq!(
                 yp.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                yl.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                "{} legacy/pooled divergence",
+                yr.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{} reference/pooled divergence",
                 net.name
             );
         }

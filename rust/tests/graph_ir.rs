@@ -1,0 +1,242 @@
+//! Graph-IR integration: golden residual topologies (diamond, chained
+//! blocks) execute bit-exactly against the straight-line reference
+//! executor, malformed graphs yield typed errors, and a property test
+//! checks that *any* supported network's graph execution matches the
+//! reference bit for bit across worker-thread counts 1/2/4/7.
+
+use lrmp::coordinator::InferenceBackend;
+use lrmp::nets::{Layer, Network};
+use lrmp::runtime::graph::{self, Graph, GraphError, Node, NodeId, Op};
+use lrmp::runtime::simnet::SimBackend;
+use lrmp::util::propcheck;
+use lrmp::util::prng::Rng;
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Evaluate `net` through the graph executor at several thread counts and
+/// assert every result equals the straight-line reference bit for bit.
+fn assert_matches_reference(net: &Network, b: usize, seed: u64) -> Result<(), String> {
+    let nl = net.num_layers();
+    let reference = SimBackend::from_network(net, b, seed)
+        .map_err(|e| format!("{}: {e}", net.name))?;
+    let dim = reference.input_dim();
+    let x: Vec<f32> = (0..b * dim)
+        .map(|i| ((i * 13 + 7) % 61) as f32 / 61.0 - 0.25)
+        .collect();
+    let wb = vec![5.0f32; nl];
+    let ab = vec![6.0f32; nl];
+    let want = bits_of(&reference.eval_reference(&x, &wb, &ab));
+    for threads in [1usize, 2, 4, 7] {
+        let mut backend = SimBackend::from_network_opts(net, b, seed, Some(threads))
+            .map_err(|e| format!("{}: {e}", net.name))?;
+        let y = backend
+            .eval(x.clone(), wb.clone(), ab.clone())
+            .map_err(|e| format!("{}: eval failed: {e}", net.name))?;
+        if bits_of(&y) != want {
+            return Err(format!(
+                "{}: graph execution diverged from the reference at threads={threads}",
+                net.name
+            ));
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// Golden topologies
+// ----------------------------------------------------------------------
+
+#[test]
+fn diamond_residual_block_executes_bit_exactly() {
+    // One stride-2 block whose skip is a 1x1 projection — the diamond:
+    //   stem ─► conv1 ─► conv2 ─► add ─► fc
+    //        └────── downsample ───┘
+    let net = Network {
+        name: "golden-diamond".into(),
+        layers: vec![
+            Layer::conv("stem", 3, 4, 3, 1, 1, 6),
+            Layer::conv("block.0.conv1", 4, 8, 3, 2, 1, 6),
+            Layer::conv("block.0.conv2", 8, 8, 3, 1, 1, 3),
+            Layer::conv("block.0.downsample", 4, 8, 1, 2, 0, 6),
+            Layer::linear("fc", 8, 5),
+        ],
+    };
+    let g = graph::lower(&net).expect("diamond lowers");
+    assert_eq!(g.residual_adds(), 1);
+    assert_eq!(g.weight_nodes(), 5);
+    // The skip tensor must keep its own arena slot across the trunk.
+    assert!(g.num_slots() >= 3, "slots {}", g.num_slots());
+    assert_matches_reference(&net, 3, 21).unwrap();
+}
+
+#[test]
+fn chained_residual_blocks_execute_bit_exactly() {
+    // Three identity-skip blocks back to back: consecutive Adds, each
+    // feeding the next block's trunk and skip.
+    let mut layers = vec![Layer::conv("stem", 3, 6, 3, 1, 1, 5)];
+    for blk in 0..3 {
+        layers.push(Layer::conv(&format!("layer1.{blk}.conv1"), 6, 6, 3, 1, 1, 5));
+        layers.push(Layer::conv(&format!("layer1.{blk}.conv2"), 6, 6, 3, 1, 1, 5));
+    }
+    layers.push(Layer::linear("fc", 6, 4));
+    let net = Network {
+        name: "golden-chained".into(),
+        layers,
+    };
+    let g = graph::lower(&net).expect("chained blocks lower");
+    assert_eq!(g.residual_adds(), 3);
+    assert_eq!(g.weight_nodes(), 8);
+    // Global 5x pool before the FC.
+    assert_eq!(g.pool_nodes(), 1);
+    assert_matches_reference(&net, 2, 33).unwrap();
+}
+
+#[test]
+fn resnet_tiny_residual_adds_are_bit_exact_against_the_reference() {
+    assert_matches_reference(&lrmp::nets::resnet::resnet_tiny(), 4, 99).unwrap();
+}
+
+// ----------------------------------------------------------------------
+// Malformed graphs: typed errors, not panics or strings
+// ----------------------------------------------------------------------
+
+#[test]
+fn cyclic_graph_is_a_typed_error() {
+    // add#1 and add#2 feed each other — no schedule exists.
+    let nodes = vec![
+        Node::new(Op::Input { features: 4 }, vec![], false),
+        Node::new(Op::Add, vec![NodeId(0), NodeId(2)], false),
+        Node::new(Op::Add, vec![NodeId(1), NodeId(1)], false),
+        Node::new(Op::Output, vec![NodeId(2)], false),
+    ];
+    match Graph::compile(nodes) {
+        Err(GraphError::Cycle { .. }) => {}
+        other => panic!("expected GraphError::Cycle, got {other:?}"),
+    }
+}
+
+#[test]
+fn dangling_input_is_a_typed_error() {
+    let nodes = vec![
+        Node::new(Op::Input { features: 4 }, vec![], false),
+        Node::new(
+            Op::MatMul {
+                layer: 0,
+                in_f: 4,
+                out_f: 4,
+            },
+            vec![NodeId(7)], // node #7 does not exist
+            false,
+        ),
+        Node::new(Op::Output, vec![NodeId(1)], false),
+    ];
+    match Graph::compile(nodes) {
+        Err(GraphError::DanglingInput { node: 1, input: 7 }) => {}
+        other => panic!("expected GraphError::DanglingInput, got {other:?}"),
+    }
+}
+
+#[test]
+fn unlowerable_networks_surface_graph_errors_through_supports() {
+    // A shape-changing block with no projection cannot lower; the typed
+    // GraphError renders into the supports() reason.
+    let net = Network {
+        name: "bad-block".into(),
+        layers: vec![
+            Layer::conv("b.0.conv1", 3, 8, 3, 2, 1, 8),
+            Layer::conv("b.0.conv2", 8, 8, 3, 1, 1, 4),
+        ],
+    };
+    assert!(matches!(graph::lower(&net), Err(GraphError::Unsupported(_))));
+    let reason = SimBackend::supports(&net).unwrap_err();
+    assert!(reason.contains("downsample"), "{reason}");
+}
+
+// ----------------------------------------------------------------------
+// Property: graph execution == reference, any supported net, any threads
+// ----------------------------------------------------------------------
+
+/// Generate a random sim-supported network: an MLP chain, a sequential
+/// conv chain (with an implied pool before the FC), or a residual stack
+/// (identity blocks, optionally a projected stride-2 block).
+fn random_supported_net(rng: &mut Rng) -> Network {
+    match rng.below(3) {
+        0 => {
+            let n_layers = rng.int_range(2, 4) as usize;
+            let mut dims = Vec::with_capacity(n_layers + 1);
+            for _ in 0..=n_layers {
+                dims.push(rng.int_range(3, 18) as u64);
+            }
+            let layers = dims
+                .windows(2)
+                .enumerate()
+                .map(|(i, w)| Layer::linear(&format!("fc{}", i + 1), w[0], w[1]))
+                .collect();
+            Network {
+                name: "prop-mlp".into(),
+                layers,
+            }
+        }
+        1 => {
+            let hw = rng.int_range(4, 8) as u64;
+            let c0 = rng.int_range(1, 4) as u64;
+            let c1 = rng.int_range(2, 6) as u64;
+            let c2 = rng.int_range(2, 6) as u64;
+            let mut layers = vec![
+                Layer::conv("conv1", c0, c1, 3, 1, 1, hw),
+                Layer::conv("conv2", c1, c2, 3, 1, 1, hw),
+            ];
+            // Flatten the full grid or pool down to a divisor grid.
+            let s = if hw % 2 == 0 && rng.below(2) == 0 {
+                hw / 2
+            } else {
+                hw
+            };
+            layers.push(Layer::linear("fc", c2 * s * s, rng.int_range(2, 10) as u64));
+            Network {
+                name: "prop-conv".into(),
+                layers,
+            }
+        }
+        _ => {
+            let hw = 2 * rng.int_range(2, 4) as u64; // even, 4..=8
+            let c = rng.int_range(2, 5) as u64;
+            let mut layers = vec![Layer::conv("stem", 3, c, 3, 1, 1, hw)];
+            let identity_blocks = rng.int_range(1, 2) as usize;
+            for blk in 0..identity_blocks {
+                layers.push(Layer::conv(&format!("layer1.{blk}.conv1"), c, c, 3, 1, 1, hw));
+                layers.push(Layer::conv(&format!("layer1.{blk}.conv2"), c, c, 3, 1, 1, hw));
+            }
+            let mut out_c = c;
+            if rng.below(2) == 0 {
+                // A stride-2 projected block halves the grid.
+                let c2 = 2 * c;
+                layers.push(Layer::conv("layer2.0.conv1", c, c2, 3, 2, 1, hw));
+                layers.push(Layer::conv("layer2.0.conv2", c2, c2, 3, 1, 1, hw / 2));
+                layers.push(Layer::conv("layer2.0.downsample", c, c2, 1, 2, 0, hw));
+                out_c = c2;
+            }
+            // Global pool + FC head.
+            layers.push(Layer::linear("fc", out_c, rng.int_range(2, 8) as u64));
+            Network {
+                name: "prop-resnet".into(),
+                layers,
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_graph_execution_matches_reference_across_threads() {
+    propcheck::check("graph-vs-reference-bitwise", 12, |rng: &mut Rng| {
+        let net = random_supported_net(rng);
+        if let Err(e) = SimBackend::supports(&net) {
+            return Err(format!("generated net must be supported: {e}"));
+        }
+        let b = rng.int_range(1, 3) as usize;
+        let seed = rng.next_u64();
+        assert_matches_reference(&net, b, seed)
+    });
+}
