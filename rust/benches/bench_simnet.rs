@@ -1,14 +1,17 @@
 //! Sim-backend hot-path benchmark: the naive triple-loop quantized matmul
 //! vs the PR 2 blocked `thread::scope` kernel vs the pooled register-tiled
 //! kernel (`runtime::gemm` + `runtime::pool`), plus end-to-end `SimBackend`
-//! steady-state eval latency per network — the graph-schedule serving path
-//! against the straight-line reference executor (`eval_reference`: fresh
-//! buffers per node, naive kernel) on identical inputs. Networks include
-//! `resnet-tiny`, so the residual path (skip slots, bit-exact adds) is
-//! covered. A counting global allocator measures allocations per eval
-//! (zero after warmup is the contract on the FC path, and the bench
+//! steady-state eval latency per network — the **pass-optimized**
+//! graph-schedule serving path against both a passes-off backend (the
+//! within-run fused-vs-unfused comparison) and the straight-line reference
+//! executor (`eval_reference`: fresh buffers per node, naive kernel, the
+//! unoptimized graph by construction) on identical inputs. Networks
+//! include `resnet-tiny`, so the residual path (skip slots, bit-exact
+//! adds) is covered, and `conv-tiny`, whose Conv+Pool chain the pass
+//! pipeline fuses. A counting global allocator measures allocations per
+//! eval (zero after warmup is the contract on the FC path, and the bench
 //! **fails** if an FC net allocates). Emits a machine-readable
-//! `BENCH_simnet.json` (schema v3, documented in `rust/src/api/README.md`)
+//! `BENCH_simnet.json` (schema v4, documented in `rust/src/api/README.md`)
 //! that the CI `bench-smoke` job uploads and gates on.
 //!
 //! Plain `fn main` bench (`harness = false`):
@@ -18,20 +21,24 @@
 //!
 //! `--quick` shrinks the sample budgets for the CI smoke job. The run
 //! **fails (exit 1)** if any kernel's output diverges bitwise from the
-//! naive reference, if the graph and reference executors disagree on any
-//! logit (residual adds included), if an FC net's steady-state eval
-//! allocates, or — when `--baseline` points at a *calibrated* committed
-//! `BENCH_simnet.json` — if the pooled aggregate GFLOP/s regressed more
-//! than 20% against it. `--summary` additionally writes the baseline
-//! comparison as markdown (CI appends it to the job summary).
+//! naive reference, if the pass-optimized, passes-off and reference
+//! executors disagree on any logit (residual adds and fused convs
+//! included), if a net with fused convs does not shrink its arena, if an
+//! FC net's steady-state eval allocates, or — when `--baseline` points at
+//! a *calibrated* committed `BENCH_simnet.json` — if the pooled aggregate
+//! GFLOP/s regressed more than 20% against it. `--summary` additionally
+//! writes the baseline comparison as markdown (CI appends it to the job
+//! summary, with a loud warning while the committed baseline is still the
+//! uncalibrated seed placeholder).
 
 use lrmp::bench_harness::{fmt_time, Bencher, Table};
 use lrmp::cli::Args;
 use lrmp::coordinator::InferenceBackend;
 use lrmp::nets::{self, LayerKind};
 use lrmp::runtime::gemm::{self, ConvGeom, PackedMat};
+use lrmp::runtime::passes::PassConfig;
 use lrmp::runtime::pool::WorkerPool;
-use lrmp::runtime::simnet::SimBackend;
+use lrmp::runtime::simnet::{SimBackend, SimOptions};
 use lrmp::util::json::Json;
 use lrmp::util::prng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -95,23 +102,43 @@ impl GemmRow {
     }
 }
 
-/// One network's steady-state eval comparison: the graph-schedule serving
-/// path vs the straight-line reference executor.
+/// One network's steady-state eval comparison: the pass-optimized
+/// graph-schedule serving path vs the passes-off backend vs the
+/// straight-line reference executor.
 struct NetRow {
     net: String,
     b: usize,
     nl: usize,
     residual_adds: usize,
+    fused_convs: usize,
+    arena_bytes: usize,
+    arena_bytes_unfused: usize,
     has_conv: bool,
     pooled: lrmp::bench_harness::BenchResult,
+    unfused: lrmp::bench_harness::BenchResult,
     reference: lrmp::bench_harness::BenchResult,
     allocs_per_eval: f64,
+    /// Pass-optimized logits == reference-executor logits, bit for bit.
     logits_exact: bool,
+    /// Pass-optimized logits == passes-off logits, bit for bit.
+    passes_exact: bool,
 }
 
 impl NetRow {
     fn eval_p50_speedup(&self) -> f64 {
         self.reference.p50() / self.pooled.p50().max(1e-12)
+    }
+    fn eval_p50_speedup_vs_unfused(&self) -> f64 {
+        self.unfused.p50() / self.pooled.p50().max(1e-12)
+    }
+    /// A row with fused convs must shrink the arena; rows without fusions
+    /// must leave it untouched.
+    fn arena_ok(&self) -> bool {
+        if self.fused_convs > 0 {
+            self.arena_bytes < self.arena_bytes_unfused
+        } else {
+            self.arena_bytes == self.arena_bytes_unfused
+        }
     }
 }
 
@@ -257,9 +284,22 @@ fn main() {
         let net = nets::by_name(name).expect("bench nets are registered");
         let b = 16usize;
         let mut backend = SimBackend::from_network(&net, b, 7).expect("sim-supported net");
+        let mut plain = SimBackend::from_network_cfg(
+            &net,
+            b,
+            7,
+            SimOptions {
+                passes: PassConfig::none(),
+                ..SimOptions::default()
+            },
+        )
+        .expect("sim-supported net");
         let dim = backend.input_dim();
         let nl = backend.num_layers();
         let residual_adds = backend.graph().residual_adds();
+        let fused_convs = backend.graph().fused_convs();
+        let arena_bytes = backend.schedule_summary().arena_bytes;
+        let arena_bytes_unfused = plain.schedule_summary().arena_bytes;
         let has_conv = net
             .layers
             .iter()
@@ -267,13 +307,22 @@ fn main() {
         let x: Vec<f32> = (0..b * dim).map(|i| ((i * 31) % 97) as f32 / 97.0).collect();
         let (wb, ab) = (vec![5.0f32; nl], vec![6.0f32; nl]);
 
-        // The two executors must agree on every logit bit before they race.
+        // The three executors must agree on every logit bit before they
+        // race: pass-optimized vs reference (every pass adversarially
+        // checked against the unoptimized straight-line graph) and
+        // pass-optimized vs passes-off (same hot path, no rewrites).
         let yp = backend.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
+        let yu = plain.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
         let yr = backend.eval_reference(&x, &wb, &ab);
         let logits_exact = bits_of(&yp) == bits_of(&yr);
+        let passes_exact = bits_of(&yp) == bits_of(&yu);
 
         let pooled = net_bench.run(&format!("eval {} graph b={b}", net.name), || {
             let y = backend.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
+            std::hint::black_box(y);
+        });
+        let unfused = net_bench.run(&format!("eval {} passes-off b={b}", net.name), || {
+            let y = plain.eval(x.clone(), wb.clone(), ab.clone()).unwrap();
             std::hint::black_box(y);
         });
         let reference = net_bench.run(&format!("eval {} reference b={b}", net.name), || {
@@ -282,32 +331,43 @@ fn main() {
         });
         let allocs = allocs_per_eval(&mut backend, &x, &wb, &ab);
         println!(
-            "  -> {} {:.1} inferences/s graph path (p50 {}, p95 {}), x{:.2} over the \
-             straight-line reference, {:.1} allocs/eval, {} residual add(s), logits \
-             bit-exact {}",
+            "  -> {} {:.1} inferences/s graph path (p50 {}, p95 {}), x{:.2} over \
+             passes-off, x{:.2} over the straight-line reference, {:.1} allocs/eval, \
+             {} residual add(s), {} fused conv(s), arena {} -> {} B, logits bit-exact \
+             {} (passes {})",
             net.name,
             b as f64 / pooled.mean().max(1e-12),
             fmt_time(pooled.p50()),
             fmt_time(pooled.p95()),
+            unfused.p50() / pooled.p50().max(1e-12),
             reference.p50() / pooled.p50().max(1e-12),
             allocs,
             residual_adds,
-            logits_exact
+            fused_convs,
+            arena_bytes_unfused,
+            arena_bytes,
+            logits_exact,
+            passes_exact
         );
         net_rows.push(NetRow {
             net: net.name.clone(),
             b,
             nl,
             residual_adds,
+            fused_convs,
+            arena_bytes,
+            arena_bytes_unfused,
             has_conv,
             pooled,
+            unfused,
             reference,
             allocs_per_eval: allocs,
             logits_exact,
+            passes_exact,
         });
     }
 
-    // --- machine-readable artifact (schema v3) -------------------------
+    // --- machine-readable artifact (schema v4) -------------------------
     let gemm_json = Json::Arr(
         rows.iter()
             .map(|r| {
@@ -337,29 +397,37 @@ fn main() {
         net_rows
             .iter()
             .map(|r| {
+                let unfused_speedup = r.eval_p50_speedup_vs_unfused();
                 Json::obj(vec![
                     ("net", Json::Str(r.net.clone())),
                     ("eval_batch", Json::Num(r.b as f64)),
                     ("layers", Json::Num(r.nl as f64)),
                     ("residual_adds", Json::Num(r.residual_adds as f64)),
+                    ("fused_convs", Json::Num(r.fused_convs as f64)),
+                    ("arena_bytes", Json::Num(r.arena_bytes as f64)),
+                    ("arena_bytes_unfused", Json::Num(r.arena_bytes_unfused as f64)),
                     ("mean_s", Json::Num(r.pooled.mean())),
                     ("p50_s", Json::Num(r.pooled.p50())),
                     ("p95_s", Json::Num(r.pooled.p95())),
                     ("samples", Json::Num(r.pooled.samples.len() as f64)),
                     ("inf_per_s", Json::Num(r.b as f64 / r.pooled.mean().max(1e-12))),
+                    ("unfused_mean_s", Json::Num(r.unfused.mean())),
+                    ("unfused_p50_s", Json::Num(r.unfused.p50())),
+                    ("eval_p50_speedup_vs_unfused", Json::Num(unfused_speedup)),
                     ("ref_mean_s", Json::Num(r.reference.mean())),
                     ("ref_p50_s", Json::Num(r.reference.p50())),
                     ("ref_p95_s", Json::Num(r.reference.p95())),
                     ("eval_p50_speedup_vs_ref", Json::Num(r.eval_p50_speedup())),
                     ("allocs_per_eval", Json::Num(r.allocs_per_eval)),
                     ("logits_bit_exact", Json::Bool(r.logits_exact)),
+                    ("passes_bit_exact", Json::Bool(r.passes_exact)),
                 ])
             })
             .collect(),
     );
     let report = Json::obj(vec![
         ("kind", Json::Str("lrmp-bench-simnet".into())),
-        ("schema_version", Json::Num(3.0)),
+        ("schema_version", Json::Num(4.0)),
         ("calibrated", Json::Bool(true)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(threads as f64)),
@@ -394,11 +462,29 @@ fn main() {
     // --- CI gates ------------------------------------------------------
     let gemm_exact = rows.iter().all(|r| r.blocked_exact && r.pooled_exact);
     let nets_exact = net_rows.iter().all(|r| r.logits_exact);
-    if !gemm_exact || !conv_exact || !pooled_conv_exact || !nets_exact {
+    let passes_exact = net_rows.iter().all(|r| r.passes_exact);
+    if !gemm_exact || !conv_exact || !pooled_conv_exact || !nets_exact || !passes_exact {
         eprintln!(
-            "FAIL: a kernel diverged from the naive reference or the graph executor \
-             diverged from the straight-line reference"
+            "FAIL: a kernel diverged from the naive reference, or the pass-optimized \
+             graph executor diverged from the straight-line reference or the \
+             passes-off backend"
         );
+        std::process::exit(1);
+    }
+    // Conv+Pool fusion must actually shrink the arena where it fired
+    // (and leave it untouched where it did not): conv-tiny fuses its
+    // pool, the FC nets and resnet-tiny (whose only pool follows an Add)
+    // must not change.
+    if !net_rows.iter().all(|r| r.arena_ok()) {
+        eprintln!(
+            "FAIL: Conv+Pool fusion arena contract violated (a fused net did not \
+             shrink its arena, or an unfused net's arena changed)"
+        );
+        std::process::exit(1);
+    }
+    let conv_fused = net_rows.iter().any(|r| r.net == "Conv-tiny" && r.fused_convs > 0);
+    if !conv_fused {
+        eprintln!("FAIL: the pass pipeline did not fuse conv-tiny's Conv+Pool chain");
         std::process::exit(1);
     }
     // The FC path's zero-allocation contract is a hard gate; conv paths
@@ -479,9 +565,12 @@ fn compare_with_baseline(path: &str, rows: &[GemmRow], pooled_gflops_mean: f64) 
     let calibrated = base.get("calibrated").as_bool().unwrap_or(false);
     let base_mean = base.get("pooled_gflops_mean").as_f64();
     if !calibrated || base_mean.is_none() {
-        md += "committed baseline is a seed placeholder (`calibrated: false`) — record-only \
-               run.\nRefresh it by dispatching the `calibrate-baseline` workflow (or commit a \
-               CI bench artifact as `BENCH_simnet.json` at the repo root by hand).\n";
+        md += "### ⚠️ WARNING: uncalibrated baseline — regression gate NOT armed\n\n\
+               The committed repo-root `BENCH_simnet.json` is still a seed placeholder \
+               (`calibrated: false`), so the >20% pooled-GFLOP/s regression gate is \
+               **record-only**: a kernel regression would pass CI silently.\n\
+               Arm it by dispatching the `calibrate-baseline` workflow (Actions tab), or \
+               commit a CI bench artifact as `BENCH_simnet.json` at the repo root by hand.\n";
         return BaselineVerdict { summary: md, ok: true };
     }
     let base_mean = base_mean.unwrap();

@@ -105,6 +105,10 @@ const SERVE_FLAGS: &[FlagDef] = &[
     val("backend", "auto|live|sim (default auto)"),
     val("eval-batch", "sim backend batch size (default 16, conv nets 2)"),
     val("threads", "sim kernel pool workers (default: machine parallelism)"),
+    val(
+        "conv-fanout-min-flops",
+        "conv sample fan-out threshold in flops (default 2^21)",
+    ),
 ];
 
 const INSPECT_FLAGS: &[FlagDef] = &[val("deployment", "artifact to inspect (or positional FILE)")];

@@ -25,7 +25,7 @@ use crate::nets::{self, Network};
 use crate::quant::nonideal::{NoisySurrogate, NonidealParams};
 use crate::quant::{Policy, SqnrSurrogate, MIN_BITS};
 use crate::replication::Objective;
-use crate::runtime::simnet::SimBackend;
+use crate::runtime::simnet::{SimBackend, SimOptions};
 use crate::runtime::{self, engine::Engine};
 use crate::sim;
 use std::path::PathBuf;
@@ -68,6 +68,14 @@ pub struct ServeOptions {
     /// effective count so perf runs are reproducible from logs. Ignored
     /// by the live backend.
     pub threads: Option<usize>,
+    /// Flop count (2·b·W²·R·N) past which a conv layer's sample loop fans
+    /// out across the kernel pool (`None`: the stock
+    /// `runtime::simnet::CONV_MT_MIN_FLOPS` threshold, 2²¹). Exposed so
+    /// the ROADMAP's fan-out calibration sweep can drive it from `serve
+    /// --conv-fanout-min-flops` once the CI bench baseline is calibrated;
+    /// bitwise-neutral by construction (the fan-out never reorders any
+    /// reduction). Ignored by the live backend.
+    pub conv_fanout_min_flops: Option<usize>,
 }
 
 /// Builder for one search run plus the artifact-centric phase entry points.
@@ -420,9 +428,13 @@ impl Session {
             reason,
         })?;
         let eval_batch = opts.eval_batch.unwrap_or_else(|| default_sim_batch(net));
-        let backend =
-            SimBackend::from_network_opts(net, eval_batch, dep.provenance.seed, opts.threads)
-                .map_err(ApiError::Runtime)?;
+        let sim_opts = SimOptions {
+            threads: opts.threads,
+            conv_fanout_min_flops: opts.conv_fanout_min_flops,
+            ..SimOptions::default()
+        };
+        let backend = SimBackend::from_network_cfg(net, eval_batch, dep.provenance.seed, sim_opts)
+            .map_err(ApiError::Runtime)?;
         Ok(Server::start(backend, &dep.policy, batch_policy))
     }
 }

@@ -16,7 +16,7 @@
 //!   demo                           run the L1 crossbar kernels through PJRT
 //!   serve     [--deployment dep.json | --net N --wbits W --abits A]
 //!             [--requests R] [--clients C] [--backend auto|live|sim]
-//!             [--eval-batch B]
+//!             [--eval-batch B] [--threads N] [--conv-fanout-min-flops F]
 //!                                  closed-loop load test of the serving
 //!                                  coordinator, executing the artifact's
 //!                                  per-layer policy (the sim backend runs
@@ -94,21 +94,45 @@ fn parsed<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T,
     args.parsed(key, default).map_err(ApiError::InvalidConfig)
 }
 
-/// One-line summary of a lowered graph schedule, shared by `inspect` and
-/// `serve` so the two can never drift. The KiB figure covers the
-/// activation slot arena only (graph-level; staging/conv scratch belong
-/// to a built backend — see `SimBackend::schedule_summary`).
+/// One-line summary of a compiled (pass-optimized) graph schedule,
+/// shared by `inspect` and `serve` so the two can never drift. The KiB
+/// figure covers the activation slot arena only (graph-level;
+/// staging/conv scratch belong to a built backend — see
+/// `SimBackend::schedule_summary`).
 fn schedule_line(g: &lrmp::runtime::graph::Graph, batch: usize) -> String {
     format!(
-        "{} nodes ({} weight, {} residual add(s), {} pool(s)); \
+        "{} nodes ({} weight incl. {} fused conv+pool, {} residual add(s), {} pool(s)); \
          {} slot(s), ~{} KiB slot arena at batch {batch}",
         g.num_nodes(),
         g.weight_nodes(),
+        g.fused_convs(),
         g.residual_adds(),
         g.pool_nodes(),
         g.num_slots(),
         g.arena_floats_per_sample() * batch * 4 / 1024,
     )
+}
+
+/// Lower a network, run the production pass pipeline, and render the
+/// one-line pass report (`inspect`/`serve` print it under the schedule
+/// line). Returns the optimized graph alongside the report line.
+fn lower_optimized(
+    net: &lrmp::nets::Network,
+    batch: usize,
+) -> Result<(lrmp::runtime::graph::Graph, String), lrmp::runtime::graph::GraphError> {
+    use lrmp::runtime::{graph, passes};
+    let mut nodes = graph::lower_nodes(net)?;
+    let unfused = graph::Graph::compile(nodes.clone())?;
+    let report = passes::run(&mut nodes, &passes::PassConfig::default());
+    let optimized = graph::Graph::compile(nodes)?;
+    let kib = |g: &graph::Graph| g.arena_floats_per_sample() * batch * 4 / 1024;
+    let line = format!(
+        "{}; slot arena ~{} KiB -> ~{} KiB at batch {batch}",
+        report.render(),
+        kib(&unfused),
+        kib(&optimized),
+    );
+    Ok((optimized, line))
 }
 
 fn cmd_tables() -> Result<()> {
@@ -383,9 +407,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         None
     };
+    let conv_fanout_min_flops = if args.flags.contains_key("conv-fanout-min-flops") {
+        Some(parsed(args, "conv-fanout-min-flops", 0usize)?)
+    } else {
+        None
+    };
     let opts = ServeOptions {
         eval_batch,
         threads,
+        conv_fanout_min_flops,
     };
     let server = Session::serve_opts(
         &dep,
@@ -419,13 +449,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bits,
         requests / clients
     );
-    // The sim backend executes a compiled graph schedule; report it so a
-    // serve run's execution shape is reproducible from its log alone.
+    // The sim backend executes a compiled, pass-optimized graph schedule;
+    // report it (and what the passes did) so a serve run's execution
+    // shape is reproducible from its log alone. Derived graph-level with
+    // the same PassConfig::default() `serve_sim` builds the backend with
+    // (the Server hides the backend behind the InferenceBackend trait) —
+    // if ServeOptions ever exposes the pass toggle, surface the
+    // backend's own pass_report() here instead.
     if server.backend_name == "sim" {
         if let Some(net) = nets::by_name(&dep.net) {
-            if let Ok(g) = lrmp::runtime::graph::lower(&net) {
-                let batch = eval_batch.unwrap_or_else(|| lrmp::api::default_sim_batch(&net));
+            let batch = eval_batch.unwrap_or_else(|| lrmp::api::default_sim_batch(&net));
+            if let Ok((g, pass_line)) = lower_optimized(&net, batch) {
                 println!("schedule: {}", schedule_line(&g, batch));
+                println!("passes:   {pass_line}");
             }
         }
     }
@@ -524,15 +560,16 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         p.baseline_accuracy, p.searched_accuracy, p.finetuned_accuracy
     );
     println!("  validation  cost model re-run OK ({} tiles)", cost.tiles_used);
-    match lrmp::runtime::graph::lower(&net) {
-        Ok(g) => {
+    let batch = lrmp::api::default_sim_batch(&net);
+    match lower_optimized(&net, batch) {
+        Ok((g, pass_line)) => {
             println!(
                 "  sim backend  supported (servable offline via --backend sim; kernel pool \
                  defaults to {} thread(s), override with serve --threads N)",
                 lrmp::runtime::pool::default_threads()
             );
-            let batch = lrmp::api::default_sim_batch(&net);
             println!("  schedule     {}", schedule_line(&g, batch));
+            println!("  passes       {pass_line}");
         }
         Err(reason) => println!("  sim backend  unsupported: {reason}"),
     }

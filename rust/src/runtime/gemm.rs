@@ -35,9 +35,13 @@
 //!
 //! The module also hosts the conv lowering helpers: [`im2col_chunk`]
 //! (patch-matrix construction, chunked so the scratch buffer stays
-//! cache-sized even for 224×224 inputs) and the direct-convolution
-//! reference [`conv2d_ref`] used by the tests — written with the same
-//! reduction order, so im2col + matmul matches it bit for bit as well.
+//! cache-sized even for 224×224 inputs), the **patch-streaming** conv
+//! entry point [`conv_rows_streamed`] — the serving hot path packs im2col
+//! rows [`TILE_ROWS`] at a time straight into a tile-height panel and
+//! feeds the microkernel from it, so the `m × patch_len` patch matrix is
+//! never materialized — and the direct-convolution reference
+//! [`conv2d_ref`] used by the tests. All are written with the same
+//! reduction order, so every path matches the others bit for bit.
 
 use crate::runtime::pool::{self, WorkerPool};
 
@@ -486,6 +490,129 @@ pub fn im2col_chunk(x: &[f32], g: &ConvGeom, pos0: usize, npos: usize, patches: 
     }
 }
 
+/// Patch-streaming conv rows: `prod[m × w.cols] = P · w`, where `P` is
+/// the im2col patch matrix of output positions `[pos0, pos0 + m)` of one
+/// CHW sample — computed **without materializing P**. Patch rows are
+/// packed [`TILE_ROWS`] at a time into a tile-height panel of `strips`
+/// and pushed straight through the register-tiled microkernel, so the
+/// im2col scratch is `parts × TILE_ROWS × patch_len` floats total instead
+/// of an `m × patch_len` buffer (32× smaller at the serving path's
+/// 128-position chunks). Rows are split across up to `threads` pool parts
+/// in `TILE_ROWS` multiples and part `p` packs into strip panel `p`, so
+/// `strips` must hold at least `min(threads, ceil(m / TILE_ROWS)) ×
+/// TILE_ROWS × patch_len` floats.
+///
+/// Every output element is computed by exactly one part in the canonical
+/// ascending reduction order — the strip split never reorders any
+/// element's terms — so the result is **bit for bit** equal to
+/// [`im2col_chunk`] + [`matmul_naive`] over the materialized patch matrix
+/// for every `threads` value (the tests and the bench gate on it).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_rows_streamed(
+    xs: &[f32],
+    g: &ConvGeom,
+    pos0: usize,
+    m: usize,
+    w: &PackedMat,
+    pool: &WorkerPool,
+    threads: usize,
+    strips: &mut [f32],
+    prod: &mut [f32],
+) {
+    let (k, n) = (w.rows, w.cols);
+    let pl = g.patch_len();
+    assert_eq!(k, pl, "packed conv weights must have patch_len rows");
+    assert_eq!(prod.len(), m * n, "prod must be m*cols");
+    assert!(pos0 + m <= g.num_positions(), "positions out of range");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, m);
+    let tiles = (m + TILE_ROWS - 1) / TILE_ROWS;
+    let parts = threads.min(tiles);
+    let spl = TILE_ROWS * pl;
+    assert!(strips.len() >= parts * spl, "strip scratch too small");
+    if parts == 1 {
+        conv_rows_task(xs, g, pos0, m, w, &mut strips[..spl], prod);
+        return;
+    }
+    // Contiguous row ranges in TILE_ROWS multiples; part p owns strip
+    // panel p, so the part count never exceeds the panel count.
+    let tiles_per = (tiles + parts - 1) / parts;
+    let rows_per = tiles_per * TILE_ROWS;
+    let nparts = (m + rows_per - 1) / rows_per;
+    let sptr = SendPtr(strips.as_mut_ptr());
+    let pptr = SendPtr(prod.as_mut_ptr());
+    pool.run(nparts, |p| {
+        let r0 = p * rows_per;
+        let rows = rows_per.min(m - r0);
+        // SAFETY: part `p` exclusively owns strip panel `p` and prod rows
+        // [r0, r0 + rows) — parts tile both without overlap — and both
+        // buffers outlive `pool.run`, which blocks until every part has
+        // finished.
+        let strip = unsafe { std::slice::from_raw_parts_mut(sptr.0.add(p * spl), spl) };
+        let pr = unsafe { std::slice::from_raw_parts_mut(pptr.0.add(r0 * n), rows * n) };
+        conv_rows_task(xs, g, pos0 + r0, rows, w, strip, pr);
+    });
+}
+
+/// [`conv_rows_streamed`] with the worker count chosen from the chunk's
+/// flops (the same [`POOL_MIN_FLOPS`](matmul_pooled) threshold the pooled
+/// matmul uses: waking parked workers only pays off past it).
+pub fn conv_rows_streamed_auto(
+    xs: &[f32],
+    g: &ConvGeom,
+    pos0: usize,
+    m: usize,
+    w: &PackedMat,
+    pool: &WorkerPool,
+    strips: &mut [f32],
+    prod: &mut [f32],
+) {
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(w.rows)
+        .saturating_mul(w.cols);
+    let threads = if flops < POOL_MIN_FLOPS {
+        1
+    } else {
+        pool.threads()
+    };
+    conv_rows_streamed(xs, g, pos0, m, w, pool, threads.max(1), strips, prod);
+}
+
+/// One part's strip loop: pack `TILE_ROWS` patch rows into the panel, run
+/// the tiled microkernel on them, advance. `strip` is one
+/// `TILE_ROWS × patch_len` panel; `prod` covers exactly this part's
+/// `m × cols` rows and is zeroed here (the microkernel resumes from it).
+fn conv_rows_task(
+    xs: &[f32],
+    g: &ConvGeom,
+    pos0: usize,
+    m: usize,
+    w: &PackedMat,
+    strip: &mut [f32],
+    prod: &mut [f32],
+) {
+    let (k, n) = (w.rows, w.cols);
+    let pl = g.patch_len();
+    prod.fill(0.0);
+    let mut r0 = 0;
+    while r0 < m {
+        let h = TILE_ROWS.min(m - r0);
+        im2col_chunk(xs, g, pos0 + r0, h, &mut strip[..h * pl]);
+        gemm_chunk_tiled(
+            &strip[..h * pl],
+            h,
+            k,
+            n,
+            &w.data,
+            &mut prod[r0 * n..(r0 + h) * n],
+        );
+        r0 += h;
+    }
+}
+
 /// Direct-convolution reference (tests only): `x` is one CHW sample, `w`
 /// the row-major lowered `patch_len × out_c` weight matrix, `out` the CHW
 /// `out_c × out_hw²` result. The reduction runs in the same channel-major
@@ -760,6 +887,74 @@ mod tests {
         let db = direct.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
         let lb = lowered.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
         assert_eq!(db, lb, "im2col+matmul must equal direct convolution");
+    }
+
+    #[test]
+    fn streamed_conv_rows_match_materialized_im2col_bit_for_bit() {
+        // 7x7 output grid: 49 positions — not a TILE_ROWS multiple, so
+        // the strip loop's edge path and the part split both get hit.
+        let g = ConvGeom {
+            in_c: 3,
+            out_c: 5,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+            in_hw: 7,
+            out_hw: 7,
+        };
+        let mut rng = Rng::new(77);
+        let x = random_mat(&mut rng, g.in_features(), 4);
+        let w = random_mat(&mut rng, g.patch_len() * g.out_c, 0);
+        let packed = PackedMat::pack(&w, g.patch_len(), g.out_c);
+        let npos = g.num_positions();
+        let pl = g.patch_len();
+
+        // Materialized reference: full im2col + the naive kernel.
+        let mut patches = vec![0f32; npos * pl];
+        im2col_chunk(&x, &g, 0, npos, &mut patches);
+        let mut want = vec![0f32; npos * g.out_c];
+        matmul_naive(&patches, &w, npos, pl, g.out_c, &mut want);
+        let wb = want.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        let pool = crate::runtime::pool::WorkerPool::new(4);
+        for threads in [1usize, 2, 3, 7] {
+            let mut strips = vec![0f32; threads * TILE_ROWS * pl];
+            let mut prod = vec![0f32; npos * g.out_c];
+            conv_rows_streamed(
+                &x,
+                &g,
+                0,
+                npos,
+                &packed,
+                &pool,
+                threads,
+                &mut strips,
+                &mut prod,
+            );
+            let pb = prod.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(wb, pb, "streamed divergence at threads={threads}");
+        }
+
+        // Offset windows (pos0 > 0, odd m) agree with the same slice of
+        // the full product.
+        let (pos0, m) = (13usize, 10usize);
+        let mut strips = vec![0f32; 2 * TILE_ROWS * pl];
+        let mut prod = vec![0f32; m * g.out_c];
+        conv_rows_streamed(&x, &g, pos0, m, &packed, &pool, 2, &mut strips, &mut prod);
+        assert_eq!(
+            prod.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want[pos0 * g.out_c..(pos0 + m) * g.out_c]
+                .iter()
+                .map(|v| v.to_bits())
+                .collect::<Vec<_>>(),
+            "offset streamed window diverged"
+        );
+
+        // The auto-threaded entry point agrees too.
+        let mut strips = vec![0f32; pool.threads() * TILE_ROWS * pl];
+        let mut prod = vec![0f32; npos * g.out_c];
+        conv_rows_streamed_auto(&x, &g, 0, npos, &packed, &pool, &mut strips, &mut prod);
+        assert_eq!(want, prod, "auto streamed divergence");
     }
 
     #[test]

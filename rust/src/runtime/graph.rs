@@ -70,10 +70,19 @@ pub enum Op {
         in_f: usize,
         out_f: usize,
     },
-    /// 2-D convolution, executed as im2col + matmul; output is the full
-    /// CHW grid (`out_c × out_hw²` per sample) — pooling is a separate
-    /// node.
-    Conv { layer: usize, geom: ConvGeom },
+    /// 2-D convolution, executed as im2col + matmul. With `pool: None`
+    /// the output is the full CHW grid (`out_c × out_hw²` per sample) and
+    /// pooling is a separate node; `pool: Some(f)` is the **fused**
+    /// Conv+Pool form produced by `runtime::passes` — the `f × f` max
+    /// pool is folded into the conv's scatter, so the node writes the
+    /// pooled `out_c × (out_hw/f)²` grid directly and the full-resolution
+    /// intermediate never exists. The lowering itself always emits
+    /// `pool: None`.
+    Conv {
+        layer: usize,
+        geom: ConvGeom,
+        pool: Option<usize>,
+    },
     /// Channel-wise `factor × factor` max pooling (stride = factor) over
     /// a CHW input of `channels × hw²`.
     Pool {
@@ -332,7 +341,7 @@ impl Graph {
                     }
                     out_f
                 }
-                Op::Conv { ref geom, .. } => {
+                Op::Conv { ref geom, pool, .. } => {
                     if got(0) != geom.in_features() {
                         return Err(GraphError::ShapeMismatch {
                             node: i,
@@ -341,7 +350,20 @@ impl Graph {
                             got: got(0),
                         });
                     }
-                    geom.out_c * geom.num_positions()
+                    match pool {
+                        None => geom.out_c * geom.num_positions(),
+                        Some(f) => {
+                            if f == 0 || geom.out_hw == 0 || geom.out_hw % f != 0 {
+                                return Err(GraphError::BadPool {
+                                    node: i,
+                                    hw: geom.out_hw,
+                                    factor: f,
+                                });
+                            }
+                            let s = geom.out_hw / f;
+                            geom.out_c * s * s
+                        }
+                    }
                 }
                 Op::Pool {
                     channels,
@@ -480,11 +502,21 @@ impl Graph {
         self.nodes.iter().filter(|n| matches!(n.op, Op::Add)).count()
     }
 
-    /// Number of [`Op::Pool`] nodes.
+    /// Number of standalone [`Op::Pool`] nodes (fused Conv+Pool nodes are
+    /// counted by [`Graph::fused_convs`] instead).
     pub fn pool_nodes(&self) -> usize {
         self.nodes
             .iter()
             .filter(|n| matches!(n.op, Op::Pool { .. }))
+            .count()
+    }
+
+    /// Number of fused Conv+Pool nodes (`Op::Conv { pool: Some(_), .. }`,
+    /// produced by the `runtime::passes` fusion pass).
+    pub fn fused_convs(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv { pool: Some(_), .. }))
             .count()
     }
 
@@ -517,8 +549,18 @@ impl Shape {
 
 /// Lower a benchmark network into the graph IR, or explain why it cannot
 /// execute on the sim backend. This is the whole capability story:
-/// `SimBackend::supports` is `lower(net).map(|_| ())`.
+/// `SimBackend::supports` is `lower(net).map(|_| ())`. The result is the
+/// **unoptimized** graph (every `Op::Conv` carries `pool: None`);
+/// `runtime::passes` rewrites the [`lower_nodes`] list before compilation
+/// when optimization is wanted.
 pub fn lower(net: &Network) -> Result<Graph, GraphError> {
+    Graph::compile(lower_nodes(net)?)
+}
+
+/// The raw node list [`lower`] compiles — exposed so `runtime::passes`
+/// can rewrite it *between* lowering and `Graph::compile`'s
+/// schedule/arena assignment.
+pub fn lower_nodes(net: &Network) -> Result<Vec<Node>, GraphError> {
     if net.layers.is_empty() {
         return Err(GraphError::Unsupported(format!(
             "network '{}' has no layers",
@@ -569,7 +611,7 @@ pub fn lower(net: &Network) -> Result<Graph, GraphError> {
 
     let out = lw.cur;
     lw.nodes.push(Node::new(Op::Output, vec![out], false));
-    Graph::compile(lw.nodes)
+    Ok(lw.nodes)
 }
 
 /// One maximal run of layers sharing a dotted name prefix; `residual`
@@ -787,7 +829,15 @@ impl<'a> Lowering<'a> {
                 let geom = self.conv_geom(l)?;
                 self.bridge_to_grid(geom.in_c, geom.in_hw, &l.name)?;
                 let cur = self.cur;
-                self.cur = self.push(Op::Conv { layer: li, geom }, vec![cur], relu);
+                self.cur = self.push(
+                    Op::Conv {
+                        layer: li,
+                        geom,
+                        pool: None,
+                    },
+                    vec![cur],
+                    relu,
+                );
                 self.cur_shape = Shape::Chw {
                     c: geom.out_c,
                     hw: geom.out_hw,
@@ -860,7 +910,15 @@ impl<'a> Lowering<'a> {
             }
             let relu = pos + 1 < trunk.len();
             let cur = self.cur;
-            self.cur = self.push(Op::Conv { layer: li, geom }, vec![cur], relu);
+            self.cur = self.push(
+                Op::Conv {
+                    layer: li,
+                    geom,
+                    pool: None,
+                },
+                vec![cur],
+                relu,
+            );
             self.cur_shape = Shape::Chw {
                 c: geom.out_c,
                 hw: geom.out_hw,
@@ -904,7 +962,15 @@ impl<'a> Lowering<'a> {
                         trunk_shape.features(),
                     )));
                 }
-                self.push(Op::Conv { layer: li, geom }, vec![block_in], false)
+                self.push(
+                    Op::Conv {
+                        layer: li,
+                        geom,
+                        pool: None,
+                    },
+                    vec![block_in],
+                    false,
+                )
             }
             None => {
                 if block_in_shape != trunk_shape {

@@ -17,6 +17,13 @@
 //!   `Add`/`Output`), compiled into a topological schedule with
 //!   buffer-liveness arena slots. `SimBackend::supports` is "does this
 //!   network lower?" — no topology blacklist.
+//! - [`passes`] — the graph-rewrite pass pipeline that runs between
+//!   lowering and `Graph::compile`: dead-node elimination plus Conv+Pool
+//!   fusion (a pool folds into its producing conv, which then scatters
+//!   the pooled grid directly — the full-resolution CHW intermediate
+//!   never exists). Every pass is semantics-preserving bitwise; the
+//!   unoptimized graph stays alive as `SimBackend::eval_reference`'s
+//!   comparator and CI gates on the equivalence.
 //! - [`pool`] — a persistent worker-thread pool, created once per
 //!   `SimBackend` and reused by every matmul of every eval. Workers park
 //!   on a condvar between jobs and claim row-chunk tickets dynamically,
@@ -41,6 +48,7 @@
 pub mod engine;
 pub mod gemm;
 pub mod graph;
+pub mod passes;
 pub mod pool;
 pub mod simnet;
 

@@ -1,0 +1,419 @@
+//! Graph-rewrite pass pipeline: optimizations that run **between**
+//! `graph::lower_nodes` and `Graph::compile`'s schedule/arena assignment.
+//!
+//! The pipeline operates on the raw `Vec<Node>` a lowering produced — it
+//! never sees (or needs) a compiled schedule, and `Graph::compile`
+//! re-validates everything afterwards, so a buggy pass can at worst turn
+//! a compilable graph into a typed `GraphError`, never into silent
+//! miscompilation of the structural invariants. Semantic preservation is
+//! enforced one level up: `SimBackend` keeps the **unoptimized** graph as
+//! its `eval_reference` comparator, and the test suite / bench / CI gate
+//! every pass-enabled eval bitwise against it.
+//!
+//! # Production passes (pipeline order)
+//!
+//! 1. [`DeadNodeElim`] — removes nodes with no path to the `Output` node
+//!    (auxiliary heads, unused producers). It runs **first** so a dead
+//!    consumer can no longer block a fusion: a Pool whose second reader
+//!    is dead is single-consumer once the corpse is gone.
+//! 2. [`FuseConvPool`] — folds an `Op::Pool` into its producing
+//!    `Op::Conv` (`pool: Some(factor)`), so the conv's scatter writes the
+//!    pooled grid directly and the full-resolution CHW intermediate never
+//!    exists (on VGG-style chains this roughly halves the conv-path slot
+//!    arena). Legality (all must hold, checked per candidate):
+//!    - the Pool's sole input is a Conv with `pool: None` (no re-fusing
+//!      an already-fused conv),
+//!    - the Conv's **only** consumer is that Pool (another reader needs
+//!      the full-resolution grid),
+//!    - the Pool itself has exactly **one** consumer (rewiring several
+//!      readers would be semantically fine — they would all read the
+//!      identical pooled tensor — but the conservative rule keeps the
+//!      rewrite local and is what the legality tests pin),
+//!    - the Pool carries no fused ReLU (the lowering never emits one),
+//!    - the geometries agree (`channels == out_c`, `hw == out_hw`, factor
+//!      divides the grid) — violations mean a malformed graph, which is
+//!      left for `Graph::compile` to report instead of being papered
+//!      over.
+//!
+//!    The fused node keeps the conv's ReLU flag: the executor applies
+//!    ReLU per value *before* the max-accumulate, which is bitwise
+//!    identical to the unfused ReLU-then-pool order (the scatter visits a
+//!    pooled window's positions in exactly the `(dy, dx)` order
+//!    `gemm::max_pool` reduces in).
+//!
+//! # Adding a pass
+//!
+//! Implement [`Pass`] (`run` mutates the node list and returns how many
+//! rewrites it applied — 0 must mean "list untouched"), append it to
+//! [`default_pipeline`] at the right position, and gate it with a
+//! [`PassConfig`] field so the equivalence property tests can toggle it.
+//! A pass that removes or merges nodes must renumber every `NodeId` via
+//! [`compact`]; one that only annotates nodes in place needs no
+//! renumbering. Every pass must be semantics-preserving **bitwise** — if
+//! a rewrite changes any logit bit on any supported net, the
+//! `passes-on-vs-off` property test and the bench's `passes_bit_exact`
+//! gate fail.
+
+use crate::runtime::graph::{Node, NodeId, Op};
+
+/// Which passes [`run`] applies. `Default` enables the full production
+/// pipeline; [`PassConfig::none`] compiles the lowering verbatim (the
+/// comparator configuration the equivalence tests and the bench use).
+#[derive(Clone, Copy, Debug)]
+pub struct PassConfig {
+    pub dead_node_elim: bool,
+    pub fuse_conv_pool: bool,
+}
+
+impl Default for PassConfig {
+    fn default() -> PassConfig {
+        PassConfig {
+            dead_node_elim: true,
+            fuse_conv_pool: true,
+        }
+    }
+}
+
+impl PassConfig {
+    /// Every pass disabled: the compiled graph is the lowering verbatim.
+    pub fn none() -> PassConfig {
+        PassConfig {
+            dead_node_elim: false,
+            fuse_conv_pool: false,
+        }
+    }
+}
+
+/// One pass's outcome within a [`PassReport`].
+#[derive(Clone, Copy, Debug)]
+pub struct PassStat {
+    pub name: &'static str,
+    /// Rewrites applied (nodes removed / ops fused); 0 = list untouched.
+    pub rewrites: usize,
+}
+
+/// What the pipeline did to a node list (`inspect`/`serve` print it, the
+/// bench records it).
+#[derive(Clone, Debug, Default)]
+pub struct PassReport {
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    /// One entry per pass that ran, in pipeline order.
+    pub stats: Vec<PassStat>,
+}
+
+impl PassReport {
+    /// Total rewrites across every pass.
+    pub fn rewrites(&self) -> usize {
+        self.stats.iter().map(|s| s.rewrites).sum()
+    }
+
+    /// Rewrites applied by the pass named `name` (0 when it did not run).
+    pub fn rewrites_of(&self, name: &str) -> usize {
+        self.stats
+            .iter()
+            .find(|s| s.name == name)
+            .map_or(0, |s| s.rewrites)
+    }
+
+    /// One-line rendering, e.g.
+    /// `dead-node-elim x0, fuse-conv-pool x5 (24 -> 19 nodes)`.
+    pub fn render(&self) -> String {
+        if self.stats.is_empty() {
+            return format!("no passes ({} nodes)", self.nodes_after);
+        }
+        let stats = self
+            .stats
+            .iter()
+            .map(|s| format!("{} x{}", s.name, s.rewrites))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "{stats} ({} -> {} nodes)",
+            self.nodes_before, self.nodes_after
+        )
+    }
+}
+
+/// A graph-rewrite pass over the pre-compile node list (see module docs
+/// for the contract).
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    /// Rewrite the node list in place; returns the number of rewrites
+    /// applied (0 must mean the list is untouched).
+    fn run(&self, nodes: &mut Vec<Node>) -> usize;
+}
+
+/// The production pipeline for a configuration, in execution order.
+pub fn default_pipeline(cfg: &PassConfig) -> Vec<Box<dyn Pass>> {
+    let mut pipeline: Vec<Box<dyn Pass>> = Vec::new();
+    if cfg.dead_node_elim {
+        pipeline.push(Box::new(DeadNodeElim));
+    }
+    if cfg.fuse_conv_pool {
+        pipeline.push(Box::new(FuseConvPool));
+    }
+    pipeline
+}
+
+/// Run the configured pipeline over a node list and report what changed.
+pub fn run(nodes: &mut Vec<Node>, cfg: &PassConfig) -> PassReport {
+    let nodes_before = nodes.len();
+    let stats = default_pipeline(cfg)
+        .iter()
+        .map(|pass| PassStat {
+            name: pass.name(),
+            rewrites: pass.run(nodes),
+        })
+        .collect();
+    PassReport {
+        nodes_before,
+        nodes_after: nodes.len(),
+        stats,
+    }
+}
+
+// ----------------------------------------------------------------------
+// Pass 1: dead-node elimination
+// ----------------------------------------------------------------------
+
+/// Removes every node with no path to an `Output` node: auxiliary heads,
+/// unused producers, disconnected debris. `Input` and `Output` nodes are
+/// always kept — they are structural anchors, and duplicate/missing
+/// detection is `Graph::compile`'s job, which this pass must not mask.
+pub struct DeadNodeElim;
+
+impl Pass for DeadNodeElim {
+    fn name(&self) -> &'static str {
+        "dead-node-elim"
+    }
+
+    fn run(&self, nodes: &mut Vec<Node>) -> usize {
+        let n = nodes.len();
+        let mut keep = vec![false; n];
+        let mut stack: Vec<usize> = Vec::new();
+        for (i, nd) in nodes.iter().enumerate() {
+            if matches!(nd.op, Op::Input { .. } | Op::Output) {
+                keep[i] = true;
+                stack.push(i);
+            }
+        }
+        while let Some(i) = stack.pop() {
+            for &NodeId(j) in &nodes[i].inputs {
+                // Out-of-range ids are left for compile's DanglingInput.
+                if j < n && !keep[j] {
+                    keep[j] = true;
+                    stack.push(j);
+                }
+            }
+        }
+        let removed = keep.iter().filter(|&&k| !k).count();
+        if removed > 0 {
+            compact(nodes, &keep);
+        }
+        removed
+    }
+}
+
+// ----------------------------------------------------------------------
+// Pass 2: Conv+Pool fusion
+// ----------------------------------------------------------------------
+
+/// Folds a max-pool into the conv that feeds it (legality rules in the
+/// module docs). The Pool node disappears; its consumer re-reads the
+/// fused conv, whose output features shrink from `out_c · out_hw²` to
+/// `out_c · (out_hw/f)²` — the liveness pass then sizes the conv's arena
+/// slot at the pooled footprint.
+pub struct FuseConvPool;
+
+impl Pass for FuseConvPool {
+    fn name(&self) -> &'static str {
+        "fuse-conv-pool"
+    }
+
+    fn run(&self, nodes: &mut Vec<Node>) -> usize {
+        let n = nodes.len();
+        let mut consumers = vec![0usize; n];
+        for nd in nodes.iter() {
+            for &NodeId(j) in &nd.inputs {
+                if j < n {
+                    consumers[j] += 1;
+                }
+            }
+        }
+        let mut keep = vec![true; n];
+        let mut fused = 0usize;
+        for p in 0..n {
+            let Op::Pool {
+                channels,
+                hw,
+                factor,
+            } = nodes[p].op
+            else {
+                continue;
+            };
+            // Legality: see the module docs. Geometry violations are left
+            // for Graph::compile to report, so they also veto the fuse.
+            if nodes[p].relu || consumers[p] != 1 || nodes[p].inputs.len() != 1 {
+                continue;
+            }
+            let NodeId(c) = nodes[p].inputs[0];
+            if c >= n {
+                continue;
+            }
+            let Op::Conv { layer, geom, pool } = nodes[c].op else {
+                continue;
+            };
+            if pool.is_some() || consumers[c] != 1 {
+                continue;
+            }
+            if geom.out_c != channels || geom.out_hw != hw || factor == 0 || hw % factor != 0 {
+                continue;
+            }
+            // Rewrite: the conv absorbs the pool (keeping its own ReLU
+            // flag), and the pool's consumer re-reads the conv.
+            nodes[c].op = Op::Conv {
+                layer,
+                geom,
+                pool: Some(factor),
+            };
+            for (i, nd) in nodes.iter_mut().enumerate() {
+                if i == p {
+                    continue;
+                }
+                for id in &mut nd.inputs {
+                    if id.0 == p {
+                        id.0 = c;
+                    }
+                }
+            }
+            keep[p] = false;
+            fused += 1;
+        }
+        if fused > 0 {
+            compact(nodes, &keep);
+        }
+        fused
+    }
+}
+
+// ----------------------------------------------------------------------
+// Shared machinery
+// ----------------------------------------------------------------------
+
+/// Drop the nodes whose `keep` flag is false and renumber every `NodeId`
+/// for the new dense indexing. Callers guarantee no *kept* node
+/// references a removed one; out-of-range ids (dangling inputs) pass
+/// through untouched so `Graph::compile` still reports them.
+fn compact(nodes: &mut Vec<Node>, keep: &[bool]) {
+    let mut remap = vec![usize::MAX; nodes.len()];
+    let mut next = 0usize;
+    for (i, &k) in keep.iter().enumerate() {
+        if k {
+            remap[i] = next;
+            next += 1;
+        }
+    }
+    let old = std::mem::take(nodes);
+    for (i, mut nd) in old.into_iter().enumerate() {
+        if !keep[i] {
+            continue;
+        }
+        for id in &mut nd.inputs {
+            if id.0 < remap.len() {
+                debug_assert_ne!(remap[id.0], usize::MAX, "kept node references a removed node");
+                id.0 = remap[id.0];
+            }
+        }
+        nodes.push(nd);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+    use crate::runtime::graph::{self, Graph};
+
+    fn lower_with(net: &nets::Network, cfg: &PassConfig) -> (Graph, PassReport) {
+        let mut nodes = graph::lower_nodes(net).unwrap();
+        let report = run(&mut nodes, cfg);
+        (Graph::compile(nodes).unwrap(), report)
+    }
+
+    #[test]
+    fn disabled_pipeline_is_identity() {
+        let mut nodes = graph::lower_nodes(&nets::conv_tiny()).unwrap();
+        let before = nodes.len();
+        let report = run(&mut nodes, &PassConfig::none());
+        assert_eq!(nodes.len(), before);
+        assert_eq!(report.rewrites(), 0);
+        assert!(report.stats.is_empty());
+    }
+
+    #[test]
+    fn conv_tiny_fuses_its_single_pool_and_shrinks_the_arena() {
+        let unfused = graph::lower(&nets::conv_tiny()).unwrap();
+        let (fused, report) = lower_with(&nets::conv_tiny(), &PassConfig::default());
+        assert_eq!(unfused.pool_nodes(), 1);
+        assert_eq!(fused.pool_nodes(), 0);
+        assert_eq!(fused.fused_convs(), 1);
+        assert_eq!(report.rewrites_of("fuse-conv-pool"), 1);
+        assert_eq!(report.rewrites_of("dead-node-elim"), 0);
+        assert_eq!(fused.num_nodes(), unfused.num_nodes() - 1);
+        // conv2's slot now holds the pooled 8ch 4x4 grid, not 8x8.
+        assert!(
+            fused.arena_floats_per_sample() < unfused.arena_floats_per_sample(),
+            "fusion must shrink the slot arena: {} vs {}",
+            fused.arena_floats_per_sample(),
+            unfused.arena_floats_per_sample()
+        );
+        // Logit geometry is untouched.
+        assert_eq!(
+            fused.out_features(fused.output()),
+            unfused.out_features(unfused.output())
+        );
+    }
+
+    #[test]
+    fn vgg16_fuses_all_five_pools_and_cuts_the_arena_by_a_quarter_plus() {
+        let unfused = graph::lower(&nets::vgg16()).unwrap();
+        let (fused, report) = lower_with(&nets::vgg16(), &PassConfig::default());
+        assert_eq!(unfused.pool_nodes(), 5);
+        assert_eq!(fused.pool_nodes(), 0);
+        assert_eq!(fused.fused_convs(), 5);
+        assert_eq!(report.rewrites_of("fuse-conv-pool"), 5);
+        let (before, after) = (
+            unfused.arena_floats_per_sample(),
+            fused.arena_floats_per_sample(),
+        );
+        // The 64ch 224x224 grid no longer needs a twin slot for conv2:
+        // the fused arena is at most 3/4 of the unfused one (measured:
+        // ~4.0M vs ~6.4M floats per sample).
+        assert!(
+            after * 4 <= before * 3,
+            "vgg16 fusion must cut the slot arena by >= 25%: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn resnet_tiny_global_pool_after_the_add_does_not_fuse() {
+        // The only pool reads an Add node, not a Conv: nothing to fuse.
+        let (fused, report) = lower_with(&nets::resnet::resnet_tiny(), &PassConfig::default());
+        assert_eq!(fused.pool_nodes(), 1);
+        assert_eq!(fused.fused_convs(), 0);
+        assert_eq!(report.rewrites(), 0);
+    }
+
+    #[test]
+    fn mlp_is_untouched_by_the_pipeline() {
+        let unfused = graph::lower(&nets::mlp_tiny()).unwrap();
+        let (fused, report) = lower_with(&nets::mlp_tiny(), &PassConfig::default());
+        assert_eq!(report.rewrites(), 0);
+        assert_eq!(fused.num_nodes(), unfused.num_nodes());
+        assert_eq!(
+            fused.arena_floats_per_sample(),
+            unfused.arena_floats_per_sample()
+        );
+    }
+}

@@ -24,10 +24,46 @@
 //! after the job has drained. The closure — and everything it borrows —
 //! therefore strictly outlives all worker accesses; the `F: Sync` bound
 //! makes the shared calls themselves safe.
+//!
+//! Panic attribution is **per job**: each `RawJob` carries a pointer to a
+//! poison flag living on its submitter's stack (valid for exactly as long
+//! as the closure pointer, by the same drain argument), and the
+//! submitter's drain wait is keyed on the job epoch, so with concurrent
+//! submitters a worker-side panic poisons only the job that submitted it
+//! — a clean job installed right after the poisoned one drains can
+//! neither observe the stale flag nor re-capture the poisoned
+//! submitter's wait. [`WorkerPool::try_run`] surfaces the poisoning as a
+//! typed [`PoolError`] instead of a panic.
 
 use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Typed failure of [`WorkerPool::try_run`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    /// A part body of *this* job panicked (on a worker or the submitting
+    /// thread). The job fully drained before this was returned, so the
+    /// pool stays usable, and per-job poison flags guarantee only the
+    /// submitting job observes the failure.
+    JobPanicked {
+        /// Part count of the poisoned job.
+        parts: usize,
+    },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::JobPanicked { parts } => {
+                write!(f, "a worker-pool job of {parts} part(s) panicked")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
 
 /// Upper bound on pool workers (beyond this, the quantized-matmul kernels
 /// saturate memory bandwidth — same bound the PR 2 scope kernel used).
@@ -46,34 +82,40 @@ pub fn default_threads() -> usize {
 }
 
 /// A lifetime-erased in-flight job: `data` points at the caller's closure,
-/// `call` is the monomorphized trampoline that invokes it.
+/// `call` is the monomorphized trampoline that invokes it, and `poisoned`
+/// points at the per-job poison flag on the submitter's stack.
 #[derive(Clone, Copy)]
 struct RawJob {
     data: *const (),
     call: unsafe fn(*const (), usize),
     parts: usize,
+    /// Per-job poison flag, owned by the submitting `submit` frame. Valid
+    /// for exactly as long as `data` (the submitter blocks until
+    /// `active == 0`), so a worker that claimed a part of this job may
+    /// always store through it.
+    poisoned: *const AtomicBool,
 }
 
 // SAFETY: `data` points at an `F: Fn(usize) + Sync` that the submitting
 // `run` call keeps alive (it blocks until `active == 0`), and `Sync` makes
-// invoking it from several threads at once sound.
+// invoking it from several threads at once sound; `poisoned` points at an
+// `AtomicBool` on the same stack frame with the same lifetime guarantee.
 unsafe impl Send for RawJob {}
 
 /// Shared scheduler state, guarded by one mutex (jobs are coarse row
 /// chunks, so the lock is uncontended in practice).
 #[derive(Default)]
 struct Slot {
-    /// Bumped once per job so parked workers can tell a new job from the
-    /// one they just finished claiming parts of.
+    /// Bumped once per job; parked workers use it to tell a new job from
+    /// the one they just finished claiming parts of, and submitters key
+    /// their drain wait on it (an epoch moved past mine ⇒ my job fully
+    /// drained, whatever is installed now is someone else's).
     epoch: u64,
     job: Option<RawJob>,
     /// Next unclaimed part index (the ticket counter).
     next_part: usize,
     /// Parts claimed-or-pending; the job is done when this reaches 0.
     active: usize,
-    /// Set when any part of the current job panicked (the decrement still
-    /// happens, so the job drains instead of wedging the pool).
-    poisoned: bool,
     shutdown: bool,
 }
 
@@ -138,17 +180,14 @@ impl WorkerPool {
     /// A panic in any part body is re-raised on the calling thread once
     /// the whole job has drained (like `thread::scope`, no part is left
     /// running when the panic propagates), and the pool stays usable.
+    /// [`WorkerPool::try_run`] is the non-panicking variant.
     ///
-    /// Concurrent `run` calls from *different* threads are memory-safe
-    /// (submitters serialize on the job slot) but panic **attribution**
-    /// across them is best-effort: the shared `poisoned` flag is reset
-    /// by the next job's install, so a worker-side panic in submitter
-    /// A's job can be missed (or observed by B) when B installs between
-    /// A's drain and A's wake-up. Every in-tree pool has exactly one
-    /// submitting thread (`SimBackend::eval` takes `&mut self`), so this
-    /// cannot occur today; fixing it for multi-submitter use means
-    /// carrying a per-job poison flag in `RawJob` (pointing at the
-    /// submitter's stack) and keying the drain wait on the job epoch.
+    /// Concurrent `run`/`try_run` calls from *different* threads are
+    /// fully supported: submitters serialize on the job slot, each job
+    /// carries its **own** poison flag (on its submitter's stack), and
+    /// every submitter's drain wait is keyed on its job's epoch — so a
+    /// panic in one submitter's job is observed by exactly that
+    /// submitter, never by a job installed after it drained.
     ///
     /// `run` must not be called again (on the same pool) from *inside* a
     /// part body: the nested call would wait for the outer job to drain,
@@ -156,24 +195,58 @@ impl WorkerPool {
     /// Callers that fan out nested work (e.g. the conv path's
     /// per-sample loop) run their inner kernels inline instead.
     pub fn run<F: Fn(usize) + Sync>(&self, parts: usize, f: F) {
+        match self.submit(parts, &f) {
+            Ok(()) => {}
+            Err(Some(payload)) => panic::resume_unwind(payload),
+            Err(None) => panic!("a WorkerPool job panicked on a worker thread"),
+        }
+    }
+
+    /// [`WorkerPool::run`] with poisoning surfaced as a typed error
+    /// instead of a panic: a part body that panics (on a worker or the
+    /// calling thread) yields `Err(PoolError::JobPanicked)` once the job
+    /// has fully drained. The pool stays usable afterwards, and the
+    /// per-job poison flag guarantees a concurrent submitter's clean job
+    /// never observes this job's failure (or vice versa).
+    pub fn try_run<F: Fn(usize) + Sync>(&self, parts: usize, f: F) -> Result<(), PoolError> {
+        self.submit(parts, &f)
+            .map_err(|_| PoolError::JobPanicked { parts })
+    }
+
+    /// Shared submission path. `Err` means a part of **this** job
+    /// panicked; the payload is `Some` when the panic happened on the
+    /// calling thread (recoverable for re-raise), `None` when it
+    /// happened on a worker (the worker's `catch_unwind` consumed it).
+    fn submit<F: Fn(usize) + Sync>(
+        &self,
+        parts: usize,
+        f: &F,
+    ) -> Result<(), Option<Box<dyn std::any::Any + Send>>> {
         if parts == 0 {
-            return;
+            return Ok(());
         }
         if self.workers.is_empty() || parts == 1 {
             for p in 0..parts {
-                f(p);
+                if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(|| f(p))) {
+                    return Err(Some(payload));
+                }
             }
-            return;
+            return Ok(());
         }
         /// Trampoline: recover the concrete closure type and invoke it.
         unsafe fn call<F: Fn(usize) + Sync>(data: *const (), part: usize) {
             let f = unsafe { &*data.cast::<F>() };
             f(part);
         }
+        // This job's poison flag: workers reach it through the RawJob
+        // pointer, which stays valid because this frame cannot leave
+        // before the job drains (same argument as the closure pointer).
+        let poisoned = AtomicBool::new(false);
         let job = RawJob {
-            data: (&f as *const F).cast(),
+            data: (f as *const F).cast(),
             call: call::<F>,
             parts,
+            poisoned: &poisoned as *const AtomicBool,
         };
         let shared = &*self.shared;
         let mut s = shared.slot.lock().unwrap();
@@ -185,15 +258,18 @@ impl WorkerPool {
             s = shared.done.wait(s).unwrap();
         }
         s.epoch = s.epoch.wrapping_add(1);
+        let my_epoch = s.epoch;
         s.next_part = 0;
         s.active = parts;
-        s.poisoned = false;
         s.job = Some(job);
         shared.work.notify_all();
         // The calling thread claims parts alongside the workers. A panic
-        // in the body is caught so the unwind cannot escape `run` while
-        // workers still hold the lifetime-erased closure; it is re-raised
-        // below, after the job has fully drained.
+        // in the body is caught so the unwind cannot escape this frame
+        // while workers still hold the lifetime-erased closure; the
+        // caller re-raises after the job has fully drained. Note the lock
+        // is held from each decrement through the next loop-condition
+        // check, so the job slot cannot be recycled between "our job
+        // drained" and "we noticed".
         let mut payload: Option<Box<dyn std::any::Any + Send>> = None;
         while s.next_part < parts {
             let part = s.next_part;
@@ -202,7 +278,7 @@ impl WorkerPool {
             let res = panic::catch_unwind(AssertUnwindSafe(|| f(part)));
             s = shared.slot.lock().unwrap();
             if let Err(p) = res {
-                s.poisoned = true;
+                poisoned.store(true, Ordering::SeqCst);
                 payload = Some(p);
             }
             s.active -= 1;
@@ -212,18 +288,19 @@ impl WorkerPool {
             }
         }
         // Wait for the workers to finish their in-flight parts; only then
-        // may `f` (and everything it borrows) go out of scope.
-        while s.active > 0 {
+        // may `f` (and everything it borrows, and the poison flag) go out
+        // of scope. Keyed on the epoch: once it moves past ours, our job
+        // fully drained and `active` belongs to someone else's job — the
+        // pre-PR 5 `while active > 0` wait could capture a concurrent
+        // submitter's freshly-installed job here.
+        while s.epoch == my_epoch && s.active > 0 {
             s = shared.done.wait(s).unwrap();
         }
-        let poisoned = s.poisoned;
         drop(s);
-        if let Some(p) = payload {
-            panic::resume_unwind(p);
+        if poisoned.load(Ordering::SeqCst) {
+            return Err(payload);
         }
-        if poisoned {
-            panic!("a WorkerPool job panicked on a worker thread");
-        }
+        Ok(())
     }
 }
 
@@ -253,7 +330,11 @@ fn worker_loop(shared: &Shared) {
             }));
             s = shared.slot.lock().unwrap();
             if res.is_err() {
-                s.poisoned = true;
+                // SAFETY: the poison flag lives on this job's submitter
+                // stack, which cannot unwind or return before this part's
+                // decrement below (same lifetime as `job.data`). Per-job
+                // flag: only this job's submitter observes the poisoning.
+                unsafe { (*job.poisoned).store(true, Ordering::SeqCst) };
             }
             s.active -= 1;
             if s.active == 0 {
@@ -353,6 +434,81 @@ mod tests {
         let pool = WorkerPool::new(2);
         pool.run(0, |_| panic!("no parts, no calls"));
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn try_run_surfaces_a_typed_error_instead_of_a_panic() {
+        let pool = WorkerPool::new(3);
+        // Panic on a part some worker (or the submitter) will claim: the
+        // job drains and the typed error comes back — no unwind, no hang.
+        let err = pool
+            .try_run(8, |p| {
+                if p == 3 {
+                    panic!("boom");
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err, PoolError::JobPanicked { parts: 8 });
+        assert!(err.to_string().contains("8 part(s)"), "{err}");
+        // The pool is not wedged: a clean job still runs every part.
+        let hits: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+        pool.try_run(hits.len(), |p| {
+            hits[p].fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        // Single-thread pools surface the same typed error inline.
+        let inline = WorkerPool::new(1);
+        let err = inline.try_run(4, |_| panic!("inline boom")).unwrap_err();
+        assert_eq!(err, PoolError::JobPanicked { parts: 4 });
+    }
+
+    #[test]
+    fn concurrent_submitters_poison_only_their_own_job() {
+        // Two threads share one pool: one submits jobs that always panic
+        // on a part, the other submits clean jobs. Per-job poison flags +
+        // the epoch-keyed drain wait mean every poisoned job errors, every
+        // clean job succeeds, and nobody hangs — the exact attribution the
+        // pre-PR 5 shared flag documented as best-effort.
+        let pool = std::sync::Arc::new(WorkerPool::new(3));
+        let clean_ok = std::sync::Arc::new(AtomicU64::new(0));
+        let poisoned_err = std::sync::Arc::new(AtomicU64::new(0));
+        const ROUNDS: usize = 40;
+        let mut handles = Vec::new();
+        {
+            let (pool, poisoned_err) = (pool.clone(), poisoned_err.clone());
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..ROUNDS {
+                    let res = pool.try_run(4, |p| {
+                        if p == 2 {
+                            panic!("poisoned job");
+                        }
+                    });
+                    if res == Err(PoolError::JobPanicked { parts: 4 }) {
+                        poisoned_err.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        {
+            let (pool, clean_ok) = (pool.clone(), clean_ok.clone());
+            handles.push(std::thread::spawn(move || {
+                for round in 0..ROUNDS {
+                    let sum = AtomicU64::new(0);
+                    let res = pool.try_run(5, |p| {
+                        sum.fetch_add(p as u64 + 1, Ordering::SeqCst);
+                    });
+                    assert_eq!(res, Ok(()), "clean job poisoned at round {round}");
+                    assert_eq!(sum.load(Ordering::SeqCst), 15);
+                    clean_ok.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("submitter threads must not die");
+        }
+        assert_eq!(clean_ok.load(Ordering::SeqCst), ROUNDS as u64);
+        assert_eq!(poisoned_err.load(Ordering::SeqCst), ROUNDS as u64);
     }
 
     #[test]

@@ -9,20 +9,30 @@
 //! identical in structure to the Pallas kernels (symmetric per-tensor
 //! weight quantization, post-ReLU activation quantization).
 //!
-//! # Graph execution
+//! # Graph execution and the pass pipeline
 //!
 //! Since PR 4 the backend executes a compiled [`runtime::graph`] schedule
 //! instead of walking the flat layer list, so residual topologies (the
 //! paper's ResNet benchmarks) serve offline alongside the FC and
 //! sequential conv nets. Construction lowers the network into the IR
-//! (`graph::lower`) — [`SimBackend::supports`] is literally "does this
-//! network lower?", with the typed `GraphError` reason surfaced — and
-//! eval walks the topological schedule: `MatMul` nodes run the pooled
-//! register-tiled kernel, `Conv` nodes lower to im2col + the same kernel
-//! (the paper's §II view of a conv as a lowered R×N weight matrix
-//! streaming W² input vectors), `Pool` nodes max-pool CHW grids, and
-//! `Add` nodes merge residual branches elementwise (ReLU after the merge,
-//! the He et al. ordering).
+//! (`graph::lower_nodes`) — [`SimBackend::supports`] is literally "does
+//! this network lower?", with the typed `GraphError` reason surfaced —
+//! then runs the [`runtime::passes`] pipeline (dead-node elimination,
+//! Conv+Pool fusion; toggleable via [`SimOptions::passes`]) and compiles
+//! the rewritten list into the schedule eval executes: `MatMul` nodes run
+//! the pooled register-tiled kernel, `Conv` nodes stream im2col patches
+//! through the same kernel (the paper's §II view of a conv as a lowered
+//! R×N weight matrix streaming W² input vectors) — a **fused** conv
+//! scatters the max-pooled grid directly, so the full-resolution CHW
+//! intermediate never exists — standalone `Pool` nodes max-pool CHW
+//! grids, and `Add` nodes merge residual branches elementwise (ReLU after
+//! the merge, the He et al. ordering).
+//!
+//! The **unoptimized** graph stays alive as the adversarial comparator:
+//! [`SimBackend::eval_reference`] executes it straight-line with fresh
+//! buffers and the naive kernel, untouched by passes *by construction*,
+//! and every pass-enabled eval is gated bitwise against it (tests, bench,
+//! CI).
 //!
 //! # The steady-state hot path
 //!
@@ -31,6 +41,11 @@
 //!
 //! - one persistent [`WorkerPool`] is created per backend and reused by
 //!   every matmul of every eval;
+//! - conv nodes are **patch-streaming**: im2col rows are packed
+//!   `TILE_ROWS` at a time into tile-height strip panels
+//!   (`gemm::conv_rows_streamed`), so the `chunk × patch_len` patch
+//!   matrix the pre-PR 5 path materialized is never built — steady-state
+//!   conv scratch is a few tile panels plus the product rows;
 //! - activations live in an **arena** whose slots the graph's buffer-
 //!   liveness pass assigned: a sequential chain ping-pongs between two
 //!   slots, a skip-connection tensor holds its own slot across the block,
@@ -46,10 +61,12 @@
 //! scratch never leaves the backend.
 //!
 //! [`SimBackend::eval_reference`] is the straight-line comparator: the
-//! same schedule executed with fresh allocations per node and the naive
-//! reference kernel. Both paths produce bit-for-bit identical logits
-//! (all kernels share one reduction order — see `runtime::gemm`); the
-//! bench and CI smoke job gate on it, residual adds included.
+//! **unoptimized** schedule executed with fresh allocations per node,
+//! fully materialized im2col and the naive reference kernel. Both paths
+//! produce bit-for-bit identical logits (all kernels share one reduction
+//! order — see `runtime::gemm` — and every pass is semantics-preserving);
+//! the bench and CI smoke job gate on it, residual adds and fused convs
+//! included.
 //!
 //! Weights are synthetic (seeded He-scaled Gaussians), so logits carry no
 //! trained meaning; what the backend faithfully reproduces is everything
@@ -57,21 +74,45 @@
 //! plumbing, determinism, and failure modes.
 
 use crate::nets::Network;
-use crate::runtime::gemm::{self, ConvGeom, PackedMat, SendPtr};
+use crate::runtime::gemm::{self, ConvGeom, PackedMat, SendPtr, TILE_ROWS};
 use crate::runtime::graph::{self, Graph, Op};
+use crate::runtime::passes::{self, PassConfig, PassReport};
 use crate::runtime::pool::{self, WorkerPool};
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
 
-/// Output positions lowered per im2col + matmul call: bounds the patch
-/// scratch buffer to ~`CONV_CHUNK · patch_len` floats regardless of the
-/// input resolution (a full 224×224 im2col would be hundreds of MB).
+/// Output positions lowered per conv matmul call: bounds the product
+/// scratch to `CONV_CHUNK · out_c` floats per part and sets the
+/// granularity of the per-chunk thread fan-out. (The im2col scratch is no
+/// longer chunk-bound — patches stream through `TILE_ROWS`-high strip
+/// panels, see `gemm::conv_rows_streamed`.)
 const CONV_CHUNK: usize = 128;
 
-/// Below this many flops (2·b·W²·R·N) a conv layer's sample loop runs
-/// inline; above it, samples fan out across the pool (one arena slot per
-/// part, inner matmuls inline — the pool does not nest).
-const CONV_MT_MIN_FLOPS: usize = 1 << 21;
+/// Default of [`SimOptions::conv_fanout_min_flops`]: below this many
+/// flops (2·b·W²·R·N) a conv layer's sample loop runs inline; above it,
+/// samples fan out across the pool (one scratch slot per part, inner
+/// matmuls inline — the pool does not nest). Tunable per backend so the
+/// calibration sweep ROADMAP plans can drive it from `serve
+/// --conv-fanout-min-flops` once a calibrated CI baseline exists.
+pub const CONV_MT_MIN_FLOPS: usize = 1 << 21;
+
+/// Construction-time knobs of [`SimBackend::from_network_cfg`].
+/// `Default` is the production configuration: machine-parallel pool,
+/// full pass pipeline, stock conv fan-out threshold.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimOptions {
+    /// Kernel worker-thread count (`None`: machine parallelism with the
+    /// `LRMP_SIM_THREADS` override, clamped to `pool::MAX_THREADS`).
+    pub threads: Option<usize>,
+    /// Which `runtime::passes` rewrites run between lowering and
+    /// compilation. `PassConfig::none()` executes the lowering verbatim
+    /// (the comparator configuration the equivalence tests use).
+    pub passes: PassConfig,
+    /// Override of [`CONV_MT_MIN_FLOPS`], the flop count past which a
+    /// conv's sample loop fans out across the pool. `Some(0)` fans out
+    /// whenever the batch allows.
+    pub conv_fanout_min_flops: Option<usize>,
+}
 
 /// One layer's packed-weight cache entry (see `ensure_packed`).
 struct PackedLayer {
@@ -84,10 +125,13 @@ struct PackedLayer {
     mat: Option<PackedMat>,
 }
 
-/// Conv-lowering scratch: `parts` slots of im2col patches and matmul
-/// product buffers, sized once at construction.
+/// Conv-lowering scratch, sized once at construction: `strips` holds one
+/// `TILE_ROWS × patch_len` im2col strip panel per pool thread (the
+/// patch-streaming pack — the full `chunk × patch_len` patch matrix of
+/// the pre-PR 5 path is never materialized), `prod` one
+/// `CONV_CHUNK × out_c` product buffer per sample part.
 struct ConvScratch {
-    patches: Vec<f32>,
+    strips: Vec<f32>,
     prod: Vec<f32>,
 }
 
@@ -103,25 +147,42 @@ enum BufRef {
 /// Compiled-schedule summary (`inspect`/`serve` print it).
 #[derive(Clone, Copy, Debug)]
 pub struct ScheduleSummary {
-    /// Total IR nodes (incl. `Input`/`Output`).
+    /// Total IR nodes after the pass pipeline (incl. `Input`/`Output`).
     pub nodes: usize,
     /// Weight-bearing nodes (`MatMul` + `Conv`).
     pub weight_nodes: usize,
     /// Residual merges (`Add` nodes).
     pub residual_adds: usize,
-    /// Max-pool nodes.
+    /// Standalone max-pool nodes surviving the pass pipeline.
     pub pool_nodes: usize,
+    /// Fused Conv+Pool nodes the pass pipeline produced.
+    pub fused_convs: usize,
     /// Arena slots the liveness pass allocated.
     pub slots: usize,
     /// Bytes of activation arena + staging + conv scratch at this
     /// backend's batch size.
     pub arena_bytes: usize,
+    /// IR nodes before the pass pipeline ran (the raw lowering).
+    pub nodes_pre_pass: usize,
+    /// Slot-arena bytes the pass pipeline saved at this batch size
+    /// (unfused minus optimized per-sample slot floats × batch × 4).
+    pub arena_bytes_saved: usize,
+    /// Total rewrites the pass pipeline applied.
+    pub pass_rewrites: usize,
 }
 
 /// Pure-rust quantized-forward backend (see module docs).
 pub struct SimBackend {
     name: String,
+    /// The pass-optimized graph `eval` executes.
     graph: Graph,
+    /// The raw, unoptimized lowering — `eval_reference`'s schedule. Kept
+    /// separate so no pass can ever touch the comparator by construction.
+    ref_graph: Graph,
+    /// What the pass pipeline did at construction time.
+    pass_report: PassReport,
+    /// Conv sample-loop fan-out threshold (see [`CONV_MT_MIN_FLOPS`]).
+    conv_fanout_min_flops: usize,
     /// Per network layer: lowered (rows, cols) of the weight matrix.
     dims: Vec<(usize, usize)>,
     /// Row-major lowered [rows][cols] synthetic f32 master weights, one
@@ -155,31 +216,55 @@ impl SimBackend {
     /// Build from a network geometry. Any network accepted by
     /// [`SimBackend::supports`] works — fully-connected chains,
     /// sequential conv topologies (MLPs, VGG-style nets) and residual
-    /// nets (ResNets).
+    /// nets (ResNets). The full pass pipeline runs (see [`SimOptions`]).
     pub fn from_network(net: &Network, eval_batch: usize, seed: u64) -> Result<SimBackend, String> {
-        SimBackend::from_network_opts(net, eval_batch, seed, None)
+        SimBackend::from_network_cfg(net, eval_batch, seed, SimOptions::default())
     }
 
     /// [`SimBackend::from_network`] with an explicit kernel worker-thread
     /// count (`None`: machine parallelism with the `LRMP_SIM_THREADS`
-    /// override, clamped to `pool::MAX_THREADS`). The persistent worker
-    /// pool and every arena buffer are created here, once; steady-state
-    /// eval calls allocate nothing.
+    /// override, clamped to `pool::MAX_THREADS`).
     pub fn from_network_opts(
         net: &Network,
         eval_batch: usize,
         seed: u64,
         threads: Option<usize>,
     ) -> Result<SimBackend, String> {
+        SimBackend::from_network_cfg(
+            net,
+            eval_batch,
+            seed,
+            SimOptions {
+                threads,
+                ..SimOptions::default()
+            },
+        )
+    }
+
+    /// The full-knob constructor ([`SimOptions`]: worker threads, pass
+    /// pipeline configuration, conv fan-out threshold). The persistent
+    /// worker pool and every arena buffer are created here, once;
+    /// steady-state eval calls allocate nothing.
+    pub fn from_network_cfg(
+        net: &Network,
+        eval_batch: usize,
+        seed: u64,
+        opts: SimOptions,
+    ) -> Result<SimBackend, String> {
         if eval_batch == 0 {
             return Err("eval_batch must be >= 1".into());
         }
-        let threads = match threads {
+        let threads = match opts.threads {
             Some(0) => return Err("worker threads must be >= 1".into()),
             Some(t) => t.min(pool::MAX_THREADS),
             None => pool::default_threads(),
         };
-        let graph = graph::lower(net).map_err(|e| e.to_string())?;
+        let mut nodes = graph::lower_nodes(net).map_err(|e| e.to_string())?;
+        // The unoptimized lowering is the eval_reference comparator; the
+        // pass pipeline rewrites a copy, never this graph.
+        let ref_graph = Graph::compile(nodes.clone()).map_err(|e| e.to_string())?;
+        let pass_report = passes::run(&mut nodes, &opts.passes);
+        let graph = Graph::compile(nodes).map_err(|e| e.to_string())?;
         let dims: Vec<(usize, usize)> = net
             .layers
             .iter()
@@ -214,11 +299,11 @@ impl SimBackend {
             .max()
             .unwrap_or(0);
         let parts_max = threads.min(b).max(1);
-        let (mut patches_max, mut prod_max) = (0usize, 0usize);
+        let (mut strip_max, mut prod_max) = (0usize, 0usize);
         for &id in graph.schedule() {
             if let Op::Conv { geom, .. } = graph.node(id).op {
                 let chunk = CONV_CHUNK.min(geom.num_positions());
-                patches_max = patches_max.max(chunk * geom.patch_len());
+                strip_max = strip_max.max(TILE_ROWS * geom.patch_len());
                 prod_max = prod_max.max(chunk * geom.out_c);
             }
         }
@@ -233,13 +318,20 @@ impl SimBackend {
         Ok(SimBackend {
             name: net.name.clone(),
             graph,
+            ref_graph,
+            pass_report,
+            conv_fanout_min_flops: opts.conv_fanout_min_flops.unwrap_or(CONV_MT_MIN_FLOPS),
             dims,
             weights,
             packed,
             slots,
             staged: Vec::with_capacity(b * staged_max),
             conv: ConvScratch {
-                patches: Vec::with_capacity(parts_max * patches_max),
+                // The narrow-batch path fans a chunk's *rows* across the
+                // pool (one strip panel per pool thread); the wide-batch
+                // path fans *samples* (one strip panel + one prod chunk
+                // per sample part) — `threads` panels cover both.
+                strips: Vec::with_capacity(threads * strip_max),
                 prod: Vec::with_capacity(parts_max * prod_max),
             },
             pool: WorkerPool::new(threads),
@@ -259,9 +351,20 @@ impl SimBackend {
         self.pool.threads()
     }
 
-    /// The compiled graph this backend executes.
+    /// The pass-optimized compiled graph this backend executes.
     pub fn graph(&self) -> &Graph {
         &self.graph
+    }
+
+    /// The raw unoptimized lowering — the schedule
+    /// [`SimBackend::eval_reference`] executes. Passes never touch it.
+    pub fn ref_graph(&self) -> &Graph {
+        &self.ref_graph
+    }
+
+    /// What the pass pipeline did at construction time.
+    pub fn pass_report(&self) -> &PassReport {
+        &self.pass_report
     }
 
     /// Times each layer's packed weights have been built — the probe the
@@ -278,17 +381,27 @@ impl SimBackend {
     /// its figure covers the slot arena only.
     pub fn schedule_summary(&self) -> ScheduleSummary {
         let g = &self.graph;
+        let b = self.eval_batch;
         let arena_floats: usize = self.slots.iter().map(|s| s.capacity()).sum::<usize>()
             + self.staged.capacity()
-            + self.conv.patches.capacity()
+            + self.conv.strips.capacity()
             + self.conv.prod.capacity();
+        let saved_floats = self
+            .ref_graph
+            .arena_floats_per_sample()
+            .saturating_sub(g.arena_floats_per_sample())
+            * b;
         ScheduleSummary {
             nodes: g.num_nodes(),
             weight_nodes: g.weight_nodes(),
             residual_adds: g.residual_adds(),
             pool_nodes: g.pool_nodes(),
+            fused_convs: g.fused_convs(),
             slots: g.num_slots(),
             arena_bytes: arena_floats * std::mem::size_of::<f32>(),
+            nodes_pre_pass: self.pass_report.nodes_before,
+            arena_bytes_saved: saved_floats * std::mem::size_of::<f32>(),
+            pass_rewrites: self.pass_report.rewrites(),
         }
     }
 
@@ -309,17 +422,21 @@ impl SimBackend {
         }
     }
 
-    /// The straight-line reference executor: the same schedule, executed
-    /// with fresh buffers per node and the naive reference kernel — no
-    /// pool, no arena, no packed cache. Bit-for-bit identical to
-    /// [`InferenceBackend::eval`] (all kernels share one reduction
-    /// order); the bench and the property tests gate on it.
+    /// The straight-line reference executor over the **unoptimized**
+    /// graph: fresh buffers per node, the naive reference kernel, full
+    /// materialized im2col — no pool, no arena, no packed cache, and no
+    /// pass pipeline by construction (`ref_graph` is compiled from the
+    /// raw lowering before passes run), so every graph rewrite is
+    /// adversarially checked against it. Bit-for-bit identical to
+    /// [`InferenceBackend::eval`] (all kernels share one reduction order
+    /// and every pass is semantics-preserving); the bench and the
+    /// property tests gate on it.
     pub fn eval_reference(&self, x: &[f32], w_bits: &[f32], a_bits: &[f32]) -> Vec<f32> {
         let b = self.eval_batch;
         assert_eq!(x.len(), b * self.input_dim, "reference eval batch shape");
         assert_eq!(w_bits.len(), self.dims.len(), "w_bits length");
         assert_eq!(a_bits.len(), self.dims.len(), "a_bits length");
-        let g = &self.graph;
+        let g = &self.ref_graph;
         let mut values: Vec<Vec<f32>> = vec![Vec::new(); g.num_nodes()];
         for &id in g.schedule() {
             let node = g.node(id);
@@ -333,7 +450,8 @@ impl SimBackend {
                     gemm::matmul_naive(&src, &qw, b, in_f, out_f, &mut out);
                     out
                 }
-                Op::Conv { layer, geom } => {
+                Op::Conv { layer, geom, pool } => {
+                    debug_assert!(pool.is_none(), "passes never touch the reference graph");
                     let mut src = values[node.inputs[0].0].clone();
                     quantize_activations(&mut src, a_bits[layer] as u32);
                     let qw = quantize_symmetric(&self.weights[layer], w_bits[layer] as u32);
@@ -417,12 +535,27 @@ fn src_dst<'a>(
     }
 }
 
-/// One conv node over the batch through the pooled hot path: every
-/// buffer comes from the backend's scratch. Wide batches fan the samples
-/// across the pool (one scratch slot per part, inner matmuls inline);
-/// narrow ones run the sample loop inline and let the per-chunk matmul
-/// split across the pool instead. Writes the full CHW grid (pooling is a
-/// separate graph node).
+/// Per-sample output feature count of a conv node: the full CHW grid, or
+/// the pooled grid when the node carries a fused pool factor.
+fn conv_out_features(g: &ConvGeom, pool_factor: Option<usize>) -> usize {
+    match pool_factor {
+        None => g.out_c * g.num_positions(),
+        Some(f) => {
+            let s = g.out_hw / f;
+            g.out_c * s * s
+        }
+    }
+}
+
+/// One conv node over the batch through the patch-streaming hot path:
+/// every buffer comes from the backend's scratch and im2col rows stream
+/// through tile-height strip panels (`gemm::conv_rows_streamed`) — the
+/// patch matrix is never materialized. Wide batches fan the samples
+/// across the pool (one strip panel + one product chunk per part, inner
+/// matmuls inline — the pool does not nest); narrow ones run the sample
+/// loop inline and let the per-chunk matmul rows split across the pool
+/// instead. A fused node (`pool_factor: Some(f)`) scatters the max-pooled
+/// grid directly; otherwise the full CHW grid is written.
 #[allow(clippy::too_many_arguments)]
 fn conv_forward(
     h: &[f32],
@@ -430,6 +563,8 @@ fn conv_forward(
     g: &ConvGeom,
     w: &PackedMat,
     relu: bool,
+    pool_factor: Option<usize>,
+    fanout_min_flops: usize,
     pool: &WorkerPool,
     scr: &mut ConvScratch,
     out: &mut [f32],
@@ -437,45 +572,47 @@ fn conv_forward(
     let in_feat = g.in_features();
     let npos = g.num_positions();
     let pl = g.patch_len();
-    let out_feat = g.out_c * npos;
+    let out_feat = conv_out_features(g, pool_factor);
     debug_assert_eq!(h.len(), b * in_feat);
     debug_assert_eq!(out.len(), b * out_feat);
     let chunk = CONV_CHUNK.min(npos);
-    let (ppl, prl) = (chunk * pl, chunk * g.out_c);
+    let (spl, prl) = (TILE_ROWS * pl, chunk * g.out_c);
     let flops = 2usize
         .saturating_mul(b)
         .saturating_mul(npos)
         .saturating_mul(pl)
         .saturating_mul(g.out_c);
-    let parts = if b > 1 && flops >= CONV_MT_MIN_FLOPS {
+    let parts = if b > 1 && flops >= fanout_min_flops {
         pool.threads().min(b)
     } else {
         1
     };
     // Within preallocated capacity (sized at construction): no alloc.
-    scr.patches.resize(parts * ppl, 0.0);
+    scr.strips.resize(pool.threads() * spl, 0.0);
     scr.prod.resize(parts * prl, 0.0);
     if parts == 1 {
-        let patches = &mut scr.patches[..ppl];
+        // Narrow batch: samples run inline, each chunk's matmul *rows*
+        // fan across the pool (one strip panel per pool thread).
+        let strips = scr.strips.as_mut_slice();
         let prod = &mut scr.prod[..prl];
         for s in 0..b {
             let xs = &h[s * in_feat..(s + 1) * in_feat];
             let dst = &mut out[s * out_feat..(s + 1) * out_feat];
-            conv_one_sample(xs, g, w, relu, pool, true, patches, prod, dst);
+            conv_one_sample(xs, g, w, relu, pool_factor, pool, true, strips, prod, dst);
         }
         return;
     }
     let per = (b + parts - 1) / parts;
     let nparts = (b + per - 1) / per;
-    let pptr = SendPtr(scr.patches.as_mut_ptr());
+    let sptr = SendPtr(scr.strips.as_mut_ptr());
     let rptr = SendPtr(scr.prod.as_mut_ptr());
     let optr = SendPtr(out.as_mut_ptr());
     pool.run(nparts, |p| {
-        // SAFETY: part `p` exclusively owns scratch slot `p` and the
-        // output rows of samples [s0, s1) — parts tile both without
-        // overlap, and all three buffers outlive `pool.run`, which blocks
-        // until every part has finished.
-        let patches = unsafe { std::slice::from_raw_parts_mut(pptr.0.add(p * ppl), ppl) };
+        // SAFETY: part `p` exclusively owns strip panel `p`, product
+        // chunk `p` and the output rows of samples [s0, s1) — parts tile
+        // all three without overlap, and every buffer outlives
+        // `pool.run`, which blocks until every part has finished.
+        let strip = unsafe { std::slice::from_raw_parts_mut(sptr.0.add(p * spl), spl) };
         let prod = unsafe { std::slice::from_raw_parts_mut(rptr.0.add(p * prl), prl) };
         let s0 = p * per;
         let s1 = (s0 + per).min(b);
@@ -483,57 +620,88 @@ fn conv_forward(
             let xs = &h[s * in_feat..(s + 1) * in_feat];
             let dst =
                 unsafe { std::slice::from_raw_parts_mut(optr.0.add(s * out_feat), out_feat) };
-            conv_one_sample(xs, g, w, relu, pool, false, patches, prod, dst);
+            conv_one_sample(xs, g, w, relu, pool_factor, pool, false, strip, prod, dst);
         }
     });
 }
 
-/// Lower one CHW sample: chunked im2col + tiled matmul scattered straight
-/// into the CHW destination, then optional ReLU. `split` lets the
-/// per-chunk matmul fan out across the pool (must be `false` when the
-/// caller is itself a pool part — the pool does not nest).
+/// Lower one CHW sample: patch-streaming matmul over position chunks,
+/// scattered straight into the (optionally pooled) CHW destination.
+/// `split` lets the per-chunk matmul rows fan out across the pool (must
+/// be `false` when the caller is itself a pool part — the pool does not
+/// nest; `strips` then holds a single tile panel).
 #[allow(clippy::too_many_arguments)]
 fn conv_one_sample(
     xs: &[f32],
     g: &ConvGeom,
     w: &PackedMat,
     relu: bool,
+    pool_factor: Option<usize>,
     pool: &WorkerPool,
     split: bool,
-    patches: &mut [f32],
+    strips: &mut [f32],
     prod: &mut [f32],
     dst: &mut [f32],
 ) {
     let npos = g.num_positions();
-    let pl = g.patch_len();
     let chunk = CONV_CHUNK.min(npos);
+    if pool_factor.is_some() {
+        // Pooled cells accumulate via max over their window; seed below
+        // any finite value (same as `gemm::max_pool`).
+        dst.fill(f32::NEG_INFINITY);
+    }
     let mut pos0 = 0;
     while pos0 < npos {
         let m = chunk.min(npos - pos0);
-        gemm::im2col_chunk(xs, g, pos0, m, &mut patches[..m * pl]);
+        let pr = &mut prod[..m * g.out_c];
         if split {
-            gemm::matmul_pooled(&patches[..m * pl], w, m, pool, &mut prod[..m * g.out_c]);
+            gemm::conv_rows_streamed_auto(xs, g, pos0, m, w, pool, strips, pr);
         } else {
-            gemm::matmul_pooled_threads(
-                &patches[..m * pl],
-                w,
-                m,
-                pool,
-                1,
-                &mut prod[..m * g.out_c],
-            );
+            gemm::conv_rows_streamed(xs, g, pos0, m, w, pool, 1, strips, pr);
         }
-        // The matmul emits position-major rows (HWC); the activation
-        // layout between layers is CHW, so transpose while scattering.
-        for (p, row) in prod[..m * g.out_c].chunks_exact(g.out_c).enumerate() {
-            for (oc, &v) in row.iter().enumerate() {
-                dst[oc * npos + pos0 + p] = v;
-            }
-        }
+        scatter_rows(g, pool_factor, relu, pos0, &prod[..m * g.out_c], dst);
         pos0 += m;
     }
-    if relu {
-        relu_inplace(dst);
+}
+
+/// Scatter position-major (HWC) product rows into the CHW destination,
+/// applying the fused ReLU per value — bitwise identical to a post-pass
+/// `relu_inplace` over the full grid, since the scatter is a permutation.
+/// When `pool_factor` is set the `f × f` max pool folds into the write:
+/// positions arrive in ascending row-major order, so each pooled cell
+/// sees its window's values in exactly the `(dy, dx)` accumulation order
+/// `gemm::max_pool` reduces in — the fused result equals the unfused
+/// conv-then-pool chain bit for bit.
+fn scatter_rows(
+    g: &ConvGeom,
+    pool_factor: Option<usize>,
+    relu: bool,
+    pos0: usize,
+    prod: &[f32],
+    dst: &mut [f32],
+) {
+    let npos = g.num_positions();
+    match pool_factor {
+        None => {
+            for (p, row) in prod.chunks_exact(g.out_c).enumerate() {
+                for (oc, &v) in row.iter().enumerate() {
+                    dst[oc * npos + pos0 + p] = if relu { v.max(0.0) } else { v };
+                }
+            }
+        }
+        Some(f) => {
+            let s = g.out_hw / f;
+            for (p, row) in prod.chunks_exact(g.out_c).enumerate() {
+                let pos = pos0 + p;
+                let (oy, ox) = (pos / g.out_hw, pos % g.out_hw);
+                let cell = (oy / f) * s + ox / f;
+                for (oc, &v) in row.iter().enumerate() {
+                    let v = if relu { v.max(0.0) } else { v };
+                    let d = &mut dst[oc * s * s + cell];
+                    *d = d.max(v);
+                }
+            }
+        }
     }
 }
 
@@ -641,6 +809,7 @@ impl crate::coordinator::InferenceBackend for SimBackend {
             );
         }
         self.ensure_packed(&w_bits);
+        let fanout_min_flops = self.conv_fanout_min_flops;
         let Self {
             graph,
             packed,
@@ -670,7 +839,11 @@ impl crate::coordinator::InferenceBackend for SimBackend {
                         relu_inplace(dst);
                     }
                 }
-                Op::Conv { layer, geom } => {
+                Op::Conv {
+                    layer,
+                    geom,
+                    pool: pool_factor,
+                } => {
                     let in_f = geom.in_features();
                     {
                         let src = match graph.slot_of(node.inputs[0]) {
@@ -681,8 +854,22 @@ impl crate::coordinator::InferenceBackend for SimBackend {
                     }
                     let w = packed[layer].mat.as_ref().expect("packed above");
                     let dst = &mut slots[graph.slot_of(id).expect("Conv has a slot")];
-                    dst.resize(b * geom.out_c * geom.num_positions(), 0.0);
-                    conv_forward(staged, b, &geom, w, node.relu, pool, conv, dst);
+                    // The compiled graph's (validated) shape rule sizes
+                    // the destination; conv_forward re-derives it only
+                    // because it cannot see the graph.
+                    dst.resize(b * graph.out_features(id), 0.0);
+                    conv_forward(
+                        staged,
+                        b,
+                        &geom,
+                        w,
+                        node.relu,
+                        pool_factor,
+                        fanout_min_flops,
+                        pool,
+                        conv,
+                        dst,
+                    );
                 }
                 Op::Pool {
                     channels,
@@ -986,5 +1173,68 @@ mod tests {
     fn wrong_batch_size_is_rejected() {
         let mut b = backend();
         assert!(b.eval(vec![0.0; 10], vec![8.0; 4], vec![8.0; 4]).is_err());
+    }
+
+    #[test]
+    fn passes_run_by_default_and_fuse_conv_tiny() {
+        let fused = SimBackend::from_network(&nets::conv_tiny(), 2, 9).unwrap();
+        let plain = SimBackend::from_network_cfg(
+            &nets::conv_tiny(),
+            2,
+            9,
+            SimOptions {
+                passes: PassConfig::none(),
+                ..SimOptions::default()
+            },
+        )
+        .unwrap();
+        let (sf, sp) = (fused.schedule_summary(), plain.schedule_summary());
+        assert_eq!(sf.fused_convs, 1, "conv-tiny's pool must fuse: {sf:?}");
+        assert_eq!(sf.pool_nodes, 0);
+        assert_eq!(sf.nodes_pre_pass, sf.nodes + 1);
+        assert_eq!(sf.pass_rewrites, 1);
+        assert!(sf.arena_bytes_saved > 0);
+        assert_eq!(sp.fused_convs, 0);
+        assert_eq!(sp.pool_nodes, 1);
+        assert_eq!(sp.pass_rewrites, 0);
+        assert!(
+            sf.arena_bytes < sp.arena_bytes,
+            "fusion must shrink the scratch footprint: {} vs {}",
+            sf.arena_bytes,
+            sp.arena_bytes
+        );
+        // The reference graph is the raw lowering in both configurations.
+        assert_eq!(fused.ref_graph().pool_nodes(), 1);
+        assert_eq!(fused.ref_graph().fused_convs(), 0);
+    }
+
+    #[test]
+    fn conv_fanout_threshold_is_tunable_and_bitwise_invariant() {
+        // Forcing the sample fan-out on a tiny conv batch (threshold 0)
+        // must not change a single logit bit vs the default threshold
+        // (which runs the same batch inline).
+        let net = nets::conv_tiny();
+        let nl = net.num_layers();
+        let mut dflt = SimBackend::from_network_opts(&net, 3, 11, Some(4)).unwrap();
+        let mut eager = SimBackend::from_network_cfg(
+            &net,
+            3,
+            11,
+            SimOptions {
+                threads: Some(4),
+                conv_fanout_min_flops: Some(0),
+                ..SimOptions::default()
+            },
+        )
+        .unwrap();
+        let x: Vec<f32> = (0..3 * 192).map(|i| ((i * 7) % 19) as f32 / 19.0 - 0.3).collect();
+        let bits = vec![6.0f32; nl];
+        let yd = dflt.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+        let ye = eager.eval(x, bits.clone(), bits).unwrap();
+        assert_eq!(
+            yd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            ye.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "conv fan-out threshold must never leak into the logits"
+        );
     }
 }

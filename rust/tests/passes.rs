@@ -1,0 +1,362 @@
+//! Pass-pipeline integration: golden legality tests for each production
+//! pass (a Pool or Conv with a second consumer must NOT fuse; a dead aux
+//! head must be eliminated), arena-reduction checks on the conv
+//! benchmarks, and a propcheck property that compiling with passes on vs
+//! off yields bitwise-identical logits across worker-thread counts
+//! 1/2/4/7 — with `eval_reference` (the unoptimized straight-line
+//! executor) as the adversarial comparator for both.
+
+use lrmp::coordinator::InferenceBackend;
+use lrmp::nets::{self, Layer, Network};
+use lrmp::runtime::graph::{self, Graph, Node, NodeId, Op};
+use lrmp::runtime::passes::{self, FuseConvPool, Pass, PassConfig};
+use lrmp::runtime::simnet::{SimBackend, SimOptions};
+use lrmp::util::propcheck;
+use lrmp::util::prng::Rng;
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn plain_opts() -> SimOptions {
+    SimOptions {
+        passes: PassConfig::none(),
+        ..SimOptions::default()
+    }
+}
+
+/// Eval `net` with passes on and off at several thread counts; every
+/// result must equal the unoptimized straight-line reference bit for
+/// bit.
+fn assert_passes_equivalent(net: &Network, b: usize, seed: u64) -> Result<(), String> {
+    let nl = net.num_layers();
+    let reference =
+        SimBackend::from_network(net, b, seed).map_err(|e| format!("{}: {e}", net.name))?;
+    let dim = reference.input_dim();
+    let x: Vec<f32> = (0..b * dim)
+        .map(|i| ((i * 17 + 3) % 59) as f32 / 59.0 - 0.2)
+        .collect();
+    let wb = vec![5.0f32; nl];
+    let ab = vec![6.0f32; nl];
+    let want = bits_of(&reference.eval_reference(&x, &wb, &ab));
+    for threads in [1usize, 2, 4, 7] {
+        for passes_on in [true, false] {
+            let opts = SimOptions {
+                threads: Some(threads),
+                passes: if passes_on {
+                    PassConfig::default()
+                } else {
+                    PassConfig::none()
+                },
+                ..SimOptions::default()
+            };
+            let mut backend = SimBackend::from_network_cfg(net, b, seed, opts)
+                .map_err(|e| format!("{}: {e}", net.name))?;
+            let y = backend
+                .eval(x.clone(), wb.clone(), ab.clone())
+                .map_err(|e| format!("{}: eval failed: {e}", net.name))?;
+            if bits_of(&y) != want {
+                return Err(format!(
+                    "{}: passes={passes_on} diverged from the reference at threads={threads}",
+                    net.name
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// Golden: fusion happens where legal and shrinks the arena
+// ----------------------------------------------------------------------
+
+#[test]
+fn conv_tiny_fused_backend_is_bitwise_equal_and_smaller() {
+    let net = nets::conv_tiny();
+    let nl = net.num_layers();
+    let mut fused = SimBackend::from_network(&net, 2, 5).unwrap();
+    let mut plain = SimBackend::from_network_cfg(&net, 2, 5, plain_opts()).unwrap();
+    let (sf, sp) = (fused.schedule_summary(), plain.schedule_summary());
+    assert_eq!(sf.fused_convs, 1, "{sf:?}");
+    assert_eq!(sf.pool_nodes, 0);
+    assert_eq!(sp.fused_convs, 0);
+    assert_eq!(sp.pool_nodes, 1);
+    assert!(
+        sf.arena_bytes < sp.arena_bytes,
+        "fusion must reduce arena_bytes: {} vs {}",
+        sf.arena_bytes,
+        sp.arena_bytes
+    );
+    assert!(sf.arena_bytes_saved > 0);
+    let x: Vec<f32> = (0..2 * 192).map(|i| ((i * 11) % 37) as f32 / 37.0 - 0.4).collect();
+    let bits = vec![6.0f32; nl];
+    let yf = fused.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+    let yp = plain.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+    let yr = fused.eval_reference(&x, &bits, &bits);
+    assert_eq!(bits_of(&yf), bits_of(&yp), "fused vs passes-off logits");
+    assert_eq!(bits_of(&yf), bits_of(&yr), "fused vs reference logits");
+}
+
+#[test]
+fn vgg16_fusion_reduces_arena_bytes_at_the_graph_level() {
+    // Graph-level (building a vgg16 backend would allocate 138M synthetic
+    // weights): the acceptance metric is the per-sample slot-arena floats
+    // the liveness pass assigns, which schedule_summary's arena_bytes is
+    // built from.
+    let net = nets::vgg16();
+    let unfused = graph::lower(&net).unwrap();
+    let mut nodes = graph::lower_nodes(&net).unwrap();
+    let report = passes::run(&mut nodes, &PassConfig::default());
+    let fused = Graph::compile(nodes).unwrap();
+    assert_eq!(report.rewrites_of("fuse-conv-pool"), 5);
+    assert_eq!(fused.fused_convs(), 5);
+    assert_eq!(fused.pool_nodes(), 0);
+    assert!(
+        fused.arena_floats_per_sample() * 4 <= unfused.arena_floats_per_sample() * 3,
+        "vgg16 fusion must cut the slot arena by >= 25%: {} -> {}",
+        unfused.arena_floats_per_sample(),
+        fused.arena_floats_per_sample()
+    );
+}
+
+// ----------------------------------------------------------------------
+// Golden: fusion legality — second consumers veto the fuse
+// ----------------------------------------------------------------------
+
+/// input(3ch 4x4, 48 features) -> conv(3->4, k3 s1 p1) -> pool(2x).
+/// Returns the node list plus the conv and pool ids so callers can
+/// attach consumers.
+fn conv_pool_prefix() -> (Vec<Node>, NodeId, NodeId) {
+    let nodes = vec![
+        Node::new(Op::Input { features: 48 }, vec![], false),
+        Node::new(
+            Op::Conv {
+                layer: 0,
+                geom: lrmp::runtime::gemm::ConvGeom {
+                    in_c: 3,
+                    out_c: 4,
+                    kernel: 3,
+                    stride: 1,
+                    padding: 1,
+                    in_hw: 4,
+                    out_hw: 4,
+                },
+                pool: None,
+            },
+            vec![NodeId(0)],
+            true,
+        ),
+        Node::new(
+            Op::Pool {
+                channels: 4,
+                hw: 4,
+                factor: 2,
+            },
+            vec![NodeId(1)],
+            false,
+        ),
+    ];
+    (nodes, NodeId(1), NodeId(2))
+}
+
+fn matmul(layer: usize, in_f: usize, out_f: usize, from: NodeId) -> Node {
+    Node::new(Op::MatMul { layer, in_f, out_f }, vec![from], false)
+}
+
+#[test]
+fn pool_with_a_second_consumer_must_not_fuse() {
+    // The pool feeds TWO MatMul heads whose sum feeds Output: legal
+    // graph, but the conservative fusion rule must leave it alone.
+    let (mut nodes, _conv, pool) = conv_pool_prefix();
+    nodes.push(matmul(1, 16, 4, pool)); // #3
+    nodes.push(matmul(2, 16, 4, pool)); // #4
+    nodes.push(Node::new(Op::Add, vec![NodeId(3), NodeId(4)], false)); // #5
+    nodes.push(Node::new(Op::Output, vec![NodeId(5)], false)); // #6
+    let before = nodes.len();
+    let fused = FuseConvPool.run(&mut nodes);
+    assert_eq!(fused, 0, "a Pool with a second consumer must NOT fuse");
+    assert_eq!(nodes.len(), before);
+    let g = Graph::compile(nodes).unwrap();
+    assert_eq!(g.pool_nodes(), 1);
+    assert_eq!(g.fused_convs(), 0);
+}
+
+#[test]
+fn conv_with_a_second_consumer_must_not_fuse() {
+    // The conv's full-resolution grid is read by the pool AND flattened
+    // by a second head: fusing would destroy the second reader's input.
+    let (mut nodes, conv, pool) = conv_pool_prefix();
+    nodes.push(matmul(1, 16, 4, pool)); // #3: pooled head
+    nodes.push(matmul(2, 64, 4, conv)); // #4: full-grid head
+    nodes.push(Node::new(Op::Add, vec![NodeId(3), NodeId(4)], false)); // #5
+    nodes.push(Node::new(Op::Output, vec![NodeId(5)], false)); // #6
+    let fused = FuseConvPool.run(&mut nodes);
+    assert_eq!(fused, 0, "a Conv with a second consumer must NOT fuse");
+    let g = Graph::compile(nodes).unwrap();
+    assert_eq!(g.pool_nodes(), 1);
+    assert_eq!(g.fused_convs(), 0);
+}
+
+#[test]
+fn single_consumer_chain_fuses_and_compiles_to_the_pooled_shape() {
+    let (mut nodes, _conv, pool) = conv_pool_prefix();
+    nodes.push(matmul(1, 16, 4, pool)); // #3
+    nodes.push(Node::new(Op::Output, vec![NodeId(3)], false)); // #4
+    let fused = FuseConvPool.run(&mut nodes);
+    assert_eq!(fused, 1);
+    let g = Graph::compile(nodes).unwrap();
+    assert_eq!(g.pool_nodes(), 0);
+    assert_eq!(g.fused_convs(), 1);
+    // The fused conv's output is the pooled 4ch 2x2 grid.
+    let conv_id = (0..g.num_nodes())
+        .map(NodeId)
+        .find(|&id| matches!(g.node(id).op, Op::Conv { .. }))
+        .unwrap();
+    assert_eq!(g.out_features(conv_id), 4 * 2 * 2);
+}
+
+// ----------------------------------------------------------------------
+// Golden: dead-node elimination
+// ----------------------------------------------------------------------
+
+#[test]
+fn dead_aux_head_is_eliminated() {
+    // input -> m0 -> m1 -> Output, plus an aux head m2 reading m0 that
+    // nothing consumes: the pass must remove exactly the aux head.
+    let nodes = vec![
+        Node::new(Op::Input { features: 8 }, vec![], false),
+        matmul(0, 8, 8, NodeId(0)),
+        matmul(1, 8, 4, NodeId(1)),
+        matmul(2, 8, 3, NodeId(1)), // dead aux head off m0
+        Node::new(Op::Output, vec![NodeId(2)], false),
+    ];
+    let mut optimized = nodes.clone();
+    let report = passes::run(&mut optimized, &PassConfig::default());
+    assert_eq!(report.rewrites_of("dead-node-elim"), 1);
+    assert_eq!(report.nodes_before, 5);
+    assert_eq!(report.nodes_after, 4);
+    let g = Graph::compile(optimized).unwrap();
+    assert_eq!(g.weight_nodes(), 2, "only the live chain survives");
+    assert_eq!(g.out_features(g.output()), 4);
+    // The unoptimized list still compiles too (the aux head is legal,
+    // just wasted work) — and costs an extra arena slot.
+    let g0 = Graph::compile(nodes).unwrap();
+    assert_eq!(g0.weight_nodes(), 3);
+    assert!(g.arena_floats_per_sample() <= g0.arena_floats_per_sample());
+}
+
+#[test]
+fn dead_second_consumer_unblocks_fusion() {
+    // The pool's second consumer is a dead head: dead-node elimination
+    // runs first, so the full pipeline still fuses the conv+pool chain.
+    let (mut nodes, _conv, pool) = conv_pool_prefix();
+    nodes.push(matmul(1, 16, 4, pool)); // #3: live head
+    nodes.push(matmul(2, 16, 4, pool)); // #4: dead head (no consumers)
+    nodes.push(Node::new(Op::Output, vec![NodeId(3)], false)); // #5
+    let report = passes::run(&mut nodes, &PassConfig::default());
+    assert_eq!(report.rewrites_of("dead-node-elim"), 1);
+    assert_eq!(report.rewrites_of("fuse-conv-pool"), 1);
+    let g = Graph::compile(nodes).unwrap();
+    assert_eq!(g.pool_nodes(), 0);
+    assert_eq!(g.fused_convs(), 1);
+}
+
+// ----------------------------------------------------------------------
+// Property: passes on vs off, bitwise, across thread counts
+// ----------------------------------------------------------------------
+
+/// Random sim-supported nets biased toward pool-bearing conv chains
+/// (the fusion pass's habitat), plus MLPs (pipeline no-op) and residual
+/// stacks (whose trailing global pool follows an Add and must not fuse).
+fn random_net(rng: &mut Rng) -> Network {
+    match rng.below(4) {
+        0 => {
+            let n_layers = rng.int_range(2, 4) as usize;
+            let mut dims = Vec::with_capacity(n_layers + 1);
+            for _ in 0..=n_layers {
+                dims.push(rng.int_range(3, 14) as u64);
+            }
+            let layers = dims
+                .windows(2)
+                .enumerate()
+                .map(|(i, w)| Layer::linear(&format!("fc{}", i + 1), w[0], w[1]))
+                .collect();
+            Network {
+                name: "prop-mlp".into(),
+                layers,
+            }
+        }
+        1 => {
+            // conv -> (pool) -> conv -> (pool) -> fc: the mid pool fuses
+            // into conv1, the tail pool into conv2 when present.
+            let hw = 2 * rng.int_range(2, 4) as u64; // 4..=8, even
+            let c1 = rng.int_range(2, 5) as u64;
+            let c2 = rng.int_range(2, 5) as u64;
+            let mid_pool = rng.below(2) == 0;
+            let hw2 = if mid_pool { hw / 2 } else { hw };
+            let tail = if hw2 % 2 == 0 && rng.below(2) == 0 {
+                hw2 / 2
+            } else {
+                hw2
+            };
+            let layers = vec![
+                Layer::conv("conv1", 3, c1, 3, 1, 1, hw),
+                Layer::conv("conv2", c1, c2, 3, 1, 1, hw2),
+                Layer::linear("fc", c2 * tail * tail, rng.int_range(2, 8) as u64),
+            ];
+            Network {
+                name: "prop-conv-pool".into(),
+                layers,
+            }
+        }
+        2 => {
+            // Conv chain with no pooling at all (fusion must be a no-op).
+            let hw = rng.int_range(4, 7) as u64;
+            let c = rng.int_range(2, 5) as u64;
+            let layers = vec![
+                Layer::conv("conv1", 3, c, 3, 1, 1, hw),
+                Layer::conv("conv2", c, c, 3, 1, 1, hw),
+                Layer::linear("fc", c * hw * hw, rng.int_range(2, 6) as u64),
+            ];
+            Network {
+                name: "prop-conv-flat".into(),
+                layers,
+            }
+        }
+        _ => {
+            // Residual stack: identity blocks + global pool + FC head.
+            let hw = 2 * rng.int_range(2, 4) as u64;
+            let c = rng.int_range(2, 5) as u64;
+            let mut layers = vec![Layer::conv("stem", 3, c, 3, 1, 1, hw)];
+            for blk in 0..rng.int_range(1, 2) {
+                layers.push(Layer::conv(&format!("layer1.{blk}.conv1"), c, c, 3, 1, 1, hw));
+                layers.push(Layer::conv(&format!("layer1.{blk}.conv2"), c, c, 3, 1, 1, hw));
+            }
+            layers.push(Layer::linear("fc", c, rng.int_range(2, 6) as u64));
+            Network {
+                name: "prop-resnet".into(),
+                layers,
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_passes_on_vs_off_logits_bitwise_across_threads() {
+    propcheck::check("passes-on-vs-off-bitwise", 12, |rng: &mut Rng| {
+        let net = random_net(rng);
+        if let Err(e) = SimBackend::supports(&net) {
+            return Err(format!("generated net must be supported: {e}"));
+        }
+        let b = rng.int_range(1, 3) as usize;
+        let seed = rng.next_u64();
+        assert_passes_equivalent(&net, b, seed)
+    });
+}
+
+#[test]
+fn benchmark_nets_pass_equivalence() {
+    for net in [nets::conv_tiny(), nets::resnet::resnet_tiny(), nets::mlp_tiny()] {
+        assert_passes_equivalent(&net, 2, 77).unwrap();
+    }
+}
