@@ -10,9 +10,12 @@
 //! adds) is covered, and `conv-tiny`, whose Conv+Pool chain the pass
 //! pipeline fuses. A counting global allocator measures allocations per
 //! eval (zero after warmup is the contract on the FC path, and the bench
-//! **fails** if an FC net allocates). Emits a machine-readable
-//! `BENCH_simnet.json` (schema v4, documented in `rust/src/api/README.md`)
-//! that the CI `bench-smoke` job uploads and gates on.
+//! **fails** if an FC net allocates). A serving section stands up the
+//! `lrmp::serve` multi-route front-end (incumbent + canary on one shared
+//! pool) and records routed per-variant latency percentiles. Emits a
+//! machine-readable `BENCH_simnet.json` (schema v5, documented in
+//! `rust/src/api/README.md`) that the CI `bench-smoke` job uploads and
+//! gates on.
 //!
 //! Plain `fn main` bench (`harness = false`):
 //!
@@ -367,7 +370,93 @@ fn main() {
         });
     }
 
-    // --- machine-readable artifact (schema v4) -------------------------
+    // --- multi-route serving front-end: routed latency smoke -----------
+    // One route, an 8-bit incumbent with a 5/6-bit canary on 25% of its
+    // traffic, both sim backends over one shared pool — the same path the
+    // CI serving-smoke step drives through the binary. The gate below
+    // requires both variants to have served their routed share with sane
+    // latency percentiles.
+    let serving_reqs: usize = if quick { 64 } else { 256 };
+    let (serving_json, serving_ok) = {
+        use lrmp::api::ServeOptions;
+        use lrmp::replication::Objective;
+        use lrmp::serve::{CanarySpec, DeploymentSource, MultiServer, RouteSpec, RoutesConfig};
+        let uniform = |w_bits: u32, a_bits: u32| DeploymentSource::Uniform {
+            net: "mlp-tiny".into(),
+            objective: Objective::Latency,
+            w_bits,
+            a_bits,
+        };
+        let cfg = RoutesConfig {
+            routes: vec![RouteSpec {
+                name: "bench".into(),
+                weight: 1.0,
+                source: uniform(8, 8),
+                max_batch: Some(8),
+                deadline_ms: Some(1),
+                eval_batch: Some(16),
+                canary: Some(CanarySpec {
+                    source: uniform(5, 6),
+                    fraction: 0.25,
+                }),
+            }],
+        };
+        let ms = MultiServer::start(
+            &cfg,
+            ServeOptions {
+                threads: Some(threads),
+                ..ServeOptions::default()
+            },
+        )
+        .expect("bench route config stands up");
+        let dim = ms.input_dim("bench").expect("route is registered");
+        let t0 = std::time::Instant::now();
+        for i in 0..serving_reqs {
+            let x: Vec<f32> = (0..dim)
+                .map(|j| ((i * 13 + j * 7) % 31) as f32 / 31.0)
+                .collect();
+            let y = ms.infer("bench", x).expect("routed infer");
+            std::hint::black_box(y);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let report = ms.route_report("bench").expect("route is registered");
+        let ok = report.variants.iter().all(|v| {
+            v.routed > 0 && v.metrics.requests == v.routed && v.metrics.latency_p(99.0) > 0.0
+        });
+        for v in &report.variants {
+            println!(
+                "  -> serve route bench/{}: {} routed, p50 {}, p99 {}",
+                v.label,
+                v.routed,
+                fmt_time(v.metrics.latency_p(50.0)),
+                fmt_time(v.metrics.latency_p(99.0)),
+            );
+        }
+        let variants = Json::Arr(
+            report
+                .variants
+                .iter()
+                .map(|v| {
+                    Json::obj(vec![
+                        ("label", Json::Str(v.label.clone())),
+                        ("key", Json::Str(v.key.to_string())),
+                        ("routed", Json::Num(v.routed as f64)),
+                        ("metrics", v.metrics.to_json()),
+                    ])
+                })
+                .collect(),
+        );
+        let j = Json::obj(vec![
+            ("route", Json::Str(report.name.clone())),
+            ("requests", Json::Num(serving_reqs as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("rps", Json::Num(serving_reqs as f64 / wall.max(1e-12))),
+            ("variants", variants),
+        ]);
+        (j, ok)
+    };
+
+    // --- machine-readable artifact (schema v5) -------------------------
     let gemm_json = Json::Arr(
         rows.iter()
             .map(|r| {
@@ -427,7 +516,7 @@ fn main() {
     );
     let report = Json::obj(vec![
         ("kind", Json::Str("lrmp-bench-simnet".into())),
-        ("schema_version", Json::Num(4.0)),
+        ("schema_version", Json::Num(5.0)),
         ("calibrated", Json::Bool(true)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(threads as f64)),
@@ -438,6 +527,7 @@ fn main() {
         ("conv_lowering_bit_exact", Json::Bool(conv_exact)),
         ("pooled_conv_lowering_bit_exact", Json::Bool(pooled_conv_exact)),
         ("nets", nets_json),
+        ("serving", serving_json),
     ]);
     report.to_file(std::path::Path::new(&out_path)).expect("write bench json");
     println!("\nwrote {out_path}");
@@ -497,6 +587,13 @@ fn main() {
         .all(|r| r.allocs_per_eval == 0.0);
     if !fc_allocs_ok {
         eprintln!("FAIL: an FC net's steady-state eval allocated (contract is 0 allocs/eval)");
+        std::process::exit(1);
+    }
+    if !serving_ok {
+        eprintln!(
+            "FAIL: the multi-route serving smoke left a variant without its routed \
+             traffic or without latency percentiles"
+        );
         std::process::exit(1);
     }
     if !baseline_ok {

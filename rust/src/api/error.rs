@@ -50,6 +50,15 @@ pub enum ApiError {
     Runtime(String),
     /// Cost-model re-validation of an artifact found violations.
     Validation(Vec<String>),
+    /// A serve route-config file is malformed or internally inconsistent
+    /// (duplicate names, weight/fraction out of range, unknown keys, two
+    /// distinct artifacts colliding on one registry key, …).
+    RouteConfig(String),
+    /// Request or control operation names a route the router doesn't have.
+    UnknownRoute { route: String, valid: Vec<String> },
+    /// Control operation names a variant the route doesn't carry (or one
+    /// that cannot be removed, e.g. rolling back the last variant).
+    UnknownVariant { route: String, variant: String },
 }
 
 impl fmt::Display for ApiError {
@@ -111,6 +120,15 @@ impl fmt::Display for ApiError {
             ApiError::Validation(errs) => {
                 write!(f, "deployment failed validation: {}", errs.join("; "))
             }
+            ApiError::RouteConfig(msg) => write!(f, "invalid route config: {msg}"),
+            ApiError::UnknownRoute { route, valid } => write!(
+                f,
+                "unknown route '{route}' (serving: {})",
+                valid.join(", ")
+            ),
+            ApiError::UnknownVariant { route, variant } => {
+                write!(f, "route '{route}' has no variant '{variant}'")
+            }
         }
     }
 }
@@ -146,6 +164,26 @@ mod tests {
         }
         .to_string();
         assert!(s.contains("sim") && s.contains("ResNet18") && s.contains("residual"), "{s}");
+    }
+
+    #[test]
+    fn unknown_route_lists_the_live_routes() {
+        let s = ApiError::UnknownRoute {
+            route: "mpl".into(),
+            valid: vec!["mlp".into(), "resnet".into()],
+        }
+        .to_string();
+        assert!(s.contains("'mpl'") && s.contains("mlp") && s.contains("resnet"), "{s}");
+    }
+
+    #[test]
+    fn unknown_variant_names_route_and_variant() {
+        let s = ApiError::UnknownVariant {
+            route: "imagenet".into(),
+            variant: "canary2".into(),
+        }
+        .to_string();
+        assert!(s.contains("'imagenet'") && s.contains("'canary2'"), "{s}");
     }
 
     #[test]

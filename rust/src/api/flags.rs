@@ -109,7 +109,15 @@ const SERVE_FLAGS: &[FlagDef] = &[
         "conv-fanout-min-flops",
         "conv sample fan-out threshold in flops (default 2^21)",
     ),
+    val("routes", "multi-route serving: routes config JSON (sim only)"),
+    val("metrics-out", "write the per-route metrics snapshot to this file"),
+    switch(
+        "verify",
+        "check routed logits bitwise against direct eval (--routes only)",
+    ),
 ];
+
+const ROUTES_FLAGS: &[FlagDef] = &[val("config", "routes config JSON (or positional FILE)")];
 
 const INSPECT_FLAGS: &[FlagDef] = &[val("deployment", "artifact to inspect (or positional FILE)")];
 
@@ -156,6 +164,12 @@ pub const SUBCOMMANDS: &[SubcommandSpec] = &[
         help: "closed-loop load test of the serving coordinator",
         flags: SERVE_FLAGS,
         max_positional: 0,
+    },
+    SubcommandSpec {
+        name: "routes",
+        help: "validate and print a multi-route serving config",
+        flags: ROUTES_FLAGS,
+        max_positional: 1,
     },
     SubcommandSpec {
         name: "inspect",

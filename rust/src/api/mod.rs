@@ -10,6 +10,8 @@
 //!   (`save` / `load` / `validate`) passed between phases
 //! - [`Session::simulate`] / [`Session::serve`]: downstream phases that
 //!   consume the same artifact
+//! - [`Session::serve_routes`]: the multi-deployment front-end — many
+//!   artifacts behind named weighted routes with canaries (`lrmp::serve`)
 //! - [`ApiError`]: typed errors at the public boundary
 //! - [`flags`]: the CLI flag registry shared by the `lrmp` binary
 //!

@@ -394,6 +394,17 @@ impl Session {
         }
     }
 
+    /// Serve *many* deployments at once behind named, weighted routes
+    /// (sim backends over one shared worker pool). Thin facade over
+    /// [`MultiServer::start`]; see `lrmp::serve` for the route config
+    /// schema, A/B splits, and canary promotion.
+    pub fn serve_routes(
+        cfg: &crate::serve::RoutesConfig,
+        opts: ServeOptions,
+    ) -> ApiResult<crate::serve::MultiServer> {
+        crate::serve::MultiServer::start(cfg, opts)
+    }
+
     fn serve_live(
         dep: &Deployment,
         batch_policy: BatchPolicy,

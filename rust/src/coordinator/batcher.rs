@@ -44,6 +44,15 @@ impl Batcher {
 
     /// Block for the first request, then drain until full or deadline.
     /// Returns an empty vec when the channel closed or `stop` was set.
+    ///
+    /// The deadline is **absolute**: fixed once when the first request
+    /// lands, with every subsequent `recv_timeout` armed with the
+    /// *remaining* budget (`deadline - now`), never a fresh `max_wait`.
+    /// Re-arming per recv would let a trickle arriving just under
+    /// `max_wait` apart extend the batch indefinitely — the first
+    /// requester's latency would grow without bound while the batch
+    /// "almost fills". `paced_trickle_cannot_extend_deadline` below is the
+    /// regression test for exactly that failure mode.
     pub fn collect<T>(&mut self, rx: &mpsc::Receiver<T>, stop: &AtomicBool) -> Vec<T> {
         let mut out = Vec::new();
         let flush = self.flush_size();
@@ -63,11 +72,11 @@ impl Batcher {
         }
         let deadline = Instant::now() + self.policy.max_wait;
         while out.len() < flush {
-            let now = Instant::now();
-            if now >= deadline {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(remaining) {
                 Ok(r) => out.push(r),
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -138,6 +147,54 @@ mod tests {
         let batch = b.collect(&rx, &stop);
         assert_eq!(batch, vec![42]);
         assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn paced_trickle_cannot_extend_deadline() {
+        // A producer pacing sends *faster* than max_wait would, under
+        // per-recv deadline re-arming, keep the batch open for the whole
+        // trickle (~1s here). With the absolute deadline the batch must
+        // flush ~max_wait after its first request, carrying only the few
+        // items the window admitted.
+        let (tx, rx) = mpsc::channel();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                if tx.send(i).is_err() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        });
+        let stop = AtomicBool::new(false);
+        let mut b = Batcher::new(
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(40),
+            },
+            256,
+        );
+        let batch = b.collect(&rx, &stop);
+        // collect() returns once the deadline armed by the FIRST item
+        // expires; measure from there. The producer keeps sending for
+        // ~1s total, so a re-arming bug shows up as a near-full batch.
+        let t0 = Instant::now();
+        assert!(!batch.is_empty());
+        assert!(
+            batch.len() < 50,
+            "deadline failed to bound the batch: {} items collected from a paced trickle",
+            batch.len()
+        );
+        // Subsequent collects must also turn around in ~one deadline,
+        // not ride the trickle to its end.
+        let batch2 = b.collect(&rx, &stop);
+        assert!(!batch2.is_empty());
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "second collect took {:?} — deadline re-armed per recv?",
+            t0.elapsed()
+        );
+        drop(rx);
+        producer.join().unwrap();
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Serving metrics: request latency distribution, batch fill, failures.
+//! Serving metrics: request latency distribution, batch fill, queue depth,
+//! throughput, failures — snapshot-able as JSON for the serve front-end.
 
-use std::time::Duration;
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
 
 /// Rolling serving statistics (distributions kept in bounded reservoirs).
 #[derive(Clone, Debug)]
@@ -10,10 +12,19 @@ pub struct ServeMetrics {
     pub failures: u64,
     /// Σ batch fill ratio — divide by `batches` for the mean.
     fill_sum: f64,
+    /// Σ queue depth sampled when each batch was handed to the engine —
+    /// divide by `batches` for the mean backlog.
+    depth_sum: f64,
+    /// Deepest backlog ever observed at a batch hand-off.
+    depth_max: u64,
     /// End-to-end request latencies, seconds.
     latencies: Vec<f64>,
     /// Engine execution time per batch, seconds.
     exec_times: Vec<f64>,
+    /// Completion instants of the first/latest recorded request — the
+    /// observed serving window for `throughput_rps`.
+    first_done: Option<Instant>,
+    last_done: Option<Instant>,
     cap: usize,
 }
 
@@ -24,18 +35,25 @@ impl Default for ServeMetrics {
             batches: 0,
             failures: 0,
             fill_sum: 0.0,
+            depth_sum: 0.0,
+            depth_max: 0,
             latencies: Vec::new(),
             exec_times: Vec::new(),
+            first_done: None,
+            last_done: None,
             cap: 65_536,
         }
     }
 }
 
 impl ServeMetrics {
-    /// Record one executed batch: `n` live requests in `b` slots.
-    pub fn record_batch(&mut self, n: usize, b: usize, exec: Duration) {
+    /// Record one executed batch: `n` live requests in `b` slots, with
+    /// `queue_depth` requests still waiting behind it when it shipped.
+    pub fn record_batch(&mut self, n: usize, b: usize, queue_depth: usize, exec: Duration) {
         self.batches += 1;
         self.fill_sum += n as f64 / b as f64;
+        self.depth_sum += queue_depth as f64;
+        self.depth_max = self.depth_max.max(queue_depth as u64);
         if self.exec_times.len() < self.cap {
             self.exec_times.push(exec.as_secs_f64());
         }
@@ -44,6 +62,11 @@ impl ServeMetrics {
     /// Record one completed request's end-to-end latency.
     pub fn record_request(&mut self, latency: Duration) {
         self.requests += 1;
+        let now = Instant::now();
+        if self.first_done.is_none() {
+            self.first_done = Some(now);
+        }
+        self.last_done = Some(now);
         if self.latencies.len() < self.cap {
             self.latencies.push(latency.as_secs_f64());
         }
@@ -62,14 +85,63 @@ impl ServeMetrics {
         }
     }
 
-    /// Latency percentile (p in [0,100]), seconds.
+    /// Mean queue depth behind each shipped batch (0 when nothing shipped).
+    pub fn queue_depth_mean(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.depth_sum / self.batches as f64
+        }
+    }
+
+    /// Deepest backlog observed at any batch hand-off.
+    pub fn queue_depth_max(&self) -> u64 {
+        self.depth_max
+    }
+
+    /// Latency percentile (p clamped into [0,100]), seconds. 0 samples
+    /// report 0.0; a single sample is every percentile of itself
+    /// (`util::stats::percentile` owns the edge cases).
     pub fn latency_p(&self, p: f64) -> f64 {
         crate::util::stats::percentile(&self.latencies, p)
     }
 
-    /// Mean engine execution time per batch, seconds.
+    /// Mean engine execution time per batch, seconds (0 when no batches).
     pub fn mean_exec(&self) -> f64 {
         crate::util::stats::mean(&self.exec_times)
+    }
+
+    /// Completed requests per second over the observed serving window
+    /// (first to latest completion). Fewer than 2 completions — or a
+    /// window too short for the clock to resolve — report 0.0 rather
+    /// than a garbage rate from a zero-width denominator.
+    pub fn throughput_rps(&self) -> f64 {
+        let (Some(first), Some(last)) = (self.first_done, self.last_done) else {
+            return 0.0;
+        };
+        let span = last.duration_since(first).as_secs_f64();
+        if self.requests < 2 || span <= 0.0 {
+            return 0.0;
+        }
+        (self.requests - 1) as f64 / span
+    }
+
+    /// Snapshot as a JSON object (`*_s` fields are seconds, matching the
+    /// bench report convention).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("failures", Json::Num(self.failures as f64)),
+            ("mean_fill", Json::Num(self.mean_fill())),
+            ("mean_exec_s", Json::Num(self.mean_exec())),
+            ("p50_s", Json::Num(self.latency_p(50.0))),
+            ("p95_s", Json::Num(self.latency_p(95.0))),
+            ("p99_s", Json::Num(self.latency_p(99.0))),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("queue_depth_mean", Json::Num(self.queue_depth_mean())),
+            ("queue_depth_max", Json::Num(self.depth_max as f64)),
+        ])
     }
 }
 
@@ -80,8 +152,8 @@ mod tests {
     #[test]
     fn batch_and_request_accounting() {
         let mut m = ServeMetrics::default();
-        m.record_batch(128, 256, Duration::from_millis(40));
-        m.record_batch(256, 256, Duration::from_millis(42));
+        m.record_batch(128, 256, 3, Duration::from_millis(40));
+        m.record_batch(256, 256, 7, Duration::from_millis(42));
         for _ in 0..384 {
             m.record_request(Duration::from_millis(5));
         }
@@ -92,12 +164,81 @@ mod tests {
         assert!((m.mean_fill() - 0.75).abs() < 1e-12);
         assert!((m.latency_p(50.0) - 0.005).abs() < 1e-9);
         assert!((m.mean_exec() - 0.041).abs() < 1e-9);
+        assert!((m.queue_depth_mean() - 5.0).abs() < 1e-12);
+        assert_eq!(m.queue_depth_max(), 7);
     }
 
     #[test]
     fn empty_metrics_are_zero() {
         let m = ServeMetrics::default();
         assert_eq!(m.mean_fill(), 0.0);
-        assert_eq!(m.latency_p(99.0), 0.0);
+        assert_eq!(m.mean_exec(), 0.0);
+        assert_eq!(m.queue_depth_mean(), 0.0);
+        assert_eq!(m.queue_depth_max(), 0);
+        assert_eq!(m.throughput_rps(), 0.0);
+        // 0 samples: every percentile is 0.0, no panic (satellite audit).
+        for p in [0.0, 50.0, 99.0, 100.0, 150.0] {
+            assert_eq!(m.latency_p(p), 0.0);
+        }
+    }
+
+    #[test]
+    fn single_sample_percentiles_are_the_sample() {
+        let mut m = ServeMetrics::default();
+        m.record_request(Duration::from_millis(8));
+        // p99 of one sample must be that sample, not an interpolation
+        // artifact or an out-of-bounds read.
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert!((m.latency_p(p) - 0.008).abs() < 1e-9);
+        }
+        // One completion has no observable window — throughput stays 0.
+        assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn throughput_needs_a_resolvable_window() {
+        let mut m = ServeMetrics::default();
+        m.record_request(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(5));
+        m.record_request(Duration::from_millis(1));
+        // 2 completions ≥ 5ms apart: positive, bounded rate.
+        let rps = m.throughput_rps();
+        assert!(rps > 0.0 && rps < 1000.0, "rps {rps} out of range");
+    }
+
+    #[test]
+    fn reservoirs_stay_bounded() {
+        let mut m = ServeMetrics::default();
+        for _ in 0..70_000 {
+            m.record_request(Duration::from_micros(10));
+        }
+        assert_eq!(m.requests, 70_000);
+        assert_eq!(m.latencies.len(), m.cap);
+    }
+
+    #[test]
+    fn json_snapshot_has_all_fields() {
+        let mut m = ServeMetrics::default();
+        m.record_batch(2, 4, 1, Duration::from_millis(3));
+        m.record_request(Duration::from_millis(4));
+        m.record_request(Duration::from_millis(6));
+        let j = m.to_json();
+        for key in [
+            "requests",
+            "batches",
+            "failures",
+            "mean_fill",
+            "mean_exec_s",
+            "p50_s",
+            "p95_s",
+            "p99_s",
+            "throughput_rps",
+            "queue_depth_mean",
+            "queue_depth_max",
+        ] {
+            assert!(j.get(key).as_f64().is_some(), "snapshot missing {key}");
+        }
+        assert_eq!(j.get("requests").as_u64(), Some(2));
+        assert!((j.get("mean_fill").as_f64().unwrap() - 0.5).abs() < 1e-12);
     }
 }

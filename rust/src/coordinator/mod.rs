@@ -16,7 +16,7 @@ use crate::runtime::engine::Engine;
 use anyhow::{anyhow, Result};
 use batcher::{BatchPolicy, Batcher};
 use metrics::ServeMetrics;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -85,6 +85,9 @@ pub struct Server {
     tx: mpsc::Sender<Request>,
     stop: Arc<AtomicBool>,
     worker: Option<JoinHandle<()>>,
+    /// Requests submitted but not yet collected into a batch — the live
+    /// backlog gauge sampled into `ServeMetrics` at each batch hand-off.
+    queued: Arc<AtomicUsize>,
     pub metrics: Arc<Mutex<ServeMetrics>>,
     /// The per-layer policy this server executes (exactly what the
     /// Deployment artifact specified).
@@ -118,6 +121,7 @@ impl Server {
         );
         let (tx, rx) = mpsc::channel::<Request>();
         let stop = Arc::new(AtomicBool::new(false));
+        let queued = Arc::new(AtomicUsize::new(0));
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let input_dim = backend.input_dim();
         let backend_name = backend.backend_name();
@@ -128,14 +132,16 @@ impl Server {
         );
         let stop2 = Arc::clone(&stop);
         let metrics2 = Arc::clone(&metrics);
+        let queued2 = Arc::clone(&queued);
         let worker = std::thread::Builder::new()
             .name("lrmp-server".into())
-            .spawn(move || serve_loop(backend, rx, stop2, metrics2, wb, ab, batch_policy))
+            .spawn(move || serve_loop(backend, rx, stop2, queued2, metrics2, wb, ab, batch_policy))
             .expect("spawn server");
         Server {
             tx,
             stop,
             worker: Some(worker),
+            queued,
             metrics,
             policy: policy.clone(),
             backend_name,
@@ -154,13 +160,17 @@ impl Server {
             ));
         }
         let (reply, rx) = mpsc::channel();
+        self.queued.fetch_add(1, Ordering::SeqCst);
         self.tx
             .send(Request {
                 x,
                 enqueued: Instant::now(),
                 reply,
             })
-            .map_err(|_| anyhow!("server stopped"))?;
+            .map_err(|_| {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                anyhow!("server stopped")
+            })?;
         rx.recv().map_err(|_| anyhow!("server dropped request"))?
     }
 
@@ -174,18 +184,28 @@ impl Server {
             ));
         }
         let (reply, rx) = mpsc::channel();
+        self.queued.fetch_add(1, Ordering::SeqCst);
         self.tx
             .send(Request {
                 x,
                 enqueued: Instant::now(),
                 reply,
             })
-            .map_err(|_| anyhow!("server stopped"))?;
+            .map_err(|_| {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                anyhow!("server stopped")
+            })?;
         Ok(rx)
     }
 
     pub fn snapshot_metrics(&self) -> ServeMetrics {
         self.metrics.lock().unwrap().clone()
+    }
+
+    /// Requests submitted but not yet collected into a batch (live gauge;
+    /// the per-batch samples land in `ServeMetrics::queue_depth_mean`).
+    pub fn queue_depth(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
     }
 
     /// Features per request sample.
@@ -210,6 +230,7 @@ fn serve_loop<B: InferenceBackend>(
     mut engine: B,
     rx: mpsc::Receiver<Request>,
     stop: Arc<AtomicBool>,
+    queued: Arc<AtomicUsize>,
     metrics: Arc<Mutex<ServeMetrics>>,
     wb: Vec<f32>,
     ab: Vec<f32>,
@@ -232,6 +253,9 @@ fn serve_loop<B: InferenceBackend>(
             continue;
         }
         let n = batch.len();
+        // This batch left the queue; what remains is the backlog the next
+        // batch will face — sample it into the metrics.
+        let depth = queued.fetch_sub(n, Ordering::SeqCst).saturating_sub(n);
         let mut x = vec![0f32; b * dim];
         for (i, r) in batch.iter().enumerate() {
             x[i * dim..(i + 1) * dim].copy_from_slice(&r.x);
@@ -242,7 +266,7 @@ fn serve_loop<B: InferenceBackend>(
                 let exec = t0.elapsed();
                 let now = Instant::now();
                 let mut m = metrics.lock().unwrap();
-                m.record_batch(n, b, exec);
+                m.record_batch(n, b, depth, exec);
                 for (i, r) in batch.into_iter().enumerate() {
                     let row = logits[i * classes..(i + 1) * classes].to_vec();
                     m.record_request(now.duration_since(r.enqueued));

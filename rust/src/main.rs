@@ -22,6 +22,14 @@
 //!                                  per-layer policy (the sim backend runs
 //!                                  FC, sequential conv, and residual
 //!                                  ResNet nets offline via the graph IR)
+//!   serve     --routes routes.json [--requests R] [--clients C]
+//!             [--verify] [--metrics-out metrics.json]
+//!                                  multi-deployment serving: many
+//!                                  artifacts behind named weighted routes
+//!                                  (A/B canaries, per-route batching) over
+//!                                  one shared kernel pool, with per-route
+//!                                  p50/p95/p99 + throughput
+//!   routes    routes.json          validate + print a route config
 //!   inspect   dep.json             validate + print a saved artifact
 //!
 //! The flag registry lives in `lrmp::api::flags`: unknown flags are
@@ -42,6 +50,7 @@ use lrmp::cost::CostModel;
 use lrmp::lrmp::ablation;
 use lrmp::quant::Policy;
 use lrmp::replication::Objective;
+use lrmp::serve::{DeploymentKey, MultiServer, RoutesConfig};
 use lrmp::util::prng::Rng;
 use lrmp::{nets, runtime};
 use std::path::Path;
@@ -78,6 +87,7 @@ fn run(subcommand: &str, args: &Args) -> Result<()> {
         "simulate" => cmd_simulate(args),
         "demo" => cmd_demo(),
         "serve" => cmd_serve(args),
+        "routes" => cmd_routes(args),
         "inspect" => cmd_inspect(args),
         other => unreachable!("registry admitted unknown subcommand {other}"),
     }
@@ -379,7 +389,40 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Execution knobs shared by single-deployment and multi-route serving.
+fn serve_opts_arg(args: &Args) -> Result<ServeOptions> {
+    let eval_batch = if args.flags.contains_key("eval-batch") {
+        Some(parsed(args, "eval-batch", 16usize)?)
+    } else {
+        None
+    };
+    let threads = if args.flags.contains_key("threads") {
+        Some(parsed(args, "threads", 0usize)?)
+    } else {
+        None
+    };
+    let conv_fanout_min_flops = if args.flags.contains_key("conv-fanout-min-flops") {
+        Some(parsed(args, "conv-fanout-min-flops", 0usize)?)
+    } else {
+        None
+    };
+    Ok(ServeOptions {
+        eval_batch,
+        threads,
+        conv_fanout_min_flops,
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flags.contains_key("routes") {
+        return cmd_serve_routes(args);
+    }
+    if args.bool("verify") || args.flags.contains_key("metrics-out") {
+        return Err(ApiError::InvalidConfig(
+            "--verify/--metrics-out require multi-route serving (--routes config.json)".into(),
+        )
+        .into());
+    }
     let backend = match args.str("backend", "auto").as_str() {
         "auto" => ServeBackend::Auto,
         "live" => ServeBackend::Live,
@@ -397,26 +440,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let requests = parsed(args, "requests", 1024usize)?;
     let clients = parsed(args, "clients", 4usize)?.max(1);
-    let eval_batch = if args.flags.contains_key("eval-batch") {
-        Some(parsed(args, "eval-batch", 16usize)?)
-    } else {
-        None
-    };
-    let threads = if args.flags.contains_key("threads") {
-        Some(parsed(args, "threads", 0usize)?)
-    } else {
-        None
-    };
-    let conv_fanout_min_flops = if args.flags.contains_key("conv-fanout-min-flops") {
-        Some(parsed(args, "conv-fanout-min-flops", 0usize)?)
-    } else {
-        None
-    };
-    let opts = ServeOptions {
-        eval_batch,
-        threads,
-        conv_fanout_min_flops,
-    };
+    let opts = serve_opts_arg(args)?;
     let server = Session::serve_opts(
         &dep,
         BatchPolicy {
@@ -458,7 +482,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // backend's own pass_report() here instead.
     if server.backend_name == "sim" {
         if let Some(net) = nets::by_name(&dep.net) {
-            let batch = eval_batch.unwrap_or_else(|| lrmp::api::default_sim_batch(&net));
+            let batch = opts.eval_batch.unwrap_or_else(|| lrmp::api::default_sim_batch(&net));
             if let Ok((g, pass_line)) = lower_optimized(&net, batch) {
                 println!("schedule: {}", schedule_line(&g, batch));
                 println!("passes:   {pass_line}");
@@ -498,6 +522,284 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.latency_p(95.0) * 1e3,
         m.failures
     );
+    Ok(())
+}
+
+/// Split `total` requests across routes proportionally to `weights`
+/// (largest-remainder apportionment — shares sum to exactly `total`).
+fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
+    let sum: f64 = weights.iter().sum();
+    let quotas: Vec<f64> = weights.iter().map(|w| total as f64 * w / sum).collect();
+    let mut shares: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let assigned: usize = shares.iter().sum();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.total_cmp(&fa)
+    });
+    for &i in order.iter().cycle().take(total - assigned) {
+        shares[i] += 1;
+    }
+    shares
+}
+
+/// Bitwise check of the acceptance criterion: a request routed through the
+/// full front-end (router → per-route batcher → shared-pool backend) must
+/// produce *exactly* the logits of a direct `SimBackend::eval` of the same
+/// artifact. Runs before the load phase while queues are quiet, so each
+/// probe rides alone in its batch and the batcher's zero-padding matches
+/// the padded batch handed to the direct backend.
+fn verify_routes(ms: &MultiServer, cfg: &RoutesConfig) -> Result<()> {
+    use lrmp::coordinator::InferenceBackend;
+    use lrmp::runtime::simnet::{SimBackend, SimOptions};
+    for spec in &cfg.routes {
+        let route = &spec.name;
+        let dim = ms.input_dim(route)?;
+        let eval_batch = ms.route_eval_batch(route)?;
+        let probe: Vec<f32> = (0..dim).map(|j| (j % 17) as f32 / 17.0 - 0.3).collect();
+        for report in ms.route_report(route)?.variants {
+            let label = &report.label;
+            let routed = ms.infer_on(route, label, probe.clone())?;
+            let dep = ms.variant_deployment(route, label)?;
+            let net = nets::by_name(&dep.net).expect("registry validated the net");
+            let sim_opts = SimOptions {
+                threads: Some(ms.pool_threads()),
+                ..SimOptions::default()
+            };
+            let mut direct =
+                SimBackend::from_network_cfg(&net, eval_batch, dep.provenance.seed, sim_opts)
+                    .map_err(ApiError::Runtime)?;
+            let mut x = vec![0f32; eval_batch * dim];
+            x[..dim].copy_from_slice(&probe);
+            let wb: Vec<f32> = dep.policy.layers.iter().map(|l| l.w_bits as f32).collect();
+            let ab: Vec<f32> = dep.policy.layers.iter().map(|l| l.a_bits as f32).collect();
+            let logits = direct.eval(x, wb, ab)?;
+            let expected = &logits[..routed.len()];
+            if routed != expected {
+                return Err(ApiError::Runtime(format!(
+                    "verify failed: route '{route}' variant '{label}' ({}) routed logits \
+                     diverge from direct eval (routed {routed:?} vs direct {expected:?})",
+                    DeploymentKey::of(&dep)
+                ))
+                .into());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve_routes(args: &Args) -> Result<()> {
+    for flag in [
+        "deployment",
+        "net",
+        "wbits",
+        "abits",
+        "backend",
+        "max-batch",
+        "max-wait-ms",
+    ] {
+        if args.flags.contains_key(flag) {
+            return Err(ApiError::InvalidConfig(format!(
+                "--routes and --{flag} are mutually exclusive \
+                 (the route config owns per-route deployments and batch knobs)"
+            ))
+            .into());
+        }
+    }
+    let cfg_path = args.str("routes", "");
+    let cfg = RoutesConfig::from_file(Path::new(&cfg_path))?;
+    let requests = parsed(args, "requests", 1024usize)?;
+    let clients = parsed(args, "clients", 4usize)?.max(1);
+    let opts = serve_opts_arg(args)?;
+    let ms = Session::serve_routes(&cfg, opts)?;
+    println!(
+        "serving {} route(s) [sim backends, shared pool, {} kernel thread(s)]",
+        cfg.routes.len(),
+        ms.pool_threads()
+    );
+    for report in ms.reports() {
+        let variants: Vec<String> = report
+            .variants
+            .iter()
+            .map(|v| format!("{} {} @{:.2}", v.label, v.key, v.weight))
+            .collect();
+        println!(
+            "  {} (weight {:.2}, eval batch {}): {}",
+            report.name,
+            report.weight,
+            report.eval_batch,
+            variants.join(", ")
+        );
+    }
+
+    if args.bool("verify") {
+        verify_routes(&ms, &cfg)?;
+        println!("verify: routed logits bitwise-match direct eval on every variant");
+    }
+
+    // Weighted load plan: apportion requests across routes, then
+    // interleave each client's share so every route sees traffic through
+    // the whole run (not route 0 first, the rest idle).
+    let weights: Vec<f64> = cfg.routes.iter().map(|r| r.weight).collect();
+    let shares = apportion(requests, &weights);
+    let dims: Vec<usize> = cfg
+        .routes
+        .iter()
+        .map(|r| ms.input_dim(&r.name).expect("route is live"))
+        .collect();
+    let ms = std::sync::Arc::new(ms);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let mut work: Vec<usize> = Vec::new();
+        {
+            let mut remaining: Vec<usize> = shares
+                .iter()
+                .map(|&s| s / clients + usize::from(c < s % clients))
+                .collect();
+            while remaining.iter().any(|&r| r > 0) {
+                for (i, rem) in remaining.iter_mut().enumerate() {
+                    if *rem > 0 {
+                        work.push(i);
+                        *rem -= 1;
+                    }
+                }
+            }
+        }
+        let ms = std::sync::Arc::clone(&ms);
+        let names: Vec<String> = cfg.routes.iter().map(|r| r.name.clone()).collect();
+        let dims = dims.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64 + 1);
+            for i in work {
+                let x: Vec<f32> = (0..dims[i]).map(|_| rng.f64() as f32).collect();
+                ms.infer(&names[i], x).expect("infer");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let reports = ms.reports();
+    let served: u64 = reports
+        .iter()
+        .flat_map(|r| r.variants.iter())
+        .map(|v| v.metrics.requests)
+        .sum();
+    println!("served {served} requests in {wall:.2}s ({clients} clients)");
+    let mut t = Table::new(&[
+        "route", "variant", "key", "routed", "p50 ms", "p95 ms", "p99 ms", "req/s", "fill",
+        "qdepth", "fail",
+    ]);
+    for r in &reports {
+        for v in &r.variants {
+            let m = &v.metrics;
+            t.row(&[
+                r.name.clone(),
+                v.label.clone(),
+                v.key.to_string(),
+                v.routed.to_string(),
+                format!("{:.2}", m.latency_p(50.0) * 1e3),
+                format!("{:.2}", m.latency_p(95.0) * 1e3),
+                format!("{:.2}", m.latency_p(99.0) * 1e3),
+                format!("{:.0}", m.throughput_rps()),
+                format!("{:.2}", m.mean_fill()),
+                format!("{:.1}", m.queue_depth_mean()),
+                m.failures.to_string(),
+            ]);
+        }
+    }
+    t.print();
+
+    // Per-route metrics present and non-degenerate, or a hard failure
+    // (the CI serving-smoke gate rides on this).
+    for r in &reports {
+        for v in &r.variants {
+            if v.routed > 0 && (v.metrics.requests < v.routed || v.metrics.latency_p(99.0) <= 0.0)
+            {
+                return Err(ApiError::Runtime(format!(
+                    "route '{}' variant '{}' routed {} requests but its metrics are \
+                     incomplete ({} recorded, p99 {:.6}s)",
+                    r.name,
+                    v.label,
+                    v.routed,
+                    v.metrics.requests,
+                    v.metrics.latency_p(99.0)
+                ))
+                .into());
+            }
+        }
+    }
+
+    if let Some(out) = args.flags.get("metrics-out") {
+        ms.snapshot_json().to_file(Path::new(out))?;
+        println!("metrics snapshot -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_routes(args: &Args) -> Result<()> {
+    if args.positional.first().is_some() && args.flags.contains_key("config") {
+        return Err(ApiError::InvalidConfig(
+            "give the file either positionally or via --config, not both".into(),
+        )
+        .into());
+    }
+    let file = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.flags.get("config").cloned())
+        .ok_or_else(|| {
+            ApiError::InvalidConfig("routes needs a file: `lrmp routes routes.json`".into())
+        })?;
+    let cfg = RoutesConfig::from_file(Path::new(&file))?;
+    println!("routes config {file} ({} route(s))", cfg.routes.len());
+    let mut t = Table::new(&[
+        "route", "weight", "variant", "deployment", "key", "max-batch", "deadline ms",
+        "eval-batch",
+    ]);
+    for r in &cfg.routes {
+        let bp = r.batch_policy();
+        let max_batch = match r.max_batch {
+            Some(b) => b.to_string(),
+            None => "fill".to_string(),
+        };
+        let eval_batch = match r.eval_batch {
+            Some(b) => b.to_string(),
+            None => "auto".to_string(),
+        };
+        // Resolving validates the artifact (file schema / net / bits).
+        let dep = r.source.resolve()?;
+        t.row(&[
+            r.name.clone(),
+            format!("{:.2}", r.weight),
+            "incumbent".to_string(),
+            r.source.describe(),
+            DeploymentKey::of(&dep).to_string(),
+            max_batch.clone(),
+            bp.max_wait.as_millis().to_string(),
+            eval_batch.clone(),
+        ]);
+        if let Some(c) = &r.canary {
+            let cdep = c.source.resolve()?;
+            t.row(&[
+                r.name.clone(),
+                format!("{:.2}", c.fraction),
+                "canary".to_string(),
+                c.source.describe(),
+                DeploymentKey::of(&cdep).to_string(),
+                max_batch,
+                bp.max_wait.as_millis().to_string(),
+                eval_batch,
+            ]);
+        }
+    }
+    t.print();
+    println!("config is valid (all artifacts resolve)");
     Ok(())
 }
 

@@ -3,10 +3,14 @@
 //! `runtime::gemm::matmul_blocked_threads` (the PR 2 kernel) spawns fresh
 //! `thread::scope` workers for *every* matmul — tens of microseconds of
 //! spawn/join per call, which dominates small and medium shapes. A
-//! [`WorkerPool`] is created **once** (per `SimBackend`) and reused across
-//! every matmul and eval call: workers park on a condvar between jobs, so
-//! dispatching work costs one mutex round trip and a wake-up instead of a
-//! thread spawn.
+//! [`WorkerPool`] is created **once** and reused across every matmul and
+//! eval call: workers park on a condvar between jobs, so dispatching work
+//! costs one mutex round trip and a wake-up instead of a thread spawn. A
+//! `SimBackend` owns a private pool by default; the serve registry instead
+//! builds its whole deployment fleet over one `Arc`-shared pool
+//! (`SimBackend::from_network_shared`) — the per-job poison flags and
+//! epoch-keyed drain below are what make that sharing safe under
+//! concurrent submitters.
 //!
 //! The job model is deliberately tiny: [`WorkerPool::run`] takes a number
 //! of *parts* and a `Fn(usize)` body; workers (plus the calling thread)

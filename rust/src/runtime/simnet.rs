@@ -80,6 +80,7 @@ use crate::runtime::passes::{self, PassConfig, PassReport};
 use crate::runtime::pool::{self, WorkerPool};
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Output positions lowered per conv matmul call: bounds the product
 /// scratch to `CONV_CHUNK · out_c` floats per part and sets the
@@ -197,7 +198,11 @@ pub struct SimBackend {
     /// its input here; inputs can have several consumers).
     staged: Vec<f32>,
     conv: ConvScratch,
-    pool: WorkerPool,
+    /// The kernel worker pool — `Arc` so many backends can share one pool
+    /// (the serve registry builds a fleet of deployments over a single
+    /// pool; per-job poisoning keeps one backend's panic from another's
+    /// jobs). A backend built via `from_network*` owns a private pool.
+    pool: Arc<WorkerPool>,
     eval_batch: usize,
     input_dim: usize,
     num_classes: usize,
@@ -251,13 +256,45 @@ impl SimBackend {
         seed: u64,
         opts: SimOptions,
     ) -> Result<SimBackend, String> {
+        SimBackend::build(net, eval_batch, seed, opts, None)
+    }
+
+    /// [`SimBackend::from_network_cfg`] over a caller-owned worker pool
+    /// instead of a private one — the serve registry builds one backend
+    /// per cached deployment over a single shared pool. `opts.threads`
+    /// must be `None` or equal the pool's size (a silent mismatch would
+    /// mis-size the conv scratch panels against the actual fan-out).
+    pub fn from_network_shared(
+        net: &Network,
+        eval_batch: usize,
+        seed: u64,
+        opts: SimOptions,
+        pool: Arc<WorkerPool>,
+    ) -> Result<SimBackend, String> {
+        SimBackend::build(net, eval_batch, seed, opts, Some(pool))
+    }
+
+    fn build(
+        net: &Network,
+        eval_batch: usize,
+        seed: u64,
+        opts: SimOptions,
+        shared: Option<Arc<WorkerPool>>,
+    ) -> Result<SimBackend, String> {
         if eval_batch == 0 {
             return Err("eval_batch must be >= 1".into());
         }
-        let threads = match opts.threads {
-            Some(0) => return Err("worker threads must be >= 1".into()),
-            Some(t) => t.min(pool::MAX_THREADS),
-            None => pool::default_threads(),
+        let threads = match (&shared, opts.threads) {
+            (_, Some(0)) => return Err("worker threads must be >= 1".into()),
+            (Some(p), Some(t)) if t != p.threads() => {
+                return Err(format!(
+                    "threads override ({t}) conflicts with the shared pool ({})",
+                    p.threads()
+                ));
+            }
+            (Some(p), _) => p.threads(),
+            (None, Some(t)) => t.min(pool::MAX_THREADS),
+            (None, None) => pool::default_threads(),
         };
         let mut nodes = graph::lower_nodes(net).map_err(|e| e.to_string())?;
         // The unoptimized lowering is the eval_reference comparator; the
@@ -334,7 +371,7 @@ impl SimBackend {
                 strips: Vec::with_capacity(threads * strip_max),
                 prod: Vec::with_capacity(parts_max * prod_max),
             },
-            pool: WorkerPool::new(threads),
+            pool: shared.unwrap_or_else(|| Arc::new(WorkerPool::new(threads))),
             eval_batch,
             input_dim,
             num_classes,
@@ -349,6 +386,13 @@ impl SimBackend {
     /// Worker threads the backend's persistent pool fans kernels across.
     pub fn worker_threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// A handle to this backend's worker pool — hand it to
+    /// [`SimBackend::from_network_shared`] to build further backends over
+    /// the same threads.
+    pub fn pool_handle(&self) -> Arc<WorkerPool> {
+        Arc::clone(&self.pool)
     }
 
     /// The pass-optimized compiled graph this backend executes.
@@ -1012,6 +1056,63 @@ mod tests {
     fn zero_threads_is_rejected() {
         let err = SimBackend::from_network_opts(&nets::mlp_tiny(), 4, 7, Some(0)).unwrap_err();
         assert!(err.contains("threads"), "{err}");
+    }
+
+    #[test]
+    fn shared_pool_backends_match_private_pool_bitwise() {
+        // Two backends over ONE pool (the serve-registry configuration)
+        // must produce exactly the logits of privately-pooled builds —
+        // pool sharing is an execution-resource choice, never a numeric
+        // one.
+        let first = SimBackend::from_network_opts(&nets::mlp_tiny(), 4, 7, Some(2)).unwrap();
+        let pool = first.pool_handle();
+        let mut a = SimBackend::from_network_shared(
+            &nets::mlp_tiny(),
+            4,
+            7,
+            SimOptions::default(),
+            Arc::clone(&pool),
+        )
+        .unwrap();
+        let net = nets::conv_tiny();
+        let mut b =
+            SimBackend::from_network_shared(&net, 2, 9, SimOptions::default(), Arc::clone(&pool))
+                .unwrap();
+        assert!(Arc::ptr_eq(&a.pool, &b.pool), "backends must share the pool");
+        assert_eq!(a.worker_threads(), 2);
+        assert_eq!(b.worker_threads(), 2);
+
+        let x: Vec<f32> = (0..4 * 256).map(|i| (i % 17) as f32 / 17.0).collect();
+        let bits = vec![8.0f32; 4];
+        let mut private = SimBackend::from_network_opts(&nets::mlp_tiny(), 4, 7, Some(2)).unwrap();
+        assert_eq!(
+            a.eval(x.clone(), bits.clone(), bits.clone()).unwrap(),
+            private.eval(x, bits.clone(), bits).unwrap()
+        );
+
+        let nl = net.num_layers();
+        let xc: Vec<f32> = (0..2 * 192).map(|i| ((i * 7) % 23) as f32 / 23.0 - 0.3).collect();
+        let cbits = vec![6.0f32; nl];
+        let mut cpriv = SimBackend::from_network_opts(&net, 2, 9, Some(2)).unwrap();
+        assert_eq!(
+            b.eval(xc.clone(), cbits.clone(), cbits.clone()).unwrap(),
+            cpriv.eval(xc, cbits.clone(), cbits).unwrap()
+        );
+
+        // A threads override that disagrees with the shared pool is a bug
+        // in the caller, not something to paper over.
+        let err = SimBackend::from_network_shared(
+            &nets::mlp_tiny(),
+            4,
+            7,
+            SimOptions {
+                threads: Some(3),
+                ..SimOptions::default()
+            },
+            pool,
+        )
+        .unwrap_err();
+        assert!(err.contains("shared pool"), "{err}");
     }
 
     #[test]

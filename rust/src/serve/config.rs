@@ -1,0 +1,564 @@
+//! Route-config files: the JSON that stands up a multi-deployment server.
+//!
+//! A config names a set of routes; each route points at a deployment
+//! artifact (a file produced by `search`, or an inline uniform-precision
+//! spec built on the fly), optionally carries per-route batching knobs,
+//! and optionally splits a fraction of its traffic to a canary challenger.
+//! The full schema is documented in `rust/src/api/README.md`; parsing
+//! here rejects unknown keys at every level (a typoed knob must fail
+//! loudly, never silently fall back to a default — same ethos as the CLI
+//! flag registry).
+
+use crate::api::{ApiError, ApiResult, Deployment};
+use crate::arch::ChipConfig;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::cost::CostModel;
+use crate::nets;
+use crate::quant::{Policy, MAX_BITS, MIN_BITS};
+use crate::replication::Objective;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Marker distinguishing route configs from other JSON files.
+pub const ROUTES_KIND: &str = "lrmp-routes";
+
+/// Schema version written/read by this build.
+pub const ROUTES_SCHEMA_VERSION: u64 = 1;
+
+/// Default per-route flush deadline when the config does not set one.
+pub const DEFAULT_DEADLINE_MS: u64 = 5;
+
+/// Where a route variant's [`Deployment`] artifact comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeploymentSource {
+    /// A saved artifact (produced by `search` or `Deployment::save`).
+    File(PathBuf),
+    /// An inline uniform-precision policy, built via
+    /// [`Deployment::from_policy`] on the paper-scaled chip. The tile
+    /// budget is pinned to exactly what the policy needs, so variants
+    /// with different weight precisions land on different registry keys.
+    Uniform {
+        net: String,
+        objective: Objective,
+        w_bits: u32,
+        a_bits: u32,
+    },
+}
+
+impl DeploymentSource {
+    /// Materialize the artifact (load + implicit schema check for files;
+    /// cost-model construction for inline specs).
+    pub fn resolve(&self) -> ApiResult<Deployment> {
+        match self {
+            DeploymentSource::File(path) => Deployment::load(path),
+            DeploymentSource::Uniform {
+                net,
+                objective,
+                w_bits,
+                a_bits,
+            } => {
+                let network = nets::by_name(net).ok_or_else(|| ApiError::UnknownNetwork {
+                    name: net.clone(),
+                })?;
+                let nl = network.num_layers();
+                let policy = Policy::uniform(nl, *w_bits, *a_bits);
+                let replication = vec![1u64; nl];
+                let chip = ChipConfig::paper_scaled();
+                // Budget = exactly this policy's footprint (not the 8-bit
+                // baseline's): distinct weight precisions then occupy
+                // distinct (net, objective, budget) registry keys.
+                let tiles = CostModel::new(chip.clone())
+                    .network(&network, &policy, &replication)
+                    .tiles_used;
+                Deployment::from_policy(net, &chip, *objective, policy, replication, Some(tiles))
+            }
+        }
+    }
+
+    /// Short human-readable description for tables and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            DeploymentSource::File(p) => p.display().to_string(),
+            DeploymentSource::Uniform {
+                net,
+                objective,
+                w_bits,
+                a_bits,
+            } => format!("{net} uniform w{w_bits}/a{a_bits} ({objective})"),
+        }
+    }
+}
+
+/// A challenger variant taking `fraction` of the route's traffic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CanarySpec {
+    pub source: DeploymentSource,
+    /// Share of the route's requests sent to the canary, in (0, 1).
+    pub fraction: f64,
+}
+
+/// One named route of a [`RoutesConfig`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteSpec {
+    pub name: String,
+    /// Relative share of cross-route traffic the load generator sends
+    /// here (routing itself is by name; this only drives `serve`'s
+    /// request mix). Defaults to 1.0.
+    pub weight: f64,
+    pub source: DeploymentSource,
+    /// Flush when this many requests queue (`None`: fill to the
+    /// backend's batch).
+    pub max_batch: Option<usize>,
+    /// Flush a non-empty batch this long after its first request
+    /// (`None`: [`DEFAULT_DEADLINE_MS`]).
+    pub deadline_ms: Option<u64>,
+    /// Fixed sim-backend batch (`None`: `api::session::default_sim_batch`).
+    pub eval_batch: Option<usize>,
+    pub canary: Option<CanarySpec>,
+}
+
+impl RouteSpec {
+    /// The route's batcher knobs as a [`BatchPolicy`].
+    pub fn batch_policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: self.max_batch.unwrap_or(usize::MAX),
+            max_wait: Duration::from_millis(self.deadline_ms.unwrap_or(DEFAULT_DEADLINE_MS)),
+        }
+    }
+}
+
+/// A parsed, validated route-config file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutesConfig {
+    pub routes: Vec<RouteSpec>,
+}
+
+impl RoutesConfig {
+    pub fn from_file(path: &Path) -> ApiResult<RoutesConfig> {
+        let text = std::fs::read_to_string(path).map_err(|e| ApiError::Io {
+            path: path.display().to_string(),
+            message: e.to_string(),
+        })?;
+        let json = Json::parse(&text).map_err(|e| ApiError::Json {
+            path: path.display().to_string(),
+            message: e.to_string(),
+        })?;
+        RoutesConfig::from_json(&json)
+    }
+
+    pub fn from_json(j: &Json) -> ApiResult<RoutesConfig> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| bad("top level must be a JSON object"))?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "kind" | "schema_version" | "routes") {
+                return Err(bad(&format!("unknown top-level key '{key}'")));
+            }
+        }
+        match j.get("kind").as_str() {
+            Some(ROUTES_KIND) => {}
+            Some(other) => return Err(bad(&format!("kind is '{other}', not '{ROUTES_KIND}'"))),
+            None => return Err(bad("missing 'kind' marker")),
+        }
+        match j.get("schema_version").as_u64() {
+            Some(ROUTES_SCHEMA_VERSION) => {}
+            Some(v) => {
+                return Err(ApiError::SchemaVersion {
+                    found: v,
+                    supported: ROUTES_SCHEMA_VERSION,
+                })
+            }
+            None => return Err(bad("missing 'schema_version'")),
+        }
+        let routes_json = j
+            .get("routes")
+            .as_arr()
+            .ok_or_else(|| bad("'routes' must be an array"))?;
+        if routes_json.is_empty() {
+            return Err(bad("'routes' must name at least one route"));
+        }
+        let mut routes = Vec::with_capacity(routes_json.len());
+        for r in routes_json {
+            routes.push(parse_route(r)?);
+        }
+        for i in 1..routes.len() {
+            if routes[..i].iter().any(|r: &RouteSpec| r.name == routes[i].name) {
+                return Err(bad(&format!("duplicate route name '{}'", routes[i].name)));
+            }
+        }
+        Ok(RoutesConfig { routes })
+    }
+
+    /// Re-serialize (round-trips through [`RoutesConfig::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let routes = self
+            .routes
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("weight", Json::Num(r.weight)),
+                ];
+                pairs.extend(source_pairs(&r.source));
+                let mut batch = Vec::new();
+                if let Some(mb) = r.max_batch {
+                    batch.push(("max_batch", Json::Num(mb as f64)));
+                }
+                if let Some(dl) = r.deadline_ms {
+                    batch.push(("deadline_ms", Json::Num(dl as f64)));
+                }
+                if let Some(eb) = r.eval_batch {
+                    batch.push(("eval_batch", Json::Num(eb as f64)));
+                }
+                if !batch.is_empty() {
+                    pairs.push(("batch", Json::obj(batch)));
+                }
+                if let Some(c) = &r.canary {
+                    let mut cp = source_pairs(&c.source);
+                    cp.push(("fraction", Json::Num(c.fraction)));
+                    pairs.push(("canary", Json::obj(cp)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("kind", Json::Str(ROUTES_KIND.to_string())),
+            ("schema_version", Json::Num(ROUTES_SCHEMA_VERSION as f64)),
+            ("routes", Json::Arr(routes)),
+        ])
+    }
+}
+
+fn bad(msg: &str) -> ApiError {
+    ApiError::RouteConfig(msg.to_string())
+}
+
+fn source_pairs(s: &DeploymentSource) -> Vec<(&'static str, Json)> {
+    match s {
+        DeploymentSource::File(p) => {
+            vec![("deployment", Json::Str(p.display().to_string()))]
+        }
+        DeploymentSource::Uniform {
+            net,
+            objective,
+            w_bits,
+            a_bits,
+        } => vec![
+            ("net", Json::Str(net.clone())),
+            ("objective", Json::Str(objective.as_str().to_string())),
+            ("wbits", Json::Num(*w_bits as f64)),
+            ("abits", Json::Num(*a_bits as f64)),
+        ],
+    }
+}
+
+/// Parse the deployment-source keys shared by route bodies and canary
+/// blocks: exactly one of `deployment` (artifact path) or `net` (inline
+/// uniform spec with optional `objective`/`wbits`/`abits`).
+fn parse_source(j: &Json, ctx: &str) -> ApiResult<DeploymentSource> {
+    let file = j.get("deployment").as_str();
+    let net = j.get("net").as_str();
+    match (file, net) {
+        (Some(_), Some(_)) => Err(bad(&format!(
+            "{ctx}: 'deployment' and 'net' are mutually exclusive"
+        ))),
+        (None, None) => Err(bad(&format!(
+            "{ctx}: needs 'deployment' (artifact path) or 'net' (inline uniform spec)"
+        ))),
+        (Some(path), None) => {
+            for key in ["objective", "wbits", "abits"] {
+                if !matches!(j.get(key), Json::Null) {
+                    return Err(bad(&format!(
+                        "{ctx}: '{key}' only applies to inline 'net' specs, not artifact files"
+                    )));
+                }
+            }
+            Ok(DeploymentSource::File(PathBuf::from(path)))
+        }
+        (None, Some(name)) => {
+            let objective = match j.get("objective") {
+                Json::Null => Objective::Latency,
+                o => o
+                    .as_str()
+                    .ok_or_else(|| bad(&format!("{ctx}: 'objective' must be a string")))?
+                    .parse::<Objective>()
+                    .map_err(|e| bad(&format!("{ctx}: {e}")))?,
+            };
+            let bits = |key: &str| -> ApiResult<u32> {
+                match j.get(key) {
+                    Json::Null => Ok(8),
+                    v => {
+                        let b = v
+                            .as_u32()
+                            .filter(|b| (MIN_BITS..=MAX_BITS).contains(b))
+                            .ok_or_else(|| {
+                                bad(&format!(
+                                    "{ctx}: '{key}' must be an integer in [{MIN_BITS}, {MAX_BITS}]"
+                                ))
+                            })?;
+                        Ok(b)
+                    }
+                }
+            };
+            Ok(DeploymentSource::Uniform {
+                net: name.to_string(),
+                objective,
+                w_bits: bits("wbits")?,
+                a_bits: bits("abits")?,
+            })
+        }
+    }
+}
+
+fn parse_route(j: &Json) -> ApiResult<RouteSpec> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| bad("each route must be a JSON object"))?;
+    let name = j
+        .get("name")
+        .as_str()
+        .filter(|n| !n.is_empty())
+        .ok_or_else(|| bad("route is missing a non-empty 'name'"))?
+        .to_string();
+    let ctx = format!("route '{name}'");
+    for key in obj.keys() {
+        if !matches!(
+            key.as_str(),
+            "name" | "weight" | "deployment" | "net" | "objective" | "wbits" | "abits"
+                | "batch" | "canary"
+        ) {
+            return Err(bad(&format!("{ctx}: unknown key '{key}'")));
+        }
+    }
+    let weight = match j.get("weight") {
+        Json::Null => 1.0,
+        w => w
+            .as_f64()
+            .filter(|w| w.is_finite() && *w > 0.0)
+            .ok_or_else(|| bad(&format!("{ctx}: 'weight' must be a finite number > 0")))?,
+    };
+    let source = parse_source(j, &ctx)?;
+
+    let (mut max_batch, mut deadline_ms, mut eval_batch) = (None, None, None);
+    match j.get("batch") {
+        Json::Null => {}
+        b => {
+            let bobj = b
+                .as_obj()
+                .ok_or_else(|| bad(&format!("{ctx}: 'batch' must be an object")))?;
+            for key in bobj.keys() {
+                if !matches!(key.as_str(), "max_batch" | "deadline_ms" | "eval_batch") {
+                    return Err(bad(&format!("{ctx}: unknown batch key '{key}'")));
+                }
+            }
+            let knob = |key: &str| -> ApiResult<Option<u64>> {
+                match b.get(key) {
+                    Json::Null => Ok(None),
+                    v => v
+                        .as_u64()
+                        .filter(|&n| n >= 1)
+                        .map(Some)
+                        .ok_or_else(|| {
+                            bad(&format!("{ctx}: '{key}' must be an integer >= 1"))
+                        }),
+                }
+            };
+            max_batch = knob("max_batch")?.map(|n| n as usize);
+            deadline_ms = knob("deadline_ms")?;
+            eval_batch = knob("eval_batch")?.map(|n| n as usize);
+        }
+    }
+
+    let canary = match j.get("canary") {
+        Json::Null => None,
+        c => {
+            let cobj = c
+                .as_obj()
+                .ok_or_else(|| bad(&format!("{ctx}: 'canary' must be an object")))?;
+            let cctx = format!("{ctx} canary");
+            for key in cobj.keys() {
+                if !matches!(
+                    key.as_str(),
+                    "deployment" | "net" | "objective" | "wbits" | "abits" | "fraction"
+                ) {
+                    return Err(bad(&format!("{cctx}: unknown key '{key}'")));
+                }
+            }
+            let fraction = c
+                .get("fraction")
+                .as_f64()
+                .filter(|f| f.is_finite() && *f > 0.0 && *f < 1.0)
+                .ok_or_else(|| {
+                    bad(&format!("{cctx}: 'fraction' must be a number in (0, 1)"))
+                })?;
+            Some(CanarySpec {
+                source: parse_source(c, &cctx)?,
+                fraction,
+            })
+        }
+    };
+
+    Ok(RouteSpec {
+        name,
+        weight,
+        source,
+        max_batch,
+        deadline_ms,
+        eval_batch,
+        canary,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> ApiResult<RoutesConfig> {
+        RoutesConfig::from_json(&Json::parse(text).expect("test JSON must be syntactic"))
+    }
+
+    const TWO_ROUTES: &str = r#"{
+        "kind": "lrmp-routes",
+        "schema_version": 1,
+        "routes": [
+            {"name": "mlp", "net": "mlp-tiny", "weight": 3.0,
+             "batch": {"max_batch": 8, "deadline_ms": 2, "eval_batch": 4}},
+            {"name": "conv", "net": "conv-tiny",
+             "canary": {"net": "conv-tiny", "wbits": 6, "abits": 6, "fraction": 0.25}}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_routes_knobs_and_canary() {
+        let cfg = parse(TWO_ROUTES).unwrap();
+        assert_eq!(cfg.routes.len(), 2);
+        let mlp = &cfg.routes[0];
+        assert_eq!(mlp.name, "mlp");
+        assert_eq!(mlp.weight, 3.0);
+        assert_eq!(mlp.max_batch, Some(8));
+        assert_eq!(mlp.deadline_ms, Some(2));
+        assert_eq!(mlp.eval_batch, Some(4));
+        assert_eq!(mlp.batch_policy().max_batch, 8);
+        assert_eq!(mlp.batch_policy().max_wait, Duration::from_millis(2));
+        assert!(mlp.canary.is_none());
+        let conv = &cfg.routes[1];
+        assert_eq!(conv.weight, 1.0);
+        assert_eq!(conv.batch_policy().max_batch, usize::MAX);
+        let canary = conv.canary.as_ref().unwrap();
+        assert_eq!(canary.fraction, 0.25);
+        assert_eq!(
+            canary.source,
+            DeploymentSource::Uniform {
+                net: "conv-tiny".into(),
+                objective: Objective::Latency,
+                w_bits: 6,
+                a_bits: 6,
+            }
+        );
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let cfg = parse(TWO_ROUTES).unwrap();
+        assert_eq!(RoutesConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+    }
+
+    #[test]
+    fn inline_sources_resolve_with_policy_pinned_budgets() {
+        let cfg = parse(TWO_ROUTES).unwrap();
+        let conv = &cfg.routes[1];
+        let incumbent = conv.source.resolve().unwrap();
+        let canary = conv.canary.as_ref().unwrap().source.resolve().unwrap();
+        assert_eq!(incumbent.net, canary.net);
+        // The 6-bit challenger needs fewer tiles, so the two artifacts
+        // occupy distinct (net, objective, budget) registry keys.
+        assert!(canary.n_tiles < incumbent.n_tiles);
+        assert_eq!(incumbent.n_tiles, incumbent.tiles_used);
+    }
+
+    #[test]
+    fn rejects_malformed_configs() {
+        // Every entry: (config text, substring its error must carry).
+        let cases: &[(&str, &str)] = &[
+            (r#"{"schema_version": 1, "routes": []}"#, "kind"),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": []}"#,
+                "at least one",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "extra": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny"}]}"#,
+                "unknown top-level key 'extra'",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny"}, {"name": "a", "net": "mlp-tiny"}]}"#,
+                "duplicate route name",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny", "weight": 0}]}"#,
+                "'weight'",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny", "deployment": "x.json"}]}"#,
+                "mutually exclusive",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [{"name": "a"}]}"#,
+                "'deployment'",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny", "wbits": 11}]}"#,
+                "'wbits'",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny", "batch": {"deadline": 5}}]}"#,
+                "unknown batch key 'deadline'",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny", "batch": {"max_batch": 0}}]}"#,
+                "'max_batch'",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny",
+                     "canary": {"net": "mlp-tiny", "fraction": 1.0}}]}"#,
+                "'fraction'",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "net": "mlp-tiny", "objektive": "latency"}]}"#,
+                "unknown key 'objektive'",
+            ),
+            (
+                r#"{"kind": "lrmp-routes", "schema_version": 1, "routes": [
+                    {"name": "a", "deployment": "x.json", "wbits": 8}]}"#,
+                "artifact files",
+            ),
+        ];
+        for (text, needle) in cases {
+            let err = parse(text).map(|_| ()).unwrap_err().to_string();
+            assert!(err.contains(needle), "case {text}: got '{err}'");
+        }
+    }
+
+    #[test]
+    fn wrong_schema_version_is_typed() {
+        let err = parse(r#"{"kind": "lrmp-routes", "schema_version": 9, "routes": []}"#)
+            .map(|_| ())
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            ApiError::SchemaVersion {
+                found: 9,
+                supported: ROUTES_SCHEMA_VERSION
+            }
+        ));
+    }
+}

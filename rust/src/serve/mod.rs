@@ -1,0 +1,559 @@
+//! The multi-deployment serving front-end (the ROADMAP's production tier):
+//! many [`Deployment`] artifacts served concurrently behind named routes,
+//! with weighted A/B splits, canary promotion/rollback, per-route request
+//! batching, and per-route latency/throughput metrics.
+//!
+//! Composition, bottom-up:
+//! - [`registry::DeploymentRegistry`] — loads/validates/caches artifacts
+//!   keyed by `(net, objective, budget)`, one [`SimBackend`] each, all
+//!   over a **single shared** `WorkerPool`.
+//! - [`router::Router`] — deterministic smooth-weighted-round-robin
+//!   variant selection per route, plus promote/rollback.
+//! - [`MultiServer`] — one `coordinator::Server` per route *variant*
+//!   (each with the route's [`BatchPolicy`], so incumbent and canary
+//!   accumulate separately comparable [`ServeMetrics`]), glued to the
+//!   router and snapshot-able as JSON.
+//!
+//! Batch composition is part of the numeric contract: activation
+//! quantization scales per tensor over the whole batch, so a request's
+//! logits depend on its batchmates. Routed results are bitwise identical
+//! to direct `SimBackend::eval` exactly when the batch composition
+//! matches — serve one request per batch (`max_batch: 1`; the batcher
+//! zero-pads to the backend batch) to compare against a direct eval of
+//! the same zero-padded batch. The CLI's `serve --routes … --verify` and
+//! the CI serving-smoke gate do precisely that.
+
+pub mod config;
+pub mod registry;
+pub mod router;
+
+pub use config::{CanarySpec, DeploymentSource, RouteSpec, RoutesConfig};
+pub use registry::{DeploymentKey, DeploymentRegistry};
+pub use router::{Router, Variant};
+
+use crate::api::session::ServeOptions;
+use crate::api::{ApiError, ApiResult, Deployment};
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::Server;
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+
+/// Schema version of [`MultiServer::snapshot_json`].
+pub const METRICS_KIND: &str = "lrmp-serve-metrics";
+pub const METRICS_SCHEMA_VERSION: u64 = 1;
+
+/// Label given to a route's primary variant.
+pub const INCUMBENT: &str = "incumbent";
+/// Label given to a route's challenger variant.
+pub const CANARY: &str = "canary";
+
+struct VariantServer {
+    label: String,
+    key: DeploymentKey,
+    server: Arc<Server>,
+}
+
+struct RouteRuntime {
+    name: String,
+    weight: f64,
+    eval_batch: usize,
+    batch: BatchPolicy,
+    /// Aligned with the router's variant order for this route.
+    servers: Vec<VariantServer>,
+}
+
+struct Inner {
+    registry: DeploymentRegistry,
+    router: Router,
+    routes: Vec<RouteRuntime>,
+}
+
+/// A running multi-route server. `infer` is safe to call from many
+/// threads; the lock covers only variant selection (the blocking wait on
+/// logits happens outside it).
+pub struct MultiServer {
+    inner: Mutex<Inner>,
+    pool_threads: usize,
+}
+
+/// Metrics snapshot of one variant.
+#[derive(Clone, Debug)]
+pub struct VariantReport {
+    pub label: String,
+    pub key: DeploymentKey,
+    pub weight: f64,
+    /// Requests the router sent here (pinned `infer_on` traffic and
+    /// requests still in flight are not included).
+    pub routed: u64,
+    pub metrics: ServeMetrics,
+}
+
+/// Metrics snapshot of one route.
+#[derive(Clone, Debug)]
+pub struct RouteReport {
+    pub name: String,
+    pub weight: f64,
+    pub eval_batch: usize,
+    pub batch: BatchPolicy,
+    pub variants: Vec<VariantReport>,
+}
+
+impl MultiServer {
+    /// Stand up every route of a validated config: resolve and register
+    /// the artifacts (shared pool), start one batching server per
+    /// variant.
+    pub fn start(cfg: &RoutesConfig, opts: ServeOptions) -> ApiResult<MultiServer> {
+        let mut registry = DeploymentRegistry::new(opts)?;
+        let mut router = Router::new();
+        let mut routes = Vec::with_capacity(cfg.routes.len());
+        for spec in &cfg.routes {
+            let inc_key = registry.insert(spec.source.resolve()?, spec.eval_batch)?;
+            let variants = match &spec.canary {
+                None => vec![Variant {
+                    label: INCUMBENT.into(),
+                    key: inc_key.clone(),
+                    weight: 1.0,
+                }],
+                Some(c) => {
+                    let ckey = registry.insert(c.source.resolve()?, spec.eval_batch)?;
+                    vec![
+                        Variant {
+                            label: INCUMBENT.into(),
+                            key: inc_key.clone(),
+                            weight: 1.0 - c.fraction,
+                        },
+                        Variant {
+                            label: CANARY.into(),
+                            key: ckey,
+                            weight: c.fraction,
+                        },
+                    ]
+                }
+            };
+            router.add_route(&spec.name, variants.clone())?;
+            let mut servers = Vec::with_capacity(variants.len());
+            for v in &variants {
+                let policy = registry
+                    .deployment(&v.key)
+                    .expect("just inserted")
+                    .policy
+                    .clone();
+                let backend = registry.claim_backend(&v.key)?;
+                servers.push(VariantServer {
+                    label: v.label.clone(),
+                    key: v.key.clone(),
+                    server: Arc::new(Server::start(backend, &policy, spec.batch_policy())),
+                });
+            }
+            // All variants of a route answer the same traffic, so they
+            // must agree on the input shape — otherwise a request would
+            // succeed or fail depending on which variant the router picks.
+            let dim = servers[0].server.input_dim();
+            if let Some(v) = servers.iter().find(|v| v.server.input_dim() != dim) {
+                return Err(ApiError::RouteConfig(format!(
+                    "route '{}': variant '{}' expects {} input features but \
+                     '{}' expects {dim} — variants of one route must serve \
+                     the same input shape",
+                    spec.name,
+                    v.label,
+                    v.server.input_dim(),
+                    servers[0].label,
+                )));
+            }
+            routes.push(RouteRuntime {
+                name: spec.name.clone(),
+                weight: spec.weight,
+                eval_batch: registry.eval_batch(&inc_key).expect("just inserted"),
+                batch: spec.batch_policy(),
+                servers,
+            });
+        }
+        let pool_threads = registry.pool().threads();
+        Ok(MultiServer {
+            inner: Mutex::new(Inner {
+                registry,
+                router,
+                routes,
+            }),
+            pool_threads,
+        })
+    }
+
+    /// Worker threads of the shared kernel pool.
+    pub fn pool_threads(&self) -> usize {
+        self.pool_threads
+    }
+
+    pub fn route_names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().router.route_names()
+    }
+
+    /// Features per request sample on `route`.
+    pub fn input_dim(&self, route: &str) -> ApiResult<usize> {
+        let inner = self.inner.lock().unwrap();
+        Ok(inner.route(route)?.servers[0].server.input_dim())
+    }
+
+    /// The fixed backend batch the route's variants execute.
+    pub fn route_eval_batch(&self, route: &str) -> ApiResult<usize> {
+        Ok(self.inner.lock().unwrap().route(route)?.eval_batch)
+    }
+
+    /// The artifact a variant serves (for inspection/verification).
+    pub fn variant_deployment(&self, route: &str, label: &str) -> ApiResult<Deployment> {
+        let inner = self.inner.lock().unwrap();
+        let vs = inner.variant(route, label)?;
+        Ok(inner
+            .registry
+            .deployment(&vs.key)
+            .expect("registered at start")
+            .clone())
+    }
+
+    /// Route one request: weighted variant selection, then a blocking
+    /// batched inference on the selected variant's server.
+    pub fn infer(&self, route: &str, x: Vec<f32>) -> ApiResult<Vec<f32>> {
+        let server = {
+            let mut inner = self.inner.lock().unwrap();
+            let (idx, _) = inner.router.pick(route)?;
+            Arc::clone(&inner.route(route)?.servers[idx].server)
+        };
+        server
+            .infer(x)
+            .map_err(|e| ApiError::Runtime(format!("{e:#}")))
+    }
+
+    /// Route one request to a *specific* variant, bypassing the weighted
+    /// split (verification traffic; not counted in the A/B hit tallies).
+    pub fn infer_on(&self, route: &str, label: &str, x: Vec<f32>) -> ApiResult<Vec<f32>> {
+        let server = {
+            let inner = self.inner.lock().unwrap();
+            Arc::clone(&inner.variant(route, label)?.server)
+        };
+        server
+            .infer(x)
+            .map_err(|e| ApiError::Runtime(format!("{e:#}")))
+    }
+
+    /// Promote `label` to the route's sole variant (the challenger won).
+    /// The retired variants' servers stop once their in-flight requests
+    /// drain.
+    pub fn promote(&self, route: &str, label: &str) -> ApiResult<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.router.promote(route, label)?;
+        let rt = inner.route_mut(route)?;
+        let idx = rt
+            .servers
+            .iter()
+            .position(|v| v.label == label)
+            .expect("router verified the label");
+        let winner = rt.servers.swap_remove(idx);
+        rt.servers = vec![winner];
+        Ok(())
+    }
+
+    /// Remove `label` from the route (the challenger lost); errors on the
+    /// last remaining variant.
+    pub fn rollback(&self, route: &str, label: &str) -> ApiResult<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.router.rollback(route, label)?;
+        let rt = inner.route_mut(route)?;
+        let idx = rt
+            .servers
+            .iter()
+            .position(|v| v.label == label)
+            .expect("router verified the label");
+        rt.servers.remove(idx);
+        Ok(())
+    }
+
+    /// Metrics snapshot of one route (per-variant p50/p95/p99, routed
+    /// counts, fill, queue depth — the incumbent-vs-canary comparison).
+    pub fn route_report(&self, route: &str) -> ApiResult<RouteReport> {
+        let inner = self.inner.lock().unwrap();
+        inner.report(route)
+    }
+
+    /// Metrics snapshots of every route, in registration order.
+    pub fn reports(&self) -> Vec<RouteReport> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .routes
+            .iter()
+            .map(|r| inner.report(&r.name).expect("route exists"))
+            .collect()
+    }
+
+    /// Full JSON snapshot (`kind: "lrmp-serve-metrics"`), suitable for
+    /// `serve --metrics-out`.
+    pub fn snapshot_json(&self) -> Json {
+        let reports = self.reports();
+        let routes = reports
+            .iter()
+            .map(|r| {
+                let requests: u64 = r.variants.iter().map(|v| v.metrics.requests).sum();
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("weight", Json::Num(r.weight)),
+                    ("eval_batch", Json::Num(r.eval_batch as f64)),
+                    ("requests", Json::Num(requests as f64)),
+                    (
+                        "variants",
+                        Json::Arr(
+                            r.variants
+                                .iter()
+                                .map(|v| {
+                                    Json::obj(vec![
+                                        ("label", Json::Str(v.label.clone())),
+                                        ("key", Json::Str(v.key.to_string())),
+                                        ("weight", Json::Num(v.weight)),
+                                        ("routed", Json::Num(v.routed as f64)),
+                                        ("metrics", v.metrics.to_json()),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("kind", Json::Str(METRICS_KIND.to_string())),
+            ("schema_version", Json::Num(METRICS_SCHEMA_VERSION as f64)),
+            ("pool_threads", Json::Num(self.pool_threads as f64)),
+            ("routes", Json::Arr(routes)),
+        ])
+    }
+}
+
+impl Inner {
+    fn route(&self, name: &str) -> ApiResult<&RouteRuntime> {
+        self.routes
+            .iter()
+            .find(|r| r.name == name)
+            .ok_or_else(|| ApiError::UnknownRoute {
+                route: name.to_string(),
+                valid: self.router.route_names(),
+            })
+    }
+
+    fn route_mut(&mut self, name: &str) -> ApiResult<&mut RouteRuntime> {
+        let valid = self.router.route_names();
+        self.routes
+            .iter_mut()
+            .find(|r| r.name == name)
+            .ok_or_else(|| ApiError::UnknownRoute {
+                route: name.to_string(),
+                valid,
+            })
+    }
+
+    fn variant(&self, route: &str, label: &str) -> ApiResult<&VariantServer> {
+        self.route(route)?
+            .servers
+            .iter()
+            .find(|v| v.label == label)
+            .ok_or_else(|| ApiError::UnknownVariant {
+                route: route.to_string(),
+                variant: label.to_string(),
+            })
+    }
+
+    fn report(&self, route: &str) -> ApiResult<RouteReport> {
+        let rt = self.route(route)?;
+        let hits = self.router.hits(route)?;
+        let weights = self.router.variants(route)?;
+        let variants = rt
+            .servers
+            .iter()
+            .map(|vs| {
+                let routed = hits
+                    .iter()
+                    .find(|(l, _)| *l == vs.label)
+                    .map(|&(_, h)| h)
+                    .unwrap_or(0);
+                let weight = weights
+                    .iter()
+                    .find(|v| v.label == vs.label)
+                    .map(|v| v.weight)
+                    .unwrap_or(0.0);
+                VariantReport {
+                    label: vs.label.clone(),
+                    key: vs.key.clone(),
+                    weight,
+                    routed,
+                    metrics: vs.server.snapshot_metrics(),
+                }
+            })
+            .collect();
+        Ok(RouteReport {
+            name: rt.name.clone(),
+            weight: rt.weight,
+            eval_batch: rt.eval_batch,
+            batch: rt.batch,
+            variants,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replication::Objective;
+
+    fn two_route_cfg() -> RoutesConfig {
+        RoutesConfig {
+            routes: vec![
+                RouteSpec {
+                    name: "mlp".into(),
+                    weight: 1.0,
+                    source: DeploymentSource::Uniform {
+                        net: "mlp-tiny".into(),
+                        objective: Objective::Latency,
+                        w_bits: 8,
+                        a_bits: 8,
+                    },
+                    max_batch: Some(4),
+                    deadline_ms: Some(2),
+                    eval_batch: Some(4),
+                    canary: None,
+                },
+                RouteSpec {
+                    name: "ab".into(),
+                    weight: 1.0,
+                    source: DeploymentSource::Uniform {
+                        net: "mlp-tiny".into(),
+                        objective: Objective::Latency,
+                        w_bits: 8,
+                        a_bits: 8,
+                    },
+                    max_batch: Some(1),
+                    deadline_ms: Some(1),
+                    eval_batch: Some(4),
+                    canary: Some(CanarySpec {
+                        source: DeploymentSource::Uniform {
+                            net: "mlp-tiny".into(),
+                            objective: Objective::Latency,
+                            w_bits: 5,
+                            a_bits: 6,
+                        },
+                        fraction: 0.25,
+                    }),
+                },
+            ],
+        }
+    }
+
+    fn opts() -> ServeOptions {
+        ServeOptions {
+            threads: Some(2),
+            ..ServeOptions::default()
+        }
+    }
+
+    fn sample(dim: usize, tag: usize) -> Vec<f32> {
+        (0..dim).map(|j| ((j + 3 * tag) % 13) as f32 / 13.0).collect()
+    }
+
+    #[test]
+    fn two_routes_serve_with_exact_canary_split() {
+        let ms = MultiServer::start(&two_route_cfg(), opts()).unwrap();
+        assert_eq!(ms.route_names(), vec!["mlp".to_string(), "ab".to_string()]);
+        let dim = ms.input_dim("ab").unwrap();
+        for i in 0..8 {
+            let y = ms.infer("ab", sample(dim, i)).unwrap();
+            assert_eq!(y.len(), 10);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+        let report = ms.route_report("ab").unwrap();
+        assert_eq!(report.variants.len(), 2);
+        let routed: Vec<u64> = report.variants.iter().map(|v| v.routed).collect();
+        // fraction 0.25 → exactly 6:2 over 8 requests (smooth WRR).
+        assert_eq!(routed, vec![6, 2]);
+        for v in &report.variants {
+            assert_eq!(v.metrics.requests, v.routed);
+            assert_eq!(v.metrics.failures, 0);
+            assert!(v.metrics.latency_p(50.0) > 0.0);
+        }
+        // The canary serves a *different* artifact.
+        let inc = ms.variant_deployment("ab", INCUMBENT).unwrap();
+        let can = ms.variant_deployment("ab", CANARY).unwrap();
+        assert_ne!(inc.policy, can.policy);
+        assert!(can.n_tiles < inc.n_tiles);
+    }
+
+    #[test]
+    fn unknown_route_is_typed_and_lists_names() {
+        let ms = MultiServer::start(&two_route_cfg(), opts()).unwrap();
+        let err = ms.infer("mpl", vec![0.0; 4]).unwrap_err();
+        match err {
+            ApiError::UnknownRoute { route, valid } => {
+                assert_eq!(route, "mpl");
+                assert_eq!(valid, vec!["mlp".to_string(), "ab".to_string()]);
+            }
+            other => panic!("expected UnknownRoute, got {other}"),
+        }
+        assert!(ms.infer_on("ab", "canary2", vec![0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn promote_and_rollback_retire_servers() {
+        let ms = MultiServer::start(&two_route_cfg(), opts()).unwrap();
+        let dim = ms.input_dim("ab").unwrap();
+        ms.promote("ab", CANARY).unwrap();
+        let report = ms.route_report("ab").unwrap();
+        assert_eq!(report.variants.len(), 1);
+        assert_eq!(report.variants[0].label, CANARY);
+        assert_eq!(report.variants[0].weight, 1.0);
+        // All traffic now lands on the promoted variant.
+        for i in 0..4 {
+            ms.infer("ab", sample(dim, i)).unwrap();
+        }
+        assert_eq!(ms.route_report("ab").unwrap().variants[0].metrics.requests, 4);
+        // The sole survivor cannot be rolled back.
+        assert!(ms.rollback("ab", CANARY).is_err());
+        // Pinned inference to the retired incumbent is now a typed error.
+        assert!(ms.infer_on("ab", INCUMBENT, sample(dim, 0)).is_err());
+    }
+
+    #[test]
+    fn mismatched_canary_input_shape_is_rejected() {
+        let mut cfg = two_route_cfg();
+        // conv-tiny expects 192 features; the mlp-tiny incumbent 256.
+        cfg.routes[1].canary = Some(CanarySpec {
+            source: DeploymentSource::Uniform {
+                net: "conv-tiny".into(),
+                objective: Objective::Latency,
+                w_bits: 8,
+                a_bits: 8,
+            },
+            fraction: 0.5,
+        });
+        let err = MultiServer::start(&cfg, opts()).unwrap_err();
+        assert!(matches!(err, ApiError::RouteConfig(_)), "{err}");
+        assert!(err.to_string().contains("input shape"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_json_carries_per_route_percentiles() {
+        let ms = MultiServer::start(&two_route_cfg(), opts()).unwrap();
+        let dim = ms.input_dim("mlp").unwrap();
+        for i in 0..6 {
+            ms.infer("mlp", sample(dim, i)).unwrap();
+        }
+        let j = ms.snapshot_json();
+        assert_eq!(j.get("kind").as_str(), Some(METRICS_KIND));
+        let routes = j.get("routes").as_arr().unwrap();
+        assert_eq!(routes.len(), 2);
+        let mlp = &routes[0];
+        assert_eq!(mlp.get("name").as_str(), Some("mlp"));
+        assert_eq!(mlp.get("requests").as_u64(), Some(6));
+        let v0 = &mlp.get("variants").as_arr().unwrap()[0];
+        let m = v0.get("metrics");
+        for key in ["p50_s", "p95_s", "p99_s", "throughput_rps", "queue_depth_mean"] {
+            assert!(m.get(key).as_f64().is_some(), "missing {key}");
+        }
+        assert!(m.get("p99_s").as_f64().unwrap() > 0.0);
+    }
+}

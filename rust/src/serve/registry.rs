@@ -1,0 +1,368 @@
+//! The deployment registry: many cached [`Deployment`] artifacts, one
+//! shared [`WorkerPool`].
+//!
+//! Entries are keyed by `(net, objective, tile budget)` — the coordinates
+//! that identify a design point in the paper's search space. Each entry
+//! carries its artifact plus one pre-built [`SimBackend`] over the
+//! registry's single shared pool (PR 5's per-job poison flag + epoch-keyed
+//! drain is what makes N backends over one pool safe under concurrent
+//! submitters). Re-inserting an identical artifact is a cache hit; a
+//! *different* artifact landing on an occupied key is a typed error — the
+//! key is the identity, so silently shadowing would serve the wrong
+//! policy.
+
+use crate::api::session::{default_sim_batch, ServeOptions};
+use crate::api::{ApiError, ApiResult, Deployment};
+use crate::nets;
+use crate::replication::Objective;
+use crate::runtime::pool::{self, WorkerPool};
+use crate::runtime::simnet::{SimBackend, SimOptions};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Identity of a cached deployment: the design-point coordinates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DeploymentKey {
+    pub net: String,
+    pub objective: Objective,
+    /// The tile budget the artifact was searched/built under (`n_tiles`).
+    pub budget: u64,
+}
+
+impl DeploymentKey {
+    pub fn of(dep: &Deployment) -> DeploymentKey {
+        DeploymentKey {
+            net: dep.net.clone(),
+            objective: dep.objective,
+            budget: dep.n_tiles,
+        }
+    }
+}
+
+impl fmt::Display for DeploymentKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}/{}t", self.net, self.objective.as_str(), self.budget)
+    }
+}
+
+// `Objective` has no Ord (it is a 2-variant config enum); order keys via
+// its canonical string so the registry's BTreeMap iteration — and every
+// `routes`/`metrics` listing derived from it — is deterministic.
+impl Ord for DeploymentKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (&self.net, self.objective.as_str(), self.budget).cmp(&(
+            &other.net,
+            other.objective.as_str(),
+            other.budget,
+        ))
+    }
+}
+
+impl PartialOrd for DeploymentKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct Entry {
+    dep: Deployment,
+    /// The cached backend, present until claimed. Claiming transfers
+    /// ownership to a `coordinator::Server`; a second claim rebuilds.
+    backend: Option<SimBackend>,
+    eval_batch: usize,
+    /// Backends constructed for this entry so far (1 after insert; each
+    /// extra claim adds one). Cache behavior is observable through this.
+    builds: u64,
+}
+
+/// Loads, validates and caches deployments; builds one [`SimBackend`] per
+/// entry over one shared worker pool.
+pub struct DeploymentRegistry {
+    pool: Arc<WorkerPool>,
+    sim: SimOptions,
+    default_eval_batch: Option<usize>,
+    entries: BTreeMap<DeploymentKey, Entry>,
+}
+
+impl DeploymentRegistry {
+    /// Build an empty registry whose pool and sim knobs come from
+    /// [`ServeOptions`] (`threads: None` = machine parallelism with the
+    /// `LRMP_SIM_THREADS` override; `eval_batch` is the default batch for
+    /// entries inserted without an explicit one).
+    pub fn new(opts: ServeOptions) -> ApiResult<DeploymentRegistry> {
+        if opts.eval_batch == Some(0) {
+            return Err(ApiError::InvalidConfig("eval batch must be >= 1".into()));
+        }
+        let threads = match opts.threads {
+            Some(0) => return Err(ApiError::InvalidConfig("threads must be >= 1".into())),
+            Some(t) => t.min(pool::MAX_THREADS),
+            None => pool::default_threads(),
+        };
+        Ok(DeploymentRegistry::with_pool(
+            Arc::new(WorkerPool::new(threads)),
+            opts,
+        ))
+    }
+
+    /// Build over a caller-owned pool (`opts.threads` is ignored — the
+    /// pool's size wins).
+    pub fn with_pool(pool: Arc<WorkerPool>, opts: ServeOptions) -> DeploymentRegistry {
+        DeploymentRegistry {
+            pool,
+            sim: SimOptions {
+                conv_fanout_min_flops: opts.conv_fanout_min_flops,
+                ..SimOptions::default()
+            },
+            default_eval_batch: opts.eval_batch,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Registered keys in deterministic (net, objective, budget) order.
+    pub fn keys(&self) -> Vec<DeploymentKey> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn deployment(&self, key: &DeploymentKey) -> Option<&Deployment> {
+        self.entries.get(key).map(|e| &e.dep)
+    }
+
+    /// The fixed batch the entry's backends execute.
+    pub fn eval_batch(&self, key: &DeploymentKey) -> Option<usize> {
+        self.entries.get(key).map(|e| e.eval_batch)
+    }
+
+    /// Backends constructed for this key so far (cache probe: 1 right
+    /// after insert, +1 per extra claim; 0 for unknown keys).
+    pub fn builds(&self, key: &DeploymentKey) -> u64 {
+        self.entries.get(key).map(|e| e.builds).unwrap_or(0)
+    }
+
+    /// Load an artifact file and [`DeploymentRegistry::insert`] it.
+    pub fn load(&mut self, path: &Path, eval_batch: Option<usize>) -> ApiResult<DeploymentKey> {
+        self.insert(Deployment::load(path)?, eval_batch)
+    }
+
+    /// Validate `dep`, build its backend over the shared pool, and cache
+    /// both under [`DeploymentKey::of`]. Re-inserting an identical
+    /// artifact is a hit (no rebuild, existing `eval_batch` wins); a
+    /// different artifact on an occupied key is a typed error.
+    pub fn insert(
+        &mut self,
+        dep: Deployment,
+        eval_batch: Option<usize>,
+    ) -> ApiResult<DeploymentKey> {
+        if eval_batch == Some(0) {
+            return Err(ApiError::InvalidConfig("eval batch must be >= 1".into()));
+        }
+        let key = DeploymentKey::of(&dep);
+        if let Some(existing) = self.entries.get(&key) {
+            if existing.dep == dep {
+                return Ok(key);
+            }
+            return Err(ApiError::RouteConfig(format!(
+                "registry key collision on {key}: two distinct artifacts share \
+                 (net, objective, budget) — give one a different tile budget or objective \
+                 (note: inline uniform specs pin the budget to the policy's weight \
+                 footprint, which a_bits does not change)"
+            )));
+        }
+        dep.validate()?;
+        let net = nets::by_name(&dep.net).ok_or_else(|| ApiError::UnknownNetwork {
+            name: dep.net.clone(),
+        })?;
+        SimBackend::supports(&net).map_err(|reason| ApiError::UnsupportedNetwork {
+            backend: "sim",
+            net: net.name.clone(),
+            reason,
+        })?;
+        let eval_batch = eval_batch
+            .or(self.default_eval_batch)
+            .unwrap_or_else(|| default_sim_batch(&net));
+        let backend = self.build_backend(&dep, eval_batch)?;
+        self.entries.insert(
+            key.clone(),
+            Entry {
+                dep,
+                backend: Some(backend),
+                eval_batch,
+                builds: 1,
+            },
+        );
+        Ok(key)
+    }
+
+    /// Take the entry's backend (the cached one if still unclaimed, a
+    /// fresh build over the same shared pool otherwise — e.g. when two
+    /// routes serve the same artifact, each variant server owns its own
+    /// backend instance).
+    pub fn claim_backend(&mut self, key: &DeploymentKey) -> ApiResult<SimBackend> {
+        let entry = self
+            .entries
+            .get_mut(key)
+            .ok_or_else(|| ApiError::RouteConfig(format!("no registry entry for {key}")))?;
+        if let Some(backend) = entry.backend.take() {
+            return Ok(backend);
+        }
+        let (dep, eval_batch) = (entry.dep.clone(), entry.eval_batch);
+        let backend = self.build_backend(&dep, eval_batch)?;
+        self.entries.get_mut(key).expect("entry exists").builds += 1;
+        Ok(backend)
+    }
+
+    fn build_backend(&self, dep: &Deployment, eval_batch: usize) -> ApiResult<SimBackend> {
+        let net = nets::by_name(&dep.net).ok_or_else(|| ApiError::UnknownNetwork {
+            name: dep.net.clone(),
+        })?;
+        SimBackend::from_network_shared(
+            &net,
+            eval_batch,
+            dep.provenance.seed,
+            self.sim,
+            Arc::clone(&self.pool),
+        )
+        .map_err(ApiError::Runtime)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+    use crate::quant::Policy;
+
+    fn uniform_dep(net: &str, w: u32, a: u32) -> Deployment {
+        crate::serve::config::DeploymentSource::Uniform {
+            net: net.into(),
+            objective: Objective::Latency,
+            w_bits: w,
+            a_bits: a,
+        }
+        .resolve()
+        .unwrap()
+    }
+
+    fn registry() -> DeploymentRegistry {
+        DeploymentRegistry::new(ServeOptions {
+            threads: Some(2),
+            ..ServeOptions::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn key_orders_by_net_objective_budget() {
+        let mut keys = vec![
+            DeploymentKey {
+                net: "b".into(),
+                objective: Objective::Latency,
+                budget: 5,
+            },
+            DeploymentKey {
+                net: "a".into(),
+                objective: Objective::Throughput,
+                budget: 1,
+            },
+            DeploymentKey {
+                net: "a".into(),
+                objective: Objective::Latency,
+                budget: 9,
+            },
+        ];
+        keys.sort();
+        assert_eq!(keys[0].objective, Objective::Latency);
+        assert_eq!(keys[1].objective, Objective::Throughput);
+        assert_eq!(keys[2].net, "b");
+        assert_eq!(keys[0].to_string(), "a/latency/9t");
+    }
+
+    #[test]
+    fn caches_artifacts_and_backends_per_key() {
+        let mut reg = registry();
+        let dep = uniform_dep("mlp-tiny", 8, 8);
+        let key = reg.insert(dep.clone(), Some(4)).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.builds(&key), 1);
+        // Identical re-insert: cache hit, nothing rebuilt.
+        assert_eq!(reg.insert(dep, Some(4)).unwrap(), key);
+        assert_eq!(reg.builds(&key), 1);
+        assert_eq!(reg.eval_batch(&key), Some(4));
+        // First claim hands out the cached backend; second rebuilds over
+        // the same shared pool.
+        let b1 = reg.claim_backend(&key).unwrap();
+        assert_eq!(reg.builds(&key), 1);
+        let b2 = reg.claim_backend(&key).unwrap();
+        assert_eq!(reg.builds(&key), 2);
+        assert!(Arc::ptr_eq(&b1.pool_handle(), reg.pool()));
+        assert!(Arc::ptr_eq(&b2.pool_handle(), reg.pool()));
+        assert_eq!(b1.network_name(), b2.network_name());
+    }
+
+    #[test]
+    fn distinct_precisions_occupy_distinct_keys() {
+        let mut reg = registry();
+        let k8 = reg.insert(uniform_dep("mlp-tiny", 8, 8), None).unwrap();
+        let k6 = reg.insert(uniform_dep("mlp-tiny", 6, 6), None).unwrap();
+        assert_ne!(k8, k6);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.keys(), vec![k6.clone(), k8.clone()]);
+        assert!(k6.budget < k8.budget);
+    }
+
+    #[test]
+    fn key_collision_with_a_different_artifact_is_typed() {
+        let mut reg = registry();
+        let dep = uniform_dep("mlp-tiny", 8, 8);
+        let key = reg.insert(dep.clone(), None).unwrap();
+        // Same (net, objective, budget), different policy: hand-build a
+        // conflicting artifact by re-deriving with different a_bits under
+        // the same tile budget (a_bits do not change the weight
+        // footprint).
+        let nl = dep.policy.len();
+        let conflicting = Deployment::from_policy(
+            "mlp-tiny",
+            &ChipConfig::paper_scaled(),
+            Objective::Latency,
+            Policy::uniform(nl, 8, 4),
+            vec![1; nl],
+            Some(key.budget),
+        )
+        .unwrap();
+        assert_eq!(DeploymentKey::of(&conflicting), key);
+        let err = reg.insert(conflicting, None).unwrap_err();
+        assert!(matches!(err, ApiError::RouteConfig(_)), "{err}");
+        assert!(err.to_string().contains("collision"), "{err}");
+    }
+
+    #[test]
+    fn unknown_key_claims_and_zero_knobs_are_rejected() {
+        let mut reg = registry();
+        let missing = DeploymentKey {
+            net: "mlp-tiny".into(),
+            objective: Objective::Latency,
+            budget: 1,
+        };
+        assert!(reg.claim_backend(&missing).is_err());
+        assert_eq!(reg.builds(&missing), 0);
+        assert!(reg.insert(uniform_dep("mlp-tiny", 8, 8), Some(0)).is_err());
+        assert!(DeploymentRegistry::new(ServeOptions {
+            threads: Some(0),
+            ..ServeOptions::default()
+        })
+        .is_err());
+    }
+}

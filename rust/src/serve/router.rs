@@ -1,0 +1,310 @@
+//! Weighted route/variant selection with canary promotion and rollback.
+//!
+//! A route is a named endpoint carrying one or more *variants* (incumbent
+//! plus challengers), each pinned to a registry [`DeploymentKey`] with a
+//! traffic weight. Selection is smooth weighted round-robin (the nginx
+//! algorithm): deterministic, allocation-free, and exact over any window —
+//! a 3:1 split delivers exactly 3:1 over every 4 consecutive picks, so
+//! A/B comparisons never ride on RNG luck. The router is pure routing
+//! state; the serve front-end (`serve::MultiServer`) keeps the per-variant
+//! servers aligned with the indices this module hands back.
+
+use crate::api::{ApiError, ApiResult};
+use crate::serve::registry::DeploymentKey;
+
+/// One traffic-bearing variant of a route.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    /// Stable label within the route ("incumbent", "canary", …).
+    pub label: String,
+    pub key: DeploymentKey,
+    /// Relative traffic weight (> 0; shares are weight / Σ weights).
+    pub weight: f64,
+}
+
+struct Route {
+    name: String,
+    variants: Vec<Variant>,
+    /// Smooth-WRR credit per variant (same order as `variants`).
+    credits: Vec<f64>,
+    /// Requests routed to each variant so far.
+    hits: Vec<u64>,
+}
+
+/// Named routes, each with weighted variants.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn route_names(&self) -> Vec<String> {
+        self.routes.iter().map(|r| r.name.clone()).collect()
+    }
+
+    /// Register a route. Names must be unique; every variant needs a
+    /// positive finite weight and a label unique within the route.
+    pub fn add_route(&mut self, name: &str, variants: Vec<Variant>) -> ApiResult<()> {
+        if name.is_empty() {
+            return Err(ApiError::RouteConfig("route name must be non-empty".into()));
+        }
+        if self.routes.iter().any(|r| r.name == name) {
+            return Err(ApiError::RouteConfig(format!(
+                "duplicate route name '{name}'"
+            )));
+        }
+        if variants.is_empty() {
+            return Err(ApiError::RouteConfig(format!(
+                "route '{name}' needs at least one variant"
+            )));
+        }
+        for (i, v) in variants.iter().enumerate() {
+            if !(v.weight.is_finite() && v.weight > 0.0) {
+                return Err(ApiError::RouteConfig(format!(
+                    "route '{name}' variant '{}': weight must be a finite number > 0",
+                    v.label
+                )));
+            }
+            if variants[..i].iter().any(|p| p.label == v.label) {
+                return Err(ApiError::RouteConfig(format!(
+                    "route '{name}': duplicate variant label '{}'",
+                    v.label
+                )));
+            }
+        }
+        let n = variants.len();
+        self.routes.push(Route {
+            name: name.to_string(),
+            variants,
+            credits: vec![0.0; n],
+            hits: vec![0; n],
+        });
+        Ok(())
+    }
+
+    fn route_mut(&mut self, name: &str) -> ApiResult<&mut Route> {
+        // Compute the valid-name list up front: the borrow checker won't
+        // let the error arm re-borrow self inside a match on the lookup.
+        let valid = self.route_names();
+        self.routes
+            .iter_mut()
+            .find(|r| r.name == name)
+            .ok_or(ApiError::UnknownRoute {
+                route: name.to_string(),
+                valid,
+            })
+    }
+
+    fn route(&self, name: &str) -> ApiResult<&Route> {
+        self.routes
+            .iter()
+            .find(|r| r.name == name)
+            .ok_or_else(|| ApiError::UnknownRoute {
+                route: name.to_string(),
+                valid: self.route_names(),
+            })
+    }
+
+    /// Pick the next variant for a request on `route` (smooth weighted
+    /// round-robin) and count the hit. Returns the variant's index and a
+    /// clone of its descriptor.
+    pub fn pick(&mut self, route: &str) -> ApiResult<(usize, Variant)> {
+        let r = self.route_mut(route)?;
+        let total: f64 = r.variants.iter().map(|v| v.weight).sum();
+        let mut sel = 0;
+        for i in 0..r.variants.len() {
+            r.credits[i] += r.variants[i].weight;
+            if r.credits[i] > r.credits[sel] {
+                sel = i;
+            }
+        }
+        r.credits[sel] -= total;
+        r.hits[sel] += 1;
+        Ok((sel, r.variants[sel].clone()))
+    }
+
+    /// Per-variant routed-request counts, in variant order.
+    pub fn hits(&self, route: &str) -> ApiResult<Vec<(String, u64)>> {
+        let r = self.route(route)?;
+        Ok(r.variants
+            .iter()
+            .zip(&r.hits)
+            .map(|(v, &h)| (v.label.clone(), h))
+            .collect())
+    }
+
+    /// Variant descriptors of a route, in selection order.
+    pub fn variants(&self, route: &str) -> ApiResult<Vec<Variant>> {
+        Ok(self.route(route)?.variants.clone())
+    }
+
+    /// Promote `label` to sole variant (weight 1.0): the canary won the
+    /// comparison. Returns the index the surviving variant *had*, so the
+    /// caller can retire the other variants' servers.
+    pub fn promote(&mut self, route: &str, label: &str) -> ApiResult<usize> {
+        let r = self.route_mut(route)?;
+        let idx = r
+            .variants
+            .iter()
+            .position(|v| v.label == label)
+            .ok_or_else(|| ApiError::UnknownVariant {
+                route: route.to_string(),
+                variant: label.to_string(),
+            })?;
+        let mut winner = r.variants.swap_remove(idx);
+        winner.weight = 1.0;
+        r.variants = vec![winner];
+        r.credits = vec![0.0];
+        r.hits = vec![r.hits[idx]];
+        Ok(idx)
+    }
+
+    /// Remove `label` from the route: the challenger lost. Refuses to
+    /// remove the last variant (a route must keep serving). Returns the
+    /// removed index so the caller can retire its server.
+    pub fn rollback(&mut self, route: &str, label: &str) -> ApiResult<usize> {
+        let r = self.route_mut(route)?;
+        let idx = r
+            .variants
+            .iter()
+            .position(|v| v.label == label)
+            .ok_or_else(|| ApiError::UnknownVariant {
+                route: route.to_string(),
+                variant: label.to_string(),
+            })?;
+        if r.variants.len() == 1 {
+            return Err(ApiError::UnknownVariant {
+                route: route.to_string(),
+                variant: format!("{label} (cannot remove the route's last variant)"),
+            });
+        }
+        r.variants.remove(idx);
+        r.credits = vec![0.0; r.variants.len()];
+        r.hits.remove(idx);
+        Ok(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replication::Objective;
+
+    fn key(net: &str) -> DeploymentKey {
+        DeploymentKey {
+            net: net.into(),
+            objective: Objective::Latency,
+            budget: 1,
+        }
+    }
+
+    fn v(label: &str, weight: f64) -> Variant {
+        Variant {
+            label: label.into(),
+            key: key("mlp-tiny"),
+            weight,
+        }
+    }
+
+    #[test]
+    fn weighted_split_is_exact_over_a_window() {
+        let mut r = Router::new();
+        r.add_route("ab", vec![v("incumbent", 3.0), v("canary", 1.0)])
+            .unwrap();
+        let mut counts = [0u64; 2];
+        for _ in 0..16 {
+            let (idx, _) = r.pick("ab").unwrap();
+            counts[idx] += 1;
+        }
+        assert_eq!(counts, [12, 4], "3:1 split must be exact over 16 picks");
+        assert_eq!(
+            r.hits("ab").unwrap(),
+            vec![("incumbent".to_string(), 12), ("canary".to_string(), 4)]
+        );
+    }
+
+    #[test]
+    fn fractional_canary_split_is_exact() {
+        // The MultiServer encodes canary fraction f as weights (1-f, f).
+        let mut r = Router::new();
+        r.add_route("c", vec![v("incumbent", 0.75), v("canary", 0.25)])
+            .unwrap();
+        let mut canary = 0u64;
+        for _ in 0..32 {
+            let (_, var) = r.pick("c").unwrap();
+            canary += u64::from(var.label == "canary");
+        }
+        assert_eq!(canary, 8);
+    }
+
+    #[test]
+    fn single_variant_routes_everything_to_it() {
+        let mut r = Router::new();
+        r.add_route("solo", vec![v("incumbent", 1.0)]).unwrap();
+        for _ in 0..5 {
+            assert_eq!(r.pick("solo").unwrap().0, 0);
+        }
+    }
+
+    #[test]
+    fn promote_keeps_only_the_winner() {
+        let mut r = Router::new();
+        r.add_route("ab", vec![v("incumbent", 0.9), v("canary", 0.1)])
+            .unwrap();
+        r.pick("ab").unwrap();
+        let idx = r.promote("ab", "canary").unwrap();
+        assert_eq!(idx, 1);
+        let vars = r.variants("ab").unwrap();
+        assert_eq!(vars.len(), 1);
+        assert_eq!(vars[0].label, "canary");
+        assert_eq!(vars[0].weight, 1.0);
+        for _ in 0..4 {
+            assert_eq!(r.pick("ab").unwrap().1.label, "canary");
+        }
+    }
+
+    #[test]
+    fn rollback_removes_the_loser_but_never_the_last() {
+        let mut r = Router::new();
+        r.add_route("ab", vec![v("incumbent", 0.9), v("canary", 0.1)])
+            .unwrap();
+        let idx = r.rollback("ab", "canary").unwrap();
+        assert_eq!(idx, 1);
+        for _ in 0..4 {
+            assert_eq!(r.pick("ab").unwrap().1.label, "incumbent");
+        }
+        let err = r.rollback("ab", "incumbent").unwrap_err();
+        assert!(matches!(err, ApiError::UnknownVariant { .. }), "{err}");
+        assert!(err.to_string().contains("last variant"), "{err}");
+    }
+
+    #[test]
+    fn unknown_route_and_variant_are_typed() {
+        let mut r = Router::new();
+        r.add_route("ab", vec![v("incumbent", 1.0)]).unwrap();
+        assert!(matches!(
+            r.pick("zz").unwrap_err(),
+            ApiError::UnknownRoute { .. }
+        ));
+        assert!(matches!(
+            r.promote("ab", "zz").unwrap_err(),
+            ApiError::UnknownVariant { .. }
+        ));
+    }
+
+    #[test]
+    fn bad_registrations_are_rejected() {
+        let mut r = Router::new();
+        r.add_route("a", vec![v("incumbent", 1.0)]).unwrap();
+        assert!(r.add_route("a", vec![v("incumbent", 1.0)]).is_err());
+        assert!(r.add_route("b", vec![]).is_err());
+        assert!(r.add_route("c", vec![v("x", 0.0)]).is_err());
+        assert!(r
+            .add_route("d", vec![v("x", 1.0), v("x", 2.0)])
+            .is_err());
+    }
+}

@@ -19,14 +19,23 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Percentile via linear interpolation on the sorted sample, p in [0,100].
+/// Percentile via linear interpolation on the sorted sample.
+///
+/// `p` is clamped into [0, 100]: callers feed operator-supplied percentiles
+/// (serve metrics knobs), and an out-of-range request must degrade to the
+/// nearest order statistic instead of indexing past the sorted sample
+/// (`rank.ceil()` on p > 100 used to read out of bounds). Empty input
+/// returns 0.0; a single sample is every percentile of itself. Sorting uses
+/// `total_cmp` so a NaN sample (e.g. a poisoned latency record) cannot
+/// panic the comparator — NaNs order after +inf and only distort the top
+/// percentiles they occupy.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    s.sort_by(f64::total_cmp);
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
@@ -120,6 +129,35 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_empty_and_single_sample() {
+        // 0 samples: every percentile is 0.0, never a panic.
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        // 1 sample: every percentile is that sample.
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.25], p), 7.25);
+        }
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        // p > 100 used to compute hi = ceil(rank) past the last index.
+        assert_eq!(percentile(&xs, 150.0), 5.0);
+        assert_eq!(percentile(&xs, -10.0), 1.0);
+        assert_eq!(percentile(&[42.0], 1000.0), 42.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // total_cmp orders NaN last; the comparator must not panic and the
+        // lower percentiles of the finite prefix stay meaningful.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0 / 3.0), 2.0);
     }
 
     #[test]

@@ -1,0 +1,351 @@
+//! Integration tests of the multi-deployment serving front-end (tier-2,
+//! pure rust, no artifacts): concurrent submitters driving two routes
+//! through **one shared worker pool**, bitwise routed-vs-direct logits
+//! equality, poison isolation when one route's backend panics, and the
+//! weighted A/B + canary promote/rollback lifecycle.
+
+use lrmp::coordinator::batcher::BatchPolicy;
+use lrmp::coordinator::{InferenceBackend, Server};
+use lrmp::nets;
+use lrmp::quant::Policy;
+use lrmp::replication::Objective;
+use lrmp::runtime::pool::WorkerPool;
+use lrmp::runtime::simnet::{SimBackend, SimOptions};
+use lrmp::serve::{
+    CanarySpec, DeploymentSource, MultiServer, RouteSpec, RoutesConfig, CANARY, INCUMBENT,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+const THREADS: usize = 2;
+
+fn sim_opts() -> SimOptions {
+    SimOptions {
+        threads: Some(THREADS),
+        ..SimOptions::default()
+    }
+}
+
+fn serve_opts() -> lrmp::api::ServeOptions {
+    lrmp::api::ServeOptions {
+        threads: Some(THREADS),
+        ..lrmp::api::ServeOptions::default()
+    }
+}
+
+/// One-per-batch batching: every request rides alone in a zero-padded
+/// batch, which makes routed logits bitwise comparable to a direct eval
+/// (activation quantization scales per tensor over the whole batch, so
+/// batch composition is part of the numeric contract).
+fn solo_batches() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 1,
+        max_wait: Duration::from_millis(2),
+    }
+}
+
+fn probe(dim: usize, tag: usize) -> Vec<f32> {
+    (0..dim)
+        .map(|j| ((j * 7 + tag * 13) % 29) as f32 / 29.0 - 0.4)
+        .collect()
+}
+
+/// Ground truth for a solo request: row 0 of a direct eval of the same
+/// zero-padded batch on a freshly built backend (same net/seed/batch).
+fn direct_solo(
+    net_name: &str,
+    eval_batch: usize,
+    seed: u64,
+    wb: u32,
+    ab: u32,
+    x: &[f32],
+) -> Vec<f32> {
+    let net = nets::by_name(net_name).unwrap();
+    let mut backend = SimBackend::from_network_cfg(&net, eval_batch, seed, sim_opts()).unwrap();
+    let dim = backend.input_dim();
+    assert_eq!(x.len(), dim);
+    let mut padded = vec![0f32; eval_batch * dim];
+    padded[..dim].copy_from_slice(x);
+    let nl = backend.num_layers();
+    let logits = backend
+        .eval(padded, vec![wb as f32; nl], vec![ab as f32; nl])
+        .unwrap();
+    logits[..backend.num_classes()].to_vec()
+}
+
+#[test]
+fn concurrent_submitters_two_routes_one_pool_no_mixing() {
+    let pool = Arc::new(WorkerPool::new(THREADS));
+    let net_a = nets::by_name("mlp-tiny").unwrap();
+    let net_b = nets::by_name("conv-tiny").unwrap();
+    let backend_a =
+        SimBackend::from_network_shared(&net_a, 4, 7, sim_opts(), Arc::clone(&pool)).unwrap();
+    let backend_b =
+        SimBackend::from_network_shared(&net_b, 2, 9, sim_opts(), Arc::clone(&pool)).unwrap();
+    let server_a = Arc::new(Server::start(
+        backend_a,
+        &Policy::uniform(net_a.num_layers(), 8, 8),
+        solo_batches(),
+    ));
+    let server_b = Arc::new(Server::start(
+        backend_b,
+        &Policy::uniform(net_b.num_layers(), 6, 6),
+        solo_batches(),
+    ));
+
+    // Bitwise expected logits per (route, probe tag), computed on private
+    // backends before any traffic flows.
+    const TAGS: usize = 4;
+    let dim_a = server_a.input_dim();
+    let dim_b = server_b.input_dim();
+    let expect_a: Vec<Vec<f32>> = (0..TAGS)
+        .map(|t| direct_solo("mlp-tiny", 4, 7, 8, 8, &probe(dim_a, t)))
+        .collect();
+    let expect_b: Vec<Vec<f32>> = (0..TAGS)
+        .map(|t| direct_solo("conv-tiny", 2, 9, 6, 6, &probe(dim_b, t)))
+        .collect();
+
+    // N client threads interleaving both routes through the one pool. Any
+    // cross-route result mixing breaks the bitwise assertions (the two
+    // nets do not even share input/output shapes).
+    const CLIENTS: usize = 4;
+    const PER_ROUTE: usize = 8; // per client
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let (sa, sb) = (Arc::clone(&server_a), Arc::clone(&server_b));
+        let (ea, eb) = (expect_a.clone(), expect_b.clone());
+        handles.push(std::thread::spawn(move || {
+            for i in 0..PER_ROUTE {
+                let tag = (c + i) % TAGS;
+                let ya = sa.infer(probe(dim_a, tag)).unwrap();
+                assert_eq!(ya, ea[tag], "route A logits diverged (client {c}, tag {tag})");
+                let yb = sb.infer(probe(dim_b, tag)).unwrap();
+                assert_eq!(yb, eb[tag], "route B logits diverged (client {c}, tag {tag})");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let (ma, mb) = (server_a.snapshot_metrics(), server_b.snapshot_metrics());
+    assert_eq!(ma.requests, (CLIENTS * PER_ROUTE) as u64);
+    assert_eq!(mb.requests, (CLIENTS * PER_ROUTE) as u64);
+    assert_eq!(ma.failures, 0);
+    assert_eq!(mb.failures, 0);
+    assert!(ma.latency_p(99.0) > 0.0);
+    assert!(mb.latency_p(99.0) > 0.0);
+}
+
+/// A backend whose every eval poisons a shared-pool job. Models a faulty
+/// route sharing the pool with healthy ones.
+struct PanicBackend {
+    pool: Arc<WorkerPool>,
+}
+
+impl InferenceBackend for PanicBackend {
+    fn backend_name(&self) -> &'static str {
+        "panic-test"
+    }
+    fn num_layers(&self) -> usize {
+        1
+    }
+    fn input_dim(&self) -> usize {
+        8
+    }
+    fn num_classes(&self) -> usize {
+        2
+    }
+    fn eval_batch(&self) -> usize {
+        1
+    }
+    fn eval(
+        &mut self,
+        _x: Vec<f32>,
+        _wb: Vec<f32>,
+        _ab: Vec<f32>,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.pool
+            .try_run(2, |_| panic!("injected route fault"))
+            .map_err(|e| anyhow::anyhow!("pool job failed: {e:?}"))?;
+        unreachable!("the injected fault always poisons the job")
+    }
+}
+
+#[test]
+fn poisoned_route_does_not_contaminate_its_pool_neighbor() {
+    let pool = Arc::new(WorkerPool::new(THREADS));
+    let net = nets::by_name("mlp-tiny").unwrap();
+    let good_backend =
+        SimBackend::from_network_shared(&net, 4, 7, sim_opts(), Arc::clone(&pool)).unwrap();
+    let good = Arc::new(Server::start(
+        good_backend,
+        &Policy::uniform(net.num_layers(), 8, 8),
+        solo_batches(),
+    ));
+    let bad = Arc::new(Server::start(
+        PanicBackend {
+            pool: Arc::clone(&pool),
+        },
+        &Policy::uniform(1, 8, 8),
+        solo_batches(),
+    ));
+
+    let dim = good.input_dim();
+    let expected = direct_solo("mlp-tiny", 4, 7, 8, 8, &probe(dim, 0));
+
+    const N: usize = 8;
+    let bad_driver = {
+        let bad = Arc::clone(&bad);
+        std::thread::spawn(move || {
+            for _ in 0..N {
+                let err = bad.infer(vec![0.5; 8]).unwrap_err();
+                assert!(err.to_string().contains("batch failed"), "{err:#}");
+            }
+        })
+    };
+    let good_driver = {
+        let good = Arc::clone(&good);
+        let expected = expected.clone();
+        std::thread::spawn(move || {
+            for _ in 0..N {
+                // Healthy route keeps serving bitwise-correct logits while
+                // the neighbor poisons job after job on the same pool.
+                assert_eq!(good.infer(probe(dim, 0)).unwrap(), expected);
+            }
+        })
+    };
+    bad_driver.join().unwrap();
+    good_driver.join().unwrap();
+
+    let (mg, mb) = (good.snapshot_metrics(), bad.snapshot_metrics());
+    assert_eq!(mg.requests, N as u64);
+    assert_eq!(mg.failures, 0);
+    assert_eq!(mb.requests, 0, "failed requests must not count as served");
+    assert_eq!(mb.failures, N as u64);
+
+    // And the pool itself stays healthy for direct use.
+    let expected_after = direct_solo("mlp-tiny", 4, 7, 8, 8, &probe(dim, 1));
+    assert_eq!(good.infer(probe(dim, 1)).unwrap(), expected_after);
+}
+
+fn ab_config() -> RoutesConfig {
+    RoutesConfig {
+        routes: vec![
+            RouteSpec {
+                name: "mlp".into(),
+                weight: 3.0,
+                source: DeploymentSource::Uniform {
+                    net: "mlp-tiny".into(),
+                    objective: Objective::Latency,
+                    w_bits: 8,
+                    a_bits: 8,
+                },
+                max_batch: Some(1),
+                deadline_ms: Some(1),
+                eval_batch: Some(4),
+                canary: Some(CanarySpec {
+                    source: DeploymentSource::Uniform {
+                        net: "mlp-tiny".into(),
+                        objective: Objective::Latency,
+                        w_bits: 5,
+                        a_bits: 6,
+                    },
+                    fraction: 0.25,
+                }),
+            },
+            RouteSpec {
+                name: "conv".into(),
+                weight: 1.0,
+                source: DeploymentSource::Uniform {
+                    net: "conv-tiny".into(),
+                    objective: Objective::Latency,
+                    w_bits: 6,
+                    a_bits: 6,
+                },
+                max_batch: Some(1),
+                deadline_ms: Some(1),
+                eval_batch: Some(2),
+                canary: None,
+            },
+        ],
+    }
+}
+
+#[test]
+fn multiserver_ab_split_is_exact_and_bitwise_correct() {
+    let ms = MultiServer::start(&ab_config(), serve_opts()).unwrap();
+    let dim = ms.input_dim("mlp").unwrap();
+
+    // Uniform inline sources carry provenance seed 0 (Deployment::from_policy).
+    let exp_inc = direct_solo("mlp-tiny", 4, 0, 8, 8, &probe(dim, 0));
+    let exp_can = direct_solo("mlp-tiny", 4, 0, 5, 6, &probe(dim, 0));
+    assert_ne!(exp_inc, exp_can, "5/6-bit canary must change the logits");
+
+    // Weighted routing: every response must be bitwise one of the two
+    // variants' expected logits; the split must be exactly 3:1 over 32.
+    let mut canary_hits = 0u64;
+    for _ in 0..32 {
+        let y = ms.infer("mlp", probe(dim, 0)).unwrap();
+        if y == exp_can {
+            canary_hits += 1;
+        } else {
+            assert_eq!(y, exp_inc, "response matches neither variant");
+        }
+    }
+    assert_eq!(canary_hits, 8, "0.25 canary fraction must be exact over 32");
+    let report = ms.route_report("mlp").unwrap();
+    let routed: Vec<u64> = report.variants.iter().map(|v| v.routed).collect();
+    assert_eq!(routed, vec![24, 8]);
+
+    // Pinned verification traffic: bitwise per variant, on both routes.
+    assert_eq!(ms.infer_on("mlp", INCUMBENT, probe(dim, 0)).unwrap(), exp_inc);
+    assert_eq!(ms.infer_on("mlp", CANARY, probe(dim, 0)).unwrap(), exp_can);
+    let cdim = ms.input_dim("conv").unwrap();
+    let exp_conv = direct_solo("conv-tiny", 2, 0, 6, 6, &probe(cdim, 1));
+    assert_eq!(ms.infer_on("conv", INCUMBENT, probe(cdim, 1)).unwrap(), exp_conv);
+
+    // Snapshot carries per-route per-variant percentiles for everything
+    // that served traffic.
+    let j = ms.snapshot_json();
+    assert_eq!(j.get("kind").as_str(), Some("lrmp-serve-metrics"));
+    for route in j.get("routes").as_arr().unwrap() {
+        for v in route.get("variants").as_arr().unwrap() {
+            let m = v.get("metrics");
+            if m.get("requests").as_u64().unwrap() > 0 {
+                assert!(m.get("p99_s").as_f64().unwrap() > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn canary_promotion_and_rollback_lifecycle() {
+    let dim;
+    // Promotion: the canary wins and takes all traffic.
+    {
+        let ms = MultiServer::start(&ab_config(), serve_opts()).unwrap();
+        dim = ms.input_dim("mlp").unwrap();
+        let exp_can = direct_solo("mlp-tiny", 4, 0, 5, 6, &probe(dim, 2));
+        ms.promote("mlp", CANARY).unwrap();
+        for _ in 0..4 {
+            assert_eq!(ms.infer("mlp", probe(dim, 2)).unwrap(), exp_can);
+        }
+        let report = ms.route_report("mlp").unwrap();
+        assert_eq!(report.variants.len(), 1);
+        assert_eq!(report.variants[0].label, CANARY);
+        assert!(ms.infer_on("mlp", INCUMBENT, probe(dim, 2)).is_err());
+    }
+    // Rollback: the canary loses and is removed; the incumbent keeps
+    // serving, and the last variant can never be removed.
+    {
+        let ms = MultiServer::start(&ab_config(), serve_opts()).unwrap();
+        let exp_inc = direct_solo("mlp-tiny", 4, 0, 8, 8, &probe(dim, 2));
+        ms.rollback("mlp", CANARY).unwrap();
+        for _ in 0..4 {
+            assert_eq!(ms.infer("mlp", probe(dim, 2)).unwrap(), exp_inc);
+        }
+        assert!(ms.rollback("mlp", INCUMBENT).is_err());
+        assert!(ms.infer_on("mlp", CANARY, probe(dim, 2)).is_err());
+    }
+}
