@@ -12,10 +12,14 @@
 //! eval (zero after warmup is the contract on the FC path, and the bench
 //! **fails** if an FC net allocates). A serving section stands up the
 //! `lrmp::serve` multi-route front-end (incumbent + canary on one shared
-//! pool) and records routed per-variant latency percentiles. Emits a
-//! machine-readable `BENCH_simnet.json` (schema v5, documented in
-//! `rust/src/api/README.md`) that the CI `bench-smoke` job uploads and
-//! gates on.
+//! pool) and records routed per-variant latency percentiles. A cost-model
+//! section profiles the default chip (per-component area split, peak TOPS,
+//! TOPS/W, TOPS/mm²) and the paper benchmark nets' achieved efficiency,
+//! re-deriving every default-crossbar total through the schema-v1 closed
+//! forms — cost model v2's identity knobs must not move a single bit of
+//! the v5 aggregate cycles. Emits a machine-readable `BENCH_simnet.json`
+//! (schema v6, documented in `rust/src/api/README.md`) that the CI
+//! `bench-smoke` job uploads and gates on.
 //!
 //! Plain `fn main` bench (`harness = false`):
 //!
@@ -26,7 +30,9 @@
 //! **fails (exit 1)** if any kernel's output diverges bitwise from the
 //! naive reference, if the pass-optimized, passes-off and reference
 //! executors disagree on any logit (residual adds and fused convs
-//! included), if a net with fused convs does not shrink its arena, if an
+//! included), if the cost model's default-crossbar totals diverge bitwise
+//! from the schema-v1 closed forms, if a net with fused convs does not
+//! shrink its arena, if an
 //! FC net's steady-state eval allocates, or — when `--baseline` points at
 //! a *calibrated* committed `BENCH_simnet.json` — if the pooled aggregate
 //! GFLOP/s regressed more than 20% against it. `--summary` additionally
@@ -34,14 +40,18 @@
 //! summary, with a loud warning while the committed baseline is still the
 //! uncalibrated seed placeholder).
 
+use lrmp::arch::ChipConfig;
 use lrmp::bench_harness::{fmt_time, Bencher, Table};
 use lrmp::cli::Args;
 use lrmp::coordinator::InferenceBackend;
+use lrmp::cost::breakdown::{ChipProfile, NetworkBreakdown};
+use lrmp::cost::{CostModel, NetworkCost, ACC_BITS};
 use lrmp::nets::{self, LayerKind};
 use lrmp::runtime::gemm::{self, ConvGeom, PackedMat};
 use lrmp::runtime::passes::PassConfig;
 use lrmp::runtime::pool::WorkerPool;
 use lrmp::runtime::simnet::{SimBackend, SimOptions};
+use lrmp::util::ceil_div;
 use lrmp::util::json::Json;
 use lrmp::util::prng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -456,7 +466,77 @@ fn main() {
         (j, ok)
     };
 
-    // --- machine-readable artifact (schema v5) -------------------------
+    // --- cost model v2 breakdown (new in schema v6) --------------------
+    // The default-crossbar chip's component profile plus per-net achieved
+    // TOPS/W and TOPS/mm² on the paper benchmark nets, straight from the
+    // analytical cost model (no timing noise — a pure artifact block).
+    // Every net's totals are re-derived through the schema-v1 closed
+    // forms and compared bit for bit: cost model v2's identity knobs
+    // (crossbar, ADC share 1, 1-bit streaming) must not move the v5
+    // aggregate cycles or energy at all.
+    let (breakdown_json, cost_v1_bitwise_ok) = {
+        let chip = ChipConfig::paper_scaled();
+        let model = CostModel::new(chip.clone());
+        let profile = ChipProfile::of(&chip);
+        println!(
+            "cost-model profile: {} array, chip {:.1} mm2, peak {:.1} TOPS, \
+             {:.1} TOPS/W, {:.3} TOPS/mm2",
+            chip.array_type.as_str(),
+            profile.chip_area_mm2,
+            profile.tops_peak,
+            profile.topsw_peak,
+            profile.topsmm2_peak,
+        );
+        let mut nets_bd: Vec<Json> = Vec::new();
+        let mut all_bitwise = true;
+        for name in ["mlp", "resnet18", "resnet34", "resnet50", "resnet101"] {
+            let net = nets::by_name(name).expect("paper nets are registered");
+            let cost = model.baseline(&net);
+            let bd = NetworkBreakdown::of(&chip, &cost);
+            let bitwise = v1_totals_bitwise(&model, &net, &cost);
+            all_bitwise &= bitwise;
+            // 2 ops per (8-bit) MAC of the lowered GEMMs.
+            let ops: f64 = net
+                .layers
+                .iter()
+                .map(|l| {
+                    2.0 * l.lowered_rows() as f64
+                        * l.lowered_cols() as f64
+                        * l.num_vectors() as f64
+                })
+                .sum();
+            let tops_w = ops / cost.energy_j.max(1e-30) / 1e12;
+            let tops_mm2 = ops * cost.throughput() / profile.chip_area_mm2.max(1e-30) / 1e12;
+            println!(
+                "  -> {name}: {} tiles, latency {:.2} ms, {:.1} uJ/inf, \
+                 {:.3} TOPS/W, {:.4} TOPS/mm2, v1-bitwise {bitwise}",
+                cost.tiles_used,
+                cost.latency_s() * 1e3,
+                cost.energy_j * 1e6,
+                tops_w,
+                tops_mm2,
+            );
+            nets_bd.push(Json::obj(vec![
+                ("net", Json::Str(name.into())),
+                ("tiles", Json::Num(cost.tiles_used as f64)),
+                ("latency_s", Json::Num(cost.latency_s())),
+                ("energy_j", Json::Num(cost.energy_j)),
+                ("tops_w", Json::Num(tops_w)),
+                ("tops_mm2", Json::Num(tops_mm2)),
+                ("tile_energy_split_j", bd.energy_j.to_json()),
+                ("v1_bitwise", Json::Bool(bitwise)),
+            ]));
+        }
+        println!();
+        let j = Json::obj(vec![
+            ("chip", profile.to_json()),
+            ("nets", Json::Arr(nets_bd)),
+            ("v1_totals_bitwise", Json::Bool(all_bitwise)),
+        ]);
+        (j, all_bitwise)
+    };
+
+    // --- machine-readable artifact (schema v6) -------------------------
     let gemm_json = Json::Arr(
         rows.iter()
             .map(|r| {
@@ -516,7 +596,7 @@ fn main() {
     );
     let report = Json::obj(vec![
         ("kind", Json::Str("lrmp-bench-simnet".into())),
-        ("schema_version", Json::Num(5.0)),
+        ("schema_version", Json::Num(6.0)),
         ("calibrated", Json::Bool(true)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(threads as f64)),
@@ -528,6 +608,7 @@ fn main() {
         ("pooled_conv_lowering_bit_exact", Json::Bool(pooled_conv_exact)),
         ("nets", nets_json),
         ("serving", serving_json),
+        ("breakdown", breakdown_json),
     ]);
     report.to_file(std::path::Path::new(&out_path)).expect("write bench json");
     println!("\nwrote {out_path}");
@@ -572,6 +653,13 @@ fn main() {
         );
         std::process::exit(1);
     }
+    if !cost_v1_bitwise_ok {
+        eprintln!(
+            "FAIL: cost model v2 moved the default-crossbar totals — the schema-v1 \
+             closed forms no longer reproduce CostModel::network bit for bit"
+        );
+        std::process::exit(1);
+    }
     let conv_fused = net_rows.iter().any(|r| r.net == "Conv-tiny" && r.fused_convs > 0);
     if !conv_fused {
         eprintln!("FAIL: the pass pipeline did not fuse conv-tiny's Conv+Pool chain");
@@ -608,6 +696,51 @@ fn main() {
 
 fn bits_of(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Re-derives a net's 8-bit baseline totals through the schema-v1 closed
+/// forms — no v2 helpers (`dac_stream_phases`, `adc_batches`, `row_phases`,
+/// array power factor), just the raw chip fields in the exact v1 evaluation
+/// order — and compares against `CostModel::network` bit for bit. The v2
+/// breakdowns are a decomposition, not a re-cost: at the identity knobs the
+/// two derivations must agree on every bit.
+fn v1_totals_bitwise(model: &CostModel, net: &nets::Network, cost: &NetworkCost) -> bool {
+    let c = &model.chip;
+    let x = c.tile_size;
+    let (w_b, a_b) = (8u64, 8u64);
+    let mut layer_cycles: Vec<f64> = Vec::new();
+    let mut e_tile_sum = 0.0f64;
+    let mut e_sram_sum = 0.0f64;
+    for l in &net.layers {
+        let (r_rows, n_cols, vecs) = (l.lowered_rows(), l.lowered_cols(), l.num_vectors());
+        let row_tiles = ceil_div(r_rows, x);
+        let col_tiles = ceil_div(n_cols, x);
+        let slices = ceil_div(w_b, c.device_bits as u64);
+        let tiles = row_tiles * col_tiles * slices;
+        // v1 T_tile: vecs · a_b · ceil(X/n_ADC) · ceil(min(R,X)/p) · phase.
+        let t_tile = vecs
+            * a_b
+            * ceil_div(x, c.adcs_per_tile)
+            * ceil_div(r_rows.min(x), c.row_parallelism)
+            * c.tile_phase_cycles;
+        let clusters = ceil_div(tiles, c.tiles_per_cluster()).max(1);
+        let in_bits = vecs * r_rows * a_b;
+        let t_tile_in = ceil_div(in_bits, c.in_bus_lanes * c.in_bus_bits * clusters);
+        let out_bits = vecs * n_cols * row_tiles * slices * ACC_BITS;
+        let t_tile_out = ceil_div(out_bits, c.out_bus_lanes * c.out_bus_bits * clusters);
+        let d_ops = vecs * n_cols * (row_tiles * slices + 1);
+        let t_digital = ceil_div(d_ops, c.lanes_per_vm * clusters);
+        // r = 1 everywhere in the baseline, so T_l / r is the exact value.
+        layer_cycles.push((t_tile_in + t_tile_out + t_tile + t_digital) as f64);
+        e_tile_sum += tiles as f64 * c.tile_power_w * (t_tile as f64) * c.cycle_s();
+        let sram_bits = in_bits + 2 * out_bits + vecs * n_cols * a_b;
+        e_sram_sum += (sram_bits as f64 / 32.0) * c.sram_access_j;
+    }
+    let total_cycles: f64 = layer_cycles.iter().sum();
+    let e_leak = c.sram_leak_w_per_vm * c.n_vector_modules as f64 * (total_cycles * c.cycle_s());
+    let energy_j = e_tile_sum + e_sram_sum + e_leak;
+    total_cycles.to_bits() == cost.total_cycles.to_bits()
+        && energy_j.to_bits() == cost.energy_j.to_bits()
 }
 
 /// Allocations per eval in steady state: warm the arena/caches, then

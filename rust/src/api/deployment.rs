@@ -4,21 +4,34 @@
 //!
 //! A Deployment bundles everything needed to reproduce and run a searched
 //! design: the chip configuration (Table I), the per-layer quantization
-//! policy, the replication plan, the predicted cost-model metrics, and
+//! policy, the replication plan, the resolved cluster placement, the
+//! per-component cost breakdown, the predicted cost-model metrics, and
 //! search provenance. It is versioned (`schema_version`) and round-trips
 //! through JSON byte-for-byte-equivalently (`save` → `load` → deep equal).
+//!
+//! Schema v2 (cost model v2) adds the `placement` and `breakdown` blocks
+//! and moves the array organization into the chip block. v1 artifacts
+//! still load: the missing blocks are re-derived from the recorded design
+//! (deterministic — the same code path that produced them at search time)
+//! and the artifact is upgraded in memory, so a subsequent `save` emits v2.
 
 use crate::api::{ApiError, ApiResult};
 use crate::arch::ChipConfig;
+use crate::cost::breakdown::NetworkBreakdown;
 use crate::cost::{CostModel, NetworkCost};
+use crate::mapping::{self, ChipPlacement};
 use crate::nets;
 use crate::quant::Policy;
 use crate::replication::Objective;
 use crate::util::json::Json;
 use std::path::Path;
 
-/// Schema version written by this build; `load` rejects other versions.
-pub const SCHEMA_VERSION: u64 = 1;
+/// Schema version written by this build; `load` accepts v1 and v2 and
+/// rejects everything else.
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// Oldest schema version `load` still migrates forward.
+pub const MIN_SCHEMA_VERSION: u64 = 1;
 
 /// Marker distinguishing deployment artifacts from other JSON files.
 pub const DEPLOYMENT_KIND: &str = "lrmp-deployment";
@@ -106,8 +119,43 @@ pub struct Deployment {
     pub policy: Policy,
     pub replication: Vec<u64>,
     pub tiles_used: u64,
+    /// Cluster-level placement of every replica (schema v2). Derived on
+    /// load for v1 artifacts.
+    pub placement: ChipPlacement,
+    /// Per-component area/energy/tclk breakdown and peak TOPS/W, TOPS/mm²
+    /// for the resolved chip (schema v2). Derived on load for v1 artifacts.
+    pub breakdown: NetworkBreakdown,
     pub predicted: PredictedMetrics,
     pub provenance: Provenance,
+}
+
+/// Derive the schema-v2 blocks from the resolved design: FFD-place every
+/// replica onto the chip's clusters and capture the component breakdown.
+/// The placement chip is widened to `n_tiles` when a `--tiles` budget
+/// exceeded the physical count, so widened-budget searches still place.
+fn derive_runtime(
+    chip: &ChipConfig,
+    net: &nets::Network,
+    policy: &Policy,
+    replication: &[u64],
+    n_tiles: u64,
+) -> ApiResult<(ChipPlacement, NetworkBreakdown)> {
+    let model = CostModel::new(chip.clone());
+    let costs = model.layers(net, policy);
+    let demands: Vec<(usize, u64, u64)> = costs
+        .iter()
+        .enumerate()
+        .map(|(l, c)| (l, replication[l], c.tiles))
+        .collect();
+    let place_chip = chip.with_tiles(n_tiles.max(chip.n_tiles));
+    let placement = mapping::place(&place_chip, &demands).map_err(|e| match e {
+        mapping::PlacementError::OverCapacity { demand, capacity } => ApiError::Infeasible {
+            needed: demand,
+            available: capacity,
+        },
+    })?;
+    let cost = model.network(net, policy, replication);
+    Ok((placement, NetworkBreakdown::of(chip, &cost)))
 }
 
 impl Deployment {
@@ -120,6 +168,14 @@ impl Deployment {
         provider_name: &str,
         res: &crate::lrmp::SearchResult,
     ) -> Deployment {
+        let (placement, breakdown) = derive_runtime(
+            chip,
+            net,
+            &res.best_policy,
+            &res.best_plan.replication,
+            n_tiles,
+        )
+        .expect("a budget-enforced search plan always fits its own chip");
         Deployment {
             schema_version: SCHEMA_VERSION,
             net: net.name.clone(),
@@ -129,6 +185,8 @@ impl Deployment {
             policy: res.best_policy.clone(),
             replication: res.best_plan.replication.clone(),
             tiles_used: res.optimized.tiles_used,
+            placement,
+            breakdown,
             predicted: PredictedMetrics::from_costs(
                 &res.optimized,
                 &res.baseline,
@@ -193,6 +251,7 @@ impl Deployment {
             });
         }
         let surrogate = crate::quant::SqnrSurrogate::for_benchmark(&net);
+        let (placement, breakdown) = derive_runtime(chip, &net, &policy, &replication, n_tiles)?;
         Ok(Deployment {
             schema_version: SCHEMA_VERSION,
             net: net.name.clone(),
@@ -200,6 +259,8 @@ impl Deployment {
             chip: chip.clone(),
             n_tiles,
             tiles_used: cost.tiles_used,
+            placement,
+            breakdown,
             predicted: PredictedMetrics::from_costs(
                 &cost,
                 &base,
@@ -242,6 +303,8 @@ impl Deployment {
             ("policy", self.policy.to_json()),
             ("replication", Json::arr_u64(&self.replication)),
             ("tiles_used", Json::Num(self.tiles_used as f64)),
+            ("placement", self.placement.to_json()),
+            ("breakdown", self.breakdown.to_json()),
             (
                 "predicted",
                 Json::obj(vec![
@@ -300,7 +363,7 @@ impl Deployment {
             .get("schema_version")
             .as_u64()
             .ok_or_else(|| missing("schema_version"))?;
-        if schema_version != SCHEMA_VERSION {
+        if !(MIN_SCHEMA_VERSION..=SCHEMA_VERSION).contains(&schema_version) {
             return Err(ApiError::SchemaVersion {
                 found: schema_version,
                 supported: SCHEMA_VERSION,
@@ -320,8 +383,7 @@ impl Deployment {
             .map_err(|_| ApiError::UnknownObjective {
                 name: j.get("objective").as_str().unwrap_or("").to_string(),
             })?;
-        let chip = ChipConfig::from_json(j.get("chip"))
-            .ok_or_else(|| ApiError::MalformedDeployment("bad 'chip' block".into()))?;
+        let chip = ChipConfig::parse_json(j.get("chip"))?;
         let n_tiles = j.get("n_tiles").as_u64().ok_or_else(|| missing("n_tiles"))?;
         let policy = Policy::from_json(j.get("policy"))
             .ok_or_else(|| ApiError::MalformedDeployment("bad 'policy' block".into()))?;
@@ -398,8 +460,29 @@ impl Deployment {
                 .to_string(),
         };
 
+        // Schema v2 carries the placement + breakdown blocks verbatim; a v1
+        // artifact is migrated by re-deriving them from the recorded design
+        // (the artifact is upgraded in memory — a re-save emits v2).
+        let (placement, breakdown) = if schema_version >= 2 {
+            let placement = ChipPlacement::parse_json(j.get("placement"))
+                .ok_or_else(|| ApiError::MalformedDeployment("bad 'placement' block".into()))?;
+            let breakdown = NetworkBreakdown::parse_json(j.get("breakdown"))
+                .ok_or_else(|| ApiError::MalformedDeployment("bad 'breakdown' block".into()))?;
+            (placement, breakdown)
+        } else {
+            let network = nets::by_name(&net)
+                .ok_or_else(|| ApiError::UnknownNetwork { name: net.clone() })?;
+            if policy.len() != network.num_layers() || replication.len() != network.num_layers() {
+                return Err(ApiError::MalformedDeployment(format!(
+                    "policy/replication must have {} entries for {net}",
+                    network.num_layers()
+                )));
+            }
+            derive_runtime(&chip, &network, &policy, &replication, n_tiles)?
+        };
+
         Ok(Deployment {
-            schema_version,
+            schema_version: SCHEMA_VERSION,
             net,
             objective,
             chip,
@@ -407,6 +490,8 @@ impl Deployment {
             policy,
             replication,
             tiles_used,
+            placement,
+            breakdown,
             predicted,
             provenance,
         })
@@ -504,6 +589,22 @@ impl Deployment {
                 self.predicted.total_cycles, cost.total_cycles
             ));
         }
+        if self.placement.array_type != self.chip.array_type {
+            drift.push(format!(
+                "placement was computed for {} but the chip is {}",
+                self.placement.array_type.as_str(),
+                self.chip.array_type.as_str()
+            ));
+        }
+        if self.placement.tiles_used() != cost.tiles_used {
+            drift.push(format!(
+                "placement allocates {} tiles but the plan demands {}",
+                self.placement.tiles_used(),
+                cost.tiles_used
+            ));
+        }
+        let place_chip = self.chip.with_tiles(self.n_tiles.max(self.chip.n_tiles));
+        drift.extend(self.placement.validate(&place_chip));
         if !drift.is_empty() {
             return Err(ApiError::Validation(drift));
         }
@@ -524,6 +625,8 @@ mod tests {
         let policy = Policy::baseline(nl);
         let replication = vec![1u64; nl];
         let cost = model.network(&net, &policy, &replication);
+        let (placement, breakdown) =
+            derive_runtime(&chip, &net, &policy, &replication, cost.tiles_used).unwrap();
         Deployment {
             schema_version: SCHEMA_VERSION,
             net: net.name.clone(),
@@ -533,6 +636,8 @@ mod tests {
             policy,
             replication,
             tiles_used: cost.tiles_used,
+            placement,
+            breakdown,
             predicted: PredictedMetrics::from_costs(&cost, &cost, (0.98, 0.98, 0.98)),
             provenance: Provenance {
                 episodes: 0,
@@ -555,6 +660,49 @@ mod tests {
         let text = j.pretty();
         let back = Deployment::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(d, back);
+    }
+
+    #[test]
+    fn v1_artifact_loads_and_upgrades_to_v2() {
+        // Emulate a genuine schema-v1 file: no placement/breakdown blocks,
+        // no v2 chip keys. Loading must migrate it to the same in-memory
+        // deployment a v2 save would produce (derivation is deterministic),
+        // so a subsequent save → load round-trips deep-equal.
+        let d = baseline_deployment("mlp");
+        let mut o = match d.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("schema_version".into(), Json::Num(1.0));
+        o.remove("placement");
+        o.remove("breakdown");
+        if let Some(Json::Obj(chip)) = o.get_mut("chip") {
+            chip.remove("array_type");
+            chip.remove("adc_share_factor");
+            chip.remove("bit_serial_precision");
+        } else {
+            panic!("chip block missing");
+        }
+        let migrated = Deployment::from_json(&Json::Obj(o)).unwrap();
+        assert_eq!(migrated.schema_version, SCHEMA_VERSION);
+        assert_eq!(migrated, d);
+        // And the upgraded artifact validates + re-round-trips as v2.
+        migrated.validate().unwrap();
+        let again = Deployment::from_json(&migrated.to_json()).unwrap();
+        assert_eq!(again, migrated);
+    }
+
+    #[test]
+    fn placement_and_breakdown_are_consistent() {
+        let d = baseline_deployment("resnet18");
+        assert_eq!(d.placement.tiles_used(), d.tiles_used);
+        assert_eq!(d.placement.array_type, d.chip.array_type);
+        let total = d.breakdown.profile.tile_area_mm2.total();
+        assert!(total > 0.0 && d.breakdown.profile.tops_peak > 0.0);
+        // Tampered placement is caught by validate.
+        let mut bad = d.clone();
+        bad.placement.placements.pop();
+        assert!(matches!(bad.validate(), Err(ApiError::Validation(_))));
     }
 
     #[test]

@@ -26,6 +26,9 @@ pub enum ApiError {
     },
     /// A builder/CLI parameter is out of range or inconsistent.
     InvalidConfig(String),
+    /// A chip-config block failed strict parsing (unknown key, missing or
+    /// ill-typed field, or an internally inconsistent parameter set).
+    ChipConfig(String),
     /// The network is known but the chosen execution backend cannot run it
     /// (e.g. the sim backend on a residual topology). `reason` is the
     /// backend's capability-query explanation.
@@ -97,6 +100,7 @@ impl fmt::Display for ApiError {
                 }
             }
             ApiError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            ApiError::ChipConfig(msg) => write!(f, "invalid chip config: {msg}"),
             ApiError::UnsupportedNetwork { backend, net, reason } => write!(
                 f,
                 "the {backend} backend cannot serve '{net}': {reason}"

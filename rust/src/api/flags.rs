@@ -79,6 +79,11 @@ const SEARCH_FLAGS: &[FlagDef] = &[
     val("samples", "live-eval test samples (default 512)"),
     val("noise", "score under analog noise: 'typical' or a sigma"),
     val("out", "write the Deployment artifact to this file"),
+    val("chip-config", "chip overrides from a ChipConfig JSON file"),
+    val(
+        "arrays",
+        "comma-separated NVM array candidates: crossbar,1T1R,2T2R",
+    ),
     switch("live", "use live PJRT accuracy (MLP benchmarks only)"),
 ];
 
@@ -119,7 +124,14 @@ const SERVE_FLAGS: &[FlagDef] = &[
 
 const ROUTES_FLAGS: &[FlagDef] = &[val("config", "routes config JSON (or positional FILE)")];
 
-const INSPECT_FLAGS: &[FlagDef] = &[val("deployment", "artifact to inspect (or positional FILE)")];
+const INSPECT_FLAGS: &[FlagDef] = &[
+    val("deployment", "artifact to inspect (or positional FILE)"),
+    val("chip-config", "re-profile under a ChipConfig JSON file"),
+    switch(
+        "breakdown",
+        "per-component area/energy/tclk table and peak TOPS/W, TOPS/mm2",
+    ),
+];
 
 /// Every subcommand of the `lrmp` binary.
 pub const SUBCOMMANDS: &[SubcommandSpec] = &[

@@ -17,7 +17,7 @@
 //! ```
 
 use crate::api::{ApiError, ApiResult, Deployment};
-use crate::arch::ChipConfig;
+use crate::arch::{ArrayType, ChipConfig};
 use crate::coordinator::{batcher::BatchPolicy, Server};
 use crate::cost::{CostModel, NetworkCost};
 use crate::lrmp::{AccuracyProvider, LiveAccuracy, Lrmp, SearchConfig, SearchResult};
@@ -159,6 +159,15 @@ impl Session {
     /// Search on a different chip configuration.
     pub fn chip(mut self, chip: ChipConfig) -> Self {
         self.chip = chip;
+        self
+    }
+
+    /// Widen the search across NVM array organizations (cost model v2):
+    /// each episode's policy is scored under every candidate's iso-area
+    /// tile budget and the best array is resolved into the artifact. The
+    /// default `[Crossbar]` reproduces the single-array v1 trajectory.
+    pub fn arrays(mut self, array_types: Vec<ArrayType>) -> Self {
+        self.cfg.array_types = array_types;
         self
     }
 
@@ -500,6 +509,23 @@ mod tests {
             Session::new("alexnet"),
             Err(ApiError::UnknownNetwork { .. })
         ));
+    }
+
+    #[test]
+    fn widened_array_search_yields_a_consistent_artifact() {
+        // The full session path with the v2 search space: whatever array
+        // the search resolves, the artifact must embed a matching chip,
+        // placement, and breakdown, and re-validate cleanly.
+        let dep = Session::new("mlp")
+            .unwrap()
+            .episodes(2)
+            .seed(11)
+            .arrays(ArrayType::all().to_vec())
+            .search()
+            .unwrap();
+        assert_eq!(dep.chip.array_type, dep.placement.array_type);
+        assert_eq!(dep.chip.array_type, dep.breakdown.profile.array_type);
+        dep.validate().unwrap();
     }
 
     #[test]

@@ -1,12 +1,106 @@
 //! Microarchitecture model of the target spatial IMC chip (paper §IV-A /
 //! Table I): a scaled-up version of the ISSCC'22 40nm RRAM/SRAM
-//! compute-in-memory system [17] — 1T-1R RRAM crossbar tiles with per-tile
+//! compute-in-memory system [17] — RRAM array tiles with per-tile
 //! Flash ADCs, digital vector modules, and shared transport buses.
+//!
+//! Cost model v2 parameterizes the NVM array itself (zigzag `ImcNvmArray`
+//! shape): array type (crossbar / 1T1R / 2T2R), ADC resolution and share
+//! factor, and DAC bit-serial precision, with per-component area and
+//! energy-fraction breakdowns. All new knobs default to the identity so the
+//! default-crossbar cost totals are bitwise unchanged vs schema v1.
 
+use crate::api::error::{ApiError, ApiResult};
 use crate::util::ceil_div;
 use crate::util::json::Json;
 
-/// Full chip configuration. Field names follow Table I of the paper.
+/// 40nm technology: F = 40 nm, so F² = 1600 nm² = 1.6e-9 mm².
+const F2_MM2: f64 = 1.6e-9;
+/// Flash-ADC area per comparator level (2^bits levels per ADC), mm².
+const ADC_UNIT_AREA_MM2: f64 = 1.0e-5;
+/// DAC driver area per row at 1-bit streaming, mm² (doubles per extra bit).
+const DAC_UNIT_AREA_MM2: f64 = 2.0e-7;
+/// Transport-bus area per bus bit (lanes × width), mm².
+const ROUTING_BIT_AREA_MM2: f64 = 1.0e-6;
+/// Digital accumulator area per register bit, mm².
+const ACC_BIT_AREA_MM2: f64 = 1.0e-6;
+/// Partial-sum accumulator width; matches `cost::ACC_BITS`.
+const ACC_BITS: u64 = 16;
+
+/// NVM array cell organization (zigzag `ImcNvmArray` cell types).
+///
+/// - `Crossbar`: densest (4F² cell), but sneak-path limited — one wordline
+///   group at a time (no extra row parallelism).
+/// - `OneT1R`: access transistor per cell (12F²); isolated cells allow
+///   doubling the simultaneously-driven row groups *if* the ADC has the
+///   headroom to resolve the larger partial sums.
+/// - `TwoT2R`: differential pair (24F²); same row-parallel benefit plus
+///   signed weights in one cell, at the highest area and drive power.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrayType {
+    Crossbar,
+    OneT1R,
+    TwoT2R,
+}
+
+impl ArrayType {
+    /// Canonical spelling used in JSON artifacts and CLI flags.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArrayType::Crossbar => "crossbar",
+            ArrayType::OneT1R => "1T1R",
+            ArrayType::TwoT2R => "2T2R",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str) (case-insensitive).
+    pub fn parse(s: &str) -> Option<ArrayType> {
+        match s.to_ascii_lowercase().as_str() {
+            "crossbar" => Some(ArrayType::Crossbar),
+            "1t1r" => Some(ArrayType::OneT1R),
+            "2t2r" => Some(ArrayType::TwoT2R),
+            _ => None,
+        }
+    }
+
+    /// All variants, in search-preference order (cheapest area first, so
+    /// reward ties resolve toward the crossbar baseline).
+    pub fn all() -> [ArrayType; 3] {
+        [ArrayType::Crossbar, ArrayType::OneT1R, ArrayType::TwoT2R]
+    }
+
+    /// Cell footprint in F² (crossbar 4F², 1T1R 12F², 2T2R 24F²).
+    pub fn cell_area_f2(&self) -> f64 {
+        match self {
+            ArrayType::Crossbar => 4.0,
+            ArrayType::OneT1R => 12.0,
+            ArrayType::TwoT2R => 24.0,
+        }
+    }
+
+    /// Upper bound on the row-parallelism multiplier the cell isolation
+    /// permits. The *effective* boost is additionally gated by ADC headroom
+    /// — see [`ChipConfig::effective_row_parallelism`].
+    pub fn row_parallel_factor(&self) -> u64 {
+        match self {
+            ArrayType::Crossbar => 1,
+            ArrayType::OneT1R => 2,
+            ArrayType::TwoT2R => 2,
+        }
+    }
+
+    /// Relative tile drive power vs the crossbar (access transistors and
+    /// differential pairs cost static + switching power).
+    pub fn tile_power_factor(&self) -> f64 {
+        match self {
+            ArrayType::Crossbar => 1.0,
+            ArrayType::OneT1R => 1.1,
+            ArrayType::TwoT2R => 1.25,
+        }
+    }
+}
+
+/// Full chip configuration. Field names follow Table I of the paper; the
+/// last three fields are the cost-model-v2 array knobs (identity defaults).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ChipConfig {
     /// Crossbar tile dimension X (tiles are X×X). Paper: 256.
@@ -47,6 +141,16 @@ pub struct ChipConfig {
     pub sram_access_j: f64,
     /// SRAM leakage power per vector module, watts (40nm-class estimate).
     pub sram_leak_w_per_vm: f64,
+    /// NVM cell organization. Default: `Crossbar` (schema-v1 behavior).
+    pub array_type: ArrayType,
+    /// Columns time-multiplexed onto one physical ADC. 1 (default) keeps
+    /// every `adcs_per_tile` converter physical; k > 1 shrinks ADC area k×
+    /// but multiplies the ADC batch count.
+    pub adc_share_factor: u64,
+    /// Activation bits converted per DAC phase. 1 (default) is the paper's
+    /// bit-serial streaming; b > 1 cuts stream phases ceil(a_b/b)× at
+    /// exponential DAC area cost.
+    pub bit_serial_precision: u32,
 }
 
 impl ChipConfig {
@@ -72,6 +176,9 @@ impl ChipConfig {
             tile_phase_cycles: 1,
             sram_access_j: 2e-12,
             sram_leak_w_per_vm: 5e-5,
+            array_type: ArrayType::Crossbar,
+            adc_share_factor: 1,
+            bit_serial_precision: 1,
         }
     }
 
@@ -95,6 +202,14 @@ impl ChipConfig {
         }
     }
 
+    /// A config with a different array organization, everything else equal.
+    pub fn with_array(&self, array_type: ArrayType) -> Self {
+        ChipConfig {
+            array_type,
+            ..self.clone()
+        }
+    }
+
     /// Tiles served by one vector module ("cluster"). ISSCC'22: 288/2 = 144.
     pub fn tiles_per_cluster(&self) -> u64 {
         ceil_div(self.n_tiles, self.n_vector_modules)
@@ -105,23 +220,143 @@ impl ChipConfig {
         1.0 / self.clock_hz
     }
 
-    /// ADC batches needed to read all X columns of a tile: ceil(X / n_ADC).
+    /// Physical ADCs per tile after time-multiplex sharing.
+    pub fn effective_adcs_per_tile(&self) -> u64 {
+        (self.adcs_per_tile / self.adc_share_factor.max(1)).max(1)
+    }
+
+    /// Largest wordline count whose worst-case partial sum still fits the
+    /// ADC range: floor((2^adc_bits − 1) / ((2^s_b − 1)(2^dac_b − 1))).
+    pub fn adc_max_rows(&self) -> u64 {
+        let unit =
+            (((1u64 << self.device_bits) - 1) * ((1u64 << self.dac_bits) - 1)).max(1);
+        (((1u64 << self.adc_bits) - 1) / unit).max(1)
+    }
+
+    /// Row-parallelism multiplier actually usable: the cell-isolation bound
+    /// of the array type, gated by ADC headroom. At the paper's 4-bit ADC
+    /// the headroom over p = 9 is nil (floor(15/9) = 1), so 1T1R/2T2R get no
+    /// boost; a 5-bit ADC (floor(31/9) = 3) unlocks the full 2×.
+    pub fn row_boost(&self) -> u64 {
+        let headroom = (self.adc_max_rows() / self.row_parallelism.max(1)).max(1);
+        self.array_type.row_parallel_factor().min(headroom).max(1)
+    }
+
+    /// Wordlines activated simultaneously, including the array-type boost.
+    pub fn effective_row_parallelism(&self) -> u64 {
+        self.row_parallelism * self.row_boost()
+    }
+
+    /// ADC batches needed to read all X columns of a tile:
+    /// ceil(X / effective n_ADC).
     pub fn adc_batches(&self) -> u64 {
-        ceil_div(self.tile_size, self.adcs_per_tile)
+        ceil_div(self.tile_size, self.effective_adcs_per_tile())
     }
 
-    /// Row phases to present `rows` wordlines at row-parallelism p.
+    /// Row phases to present `rows` wordlines at the effective parallelism.
     pub fn row_phases(&self, rows: u64) -> u64 {
-        ceil_div(rows.min(self.tile_size), self.row_parallelism)
+        ceil_div(rows.min(self.tile_size), self.effective_row_parallelism())
     }
 
-    /// Maximum partial-sum value of one row group with 1-bit devices and
-    /// 1-bit streamed inputs — must fit in the ADC range (no clipping).
+    /// DAC phases to stream `a_bits` activation bits at the configured
+    /// bit-serial precision: ceil(a_bits / bit_serial_precision).
+    pub fn dac_stream_phases(&self, a_bits: u64) -> u64 {
+        ceil_div(a_bits, (self.bit_serial_precision.max(1)) as u64)
+    }
+
+    /// Maximum partial-sum value of one row group at the *configured* row
+    /// parallelism (schema-v1 quantity, kept for reporting).
     pub fn max_partial_sum(&self) -> u64 {
         self.row_parallelism * ((1u64 << self.device_bits) - 1) * ((1u64 << self.dac_bits) - 1)
     }
 
-    /// Serialize every Table I field (the `chip` block of a Deployment).
+    /// Maximum partial-sum value at the *effective* (boosted) parallelism —
+    /// the value that must fit the ADC range.
+    pub fn effective_max_partial_sum(&self) -> u64 {
+        self.effective_row_parallelism()
+            * ((1u64 << self.device_bits) - 1)
+            * ((1u64 << self.dac_bits) - 1)
+    }
+
+    // ---------- per-component area model (mm², 40nm) ----------
+
+    /// NVM array macro: X² cells at the cell type's F² footprint.
+    pub fn array_area_mm2(&self) -> f64 {
+        (self.tile_size * self.tile_size) as f64 * self.array_type.cell_area_f2() * F2_MM2
+    }
+
+    /// Flash ADCs: 2^bits comparator levels per physical converter.
+    pub fn adc_area_mm2(&self) -> f64 {
+        (self.effective_adcs_per_tile() * (1u64 << self.adc_bits)) as f64 * ADC_UNIT_AREA_MM2
+    }
+
+    /// Row DACs: one driver per wordline, doubling per bit-serial bit.
+    pub fn dac_area_mm2(&self) -> f64 {
+        (self.tile_size * (1u64 << (self.bit_serial_precision.max(1) - 1))) as f64
+            * DAC_UNIT_AREA_MM2
+    }
+
+    /// Input + output transport buses of the tile's cluster share.
+    pub fn routing_area_mm2(&self) -> f64 {
+        (self.in_bus_lanes * self.in_bus_bits + self.out_bus_lanes * self.out_bus_bits) as f64
+            * ROUTING_BIT_AREA_MM2
+    }
+
+    /// Digital partial-sum accumulators (one per ADC column slot).
+    pub fn acc_area_mm2(&self) -> f64 {
+        (self.adcs_per_tile * ACC_BITS) as f64 * ACC_BIT_AREA_MM2
+    }
+
+    /// Full tile area: array + ADC + DAC + routing + accumulation.
+    pub fn tile_area_mm2(&self) -> f64 {
+        self.array_area_mm2()
+            + self.adc_area_mm2()
+            + self.dac_area_mm2()
+            + self.routing_area_mm2()
+            + self.acc_area_mm2()
+    }
+
+    /// Total tile area of the chip (the area budget the search trades in).
+    pub fn chip_area_mm2(&self) -> f64 {
+        self.n_tiles as f64 * self.tile_area_mm2()
+    }
+
+    /// Tile budget available to a candidate array type under this config's
+    /// silicon area: same array → exactly `n_tiles` (no float round-trip);
+    /// larger cells → proportionally fewer tiles in the same mm².
+    pub fn tiles_budget_for(&self, at: ArrayType) -> u64 {
+        if at == self.array_type {
+            return self.n_tiles;
+        }
+        let base = self.tile_area_mm2();
+        let cand = self.with_array(at).tile_area_mm2();
+        (((self.n_tiles as f64) * base / cand).floor() as u64).max(1)
+    }
+
+    /// Decomposition of the per-tile dynamic energy into component
+    /// fractions, ordered [array, ADC, DAC, routing, accumulation]. Sums to
+    /// 1 (up to float association); at the paper defaults the weights are
+    /// dyadic (8:4:2:1:1 → 0.5, 0.25, 0.125, 0.0625, 0.0625), reflecting
+    /// the ADC-dominated energy split of NVM-IMC surveys.
+    pub fn energy_fractions(&self) -> [f64; 5] {
+        let adc_w =
+            8.0 * 4f64.powi(self.adc_bits as i32 - 4) / self.adc_share_factor.max(1) as f64;
+        let array_w = 4.0;
+        let dac_w = 2.0 * 2f64.powi(self.bit_serial_precision.max(1) as i32 - 1);
+        let routing_w = 1.0;
+        let acc_w = 1.0;
+        let total = array_w + adc_w + dac_w + routing_w + acc_w;
+        [
+            array_w / total,
+            adc_w / total,
+            dac_w / total,
+            routing_w / total,
+            acc_w / total,
+        ]
+    }
+
+    /// Serialize every Table I field plus the v2 array knobs (the `chip`
+    /// block of a Deployment).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("tile_size", Json::Num(self.tile_size as f64)),
@@ -143,33 +378,138 @@ impl ChipConfig {
             ("tile_phase_cycles", Json::Num(self.tile_phase_cycles as f64)),
             ("sram_access_j", Json::Num(self.sram_access_j)),
             ("sram_leak_w_per_vm", Json::Num(self.sram_leak_w_per_vm)),
+            ("array_type", Json::Str(self.array_type.as_str().into())),
+            ("adc_share_factor", Json::Num(self.adc_share_factor as f64)),
+            (
+                "bit_serial_precision",
+                Json::Num(self.bit_serial_precision as f64),
+            ),
         ])
     }
 
-    /// Deserialize a `to_json` chip block. `None` if any field is missing
-    /// or has the wrong type.
-    pub fn from_json(j: &Json) -> Option<ChipConfig> {
-        Some(ChipConfig {
-            tile_size: j.get("tile_size").as_u64()?,
-            n_tiles: j.get("n_tiles").as_u64()?,
-            n_vector_modules: j.get("n_vector_modules").as_u64()?,
-            lanes_per_vm: j.get("lanes_per_vm").as_u64()?,
-            device_bits: j.get("device_bits").as_u32()?,
-            row_parallelism: j.get("row_parallelism").as_u64()?,
-            dac_bits: j.get("dac_bits").as_u32()?,
-            adcs_per_tile: j.get("adcs_per_tile").as_u64()?,
-            adc_bits: j.get("adc_bits").as_u32()?,
-            tile_power_w: j.get("tile_power_w").as_f64()?,
-            clock_hz: j.get("clock_hz").as_f64()?,
-            sram_per_vm_bytes: j.get("sram_per_vm_bytes").as_u64()?,
-            in_bus_lanes: j.get("in_bus_lanes").as_u64()?,
-            in_bus_bits: j.get("in_bus_bits").as_u64()?,
-            out_bus_lanes: j.get("out_bus_lanes").as_u64()?,
-            out_bus_bits: j.get("out_bus_bits").as_u64()?,
-            tile_phase_cycles: j.get("tile_phase_cycles").as_u64()?,
-            sram_access_j: j.get("sram_access_j").as_f64()?,
-            sram_leak_w_per_vm: j.get("sram_leak_w_per_vm").as_f64()?,
-        })
+    /// Strict parse of a chip block (the `serve::config` convention):
+    /// unknown keys rejected, every Table I field required, the three v2
+    /// knobs optional with identity defaults, and `validate()` folded in —
+    /// a successfully parsed config is always internally consistent.
+    pub fn parse_json(j: &Json) -> ApiResult<ChipConfig> {
+        const KNOWN: [&str; 22] = [
+            "tile_size",
+            "n_tiles",
+            "n_vector_modules",
+            "lanes_per_vm",
+            "device_bits",
+            "row_parallelism",
+            "dac_bits",
+            "adcs_per_tile",
+            "adc_bits",
+            "tile_power_w",
+            "clock_hz",
+            "sram_per_vm_bytes",
+            "in_bus_lanes",
+            "in_bus_bits",
+            "out_bus_lanes",
+            "out_bus_bits",
+            "tile_phase_cycles",
+            "sram_access_j",
+            "sram_leak_w_per_vm",
+            "array_type",
+            "adc_share_factor",
+            "bit_serial_precision",
+        ];
+        fn bad(msg: String) -> ApiError {
+            ApiError::ChipConfig(msg)
+        }
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| bad("chip config must be a JSON object".into()))?;
+        for k in obj.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(bad(format!(
+                    "unknown key '{k}' (known: {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        let req_u64 = |key: &'static str| -> ApiResult<u64> {
+            j.get(key)
+                .as_u64()
+                .ok_or_else(|| bad(format!("'{key}' must be a non-negative integer")))
+        };
+        let req_u32 = |key: &'static str| -> ApiResult<u32> {
+            j.get(key)
+                .as_u32()
+                .ok_or_else(|| bad(format!("'{key}' must be a non-negative integer")))
+        };
+        let req_f64 = |key: &'static str| -> ApiResult<f64> {
+            j.get(key)
+                .as_f64()
+                .ok_or_else(|| bad(format!("'{key}' must be a number")))
+        };
+        let array_type = match j.get("array_type") {
+            Json::Null => ArrayType::Crossbar,
+            v => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| bad("'array_type' must be a string".into()))?;
+                ArrayType::parse(s).ok_or_else(|| {
+                    bad(format!("unknown array_type '{s}' (crossbar|1T1R|2T2R)"))
+                })?
+            }
+        };
+        let adc_share_factor = match j.get("adc_share_factor") {
+            Json::Null => 1,
+            v => v
+                .as_u64()
+                .ok_or_else(|| bad("'adc_share_factor' must be a positive integer".into()))?,
+        };
+        let bit_serial_precision = match j.get("bit_serial_precision") {
+            Json::Null => 1,
+            v => v.as_u32().ok_or_else(|| {
+                bad("'bit_serial_precision' must be a positive integer".into())
+            })?,
+        };
+        let c = ChipConfig {
+            tile_size: req_u64("tile_size")?,
+            n_tiles: req_u64("n_tiles")?,
+            n_vector_modules: req_u64("n_vector_modules")?,
+            lanes_per_vm: req_u64("lanes_per_vm")?,
+            device_bits: req_u32("device_bits")?,
+            row_parallelism: req_u64("row_parallelism")?,
+            dac_bits: req_u32("dac_bits")?,
+            adcs_per_tile: req_u64("adcs_per_tile")?,
+            adc_bits: req_u32("adc_bits")?,
+            tile_power_w: req_f64("tile_power_w")?,
+            clock_hz: req_f64("clock_hz")?,
+            sram_per_vm_bytes: req_u64("sram_per_vm_bytes")?,
+            in_bus_lanes: req_u64("in_bus_lanes")?,
+            in_bus_bits: req_u64("in_bus_bits")?,
+            out_bus_lanes: req_u64("out_bus_lanes")?,
+            out_bus_bits: req_u64("out_bus_bits")?,
+            tile_phase_cycles: req_u64("tile_phase_cycles")?,
+            sram_access_j: req_f64("sram_access_j")?,
+            sram_leak_w_per_vm: req_f64("sram_leak_w_per_vm")?,
+            array_type,
+            adc_share_factor,
+            bit_serial_precision,
+        };
+        let errs = c.validate();
+        if !errs.is_empty() {
+            return Err(bad(errs.join("; ")));
+        }
+        Ok(c)
+    }
+
+    /// Parse a chip-config JSON file (the `--chip-config` CLI override).
+    pub fn from_file(path: &std::path::Path) -> ApiResult<ChipConfig> {
+        let text = std::fs::read_to_string(path).map_err(|e| ApiError::Io {
+            path: path.display().to_string(),
+            message: e.to_string(),
+        })?;
+        let j = Json::parse(&text).map_err(|e| ApiError::Json {
+            path: path.display().to_string(),
+            message: e.to_string(),
+        })?;
+        Self::parse_json(&j)
     }
 
     /// Validate internal consistency; returns a list of violations.
@@ -184,10 +524,16 @@ impl ChipConfig {
         if self.adcs_per_tile == 0 || self.adcs_per_tile > self.tile_size {
             errs.push("adcs_per_tile must be in 1..=tile_size".into());
         }
-        if self.max_partial_sum() >= (1u64 << self.adc_bits) {
+        if self.adc_share_factor == 0 || self.adc_share_factor > self.adcs_per_tile {
+            errs.push("adc_share_factor must be in 1..=adcs_per_tile".into());
+        }
+        if self.bit_serial_precision == 0 || self.bit_serial_precision > 8 {
+            errs.push("bit_serial_precision must be in 1..=8".into());
+        }
+        if self.effective_max_partial_sum() >= (1u64 << self.adc_bits) {
             errs.push(format!(
                 "ADC clips: max partial sum {} needs more than {} bits",
-                self.max_partial_sum(),
+                self.effective_max_partial_sum(),
                 self.adc_bits
             ));
         }
@@ -217,6 +563,10 @@ mod tests {
         assert_eq!(c.adc_bits, 4);
         assert!((c.tile_power_w - 70e-6).abs() < 1e-12);
         assert!((c.clock_hz - 192e6).abs() < 1.0);
+        // v2 knobs default to the identity.
+        assert_eq!(c.array_type, ArrayType::Crossbar);
+        assert_eq!(c.adc_share_factor, 1);
+        assert_eq!(c.bit_serial_precision, 1);
     }
 
     #[test]
@@ -225,6 +575,7 @@ mod tests {
         // 9 rows × 1-bit devices × 1-bit inputs → max sum 9 < 2^4 = 16.
         assert_eq!(c.max_partial_sum(), 9);
         assert!(c.max_partial_sum() < (1 << c.adc_bits));
+        assert_eq!(c.effective_max_partial_sum(), 9);
     }
 
     #[test]
@@ -244,22 +595,153 @@ mod tests {
         assert_eq!(c.row_phases(147), 17); // conv1 of ResNet-18
         assert_eq!(c.row_phases(64), 8);
         assert_eq!(c.row_phases(100_000), 29); // clamped to tile rows
+        assert_eq!(c.dac_stream_phases(8), 8); // bit-serial: one bit per phase
         // ISSCC'22 base: 144 tiles per vector module.
         assert_eq!(ChipConfig::isscc22_base().tiles_per_cluster(), 144);
     }
 
     #[test]
-    fn json_roundtrip_preserves_all_fields() {
+    fn default_crossbar_effective_quantities_match_legacy() {
+        // Identity defaults must leave every cost-model hook exactly where
+        // schema v1 had it — this is the bit-stability contract.
         let c = ChipConfig::paper_scaled();
+        assert_eq!(c.row_boost(), 1);
+        assert_eq!(c.effective_row_parallelism(), c.row_parallelism);
+        assert_eq!(c.effective_adcs_per_tile(), c.adcs_per_tile);
+        assert_eq!(c.array_type.tile_power_factor().to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn row_boost_gated_by_adc_headroom() {
+        // 4-bit ADC: floor(15/9) = 1 → no boost even for isolated cells.
+        let t1r = ChipConfig::paper_scaled().with_array(ArrayType::OneT1R);
+        assert_eq!(t1r.adc_max_rows(), 15);
+        assert_eq!(t1r.row_boost(), 1);
+        assert_eq!(t1r.row_phases(256), 29);
+        // 5-bit ADC: floor(31/9) = 3 → the full 2× cell-isolation boost.
+        let t1r5 = ChipConfig {
+            adc_bits: 5,
+            ..t1r.clone()
+        };
+        assert_eq!(t1r5.adc_max_rows(), 31);
+        assert_eq!(t1r5.row_boost(), 2);
+        assert_eq!(t1r5.effective_row_parallelism(), 18);
+        assert_eq!(t1r5.row_phases(256), 15); // ceil(256/18) vs 29
+        assert!(t1r5.validate().is_empty(), "{:?}", t1r5.validate());
+        // The crossbar never boosts, whatever the ADC.
+        let xb5 = ChipConfig {
+            adc_bits: 5,
+            ..ChipConfig::paper_scaled()
+        };
+        assert_eq!(xb5.row_boost(), 1);
+    }
+
+    #[test]
+    fn area_breakdown_sums_and_orders() {
+        let c = ChipConfig::paper_scaled();
+        let sum = c.array_area_mm2()
+            + c.adc_area_mm2()
+            + c.dac_area_mm2()
+            + c.routing_area_mm2()
+            + c.acc_area_mm2();
+        assert_eq!(sum.to_bits(), c.tile_area_mm2().to_bits());
+        // Crossbar 4F² array at 40nm: 256² · 4 · 1.6e-9 mm².
+        let expect_array = 65536.0 * 4.0 * 1.6e-9;
+        assert!((c.array_area_mm2() - expect_array).abs() < 1e-15);
+        // Cell area ordering propagates to tiles: crossbar < 1T1R < 2T2R.
+        let a_xb = c.tile_area_mm2();
+        let a_1t = c.with_array(ArrayType::OneT1R).tile_area_mm2();
+        let a_2t = c.with_array(ArrayType::TwoT2R).tile_area_mm2();
+        assert!(a_xb < a_1t && a_1t < a_2t, "{a_xb} {a_1t} {a_2t}");
+    }
+
+    #[test]
+    fn tiles_budget_iso_area() {
+        let c = ChipConfig::paper_scaled();
+        // Same array type: exact tile count, no float round-trip.
+        assert_eq!(c.tiles_budget_for(ArrayType::Crossbar), c.n_tiles);
+        // Larger cells buy fewer tiles in the same silicon.
+        let b1t = c.tiles_budget_for(ArrayType::OneT1R);
+        let b2t = c.tiles_budget_for(ArrayType::TwoT2R);
+        assert!(b1t < c.n_tiles && b2t < b1t, "{b1t} {b2t}");
+        // The iso-area identity holds within one tile of rounding.
+        let a1t = c.with_array(ArrayType::OneT1R).tile_area_mm2();
+        assert!(b1t as f64 * a1t <= c.chip_area_mm2() + a1t);
+    }
+
+    #[test]
+    fn energy_fractions_dyadic_at_defaults() {
+        let f = ChipConfig::paper_scaled().energy_fractions();
+        // Weights 4:8:2:1:1 (array, adc, dac, routing, acc) over 16.
+        assert_eq!(f[0].to_bits(), 0.25f64.to_bits());
+        assert_eq!(f[1].to_bits(), 0.5f64.to_bits());
+        assert_eq!(f[2].to_bits(), 0.125f64.to_bits());
+        assert_eq!(f[3].to_bits(), 0.0625f64.to_bits());
+        assert_eq!(f[4].to_bits(), 0.0625f64.to_bits());
+        let s: f64 = f.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_all_fields() {
+        let mut c = ChipConfig::paper_scaled();
+        c.array_type = ArrayType::TwoT2R;
+        c.adc_share_factor = 2;
         let j = c.to_json();
-        assert_eq!(ChipConfig::from_json(&j), Some(c));
-        // A missing field must be rejected, not defaulted.
+        assert_eq!(ChipConfig::parse_json(&j).unwrap(), c);
+        // A missing Table I field must be rejected, not defaulted.
         let mut o = match j {
             Json::Obj(o) => o,
             _ => unreachable!(),
         };
         o.remove("adc_bits");
-        assert_eq!(ChipConfig::from_json(&Json::Obj(o)), None);
+        assert!(ChipConfig::parse_json(&Json::Obj(o)).is_err());
+    }
+
+    #[test]
+    fn parse_accepts_v1_block_and_defaults_v2_knobs() {
+        // A schema-v1 chip block has no array knobs; they default.
+        let mut o = match ChipConfig::paper_scaled().to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.remove("array_type");
+        o.remove("adc_share_factor");
+        o.remove("bit_serial_precision");
+        let c = ChipConfig::parse_json(&Json::Obj(o)).unwrap();
+        assert_eq!(c, ChipConfig::paper_scaled());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_array_type() {
+        let mut o = match ChipConfig::paper_scaled().to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("tile_sized".into(), Json::Num(1.0));
+        let e = ChipConfig::parse_json(&Json::Obj(o.clone())).unwrap_err();
+        assert!(e.to_string().contains("tile_sized"), "{e}");
+        o.remove("tile_sized");
+        o.insert("array_type".into(), Json::Str("3T3R".into()));
+        let e = ChipConfig::parse_json(&Json::Obj(o)).unwrap_err();
+        assert!(e.to_string().contains("3T3R"), "{e}");
+    }
+
+    #[test]
+    fn parse_folds_in_validation() {
+        let mut bad = ChipConfig::paper_scaled();
+        bad.row_parallelism = 32; // ADC clips at 4 bits
+        let e = ChipConfig::parse_json(&bad.to_json()).unwrap_err();
+        assert!(e.to_string().contains("ADC clips"), "{e}");
+    }
+
+    #[test]
+    fn array_type_string_roundtrip() {
+        for at in ArrayType::all() {
+            assert_eq!(ArrayType::parse(at.as_str()), Some(at));
+        }
+        assert_eq!(ArrayType::parse("CROSSBAR"), Some(ArrayType::Crossbar));
+        assert_eq!(ArrayType::parse("3T3R"), None);
     }
 
     #[test]
@@ -269,5 +751,8 @@ mod tests {
         assert_eq!(c2.n_tiles, 1234);
         assert_eq!(c2.tile_size, c.tile_size);
         assert_eq!(c2.adc_bits, c.adc_bits);
+        let c3 = c.with_array(ArrayType::OneT1R);
+        assert_eq!(c3.n_tiles, c.n_tiles);
+        assert_eq!(c3.array_type, ArrayType::OneT1R);
     }
 }

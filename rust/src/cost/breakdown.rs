@@ -1,0 +1,395 @@
+//! Per-component decomposition of the cost model (zigzag `ImcNvmArray`
+//! reporting shape): tile area, tile-energy fractions, and clock-period
+//! split across {array, ADC, DAC, routing, accumulation}, plus the peak
+//! TOPS / TOPS/W / TOPS/mm² figures of the configured chip.
+//!
+//! Everything here is a *decomposition* of quantities the core model in
+//! `cost::` already produces — the shares of a total always sum back to it,
+//! and nothing in this module feeds back into `CostModel::network`, so the
+//! default-config totals stay bitwise identical to schema v1.
+
+use crate::arch::{ArrayType, ChipConfig};
+use crate::util::json::Json;
+
+use super::NetworkCost;
+
+/// One value per tile component, in a fixed order. Depending on context the
+/// fields hold mm² (areas), joules (energies), nanoseconds (clock split), or
+/// dimensionless fractions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComponentShares {
+    pub array: f64,
+    pub adc: f64,
+    pub dac: f64,
+    pub routing: f64,
+    pub accumulation: f64,
+}
+
+impl ComponentShares {
+    /// Sum of the five components, added in declaration order (matches the
+    /// addition order of `ChipConfig::tile_area_mm2`, so area shares total
+    /// bitwise-exactly).
+    pub fn total(&self) -> f64 {
+        self.array + self.adc + self.dac + self.routing + self.accumulation
+    }
+
+    /// Scale every component by `k`.
+    pub fn scale(&self, k: f64) -> ComponentShares {
+        ComponentShares {
+            array: self.array * k,
+            adc: self.adc * k,
+            dac: self.dac * k,
+            routing: self.routing * k,
+            accumulation: self.accumulation * k,
+        }
+    }
+
+    /// (name, value) pairs for table printers.
+    pub fn named(&self) -> [(&'static str, f64); 5] {
+        [
+            ("array", self.array),
+            ("adc", self.adc),
+            ("dac", self.dac),
+            ("routing", self.routing),
+            ("accumulation", self.accumulation),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("array", Json::Num(self.array)),
+            ("adc", Json::Num(self.adc)),
+            ("dac", Json::Num(self.dac)),
+            ("routing", Json::Num(self.routing)),
+            ("accumulation", Json::Num(self.accumulation)),
+        ])
+    }
+
+    /// Strict parse: exactly the five component keys, all numeric.
+    pub fn parse_json(j: &Json) -> Option<ComponentShares> {
+        let obj = j.as_obj()?;
+        const KEYS: [&str; 5] = ["array", "adc", "dac", "routing", "accumulation"];
+        if !obj.keys().all(|k| KEYS.contains(&k.as_str())) {
+            return None;
+        }
+        Some(ComponentShares {
+            array: j.get("array").as_f64()?,
+            adc: j.get("adc").as_f64()?,
+            dac: j.get("dac").as_f64()?,
+            routing: j.get("routing").as_f64()?,
+            accumulation: j.get("accumulation").as_f64()?,
+        })
+    }
+}
+
+/// Chip-level profile: component areas, energy fractions, clock-period
+/// split, and the peak throughput/efficiency figures (counted in binary
+/// 1-bit ops — the native unit of a bit-streamed NVM array; multiply by
+/// (w_bits·a_bits)⁻¹ for effective multi-bit OPs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipProfile {
+    pub array_type: ArrayType,
+    /// Absolute per-tile area by component, mm².
+    pub tile_area_mm2: ComponentShares,
+    /// Total tile area of the chip, mm².
+    pub chip_area_mm2: f64,
+    /// Dimensionless tile-energy fractions; sum to 1.
+    pub energy_fractions: ComponentShares,
+    /// Clock-period split by component, ns (delay modeled proportional to
+    /// the component energy weights).
+    pub tclk_ns: ComponentShares,
+    /// Peak throughput, tera 1b-OPs/s (2 ops per MAC).
+    pub tops_peak: f64,
+    /// Peak efficiency, tera 1b-OPs/s per watt of tile + SRAM-leak power.
+    pub topsw_peak: f64,
+    /// Peak areal density, tera 1b-OPs/s per mm² of tile area.
+    pub topsmm2_peak: f64,
+}
+
+impl ChipProfile {
+    pub fn of(chip: &ChipConfig) -> ChipProfile {
+        let tile_area_mm2 = ComponentShares {
+            array: chip.array_area_mm2(),
+            adc: chip.adc_area_mm2(),
+            dac: chip.dac_area_mm2(),
+            routing: chip.routing_area_mm2(),
+            accumulation: chip.acc_area_mm2(),
+        };
+        let f = chip.energy_fractions();
+        let energy_fractions = ComponentShares {
+            array: f[0],
+            adc: f[1],
+            dac: f[2],
+            routing: f[3],
+            accumulation: f[4],
+        };
+        let tclk_ns = energy_fractions.scale(chip.cycle_s() * 1e9);
+
+        // Peak: every tile resolves eff_rows × eff_adcs 1-bit MACs per tile
+        // phase, all tiles active.
+        let macs_per_cycle = (chip.n_tiles
+            * chip.effective_row_parallelism()
+            * chip.effective_adcs_per_tile()) as f64
+            / chip.tile_phase_cycles.max(1) as f64;
+        let tops_peak = macs_per_cycle * 2.0 * chip.clock_hz / 1e12;
+        let power_w = chip.n_tiles as f64
+            * chip.tile_power_w
+            * chip.array_type.tile_power_factor()
+            + chip.n_vector_modules as f64 * chip.sram_leak_w_per_vm;
+        let chip_area_mm2 = chip.chip_area_mm2();
+        ChipProfile {
+            array_type: chip.array_type,
+            tile_area_mm2,
+            chip_area_mm2,
+            energy_fractions,
+            tclk_ns,
+            tops_peak,
+            topsw_peak: tops_peak / power_w,
+            topsmm2_peak: tops_peak / chip_area_mm2,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("array_type", Json::Str(self.array_type.as_str().into())),
+            ("tile_area_mm2", self.tile_area_mm2.to_json()),
+            ("chip_area_mm2", Json::Num(self.chip_area_mm2)),
+            ("energy_fractions", self.energy_fractions.to_json()),
+            ("tclk_ns", self.tclk_ns.to_json()),
+            ("tops_peak", Json::Num(self.tops_peak)),
+            ("topsw_peak", Json::Num(self.topsw_peak)),
+            ("topsmm2_peak", Json::Num(self.topsmm2_peak)),
+        ])
+    }
+
+    pub fn parse_json(j: &Json) -> Option<ChipProfile> {
+        let obj = j.as_obj()?;
+        const KEYS: [&str; 8] = [
+            "array_type",
+            "tile_area_mm2",
+            "chip_area_mm2",
+            "energy_fractions",
+            "tclk_ns",
+            "tops_peak",
+            "topsw_peak",
+            "topsmm2_peak",
+        ];
+        if !obj.keys().all(|k| KEYS.contains(&k.as_str())) {
+            return None;
+        }
+        Some(ChipProfile {
+            array_type: ArrayType::parse(j.get("array_type").as_str()?)?,
+            tile_area_mm2: ComponentShares::parse_json(j.get("tile_area_mm2"))?,
+            chip_area_mm2: j.get("chip_area_mm2").as_f64()?,
+            energy_fractions: ComponentShares::parse_json(j.get("energy_fractions"))?,
+            tclk_ns: ComponentShares::parse_json(j.get("tclk_ns"))?,
+            tops_peak: j.get("tops_peak").as_f64()?,
+            topsw_peak: j.get("topsw_peak").as_f64()?,
+            topsmm2_peak: j.get("topsmm2_peak").as_f64()?,
+        })
+    }
+}
+
+/// Per-layer slice of the breakdown embedded in a Deployment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerBreakdown {
+    /// Single-instance tiles s_l.
+    pub tiles: u64,
+    /// Single-instance latency T_l, cycles.
+    pub cycles: u64,
+    /// Silicon area of one instance, mm² (tiles × tile area).
+    pub area_mm2: f64,
+    /// Tile energy of one inference through one instance, joules.
+    pub e_tile_j: f64,
+}
+
+/// Network-level breakdown: the chip profile, the absolute tile-energy
+/// decomposition of one inference, and the per-layer cost/area/energy rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkBreakdown {
+    pub profile: ChipProfile,
+    /// Tile energy of one inference split by component, joules; sums to the
+    /// tile part of `NetworkCost::energy_parts`.
+    pub energy_j: ComponentShares,
+    pub layers: Vec<LayerBreakdown>,
+}
+
+impl NetworkBreakdown {
+    pub fn of(chip: &ChipConfig, nc: &NetworkCost) -> NetworkBreakdown {
+        let profile = ChipProfile::of(chip);
+        let tile_area = chip.tile_area_mm2();
+        let e_tile_total: f64 = nc.layers.iter().map(|l| l.e_tile_j).sum();
+        let layers = nc
+            .layers
+            .iter()
+            .map(|l| LayerBreakdown {
+                tiles: l.tiles,
+                cycles: l.total_cycles(),
+                area_mm2: l.tiles as f64 * tile_area,
+                e_tile_j: l.e_tile_j,
+            })
+            .collect();
+        NetworkBreakdown {
+            energy_j: profile.energy_fractions.scale(e_tile_total),
+            profile,
+            layers,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("tiles", Json::Num(l.tiles as f64)),
+                    ("cycles", Json::Num(l.cycles as f64)),
+                    ("area_mm2", Json::Num(l.area_mm2)),
+                    ("e_tile_j", Json::Num(l.e_tile_j)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("profile", self.profile.to_json()),
+            ("energy_j", self.energy_j.to_json()),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    pub fn parse_json(j: &Json) -> Option<NetworkBreakdown> {
+        let obj = j.as_obj()?;
+        const KEYS: [&str; 3] = ["profile", "energy_j", "layers"];
+        if !obj.keys().all(|k| KEYS.contains(&k.as_str())) {
+            return None;
+        }
+        let layers = j
+            .get("layers")
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                let o = l.as_obj()?;
+                const LKEYS: [&str; 4] = ["tiles", "cycles", "area_mm2", "e_tile_j"];
+                if !o.keys().all(|k| LKEYS.contains(&k.as_str())) {
+                    return None;
+                }
+                Some(LayerBreakdown {
+                    tiles: l.get("tiles").as_u64()?,
+                    cycles: l.get("cycles").as_u64()?,
+                    area_mm2: l.get("area_mm2").as_f64()?,
+                    e_tile_j: l.get("e_tile_j").as_f64()?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(NetworkBreakdown {
+            profile: ChipProfile::parse_json(j.get("profile"))?,
+            energy_j: ComponentShares::parse_json(j.get("energy_j"))?,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::nets;
+
+    #[test]
+    fn area_shares_total_bitwise() {
+        for at in ArrayType::all() {
+            let chip = ChipConfig::paper_scaled().with_array(at);
+            let p = ChipProfile::of(&chip);
+            assert_eq!(
+                p.tile_area_mm2.total().to_bits(),
+                chip.tile_area_mm2().to_bits(),
+                "{at:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn energy_fractions_sum_to_one() {
+        for at in ArrayType::all() {
+            for adc_bits in [4u32, 5, 6] {
+                for share in [1u64, 2, 4] {
+                    let mut chip = ChipConfig::paper_scaled().with_array(at);
+                    chip.adc_bits = adc_bits;
+                    chip.adc_share_factor = share;
+                    let p = ChipProfile::of(&chip);
+                    let s = p.energy_fractions.total();
+                    assert!((s - 1.0).abs() < 1e-12, "{at:?} {adc_bits} {share}: {s}");
+                    assert!(p.energy_fractions.adc > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_paper_chip_profile() {
+        // Paper Table I config, default crossbar: dyadic energy fractions,
+        // ADC dominating the tile area, and the closed-form peaks.
+        let chip = ChipConfig::paper_scaled();
+        let p = ChipProfile::of(&chip);
+        assert_eq!(p.energy_fractions.adc.to_bits(), 0.5f64.to_bits());
+        assert_eq!(p.energy_fractions.array.to_bits(), 0.25f64.to_bits());
+        assert!(p.tile_area_mm2.adc > p.tile_area_mm2.array);
+        // 5682 tiles · 9 rows · 8 ADCs · 2 ops · 192 MHz.
+        let expect_tops = (5682u64 * 9 * 8) as f64 * 2.0 * 192e6 / 1e12;
+        assert!((p.tops_peak - expect_tops).abs() < 1e-9, "{}", p.tops_peak);
+        let power = 5682.0 * 70e-6 + 40.0 * 5e-5;
+        assert!((p.topsw_peak - expect_tops / power).abs() < 1e-9);
+        assert!((p.topsmm2_peak - expect_tops / chip.chip_area_mm2()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peaks_order_across_array_types() {
+        // Same tile count: bigger cells → worse areal density; boosted rows
+        // (5-bit ADC) → more peak TOPS for 1T1R.
+        let mut base = ChipConfig::paper_scaled();
+        base.adc_bits = 5;
+        let xb = ChipProfile::of(&base);
+        let t1 = ChipProfile::of(&base.with_array(ArrayType::OneT1R));
+        assert!(t1.tops_peak > xb.tops_peak, "{} {}", t1.tops_peak, xb.tops_peak);
+        assert!(
+            t1.topsmm2_peak < 2.0 * xb.topsmm2_peak,
+            "density can't outrun the 3× cell"
+        );
+        let t2 = ChipProfile::of(&base.with_array(ArrayType::TwoT2R));
+        assert!(t2.topsmm2_peak < t1.topsmm2_peak);
+    }
+
+    #[test]
+    fn network_breakdown_sums_match_cost_totals() {
+        let model = CostModel::paper();
+        let net = nets::by_name("resnet18").unwrap();
+        let nc = model.baseline(&net);
+        let b = NetworkBreakdown::of(&model.chip, &nc);
+        // Component energies re-total to the tile part of energy_parts.
+        let (e_tile, _, _) = nc.energy_parts;
+        assert!((b.energy_j.total() - e_tile).abs() <= 1e-12 * e_tile.abs());
+        // Per-layer rows mirror the LayerCosts exactly.
+        assert_eq!(b.layers.len(), nc.layers.len());
+        for (row, lc) in b.layers.iter().zip(&nc.layers) {
+            assert_eq!(row.tiles, lc.tiles);
+            assert_eq!(row.cycles, lc.total_cycles());
+            assert_eq!(row.e_tile_j.to_bits(), lc.e_tile_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_deep_equal() {
+        let model = CostModel::paper();
+        let net = nets::by_name("mlp").unwrap();
+        let nc = model.baseline(&net);
+        let b = NetworkBreakdown::of(&model.chip, &nc);
+        let j = b.to_json();
+        assert_eq!(NetworkBreakdown::parse_json(&j), Some(b));
+        // Unknown keys are rejected at every level.
+        let mut o = match j {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("extra".into(), Json::Num(1.0));
+        assert_eq!(NetworkBreakdown::parse_json(&Json::Obj(o)), None);
+    }
+}

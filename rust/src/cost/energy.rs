@@ -2,7 +2,9 @@
 //! lives in `cost::CostModel::{layer, network}`; this module packages
 //! improvement factors and breakdowns for the benches and examples.
 
+use super::breakdown::ComponentShares;
 use super::NetworkCost;
+use crate::arch::ChipConfig;
 
 /// Energy breakdown of one configuration, joules per inference.
 #[derive(Clone, Copy, Debug)]
@@ -38,6 +40,20 @@ impl EnergyReport {
             self.sram_leak_j / t,
         )
     }
+
+    /// Split the tile component further by array sub-component (array, ADC,
+    /// DAC, routing, accumulation) using the chip's energy-fraction model.
+    pub fn tile_components(&self, chip: &ChipConfig) -> ComponentShares {
+        let f = chip.energy_fractions();
+        ComponentShares {
+            array: f[0],
+            adc: f[1],
+            dac: f[2],
+            routing: f[3],
+            accumulation: f[4],
+        }
+        .scale(self.tile_j)
+    }
 }
 
 /// Energy improvement factor of `optimized` over `baseline` (Fig 5 y-axis).
@@ -61,6 +77,9 @@ mod tests {
         let (a, b, c) = rep.fractions();
         assert!((a + b + c - 1.0).abs() < 1e-12);
         assert!(rep.total_j() > 0.0);
+        // The array-component split re-totals to the tile energy.
+        let comp = rep.tile_components(&model.chip);
+        assert!((comp.total() - rep.tile_j).abs() <= 1e-12 * rep.tile_j);
     }
 
     #[test]

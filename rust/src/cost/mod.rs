@@ -8,6 +8,7 @@
 //! linearly (Eqn 7): r copies split the W² input vectors r ways and bring r×
 //! the tiles, bus bandwidth, and vector-module lanes.
 
+pub mod breakdown;
 pub mod energy;
 
 use crate::arch::ChipConfig;
@@ -113,11 +114,18 @@ impl CostModel {
         let tiles = row_tiles * col_tiles * slices; // Eqn 2
 
         // --- T_tile (Eqn 3, with the 9-row serialization explicit) ---
-        // Streams a_b input bits; every ADC batch reads n_ADC columns; a full
-        // input presentation needs ceil(min(R,X)/p) row phases. All tiles of
-        // the instance operate in parallel, so the instance latency is set by
-        // the deepest row-tile (min(R, X) rows).
-        let t_tile = vecs * a_b * c.adc_batches() * c.row_phases(r_rows) * c.tile_phase_cycles;
+        // Streams a_b input bits in ceil(a_b / bit_serial_precision) DAC
+        // phases; every ADC batch reads the effective n_ADC columns; a full
+        // input presentation needs ceil(min(R,X)/p_eff) row phases. All tiles
+        // of the instance operate in parallel, so the instance latency is set
+        // by the deepest row-tile (min(R, X) rows). At the identity defaults
+        // (1-bit streaming, unshared ADCs, crossbar) this is exactly
+        // vecs · a_b · ceil(X/n_ADC) · ceil(min(R,X)/p).
+        let t_tile = vecs
+            * c.dac_stream_phases(a_b)
+            * c.adc_batches()
+            * c.row_phases(r_rows)
+            * c.tile_phase_cycles;
 
         // --- transport (paper §IV-A) ---
         // One instance spans ceil(s_l / tiles_per_cluster) clusters and gets
@@ -145,7 +153,13 @@ impl CostModel {
 
         // --- energy (per inference, one instance; replication-invariant) ---
         // Tiles are active for the VMM stream; power-gated otherwise (§IV-A).
-        let e_tile_j = tiles as f64 * c.tile_power_w * (t_tile as f64) * c.cycle_s();
+        // The array type scales tile drive power (crossbar factor is exactly
+        // 1.0, keeping the default bitwise identical).
+        let e_tile_j = tiles as f64
+            * c.tile_power_w
+            * (t_tile as f64)
+            * c.cycle_s()
+            * c.array_type.tile_power_factor();
         // SRAM dynamic: activations read once, partials written+read, outputs
         // written — counted as 32-bit accesses.
         let sram_bits = in_bits + 2 * out_bits + vecs * n_cols * a_b;
@@ -361,6 +375,69 @@ mod tests {
         let costs = model.layers(&net, &Policy::baseline(net.num_layers()));
         // FC layers stream exactly one vector: T_tile = 1·8·32·29.
         assert_eq!(costs[1].t_tile, 8 * 32 * 29);
+    }
+
+    #[test]
+    fn default_crossbar_bitwise_stable_vs_v1_formulas() {
+        // Cost model v2 contract: with the identity array knobs (crossbar,
+        // share 1, 1-bit streaming) every LayerCost field and the NetworkCost
+        // totals must match the schema-v1 closed forms bit for bit — the
+        // breakdowns are a decomposition, not a re-cost.
+        let model = cm();
+        let c = &model.chip;
+        for name in ["mlp", "resnet18", "resnet50"] {
+            let net = nets::by_name(name).unwrap();
+            let base = model.baseline(&net);
+            for (l, lc) in net.layers.iter().zip(&base.layers) {
+                let x = c.tile_size;
+                let (r_rows, n_cols, vecs) = (l.lowered_rows(), l.lowered_cols(), l.num_vectors());
+                let (w_b, a_b) = (8u64, 8u64);
+                let row_tiles = ceil_div(r_rows, x);
+                let col_tiles = ceil_div(n_cols, x);
+                let slices = ceil_div(w_b, c.device_bits as u64);
+                let tiles = row_tiles * col_tiles * slices;
+                // v1 T_tile: vecs · a_b · ceil(X/n_ADC) · ceil(min(R,X)/p).
+                let t_tile = vecs
+                    * a_b
+                    * ceil_div(x, c.adcs_per_tile)
+                    * ceil_div(r_rows.min(x), c.row_parallelism)
+                    * c.tile_phase_cycles;
+                assert_eq!(lc.tiles, tiles, "{name}/{}", l.name);
+                assert_eq!(lc.t_tile, t_tile, "{name}/{}", l.name);
+                let e_tile = tiles as f64 * c.tile_power_w * (t_tile as f64) * c.cycle_s();
+                assert_eq!(lc.e_tile_j.to_bits(), e_tile.to_bits(), "{name}/{}", l.name);
+            }
+            // Totals are sums of bitwise-identical terms in identical order.
+            let again = model.baseline(&net);
+            assert_eq!(base.total_cycles.to_bits(), again.total_cycles.to_bits());
+            assert_eq!(base.energy_j.to_bits(), again.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn array_knobs_move_the_cost() {
+        use crate::arch::ArrayType;
+        let net = resnet::resnet18();
+        let base = cm().baseline(&net);
+        // 1T1R with a 5-bit ADC doubles the usable row parallelism →
+        // strictly fewer VMM cycles.
+        let mut chip = ChipConfig::paper_scaled().with_array(ArrayType::OneT1R);
+        chip.adc_bits = 5;
+        let boosted = CostModel::new(chip).baseline(&net);
+        assert!(boosted.total_cycles < base.total_cycles);
+        // ...at strictly higher tile energy (drive-power factor > 1).
+        assert!(boosted.layers[0].e_tile_j > 0.0);
+        // ADC sharing halves the converters → more ADC batches → slower.
+        let mut shared = ChipConfig::paper_scaled();
+        shared.adc_share_factor = 2;
+        let sh = CostModel::new(shared).baseline(&net);
+        assert!(sh.total_cycles > base.total_cycles);
+        // 2-bit DAC streaming halves the activation phases → faster.
+        let mut bs = ChipConfig::paper_scaled();
+        bs.bit_serial_precision = 2;
+        let b = CostModel::new(bs).baseline(&net);
+        assert!(b.total_cycles < base.total_cycles);
+        assert_eq!(b.layers[0].t_tile * 2, base.layers[0].t_tile);
     }
 
     #[test]

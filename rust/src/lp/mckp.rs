@@ -112,6 +112,26 @@ pub fn solve(groups: &[Vec<Choice>], capacity: u64) -> Option<(Vec<usize>, f64)>
     Some((chosen, total))
 }
 
+/// Variant-dimensioned MCKP (cost model v2): each variant carries its own
+/// capacity and per-group choice lists — e.g. one NVM array type per
+/// variant, whose iso-area tile budget and per-layer latencies both differ.
+/// Exactly one variant is selected; within it the ordinary MCKP applies.
+/// Returns `(variant, per-group choice, total cost)` of the cheapest
+/// feasible variant, or `None` if no variant admits any assignment.
+/// Ties prefer the earliest variant (callers list the baseline first so the
+/// default wins when a candidate merely matches it).
+pub fn solve_variants(variants: &[(u64, Vec<Vec<Choice>>)]) -> Option<(usize, Vec<usize>, f64)> {
+    let mut best: Option<(usize, Vec<usize>, f64)> = None;
+    for (v, (capacity, groups)) in variants.iter().enumerate() {
+        if let Some((sel, cost)) = solve(groups, *capacity) {
+            if best.as_ref().map_or(true, |&(_, _, b)| cost < b) {
+                best = Some((v, sel, cost));
+            }
+        }
+    }
+    best
+}
+
 /// Brute-force reference for tests: enumerate the full cross-product.
 #[cfg(test)]
 pub fn brute_force(groups: &[Vec<Choice>], capacity: u64) -> Option<(Vec<usize>, f64)> {
@@ -190,6 +210,25 @@ mod tests {
         let (sel, cost) = solve(&groups, 5).unwrap();
         assert_eq!(sel, vec![2]);
         assert!((cost - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variant_solver_picks_cheapest_feasible_variant() {
+        // Variant 0: big budget, mediocre costs. Variant 1: smaller budget
+        // but much cheaper choices — wins. Variant 2: infeasible, skipped.
+        let v0 = (10u64, vec![vec![ch(4, 5.0)], vec![ch(4, 5.0)]]);
+        let v1 = (8u64, vec![vec![ch(4, 1.0)], vec![ch(4, 1.0)]]);
+        let v2 = (3u64, vec![vec![ch(4, 0.0)], vec![ch(4, 0.0)]]);
+        let (v, sel, cost) = solve_variants(&[v0.clone(), v1.clone(), v2.clone()]).unwrap();
+        assert_eq!((v, sel), (1, vec![0, 0]));
+        assert!((cost - 2.0).abs() < 1e-12);
+        // All infeasible → None.
+        assert_eq!(solve_variants(&[v2]), None);
+        // Exact tie prefers the earlier variant (baseline-first ordering).
+        let ta = (10u64, vec![vec![ch(1, 3.0)]]);
+        let tb = (10u64, vec![vec![ch(1, 3.0)]]);
+        let (v, _, _) = solve_variants(&[ta, tb]).unwrap();
+        assert_eq!(v, 0);
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! budgets (fractions of the 8-bit baseline's tile count).
 
 use super::{Lrmp, SearchConfig};
+use crate::arch::{ArrayType, ChipConfig};
 use crate::cost::CostModel;
+use crate::lp::mckp::{self, Choice};
 use crate::nets::Network;
 use crate::quant::{Policy, SqnrSurrogate};
-use crate::replication::{latency_optim, LayerSummary};
+use crate::replication::{latency_optim, LayerSummary, R_MAX_CAP};
 
 /// One ablation cell: mode name + (latency improvement ×, tiles used), or
 /// None when the configuration is infeasible at this area budget.
@@ -66,6 +68,93 @@ pub fn area_modes(
     out
 }
 
+/// Cost-model-v2 ablation: how the ADC-resolution knob flips the searched
+/// array type. At the paper's 4-bit ADC the partial-sum headroom over the
+/// 9-row parallelism is nil (floor(15/9) = 1), so the isolated-cell arrays
+/// pay their 3–6× cell area for nothing and the crossbar wins; one extra
+/// ADC bit (floor(31/9) = 3) unlocks the 2× row boost and the search
+/// resolves a non-crossbar array under the same silicon budget.
+///
+/// Runs the widened (all-array-type) joint search once per `adc_settings`
+/// entry; returns `(adc_bits, winning array, latency improvement ×)` rows
+/// (an infeasible setting produces no row).
+pub fn array_knob_modes(
+    net: &Network,
+    n_tiles: u64,
+    seed: u64,
+    episodes: usize,
+    adc_settings: &[u32],
+) -> Vec<(u32, ArrayType, f64)> {
+    let mut out = Vec::new();
+    for &adc_bits in adc_settings {
+        let mut chip = ChipConfig::paper_scaled();
+        chip.adc_bits = adc_bits;
+        let model = CostModel::new(chip);
+        // The reference stays the crossbar baseline, which the ADC
+        // resolution does not touch (no boost, same batch count).
+        let base = model.baseline(net);
+        let mut surrogate = SqnrSurrogate::for_benchmark(net);
+        let cfg = SearchConfig {
+            episodes,
+            updates_per_episode: 4,
+            n_tiles: Some(n_tiles),
+            seed,
+            array_types: ArrayType::all().to_vec(),
+            ..Default::default()
+        };
+        if let Ok(r) = Lrmp::new(&model, net, cfg).run(&mut surrogate) {
+            out.push((
+                adc_bits,
+                r.best_array,
+                base.total_cycles / r.optimized.total_cycles,
+            ));
+        }
+    }
+    out
+}
+
+/// Deterministic counterpart of [`array_knob_modes`]: the same flip at the
+/// replication (ILP) level, with the 8-bit policy held fixed. One MCKP
+/// variant per array type — each carrying its own iso-area tile budget and
+/// per-layer latencies — solved exactly via [`mckp::solve_variants`].
+/// Returns the winning array type and its plan's total latency (cycles), or
+/// `None` when no array type fits one instance of every layer.
+pub fn lp_array_choice(net: &Network, n_tiles: u64, adc_bits: u32) -> Option<(ArrayType, f64)> {
+    let mut chip = ChipConfig::paper_scaled();
+    chip.adc_bits = adc_bits;
+    let nl = net.num_layers();
+    let mut variants: Vec<(u64, Vec<Vec<Choice>>)> = Vec::new();
+    let mut arrays: Vec<ArrayType> = Vec::new();
+    for at in ArrayType::all() {
+        let budget = chip.with_tiles(n_tiles).tiles_budget_for(at);
+        let model = CostModel::new(chip.with_array(at));
+        let costs = model.layers(net, &Policy::baseline(nl));
+        let summaries = LayerSummary::from_costs(&costs);
+        let min_total: u64 = summaries.iter().map(|l| l.tiles).sum();
+        // One instance of every layer must fit; slack buys replication
+        // (choice r costs (r-1)·s_l extra tiles, as in latency_optim).
+        let slack = match budget.checked_sub(min_total) {
+            Some(s) => s,
+            None => continue,
+        };
+        let groups: Vec<Vec<Choice>> = summaries
+            .iter()
+            .map(|lay| {
+                let rmax = (1 + slack / lay.tiles).min(R_MAX_CAP);
+                (1..=rmax)
+                    .map(|r| Choice {
+                        weight: lay.tiles * (r - 1),
+                        cost: lay.cycles as f64 / r as f64,
+                    })
+                    .collect()
+            })
+            .collect();
+        variants.push((slack, groups));
+        arrays.push(at);
+    }
+    mckp::solve_variants(&variants).map(|(v, _, cost)| (arrays[v], cost))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +193,55 @@ mod tests {
             get(&below, "joint").is_some(),
             "joint must stay feasible at 0.6x area via quantization"
         );
+    }
+
+    #[test]
+    fn adc_resolution_flips_the_lp_array_choice() {
+        // The acceptance demonstration for cost model v2: moving one chip
+        // knob (ADC resolution 4 → 5 bits) changes which array type the
+        // replication search resolves, at an unchanged silicon budget
+        // (2× the 8-bit baseline tiles, the paper's replication regime).
+        //
+        // At 4 bits the partial-sum headroom over the 9-row parallelism is
+        // nil (floor(15/9) = 1): the isolated-cell arrays run the exact
+        // same cycles on a 0.72× iso-area tile budget, so the crossbar
+        // wins outright. One extra ADC bit (floor(31/9) = 3) unlocks the
+        // 2× row boost: 1T1R halves the row phases (15 vs 29 for a full
+        // 256-row array) which beats its 0.72× budget, while 2T2R's 0.51×
+        // budget still eats the same boost — so 1T1R wins.
+        let net = nets::mlp_mnist();
+        let budget = 2 * net.tiles_at_uniform(256, 8, 1);
+        let (at4, cost4) = lp_array_choice(&net, budget, 4).expect("4-bit feasible");
+        let (at5, cost5) = lp_array_choice(&net, budget, 5).expect("5-bit feasible");
+        assert_eq!(
+            at4,
+            ArrayType::Crossbar,
+            "no ADC headroom → isolated cells buy nothing → crossbar wins"
+        );
+        assert_eq!(
+            at5,
+            ArrayType::OneT1R,
+            "5-bit ADC unlocks the row boost → 1T1R wins"
+        );
+        assert!(
+            cost5 < cost4,
+            "the flip must pay: {cost5} !< {cost4} cycles"
+        );
+    }
+
+    #[test]
+    fn widened_search_reports_improvements_at_both_adc_settings() {
+        // The RL-level companion: the widened (all-array) joint search stays
+        // feasible and beats the crossbar baseline at both ADC settings.
+        // (Which array each seed lands on is exercised deterministically by
+        // `adc_resolution_flips_the_lp_array_choice`; here we only pin that
+        // the knob is live end-to-end through the search.)
+        let net = nets::mlp_mnist();
+        let base_tiles = net.tiles_at_uniform(256, 8, 1);
+        let modes = array_knob_modes(&net, base_tiles, 7, 6, &[4, 5]);
+        assert_eq!(modes.len(), 2, "both settings must be feasible");
+        for (adc_bits, _, imp) in &modes {
+            assert!(*imp > 1.0, "adc_bits={adc_bits}: improvement {imp} ≤ 1");
+        }
     }
 }

@@ -9,6 +9,7 @@
 use crate::accuracy::Evaluator;
 
 pub mod ablation;
+use crate::arch::ArrayType;
 use crate::cost::{CostModel, NetworkCost};
 use crate::nets::Network;
 use crate::quant::nonideal::NoisySurrogate;
@@ -153,6 +154,12 @@ pub struct SearchConfig {
     /// DDPG updates per episode.
     pub updates_per_episode: usize,
     pub seed: u64,
+    /// NVM array types the search may resolve (cost model v2). Each episode
+    /// the enforced policy is evaluated under every candidate at its
+    /// iso-area tile budget and the best-reward array wins; listing only
+    /// `Crossbar` (the default) reproduces the schema-v1 single-array
+    /// search exactly.
+    pub array_types: Vec<ArrayType>,
 }
 
 impl Default for SearchConfig {
@@ -167,6 +174,7 @@ impl Default for SearchConfig {
             n_tiles: None,
             updates_per_episode: 8,
             seed: 0xA11CE,
+            array_types: vec![ArrayType::Crossbar],
         }
     }
 }
@@ -184,6 +192,8 @@ pub struct EpisodeLog {
     pub mean_a_bits: f64,
     pub tiles_used: u64,
     pub feasible: bool,
+    /// Array type that won this episode's per-candidate evaluation.
+    pub array_type: ArrayType,
 }
 
 /// Search output: the best policy/plan and the full trajectory.
@@ -191,6 +201,9 @@ pub struct EpisodeLog {
 pub struct SearchResult {
     pub best_policy: Policy,
     pub best_plan: ReplicationPlan,
+    /// Array type of the winning design (cost model v2 joint search);
+    /// `Crossbar` when the search space was not widened.
+    pub best_array: ArrayType,
     pub best_reward: f64,
     pub best_accuracy: f64,
     pub finetuned_accuracy: f64,
@@ -213,6 +226,7 @@ impl SearchResult {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("array_type", Json::Str(self.best_array.as_str().into())),
             ("best_reward", Json::Num(self.best_reward)),
             ("best_accuracy", Json::Num(self.best_accuracy)),
             ("finetuned_accuracy", Json::Num(self.finetuned_accuracy)),
@@ -294,10 +308,18 @@ impl<'a> Lrmp<'a> {
     pub fn search(&self, provider: &mut dyn AccuracyProvider) -> Result<SearchOutcome> {
         let provider_name = provider.name().to_string();
         let result = self.run(provider)?;
-        let n_tiles = self.effective_tiles();
+        // The artifact carries the *resolved* chip: the searched array type
+        // with its iso-area tile budget. For the default crossbar-only
+        // search both reduce to the schema-v1 values exactly.
+        let n_tiles = self
+            .model
+            .chip
+            .with_tiles(self.effective_tiles())
+            .tiles_budget_for(result.best_array);
+        let chip = self.model.chip.with_array(result.best_array);
         let deployment = crate::api::Deployment::from_search(
             self.net,
-            &self.model.chip,
+            &chip,
             &self.cfg,
             n_tiles,
             &provider_name,
@@ -317,9 +339,31 @@ impl<'a> Lrmp<'a> {
         let acc_base = provider.baseline();
         let nl = self.net.num_layers();
 
+        // Candidate arrays and their iso-area budgets + cost models, fixed
+        // for the whole search. The default [Crossbar] list degenerates to
+        // one candidate whose model and budget equal the schema-v1 search.
+        let arrays: Vec<(ArrayType, u64, CostModel)> = if cfg.array_types.is_empty() {
+            vec![(
+                self.model.chip.array_type,
+                n_tiles,
+                CostModel::new(self.model.chip.clone()),
+            )]
+        } else {
+            cfg.array_types
+                .iter()
+                .map(|&at| {
+                    (
+                        at,
+                        self.model.chip.with_tiles(n_tiles).tiles_budget_for(at),
+                        CostModel::new(self.model.chip.with_array(at)),
+                    )
+                })
+                .collect()
+        };
+
         let mut agent = Ddpg::new(DdpgConfig::default_for(OBS_DIM, 2, cfg.seed));
         let mut trajectory = Vec::with_capacity(cfg.episodes);
-        let mut best: Option<(f64, Policy, ReplicationPlan, f64)> = None;
+        let mut best: Option<(f64, Policy, ReplicationPlan, f64, ArrayType)> = None;
 
         for ep in 0..cfg.episodes {
             // Exponential budget tightening (§IV-C).
@@ -338,7 +382,7 @@ impl<'a> Lrmp<'a> {
             let mut prev = (1.0, 1.0); // baseline-ish previous action
             let mut policy = Policy::baseline(nl);
             for l in 0..nl {
-                let obs = env::observation(self.net, l, prev);
+                let obs = env::observation(self.model, self.net, l, prev);
                 let act = agent.act_explore(&obs);
                 policy.layers[l] = env::action_to_bits((act[0], act[1]));
                 prev = (act[0], act[1]);
@@ -346,18 +390,43 @@ impl<'a> Lrmp<'a> {
                 actions.push(act);
             }
 
-            // --- budget enforcement + LP replication (§IV-B/C) ---
-            let enforced = env::enforce_budget(
-                self.model,
-                self.net,
-                policy,
-                n_tiles,
-                cfg.objective,
-                budget,
-            );
-            let (reward, log) = match enforced {
+            // --- budget enforcement + LP replication, per candidate array
+            // (§IV-B/C, widened by cost model v2): the same prescribed
+            // policy is enforced under every array type at its iso-area
+            // budget; the best Eqn-8 reward wins the episode. Strict `>`
+            // keeps the first (crossbar-first) candidate on ties.
+            let mut episode_best: Option<(f64, Policy, ReplicationPlan, f64, ArrayType)> =
+                None;
+            for (at, tiles_at, model_at) in &arrays {
+                let enforced = env::enforce_budget(
+                    model_at,
+                    self.net,
+                    policy.clone(),
+                    *tiles_at,
+                    cfg.objective,
+                    budget,
+                );
+                let (pol, plan) = match enforced {
+                    Some(x) => x,
+                    None => continue,
+                };
+                let acc = provider.reward_accuracy(&pol)?;
+                let metric = match cfg.objective {
+                    Objective::Latency => plan.total_cycles,
+                    Objective::Throughput => plan.bottleneck_cycles,
+                };
+                // Eqn 8 (base_metric stays the default-array baseline, so a
+                // candidate only wins by actually beating the crossbar).
+                let reward = cfg.lambda * (acc - acc_base)
+                    + cfg.alpha * (1.0 - metric / base_metric);
+                if episode_best.as_ref().map_or(true, |(r, ..)| reward > *r) {
+                    episode_best = Some((reward, pol, plan, acc, *at));
+                }
+            }
+            let (reward, log) = match episode_best {
                 None => {
-                    // Unreachable budget: strong negative reward.
+                    // Unreachable budget under every array: strong negative
+                    // reward.
                     (
                         -1.0,
                         EpisodeLog {
@@ -371,18 +440,11 @@ impl<'a> Lrmp<'a> {
                             mean_a_bits: 0.0,
                             tiles_used: 0,
                             feasible: false,
+                            array_type: self.model.chip.array_type,
                         },
                     )
                 }
-                Some((policy, plan)) => {
-                    let acc = provider.reward_accuracy(&policy)?;
-                    let metric = match cfg.objective {
-                        Objective::Latency => plan.total_cycles,
-                        Objective::Throughput => plan.bottleneck_cycles,
-                    };
-                    // Eqn 8.
-                    let reward = cfg.lambda * (acc - acc_base)
-                        + cfg.alpha * (1.0 - metric / base_metric);
+                Some((reward, policy, plan, acc, at)) => {
                     let (mw, ma) = policy.mean_bits();
                     let log = EpisodeLog {
                         episode: ep,
@@ -396,9 +458,10 @@ impl<'a> Lrmp<'a> {
                         mean_a_bits: ma,
                         tiles_used: plan.tiles_used,
                         feasible: true,
+                        array_type: at,
                     };
                     if best.as_ref().map_or(true, |(r, ..)| reward > *r) {
-                        best = Some((reward, policy, plan, acc));
+                        best = Some((reward, policy, plan, acc, at));
                     }
                     (reward, log)
                 }
@@ -427,19 +490,20 @@ impl<'a> Lrmp<'a> {
             agent.decay_noise();
         }
 
-        let (best_reward, best_policy, best_plan, best_accuracy) = best.ok_or_else(|| {
-            anyhow::anyhow!(
-                "search found no feasible episode: the performance budget cannot \
-                 be met within {n_tiles} tiles"
-            )
-        })?;
+        let (best_reward, best_policy, best_plan, best_accuracy, best_array) =
+            best.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "search found no feasible episode: the performance budget cannot \
+                     be met within {n_tiles} tiles"
+                )
+            })?;
         let finetuned_accuracy = provider.finetuned(&best_policy)?;
-        let optimized = self
-            .model
-            .network(self.net, &best_policy, &best_plan.replication);
+        let best_model = CostModel::new(self.model.chip.with_array(best_array));
+        let optimized = best_model.network(self.net, &best_policy, &best_plan.replication);
         Ok(SearchResult {
             best_policy,
             best_plan,
+            best_array,
             best_reward,
             best_accuracy,
             finetuned_accuracy,
@@ -515,6 +579,42 @@ mod tests {
         assert!(
             (res.trajectory.last().unwrap().budget_fraction - 0.20).abs() < 1e-9
         );
+    }
+
+    #[test]
+    fn widened_search_evaluates_all_array_candidates() {
+        let net = nets::mlp_mnist();
+        let mut chip = crate::arch::ChipConfig::paper_scaled();
+        chip.adc_bits = 5; // headroom so isolated-cell arrays can boost rows
+        let model = CostModel::new(chip);
+        let mut surrogate = SqnrSurrogate::new(&net, 0.98, 0.5);
+        let cfg = SearchConfig {
+            episodes: 6,
+            updates_per_episode: 1,
+            array_types: ArrayType::all().to_vec(),
+            ..Default::default()
+        };
+        let res = Lrmp::new(&model, &net, cfg).run(&mut surrogate).unwrap();
+        assert!(ArrayType::all().contains(&res.best_array));
+        for e in res.trajectory.iter().filter(|e| e.feasible) {
+            assert!(ArrayType::all().contains(&e.array_type));
+        }
+        // The optimized cost was computed under the winning array's model.
+        assert!(res.optimized.total_cycles > 0.0);
+    }
+
+    #[test]
+    fn default_search_stays_on_the_crossbar() {
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let mut surrogate = SqnrSurrogate::new(&net, 0.98, 0.5);
+        let cfg = SearchConfig {
+            episodes: 4,
+            updates_per_episode: 1,
+            ..Default::default()
+        };
+        let res = Lrmp::new(&model, &net, cfg).run(&mut surrogate).unwrap();
+        assert_eq!(res.best_array, ArrayType::Crossbar);
     }
 
     #[test]

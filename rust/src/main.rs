@@ -7,8 +7,14 @@
 //!   motivate                       the §III / Fig 2 worked example
 //!   search    --net N --objective latency|throughput [--episodes E]
 //!             [--live] [--tiles T] [--noise S] [--out dep.json]
+//!             [--chip-config chip.json] [--arrays crossbar,1T1R,2T2R]
 //!                                  run the LRMP search; --out writes the
-//!                                  versioned Deployment artifact
+//!                                  versioned Deployment artifact;
+//!                                  --chip-config overrides Table I knobs
+//!                                  (ADC bits/share, bit-serial precision)
+//!                                  and --arrays widens the search across
+//!                                  NVM array organizations under the
+//!                                  iso-area budget (cost model v2)
 //!   sweep-area --net N             the Fig 8 area-sensitivity ablation
 //!   simulate  [--net N | --deployment dep.json]
 //!                                  event-driven validation of the cost
@@ -30,7 +36,12 @@
 //!                                  one shared kernel pool, with per-route
 //!                                  p50/p95/p99 + throughput
 //!   routes    routes.json          validate + print a route config
-//!   inspect   dep.json             validate + print a saved artifact
+//!   inspect   dep.json [--breakdown] [--chip-config chip.json]
+//!                                  validate + print a saved artifact;
+//!                                  --breakdown adds the per-component
+//!                                  area/energy/tclk table and peak TOPS/W,
+//!                                  TOPS/mm²; --chip-config re-profiles the
+//!                                  artifact's design under override knobs
 //!
 //! The flag registry lives in `lrmp::api::flags`: unknown flags are
 //! rejected with the valid list, and boolean switches (e.g. `--live`) never
@@ -42,10 +53,11 @@
 
 use anyhow::Result;
 use lrmp::api::{flags, ApiError, Deployment, ServeBackend, ServeOptions, Session, SCHEMA_VERSION};
-use lrmp::arch::ChipConfig;
+use lrmp::arch::{ArrayType, ChipConfig};
 use lrmp::bench_harness::Table;
 use lrmp::cli::Args;
 use lrmp::coordinator::batcher::BatchPolicy;
+use lrmp::cost::breakdown::NetworkBreakdown;
 use lrmp::cost::CostModel;
 use lrmp::lrmp::ablation;
 use lrmp::quant::Policy;
@@ -102,6 +114,28 @@ fn objective_arg(args: &Args) -> Result<Objective, ApiError> {
 /// `Args::parsed` with the error lifted into the typed API error.
 fn parsed<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T, ApiError> {
     args.parsed(key, default).map_err(ApiError::InvalidConfig)
+}
+
+/// Parse `--arrays crossbar,1T1R,2T2R` into array-type candidates
+/// (case-insensitive, duplicates collapsed, order preserved).
+fn arrays_arg(spec: &str) -> Result<Vec<ArrayType>, ApiError> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let at = ArrayType::parse(part).ok_or_else(|| {
+            ApiError::InvalidConfig(format!(
+                "--arrays expects crossbar|1T1R|2T2R entries, got '{part}'"
+            ))
+        })?;
+        if !out.contains(&at) {
+            out.push(at);
+        }
+    }
+    if out.is_empty() {
+        return Err(ApiError::InvalidConfig(
+            "--arrays needs at least one array type".into(),
+        ));
+    }
+    Ok(out)
 }
 
 /// One-line summary of a compiled (pass-optimized) graph schedule,
@@ -245,6 +279,12 @@ fn cmd_search(args: &Args) -> Result<()> {
     if args.flags.contains_key("tiles") {
         session = session.tiles(parsed(args, "tiles", 0u64)?);
     }
+    if let Some(path) = args.flags.get("chip-config") {
+        session = session.chip(ChipConfig::from_file(Path::new(path))?);
+    }
+    if let Some(spec) = args.flags.get("arrays") {
+        session = session.arrays(arrays_arg(spec)?);
+    }
     if let Some(spec) = args.flags.get("noise") {
         use lrmp::quant::nonideal::NonidealParams;
         let params = match spec.as_str() {
@@ -263,9 +303,11 @@ fn cmd_search(args: &Args) -> Result<()> {
 
     let (dep, res) = session.search_detailed()?;
     println!(
-        "{} [{}] latency x{:.2}  throughput x{:.2}  energy x{:.2}  acc {:.4} -> {:.4} (finetuned)",
+        "{} [{}, {} array] latency x{:.2}  throughput x{:.2}  energy x{:.2}  \
+         acc {:.4} -> {:.4} (finetuned)",
         dep.net,
         dep.provenance.accuracy_provider,
+        dep.chip.array_type.as_str(),
         res.latency_improvement(),
         res.throughput_improvement(),
         res.energy_improvement(),
@@ -862,6 +904,65 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         p.baseline_accuracy, p.searched_accuracy, p.finetuned_accuracy
     );
     println!("  validation  cost model re-run OK ({} tiles)", cost.tiles_used);
+    if args.bool("breakdown") || args.flags.contains_key("chip-config") {
+        // The stored breakdown, or a re-profile of the artifact's design
+        // under --chip-config overrides (the artifact itself is untouched).
+        let bd = match args.flags.get("chip-config") {
+            Some(path) => {
+                let chip = ChipConfig::from_file(Path::new(path))?;
+                let model = CostModel::new(chip.clone());
+                let over = model.network(&net, &dep.policy, &dep.replication);
+                println!("  breakdown   re-profiled under --chip-config {path}");
+                NetworkBreakdown::of(&chip, &over)
+            }
+            None => dep.breakdown.clone(),
+        };
+        let pr = &bd.profile;
+        println!(
+            "  array       {} | chip tile area {:.2} mm2 | peak {:.1} TOPS, \
+             {:.1} TOPS/W, {:.2} TOPS/mm2 (1b-ops)",
+            pr.array_type.as_str(),
+            pr.chip_area_mm2,
+            pr.tops_peak,
+            pr.topsw_peak,
+            pr.topsmm2_peak
+        );
+        let areas = pr.tile_area_mm2.named();
+        let tclks = pr.tclk_ns.named();
+        let fracs = pr.energy_fractions.named();
+        let ejs = bd.energy_j.named();
+        let mut bt = Table::new(&[
+            "component", "tile area um2", "tclk ns", "energy frac", "energy uJ/inf",
+        ]);
+        for i in 0..areas.len() {
+            bt.row(&[
+                areas[i].0.to_string(),
+                format!("{:.2}", areas[i].1 * 1e6),
+                format!("{:.3}", tclks[i].1),
+                format!("{:.3}", fracs[i].1),
+                format!("{:.2}", ejs[i].1 * 1e6),
+            ]);
+        }
+        bt.row(&[
+            "total".into(),
+            format!("{:.2}", pr.tile_area_mm2.total() * 1e6),
+            format!("{:.3}", pr.tclk_ns.total()),
+            format!("{:.3}", pr.energy_fractions.total()),
+            format!("{:.2}", bd.energy_j.total() * 1e6),
+        ]);
+        bt.print();
+        let mut lt = Table::new(&["layer", "tiles", "cycles", "area mm2", "tile energy uJ"]);
+        for (l, lb) in net.layers.iter().zip(&bd.layers) {
+            lt.row(&[
+                l.name.clone(),
+                lb.tiles.to_string(),
+                lb.cycles.to_string(),
+                format!("{:.3}", lb.area_mm2),
+                format!("{:.2}", lb.e_tile_j * 1e6),
+            ]);
+        }
+        lt.print();
+    }
     let batch = lrmp::api::default_sim_batch(&net);
     match lower_optimized(&net, batch) {
         Ok((g, pass_line)) => {

@@ -11,7 +11,8 @@
 //! that still fits (best-fit) to keep big contiguous regions available —
 //! the same packing family ISAAC-style compilers use.
 
-use crate::arch::ChipConfig;
+use crate::arch::{ArrayType, ChipConfig};
+use crate::util::json::Json;
 use std::fmt;
 
 /// One placed instance: which clusters host how many of its tiles.
@@ -32,12 +33,16 @@ impl Placement {
     }
 }
 
-/// Full chip placement.
-#[derive(Clone, Debug)]
+/// Full chip placement. Embedded verbatim in schema-v2 `Deployment`
+/// artifacts, so it round-trips through JSON and compares structurally.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ChipPlacement {
     pub placements: Vec<Placement>,
     pub cluster_free: Vec<u64>,
     pub cluster_capacity: u64,
+    /// NVM array organization the placement was computed for (cost model
+    /// v2: the search may resolve a non-default array under the area budget).
+    pub array_type: ArrayType,
 }
 
 #[derive(Debug)]
@@ -119,6 +124,7 @@ pub fn place(
         placements,
         cluster_free: free,
         cluster_capacity: capacity,
+        array_type: chip.array_type,
     })
 }
 
@@ -139,6 +145,84 @@ impl ChipPlacement {
             .map(|p| p.clusters_spanned() as f64)
             .sum::<f64>()
             / self.placements.len() as f64
+    }
+
+    /// Serialize for embedding in a schema-v2 Deployment artifact.
+    pub fn to_json(&self) -> Json {
+        let placements: Vec<Json> = self
+            .placements
+            .iter()
+            .map(|p| {
+                let spans: Vec<Json> = p
+                    .spans
+                    .iter()
+                    .map(|&(c, t)| {
+                        Json::Arr(vec![Json::Num(c as f64), Json::Num(t as f64)])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("layer", Json::Num(p.layer as f64)),
+                    ("replica", Json::Num(p.replica as f64)),
+                    ("spans", Json::Arr(spans)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("array_type", Json::Str(self.array_type.as_str().into())),
+            ("cluster_capacity", Json::Num(self.cluster_capacity as f64)),
+            ("cluster_free", Json::arr_u64(&self.cluster_free)),
+            ("placements", Json::Arr(placements)),
+        ])
+    }
+
+    /// Strict parse of `to_json` output: exact keys at every level.
+    pub fn parse_json(j: &Json) -> Option<ChipPlacement> {
+        let obj = j.as_obj()?;
+        const KEYS: [&str; 4] = ["array_type", "cluster_capacity", "cluster_free", "placements"];
+        if !obj.keys().all(|k| KEYS.contains(&k.as_str())) {
+            return None;
+        }
+        let cluster_free = j
+            .get("cluster_free")
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_u64())
+            .collect::<Option<Vec<_>>>()?;
+        let placements = j
+            .get("placements")
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let o = p.as_obj()?;
+                const PKEYS: [&str; 3] = ["layer", "replica", "spans"];
+                if !o.keys().all(|k| PKEYS.contains(&k.as_str())) {
+                    return None;
+                }
+                let spans = p
+                    .get("spans")
+                    .as_arr()?
+                    .iter()
+                    .map(|s| {
+                        let pair = s.as_arr()?;
+                        if pair.len() != 2 {
+                            return None;
+                        }
+                        Some((pair[0].as_usize()?, pair[1].as_u64()?))
+                    })
+                    .collect::<Option<Vec<_>>>()?;
+                Some(Placement {
+                    layer: p.get("layer").as_usize()?,
+                    replica: p.get("replica").as_u64()?,
+                    spans,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(ChipPlacement {
+            placements,
+            cluster_free,
+            cluster_capacity: j.get("cluster_capacity").as_u64()?,
+            array_type: ArrayType::parse(j.get("array_type").as_str()?)?,
+        })
     }
 
     /// Validate the placement invariants; returns violations.
@@ -245,6 +329,22 @@ mod tests {
         let conv1_instances = p.placements.iter().filter(|x| x.layer == 0).count();
         assert_eq!(conv1_instances, 14);
         assert!(p.validate(&chip()).is_empty());
+    }
+
+    #[test]
+    fn placement_json_roundtrip_deep_equal() {
+        let chip = chip().with_array(ArrayType::OneT1R);
+        let p = place(&chip, &[(0, 3, 8), (1, 1, 200)]).unwrap();
+        assert_eq!(p.array_type, ArrayType::OneT1R);
+        let j = p.to_json();
+        assert_eq!(ChipPlacement::parse_json(&j), Some(p));
+        // Unknown keys rejected.
+        let mut o = match j {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("clusters".into(), Json::Num(1.0));
+        assert_eq!(ChipPlacement::parse_json(&Json::Obj(o)), None);
     }
 
     #[test]

@@ -9,11 +9,21 @@ use crate::nets::{LayerKind, Network};
 use crate::quant::{LayerPrecision, Policy, MAX_BITS, MIN_BITS};
 use crate::replication::{self, LayerSummary, Objective};
 
-/// Observation dimension of the per-layer state vector.
-pub const OBS_DIM: usize = 12;
+/// Observation dimension of the per-layer state vector: 10 topology
+/// features, 4 cost-model breakdown features, and the previous action pair.
+pub const OBS_DIM: usize = 16;
 
 /// Build the HAQ-style observation for layer `l` given the previous action.
-pub fn observation(net: &Network, l: usize, prev_action: (f64, f64)) -> Vec<f64> {
+/// Cost model v2 widens the state with the hardware breakdown the agent is
+/// trading against: the layer's latency split (VMM vs transport vs digital,
+/// from an 8/8 LayerCost so it is policy-independent) and the chip's ADC
+/// energy fraction, so the policy can react to array/ADC knob changes.
+pub fn observation(
+    model: &CostModel,
+    net: &Network,
+    l: usize,
+    prev_action: (f64, f64),
+) -> Vec<f64> {
     let layer = &net.layers[l];
     let nl = net.num_layers() as f64;
     let (is_conv, kernel, stride, in_c, out_c) = match layer.kind {
@@ -28,6 +38,9 @@ pub fn observation(net: &Network, l: usize, prev_action: (f64, f64)) -> Vec<f64>
     };
     let total_params = net.total_params() as f64;
     let total_macs = net.total_macs() as f64;
+    let lc = model.layer(layer, LayerPrecision::new(MAX_BITS, MAX_BITS));
+    let lc_total = lc.total_cycles().max(1) as f64;
+    let adc_energy_fraction = model.chip.energy_fractions()[1];
     vec![
         l as f64 / nl,                                  // layer index
         is_conv,                                        // layer type
@@ -39,6 +52,10 @@ pub fn observation(net: &Network, l: usize, prev_action: (f64, f64)) -> Vec<f64>
         ((layer.params() as f64) + 1.0).ln() / 18.0,    // log weight count
         layer.params() as f64 / total_params,           // parameter share
         layer.macs() as f64 / total_macs,               // compute share
+        lc.t_tile as f64 / lc_total,                    // VMM latency share
+        (lc.t_tile_in + lc.t_tile_out) as f64 / lc_total, // transport share
+        lc.t_digital as f64 / lc_total,                 // digital share
+        adc_energy_fraction,                            // chip ADC energy frac
         prev_action.0,                                  // previous w action
         prev_action.1,                                  // previous a action
     ]
@@ -170,8 +187,9 @@ mod tests {
     #[test]
     fn observation_shape_and_range() {
         let net = nets::resnet::resnet18();
+        let model = CostModel::paper();
         for l in 0..net.num_layers() {
-            let obs = observation(&net, l, (0.5, 0.5));
+            let obs = observation(&model, &net, l, (0.5, 0.5));
             assert_eq!(obs.len(), OBS_DIM);
             for (i, v) in obs.iter().enumerate() {
                 assert!(
@@ -179,7 +197,29 @@ mod tests {
                     "obs[{i}] = {v} out of expected range at layer {l}"
                 );
             }
+            // The latency-split features are fractions of a total.
+            let split = obs[10] + obs[11] + obs[12];
+            assert!((split - 1.0).abs() < 1e-9, "latency split {split}");
         }
+    }
+
+    #[test]
+    fn observation_reacts_to_chip_knobs() {
+        // The breakdown features must move when the array knobs move —
+        // that is the whole point of exposing them to the agent.
+        let net = nets::resnet::resnet18();
+        let base = observation(&CostModel::paper(), &net, 0, (0.5, 0.5));
+        let mut chip = crate::arch::ChipConfig::paper_scaled();
+        chip.adc_bits = 5;
+        chip.adc_share_factor = 2;
+        let knobbed = observation(&CostModel::new(chip), &net, 0, (0.5, 0.5));
+        assert!(
+            (base[13] - knobbed[13]).abs() > 1e-6,
+            "ADC energy fraction should shift: {} vs {}",
+            base[13],
+            knobbed[13]
+        );
+        assert_eq!(base.len(), knobbed.len());
     }
 
     #[test]
