@@ -17,9 +17,13 @@
 //! TOPS/W, TOPS/mm²) and the paper benchmark nets' achieved efficiency,
 //! re-deriving every default-crossbar total through the schema-v1 closed
 //! forms — cost model v2's identity knobs must not move a single bit of
-//! the v5 aggregate cycles. Emits a machine-readable `BENCH_simnet.json`
-//! (schema v6, documented in `rust/src/api/README.md`) that the CI
-//! `bench-smoke` job uploads and gates on.
+//! the v5 aggregate cycles. A search section (new in schema v7) runs the
+//! same small LRMP search serially and with a 4-way episode fan-out,
+//! records episodes/sec and the cost-cache hit rate, and **fails** unless
+//! the two Deployment artifacts match byte for byte. Emits a
+//! machine-readable `BENCH_simnet.json` (schema v7, documented in
+//! `rust/src/api/README.md`) that the CI `bench-smoke` job uploads and
+//! gates on.
 //!
 //! Plain `fn main` bench (`harness = false`):
 //!
@@ -32,7 +36,8 @@
 //! executors disagree on any logit (residual adds and fused convs
 //! included), if the cost model's default-crossbar totals diverge bitwise
 //! from the schema-v1 closed forms, if a net with fused convs does not
-//! shrink its arena, if an
+//! shrink its arena, if the parallel search's Deployment artifact diverges
+//! from the serial one (or its cost cache records no hits), if an
 //! FC net's steady-state eval allocates, or — when `--baseline` points at
 //! a *calibrated* committed `BENCH_simnet.json` — if the pooled aggregate
 //! GFLOP/s regressed more than 20% against it. `--summary` additionally
@@ -536,7 +541,66 @@ fn main() {
         (j, all_bitwise)
     };
 
-    // --- machine-readable artifact (schema v6) -------------------------
+    // --- parallel search fan-out (new in schema v7) --------------------
+    // The same small LRMP search runs twice — serial and with a 4-way
+    // episode fan-out across all NVM array candidates — and the two
+    // Deployment artifacts must match byte for byte (the CI search-smoke
+    // step drives the same contract through the binary). Episodes/sec and
+    // the cost-cache hit rate are recorded; the speedup itself is
+    // machine-dependent (CI runners are 2-core VMs) and not gated.
+    let search_episodes: usize = if quick { 6 } else { 16 };
+    let search_threads = 4usize;
+    let (search_json, search_md, search_artifact_identical, search_hit_rate) = {
+        use lrmp::api::Session;
+        use lrmp::arch::ArrayType;
+        let run = |threads: usize| {
+            let t0 = std::time::Instant::now();
+            let (dep, res) = Session::new("mlp")
+                .expect("bench net is registered")
+                .episodes(search_episodes)
+                .updates_per_episode(2)
+                .seed(0xA11CE)
+                .arrays(ArrayType::all().to_vec())
+                .search_threads(threads)
+                .search_detailed()
+                .expect("bench search runs");
+            (t0.elapsed().as_secs_f64(), dep, res)
+        };
+        let (wall_1, dep_1, _res_1) = run(1);
+        let (wall_n, dep_n, res_n) = run(search_threads);
+        let identical = dep_1.to_json().pretty() == dep_n.to_json().pretty();
+        let eps_1 = search_episodes as f64 / wall_1.max(1e-12);
+        let eps_n = search_episodes as f64 / wall_n.max(1e-12);
+        let speedup = eps_n / eps_1.max(1e-12);
+        let hit_rate = res_n.stats.cache_hit_rate();
+        println!(
+            "search fan-out ({search_episodes} episodes, all arrays): serial {eps_1:.1} ep/s, \
+             {search_threads} threads {eps_n:.1} ep/s (x{speedup:.2}), cost-cache hit rate \
+             {:.1}%, artifact bitwise identical {identical}\n",
+            hit_rate * 100.0,
+        );
+        let j = Json::obj(vec![
+            ("net", Json::Str(dep_1.net.clone())),
+            ("episodes", Json::Num(search_episodes as f64)),
+            ("threads", Json::Num(search_threads as f64)),
+            ("episodes_per_s_serial", Json::Num(eps_1)),
+            ("episodes_per_s_parallel", Json::Num(eps_n)),
+            ("speedup", Json::Num(speedup)),
+            ("cost_cache_hit_rate", Json::Num(hit_rate)),
+            ("artifact_bitwise_identical", Json::Bool(identical)),
+        ]);
+        let md = format!(
+            "\n## search fan-out ({search_episodes} episodes, serial vs {search_threads} \
+             threads)\n\n\
+             | episodes/s serial | episodes/s parallel | speedup | cost-cache hit rate | \
+             artifact bitwise identical |\n|---|---|---|---|---|\n\
+             | {eps_1:.1} | {eps_n:.1} | x{speedup:.2} | {:.1}% | {identical} |\n",
+            hit_rate * 100.0,
+        );
+        (j, md, identical, hit_rate)
+    };
+
+    // --- machine-readable artifact (schema v7) -------------------------
     let gemm_json = Json::Arr(
         rows.iter()
             .map(|r| {
@@ -596,7 +660,7 @@ fn main() {
     );
     let report = Json::obj(vec![
         ("kind", Json::Str("lrmp-bench-simnet".into())),
-        ("schema_version", Json::Num(6.0)),
+        ("schema_version", Json::Num(7.0)),
         ("calibrated", Json::Bool(true)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(threads as f64)),
@@ -609,6 +673,7 @@ fn main() {
         ("nets", nets_json),
         ("serving", serving_json),
         ("breakdown", breakdown_json),
+        ("search", search_json),
     ]);
     report.to_file(std::path::Path::new(&out_path)).expect("write bench json");
     println!("\nwrote {out_path}");
@@ -626,7 +691,7 @@ fn main() {
         ),
     };
     if let Some(sp) = args.flags.get("summary") {
-        std::fs::write(sp, &summary).expect("write bench summary");
+        std::fs::write(sp, format!("{summary}{search_md}")).expect("write bench summary");
         println!("wrote {sp}");
     }
 
@@ -675,6 +740,17 @@ fn main() {
         .all(|r| r.allocs_per_eval == 0.0);
     if !fc_allocs_ok {
         eprintln!("FAIL: an FC net's steady-state eval allocated (contract is 0 allocs/eval)");
+        std::process::exit(1);
+    }
+    if !search_artifact_identical {
+        eprintln!(
+            "FAIL: the {search_threads}-thread search's Deployment artifact diverged \
+             from the serial run (the fan-out must be bitwise thread-invariant)"
+        );
+        std::process::exit(1);
+    }
+    if search_hit_rate <= 0.0 {
+        eprintln!("FAIL: the search cost cache recorded no hits");
         std::process::exit(1);
     }
     if !serving_ok {

@@ -76,6 +76,10 @@ const SEARCH_FLAGS: &[FlagDef] = &[
     val("tiles", "tile budget override (default: 8-bit baseline tiles)"),
     val("updates", "DDPG updates per episode (default 8)"),
     val("seed", "search PRNG seed"),
+    val(
+        "threads",
+        "episode fan-out workers (default 1, 0 = auto; results are bitwise thread-invariant)",
+    ),
     val("samples", "live-eval test samples (default 512)"),
     val("noise", "score under analog noise: 'typical' or a sigma"),
     val("out", "write the Deployment artifact to this file"),

@@ -156,6 +156,14 @@ impl Session {
         self
     }
 
+    /// Episode fan-out workers (1 = serial, 0 = auto-detect). Every thread
+    /// count produces a bitwise-identical Deployment artifact; this knob
+    /// only trades wall-clock time.
+    pub fn search_threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
     /// Search on a different chip configuration.
     pub fn chip(mut self, chip: ChipConfig) -> Self {
         self.chip = chip;

@@ -13,7 +13,7 @@ pub mod energy;
 
 use crate::arch::ChipConfig;
 use crate::nets::{layer_tiles, Layer, Network};
-use crate::quant::{LayerPrecision, Policy};
+use crate::quant::{LayerPrecision, Policy, MAX_BITS, MIN_BITS};
 use crate::util::ceil_div;
 
 /// Accumulator width (bits) of the digital column partial sums shipped from
@@ -249,6 +249,106 @@ impl CostModel {
     }
 }
 
+/// Valid precision values per axis: MIN_BITS..=MAX_BITS.
+const BITS_SPAN: usize = (MAX_BITS - MIN_BITS + 1) as usize;
+/// Precision slots per layer: one per (w_bits, a_bits) pair.
+const PREC_SLOTS: usize = BITS_SPAN * BITS_SPAN;
+
+/// Memo over `CostModel::layer` evaluations, keyed `(layer, w_bits, a_bits)`.
+///
+/// `CostModel::layer` for a fixed model instance is a pure function of the
+/// layer and its precision pair — replication is applied *outside* the
+/// per-instance evaluation (Eqn 7 divides afterwards) and the array type is
+/// fixed per `CostModel` — so a cache holding the `Copy` `LayerCost` output
+/// is bitwise-transparent: a hit returns the exact struct a miss would have
+/// recomputed. One cache is intended per `(model, net)` pair; callers that
+/// mutate a layer's knobs through some other channel (a different `Layer`
+/// definition, say) must `invalidate_layer` it.
+///
+/// The search's budget-enforcement loop changes one layer's bits per
+/// iteration, so successive `layers()` sweeps hit on every clean layer —
+/// that reuse, not cross-episode persistence, is where the speedup lives
+/// (each episode/candidate evaluation owns a fresh cache so parallel
+/// episode fan-out stays deterministic, including the hit counters).
+#[derive(Clone, Debug)]
+pub struct CostCache {
+    entries: Vec<[Option<LayerCost>; PREC_SLOTS]>,
+    hits: u64,
+    misses: u64,
+}
+
+impl CostCache {
+    pub fn new(num_layers: usize) -> Self {
+        CostCache {
+            entries: vec![[None; PREC_SLOTS]; num_layers],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn slot(prec: LayerPrecision) -> usize {
+        debug_assert!((MIN_BITS..=MAX_BITS).contains(&prec.w_bits));
+        debug_assert!((MIN_BITS..=MAX_BITS).contains(&prec.a_bits));
+        let w = (prec.w_bits - MIN_BITS) as usize;
+        let a = (prec.a_bits - MIN_BITS) as usize;
+        w * BITS_SPAN + a
+    }
+
+    /// Memoized `model.layer(layer, prec)`; `l` is the layer index.
+    pub fn layer(
+        &mut self,
+        model: &CostModel,
+        layer: &Layer,
+        l: usize,
+        prec: LayerPrecision,
+    ) -> LayerCost {
+        let slot = Self::slot(prec);
+        if let Some(lc) = self.entries[l][slot] {
+            self.hits += 1;
+            return lc;
+        }
+        self.misses += 1;
+        let lc = model.layer(layer, prec);
+        self.entries[l][slot] = Some(lc);
+        lc
+    }
+
+    /// Memoized `model.layers(net, policy)`.
+    pub fn layers(&mut self, model: &CostModel, net: &Network, policy: &Policy) -> Vec<LayerCost> {
+        assert_eq!(policy.len(), net.num_layers(), "policy/net length mismatch");
+        net.layers
+            .iter()
+            .zip(&policy.layers)
+            .enumerate()
+            .map(|(l, (layer, &p))| self.layer(model, layer, l, p))
+            .collect()
+    }
+
+    /// Drops every memoized precision slot of layer `l` (its definition — not
+    /// just its policy bits — changed, so cached evaluations are stale).
+    pub fn invalidate_layer(&mut self, l: usize) {
+        self.entries[l] = [None; PREC_SLOTS];
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0.0 when none were made).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,5 +548,80 @@ mod tests {
         let policy = Policy::baseline(net.num_layers());
         let repl = vec![0u64; net.num_layers()];
         model.network(&net, &policy, &repl);
+    }
+
+    fn layer_costs_bits(costs: &[LayerCost]) -> Vec<(u64, u64, u64, u64, u64, u64, u64)> {
+        costs
+            .iter()
+            .map(|c| {
+                (
+                    c.tiles,
+                    c.t_tile_in,
+                    c.t_tile_out,
+                    c.t_tile,
+                    c.t_digital,
+                    c.e_tile_j.to_bits(),
+                    c.e_sram_j.to_bits(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cost_cache_is_bitwise_transparent() {
+        // A hit returns the exact struct a direct evaluation produces —
+        // every integer field equal, every f64 field bit-identical.
+        let net = resnet::resnet18();
+        let model = cm();
+        let mut cache = CostCache::new(net.num_layers());
+        for (w, a) in [(8u32, 8u32), (4, 6), (2, 2)] {
+            let policy = Policy::uniform(net.num_layers(), w, a);
+            let direct = model.layers(&net, &policy);
+            let first = cache.layers(&model, &net, &policy); // misses
+            let second = cache.layers(&model, &net, &policy); // all hits
+            assert_eq!(layer_costs_bits(&direct), layer_costs_bits(&first));
+            assert_eq!(layer_costs_bits(&direct), layer_costs_bits(&second));
+        }
+    }
+
+    #[test]
+    fn cost_cache_counts_hits_and_misses() {
+        let net = nets::mlp_mnist();
+        let model = cm();
+        let nl = net.num_layers();
+        let mut cache = CostCache::new(nl);
+        assert_eq!(cache.hit_rate(), 0.0);
+        let policy = Policy::baseline(nl);
+        cache.layers(&model, &net, &policy);
+        assert_eq!(cache.misses(), nl as u64);
+        assert_eq!(cache.hits(), 0);
+        // Re-sweeping the same policy hits every layer.
+        cache.layers(&model, &net, &policy);
+        assert_eq!(cache.hits(), nl as u64);
+        // Changing one layer's bits misses only that layer.
+        let mut p2 = policy.clone();
+        p2.layers[0].a_bits = 4;
+        cache.layers(&model, &net, &p2);
+        assert_eq!(cache.misses(), nl as u64 + 1);
+        assert_eq!(cache.hits(), 2 * nl as u64 - 1);
+        assert!(cache.hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn cost_cache_invalidate_forces_recompute() {
+        let net = nets::mlp_mnist();
+        let model = cm();
+        let nl = net.num_layers();
+        let mut cache = CostCache::new(nl);
+        let policy = Policy::baseline(nl);
+        cache.layers(&model, &net, &policy);
+        cache.invalidate_layer(1);
+        let before = cache.misses();
+        let again = cache.layers(&model, &net, &policy);
+        assert_eq!(cache.misses(), before + 1, "only layer 1 recomputes");
+        assert_eq!(
+            layer_costs_bits(&again),
+            layer_costs_bits(&model.layers(&net, &policy))
+        );
     }
 }

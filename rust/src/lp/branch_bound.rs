@@ -85,7 +85,7 @@ pub fn solve(lp: &Lp, opts: &BbOptions) -> IlpOutcome {
         let frac = |t: f64| (t - t.round()).abs();
         let branch_var = (0..n)
             .filter(|&i| integral[i] && frac(x[i]) > INT_TOL)
-            .max_by(|&i, &j| frac(x[i]).partial_cmp(&frac(x[j])).unwrap());
+            .max_by(|&i, &j| frac(x[i]).total_cmp(&frac(x[j])));
 
         match branch_var {
             None => {

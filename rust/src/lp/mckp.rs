@@ -232,6 +232,88 @@ mod tests {
     }
 
     #[test]
+    fn memoized_costs_reproduce_from_scratch_variant_solve() {
+        // Satellite for the memoized search path: rebuilding the replication
+        // ILP from a `CostCache` that is kept warm across randomized
+        // dirty-layer edits (invalidate + re-fill) must reproduce the
+        // from-scratch `solve_variants` answer exactly — same variant, same
+        // selection, same cost bits. Group construction mirrors
+        // `lrmp::ablation::lp_array_choice`.
+        use crate::arch::{ArrayType, ChipConfig};
+        use crate::cost::{CostCache, CostModel, LayerCost};
+        use crate::nets;
+        use crate::quant::{Policy, MAX_BITS, MIN_BITS};
+        use crate::replication::{LayerSummary, R_MAX_CAP};
+
+        fn ilp_variant(costs: &[LayerCost], budget: u64) -> Option<(u64, Vec<Vec<Choice>>)> {
+            let summaries = LayerSummary::from_costs(costs);
+            let min_total: u64 = summaries.iter().map(|l| l.tiles).sum();
+            let slack = budget.checked_sub(min_total)?;
+            let groups = summaries
+                .iter()
+                .map(|lay| {
+                    let rmax = (1 + slack / lay.tiles).min(R_MAX_CAP);
+                    (1..=rmax)
+                        .map(|r| Choice {
+                            weight: lay.tiles * (r - 1),
+                            cost: lay.cycles as f64 / r as f64,
+                        })
+                        .collect()
+                })
+                .collect();
+            Some((slack, groups))
+        }
+
+        let net = nets::mlp_mnist();
+        let nl = net.num_layers();
+        let chip = ChipConfig::paper_scaled();
+        let n_tiles = 2 * net.tiles_at_uniform(256, 8, 1);
+        let setups: Vec<(u64, CostModel)> = ArrayType::all()
+            .iter()
+            .map(|&at| {
+                (
+                    chip.with_tiles(n_tiles).tiles_budget_for(at),
+                    CostModel::new(chip.with_array(at)),
+                )
+            })
+            .collect();
+        let mut caches: Vec<CostCache> = setups.iter().map(|_| CostCache::new(nl)).collect();
+
+        let mut policy = Policy::baseline(nl);
+        let mut rng = Rng::new(0x5eed_11f);
+        for round in 0..20 {
+            let dirty = rng.int_range(0, nl as i64) as usize;
+            for _ in 0..dirty {
+                let l = rng.int_range(0, nl as i64 - 1) as usize;
+                policy.layers[l].w_bits = rng.int_range(MIN_BITS as i64, MAX_BITS as i64) as u32;
+                policy.layers[l].a_bits = rng.int_range(MIN_BITS as i64, MAX_BITS as i64) as u32;
+                for cache in caches.iter_mut() {
+                    cache.invalidate_layer(l);
+                }
+            }
+            let mut memo_variants = Vec::new();
+            let mut fresh_variants = Vec::new();
+            for ((budget, model), cache) in setups.iter().zip(caches.iter_mut()) {
+                if let Some(v) = ilp_variant(&cache.layers(model, &net, &policy), *budget) {
+                    memo_variants.push(v);
+                }
+                if let Some(v) = ilp_variant(&model.layers(&net, &policy), *budget) {
+                    fresh_variants.push(v);
+                }
+            }
+            match (solve_variants(&memo_variants), solve_variants(&fresh_variants)) {
+                (Some((va, sa, ca)), Some((vb, sb, cb))) => {
+                    assert_eq!((va, sa), (vb, sb), "round {round}");
+                    assert_eq!(ca.to_bits(), cb.to_bits(), "round {round}");
+                }
+                (a, b) => assert_eq!(a.is_some(), b.is_some(), "round {round} {a:?} {b:?}"),
+            }
+        }
+        let hits: u64 = caches.iter().map(|c| c.hits()).sum();
+        assert!(hits > 0, "warm caches must be reused across rounds");
+    }
+
+    #[test]
     fn prop_matches_bruteforce() {
         propcheck::check("mckp-equals-bruteforce", 80, |rng: &mut Rng| {
             let ngroups = rng.int_range(1, 5) as usize;

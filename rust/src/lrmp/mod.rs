@@ -10,14 +10,16 @@ use crate::accuracy::Evaluator;
 
 pub mod ablation;
 use crate::arch::ArrayType;
-use crate::cost::{CostModel, NetworkCost};
+use crate::cost::{CostCache, CostModel, NetworkCost};
 use crate::nets::Network;
 use crate::quant::nonideal::NoisySurrogate;
 use crate::quant::{Policy, SqnrSurrogate};
 use crate::replication::{Objective, ReplicationPlan};
 use crate::rl::ddpg::{Ddpg, DdpgConfig, Transition};
 use crate::rl::env::{self, OBS_DIM};
+use crate::runtime::pool::{self, WorkerPool};
 use crate::util::json::Json;
+use crate::util::prng::Rng;
 use anyhow::Result;
 
 /// Source of the accuracy term in the reward (Eqn 8): live PJRT evaluation
@@ -160,6 +162,12 @@ pub struct SearchConfig {
     /// `Crossbar` (the default) reproduces the schema-v1 single-array
     /// search exactly.
     pub array_types: Vec<ArrayType>,
+    /// Worker threads for the episode fan-out (1 = serial, 0 = auto via
+    /// `runtime::pool::default_threads`). The thread count only changes how
+    /// the per-`(episode, candidate)` parts are scheduled, never what they
+    /// compute — the resulting search and its `Deployment` artifact are
+    /// bitwise identical for every value.
+    pub threads: usize,
 }
 
 impl Default for SearchConfig {
@@ -175,8 +183,70 @@ impl Default for SearchConfig {
             updates_per_episode: 8,
             seed: 0xA11CE,
             array_types: vec![ArrayType::Crossbar],
+            threads: 1,
         }
     }
+}
+
+/// Episodes per fan-out round: each round's rollouts run against the
+/// round-start agent, so the round width is part of the *algorithm* — a
+/// fixed constant, never the thread count — which is exactly why
+/// `--threads N` only reschedules identical work instead of changing it.
+const EPISODE_ROUND: usize = 4;
+
+/// Derive the deterministic RNG stream seed for `(seed, episode,
+/// candidate)` (SplitMix64-style avalanche, so neighboring episodes get
+/// uncorrelated streams). Candidate streams beyond index 0 are reserved:
+/// every candidate of an episode replays the candidate-0 rollout stream —
+/// candidate evaluation is fully deterministic today — but the derivation
+/// keys on the candidate index so a future stochastic per-candidate stage
+/// stays reproducible without reshuffling existing streams.
+fn episode_stream_seed(seed: u64, episode: usize, candidate: usize) -> u64 {
+    let mut z = seed
+        ^ (episode as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (candidate as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Counters from one search run. Everything except `threads` is invariant
+/// to the thread count (each part owns a fresh [`CostCache`], and parts are
+/// pure functions of the round-start state), which is what lets the bench
+/// gate artifact identity while still reporting the cache's effectiveness.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SearchStats {
+    /// Worker threads the fan-out ran on (result-invariant; not serialized
+    /// into the search JSON or the `Deployment` artifact).
+    pub threads: usize,
+    /// Cost-model memo hits/misses summed over every episode × candidate
+    /// budget enforcement.
+    pub cost_cache_hits: u64,
+    pub cost_cache_misses: u64,
+}
+
+impl SearchStats {
+    /// Fraction of cost-model lookups served from the memo.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cost_cache_hits + self.cost_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cost_cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Everything one fan-out part computes for an `(episode, candidate)` pair.
+/// Parts are provider-free and agent-mutation-free — pure functions of the
+/// round-start agent and the fixed search inputs — so they can run on any
+/// worker in any order without affecting the result.
+struct PartEval {
+    states: Vec<Vec<f64>>,
+    actions: Vec<Vec<f64>>,
+    enforced: Option<(Policy, ReplicationPlan)>,
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 /// Per-episode log row (Fig 6 trajectory).
@@ -211,6 +281,8 @@ pub struct SearchResult {
     pub baseline: NetworkCost,
     pub optimized: NetworkCost,
     pub trajectory: Vec<EpisodeLog>,
+    /// Fan-out / cost-cache counters for this run.
+    pub stats: SearchStats,
 }
 
 impl SearchResult {
@@ -243,6 +315,12 @@ impl SearchResult {
                 Json::arr_u64(&self.best_plan.replication),
             ),
             ("tiles_used", Json::Num(self.best_plan.tiles_used as f64)),
+            // Thread-count-invariant by construction (see SearchStats), so
+            // serial and parallel runs emit identical JSON.
+            (
+                "cost_cache_hit_rate",
+                Json::Num(self.stats.cache_hit_rate()),
+            ),
             (
                 "trajectory",
                 Json::Arr(
@@ -361,133 +439,209 @@ impl<'a> Lrmp<'a> {
                 .collect()
         };
 
+        let n_arr = arrays.len();
+        let threads = if cfg.threads == 0 {
+            pool::default_threads()
+        } else {
+            cfg.threads.clamp(1, pool::MAX_THREADS)
+        };
+        let worker_pool = WorkerPool::new(threads);
+
         let mut agent = Ddpg::new(DdpgConfig::default_for(OBS_DIM, 2, cfg.seed));
+
+        // Budget schedule (§IV-C exponential tightening) and per-episode
+        // noise levels, precomputed so every fan-out part and the reduction
+        // agree on them exactly.
+        let budget_fractions: Vec<f64> = (0..cfg.episodes)
+            .map(|ep| {
+                let f = if cfg.episodes > 1 {
+                    ep as f64 / (cfg.episodes - 1) as f64
+                } else {
+                    1.0
+                };
+                cfg.budget_start * (cfg.budget_end / cfg.budget_start).powf(f)
+            })
+            .collect();
+        let mut sigmas = Vec::with_capacity(cfg.episodes);
+        let mut sigma = agent.cfg.noise_sigma;
+        for _ in 0..cfg.episodes {
+            sigmas.push(sigma);
+            sigma *= agent.cfg.noise_decay;
+        }
+
+        // Policy-independent observation features; rollouts patch the last
+        // two slots (the previous action pair) per layer — bit-identical to
+        // calling `env::observation` from scratch, minus the repeated
+        // cost-model evaluation.
+        let obs_static: Vec<Vec<f64>> = (0..nl)
+            .map(|l| env::observation(self.model, self.net, l, (0.0, 0.0)))
+            .collect();
+
         let mut trajectory = Vec::with_capacity(cfg.episodes);
         let mut best: Option<(f64, Policy, ReplicationPlan, f64, ArrayType)> = None;
+        let mut stats = SearchStats {
+            threads,
+            ..Default::default()
+        };
 
-        for ep in 0..cfg.episodes {
-            // Exponential budget tightening (§IV-C).
-            let f = if cfg.episodes > 1 {
-                ep as f64 / (cfg.episodes - 1) as f64
-            } else {
-                1.0
-            };
-            let budget_fraction =
-                cfg.budget_start * (cfg.budget_end / cfg.budget_start).powf(f);
-            let budget = budget_fraction * base_metric;
-
-            // --- rollout: per-layer precision decisions ---
-            let mut states = Vec::with_capacity(nl);
-            let mut actions = Vec::with_capacity(nl);
-            let mut prev = (1.0, 1.0); // baseline-ish previous action
-            let mut policy = Policy::baseline(nl);
-            for l in 0..nl {
-                let obs = env::observation(self.model, self.net, l, prev);
-                let act = agent.act_explore(&obs);
-                policy.layers[l] = env::action_to_bits((act[0], act[1]));
-                prev = (act[0], act[1]);
-                states.push(obs);
-                actions.push(act);
-            }
-
-            // --- budget enforcement + LP replication, per candidate array
-            // (§IV-B/C, widened by cost model v2): the same prescribed
-            // policy is enforced under every array type at its iso-area
-            // budget; the best Eqn-8 reward wins the episode. Strict `>`
-            // keeps the first (crossbar-first) candidate on ties.
-            let mut episode_best: Option<(f64, Policy, ReplicationPlan, f64, ArrayType)> =
-                None;
-            for (at, tiles_at, model_at) in &arrays {
-                let enforced = env::enforce_budget(
+        // The search proceeds in fixed-width rounds of EPISODE_ROUND
+        // episodes. Fan-out: every (episode, candidate) part of the round —
+        // rollout from its derived RNG stream against the round-start agent,
+        // then cached budget enforcement — runs on the pool; parts are pure,
+        // so scheduling cannot change them. Reduction: strictly in episode
+        // order then candidate order, the only place the accuracy provider
+        // is consulted and the agent learns. Thread count therefore moves
+        // wall-clock only, never a bit of the result.
+        let mut round_start = 0;
+        while round_start < cfg.episodes {
+            let round_len = EPISODE_ROUND.min(cfg.episodes - round_start);
+            let parts = round_len * n_arr;
+            let agent_ref = &agent;
+            let arrays_ref = &arrays;
+            let mut part_evals: Vec<PartEval> = worker_pool.run_map(parts, |p| {
+                let ep = round_start + p / n_arr;
+                let cand = p % n_arr;
+                // --- rollout: per-layer precision decisions (identical
+                // across the episode's candidates — all candidates replay
+                // the episode's candidate-0 stream, see episode_stream_seed)
+                let mut rng = Rng::new(episode_stream_seed(cfg.seed, ep, 0));
+                let noise = sigmas[ep];
+                let mut states = Vec::with_capacity(nl);
+                let mut actions = Vec::with_capacity(nl);
+                let mut prev = (1.0, 1.0); // baseline-ish previous action
+                let mut policy = Policy::baseline(nl);
+                for (l, static_obs) in obs_static.iter().enumerate() {
+                    let mut obs = static_obs.clone();
+                    obs[OBS_DIM - 2] = prev.0;
+                    obs[OBS_DIM - 1] = prev.1;
+                    let act = agent_ref.act_explore_with(&obs, &mut rng, noise);
+                    policy.layers[l] = env::action_to_bits((act[0], act[1]));
+                    prev = (act[0], act[1]);
+                    states.push(obs);
+                    actions.push(act);
+                }
+                // --- budget enforcement + LP replication for this part's
+                // candidate array (§IV-B/C), through a fresh memo so the
+                // hit counters are as deterministic as the plan itself.
+                let (_at, tiles_at, model_at) = &arrays_ref[cand];
+                let mut cache = CostCache::new(nl);
+                let enforced = env::enforce_budget_cached(
                     model_at,
                     self.net,
-                    policy.clone(),
+                    policy,
                     *tiles_at,
                     cfg.objective,
-                    budget,
+                    budget_fractions[ep] * base_metric,
+                    &mut cache,
                 );
-                let (pol, plan) = match enforced {
-                    Some(x) => x,
-                    None => continue,
-                };
-                let acc = provider.reward_accuracy(&pol)?;
-                let metric = match cfg.objective {
-                    Objective::Latency => plan.total_cycles,
-                    Objective::Throughput => plan.bottleneck_cycles,
-                };
-                // Eqn 8 (base_metric stays the default-array baseline, so a
-                // candidate only wins by actually beating the crossbar).
-                let reward = cfg.lambda * (acc - acc_base)
-                    + cfg.alpha * (1.0 - metric / base_metric);
-                if episode_best.as_ref().map_or(true, |(r, ..)| reward > *r) {
-                    episode_best = Some((reward, pol, plan, acc, *at));
+                PartEval {
+                    states,
+                    actions,
+                    enforced,
+                    cache_hits: cache.hits(),
+                    cache_misses: cache.misses(),
                 }
-            }
-            let (reward, log) = match episode_best {
-                None => {
-                    // Unreachable budget under every array: strong negative
-                    // reward.
-                    (
-                        -1.0,
-                        EpisodeLog {
+            });
+
+            for e in 0..round_len {
+                let ep = round_start + e;
+                let budget_fraction = budget_fractions[ep];
+                let mut parts_ep: Vec<PartEval> = part_evals.drain(..n_arr).collect();
+                for part in &parts_ep {
+                    stats.cost_cache_hits += part.cache_hits;
+                    stats.cost_cache_misses += part.cache_misses;
+                }
+
+                // Candidate selection (widened by cost model v2): the best
+                // Eqn-8 reward wins the episode; strict `>` keeps the first
+                // (crossbar-first) candidate on ties.
+                let mut episode_best: Option<(f64, Policy, ReplicationPlan, f64, ArrayType)> =
+                    None;
+                for (cand, (at, _tiles_at, _model_at)) in arrays.iter().enumerate() {
+                    let (pol, plan) = match parts_ep[cand].enforced.take() {
+                        Some(x) => x,
+                        None => continue,
+                    };
+                    let acc = provider.reward_accuracy(&pol)?;
+                    let metric = match cfg.objective {
+                        Objective::Latency => plan.total_cycles,
+                        Objective::Throughput => plan.bottleneck_cycles,
+                    };
+                    // Eqn 8 (base_metric stays the default-array baseline, so
+                    // a candidate only wins by actually beating the crossbar).
+                    let reward = cfg.lambda * (acc - acc_base)
+                        + cfg.alpha * (1.0 - metric / base_metric);
+                    if episode_best.as_ref().map_or(true, |(r, ..)| reward > *r) {
+                        episode_best = Some((reward, pol, plan, acc, *at));
+                    }
+                }
+                let (reward, log) = match episode_best {
+                    None => {
+                        // Unreachable budget under every array: strong
+                        // negative reward.
+                        (
+                            -1.0,
+                            EpisodeLog {
+                                episode: ep,
+                                budget_fraction,
+                                reward: -1.0,
+                                accuracy: 0.0,
+                                latency_improvement: 0.0,
+                                throughput_improvement: 0.0,
+                                mean_w_bits: 0.0,
+                                mean_a_bits: 0.0,
+                                tiles_used: 0,
+                                feasible: false,
+                                array_type: self.model.chip.array_type,
+                            },
+                        )
+                    }
+                    Some((reward, policy, plan, acc, at)) => {
+                        let (mw, ma) = policy.mean_bits();
+                        let log = EpisodeLog {
                             episode: ep,
                             budget_fraction,
-                            reward: -1.0,
-                            accuracy: 0.0,
-                            latency_improvement: 0.0,
-                            throughput_improvement: 0.0,
-                            mean_w_bits: 0.0,
-                            mean_a_bits: 0.0,
-                            tiles_used: 0,
-                            feasible: false,
-                            array_type: self.model.chip.array_type,
-                        },
-                    )
-                }
-                Some((reward, policy, plan, acc, at)) => {
-                    let (mw, ma) = policy.mean_bits();
-                    let log = EpisodeLog {
-                        episode: ep,
-                        budget_fraction,
-                        reward,
-                        accuracy: acc,
-                        latency_improvement: baseline.total_cycles / plan.total_cycles,
-                        throughput_improvement: baseline.bottleneck_cycles
-                            / plan.bottleneck_cycles,
-                        mean_w_bits: mw,
-                        mean_a_bits: ma,
-                        tiles_used: plan.tiles_used,
-                        feasible: true,
-                        array_type: at,
-                    };
-                    if best.as_ref().map_or(true, |(r, ..)| reward > *r) {
-                        best = Some((reward, policy, plan, acc, at));
+                            reward,
+                            accuracy: acc,
+                            latency_improvement: baseline.total_cycles / plan.total_cycles,
+                            throughput_improvement: baseline.bottleneck_cycles
+                                / plan.bottleneck_cycles,
+                            mean_w_bits: mw,
+                            mean_a_bits: ma,
+                            tiles_used: plan.tiles_used,
+                            feasible: true,
+                            array_type: at,
+                        };
+                        if best.as_ref().map_or(true, |(r, ..)| reward > *r) {
+                            best = Some((reward, policy, plan, acc, at));
+                        }
+                        (reward, log)
                     }
-                    (reward, log)
-                }
-            };
-            trajectory.push(log);
-
-            // --- HAQ-style credit assignment: the episode reward goes to
-            // every transition; terminal at the last layer. ---
-            for l in 0..nl {
-                let next_state = if l + 1 < nl {
-                    states[l + 1].clone()
-                } else {
-                    vec![0.0; OBS_DIM]
                 };
-                agent.replay.push(Transition {
-                    state: states[l].clone(),
-                    action: actions[l].clone(),
-                    reward,
-                    next_state,
-                    terminal: l + 1 == nl,
-                });
+                trajectory.push(log);
+
+                // --- HAQ-style credit assignment: the episode reward goes
+                // to every transition; terminal at the last layer. ---
+                let PartEval { states, actions, .. } = parts_ep.swap_remove(0);
+                for l in 0..nl {
+                    let next_state = if l + 1 < nl {
+                        states[l + 1].clone()
+                    } else {
+                        vec![0.0; OBS_DIM]
+                    };
+                    agent.replay.push(Transition {
+                        state: states[l].clone(),
+                        action: actions[l].clone(),
+                        reward,
+                        next_state,
+                        terminal: l + 1 == nl,
+                    });
+                }
+                for _ in 0..cfg.updates_per_episode {
+                    agent.update();
+                }
             }
-            for _ in 0..cfg.updates_per_episode {
-                agent.update();
-            }
-            agent.decay_noise();
+            round_start += round_len;
         }
 
         let (best_reward, best_policy, best_plan, best_accuracy, best_array) =
@@ -511,6 +665,7 @@ impl<'a> Lrmp<'a> {
             baseline,
             optimized,
             trajectory,
+            stats,
         })
     }
 }
@@ -615,6 +770,70 @@ mod tests {
         };
         let res = Lrmp::new(&model, &net, cfg).run(&mut surrogate).unwrap();
         assert_eq!(res.best_array, ArrayType::Crossbar);
+    }
+
+    #[test]
+    fn parallel_search_is_bitwise_identical_to_serial() {
+        // The tentpole contract: --threads N only reschedules identical
+        // parts. Serial (threads=1) and parallel (threads=4) runs must
+        // agree on every bit of the result — policy, plan, f64 metrics,
+        // the full trajectory JSON, and the cache counters.
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let run_with = |threads: usize| {
+            let mut surrogate = SqnrSurrogate::new(&net, 0.98, 0.5);
+            let cfg = SearchConfig {
+                episodes: 10,
+                updates_per_episode: 2,
+                array_types: ArrayType::all().to_vec(),
+                threads,
+                ..Default::default()
+            };
+            Lrmp::new(&model, &net, cfg).run(&mut surrogate).unwrap()
+        };
+        let serial = run_with(1);
+        let parallel = run_with(4);
+        assert_eq!(serial.best_policy, parallel.best_policy);
+        assert_eq!(
+            serial.best_plan.replication,
+            parallel.best_plan.replication
+        );
+        assert_eq!(serial.best_array, parallel.best_array);
+        assert_eq!(
+            serial.best_reward.to_bits(),
+            parallel.best_reward.to_bits()
+        );
+        assert_eq!(
+            serial.optimized.total_cycles.to_bits(),
+            parallel.optimized.total_cycles.to_bits()
+        );
+        assert_eq!(serial.to_json().pretty(), parallel.to_json().pretty());
+        // Counters are thread-invariant too (fresh cache per part).
+        assert_eq!(serial.stats.cost_cache_hits, parallel.stats.cost_cache_hits);
+        assert_eq!(
+            serial.stats.cost_cache_misses,
+            parallel.stats.cost_cache_misses
+        );
+        assert_eq!(serial.stats.threads, 1);
+        assert_eq!(parallel.stats.threads, 4);
+    }
+
+    #[test]
+    fn search_reports_cost_cache_reuse() {
+        let net = nets::mlp_mnist();
+        let model = CostModel::paper();
+        let mut surrogate = SqnrSurrogate::new(&net, 0.98, 0.5);
+        let cfg = SearchConfig {
+            episodes: 6,
+            updates_per_episode: 1,
+            ..Default::default()
+        };
+        let res = Lrmp::new(&model, &net, cfg).run(&mut surrogate).unwrap();
+        assert!(res.stats.cost_cache_hits > 0, "stats {:?}", res.stats);
+        assert!(res.stats.cost_cache_misses > 0, "stats {:?}", res.stats);
+        assert!(res.stats.cache_hit_rate() > 0.0);
+        let j = res.to_json();
+        assert!(j.get("cost_cache_hit_rate").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -274,6 +274,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         .weights(parsed(args, "lambda", 2.0)?, parsed(args, "alpha", 1.0)?)
         .updates_per_episode(parsed(args, "updates", 8)?)
         .seed(parsed(args, "seed", 0xA11CE)?)
+        .search_threads(parsed(args, "threads", 1usize)?)
         .samples(parsed(args, "samples", 512)?)
         .live(args.bool("live"));
     if args.flags.contains_key("tiles") {

@@ -4,7 +4,7 @@
 //! until the post-replication metric fits the (exponentially tightening)
 //! budget.
 
-use crate::cost::CostModel;
+use crate::cost::{CostCache, CostModel};
 use crate::nets::{LayerKind, Network};
 use crate::quant::{LayerPrecision, Policy, MAX_BITS, MIN_BITS};
 use crate::replication::{self, LayerSummary, Objective};
@@ -83,7 +83,23 @@ pub fn optimized_metric(
     n_tiles: u64,
     objective: Objective,
 ) -> Option<(f64, replication::ReplicationPlan)> {
-    let costs = model.layers(net, policy);
+    let mut cache = CostCache::new(net.num_layers());
+    optimized_metric_cached(model, net, policy, n_tiles, objective, &mut cache)
+}
+
+/// [`optimized_metric`] through a caller-owned [`CostCache`] — the real
+/// implementation; the uncached entry point just hands it a fresh cache.
+/// A hit returns the same `Copy` struct a miss recomputes, so routing
+/// through the cache is bitwise-transparent.
+pub fn optimized_metric_cached(
+    model: &CostModel,
+    net: &Network,
+    policy: &Policy,
+    n_tiles: u64,
+    objective: Objective,
+    cache: &mut CostCache,
+) -> Option<(f64, replication::ReplicationPlan)> {
+    let costs = cache.layers(model, net, policy);
     let summaries = LayerSummary::from_costs(&costs);
     let plan = replication::optimize(&summaries, n_tiles, objective).ok()?;
     let metric = match objective {
@@ -97,14 +113,15 @@ pub fn optimized_metric(
 /// the greedy marginal-gain optimizer (near-optimal for these concave-gain
 /// problems) instead of the exact DP — ~100× cheaper on ResNet-101, and the
 /// loop's final answer is re-verified with the exact solver anyway.
-fn optimized_metric_fast(
+fn optimized_metric_fast_cached(
     model: &CostModel,
     net: &Network,
     policy: &Policy,
     n_tiles: u64,
     objective: Objective,
+    cache: &mut CostCache,
 ) -> Option<(f64, replication::ReplicationPlan)> {
-    let costs = model.layers(net, policy);
+    let costs = cache.layers(model, net, policy);
     let summaries = LayerSummary::from_costs(&costs);
     let plan = replication::greedy(&summaries, n_tiles, objective).ok()?;
     let metric = match objective {
@@ -123,10 +140,27 @@ fn optimized_metric_fast(
 pub fn enforce_budget(
     model: &CostModel,
     net: &Network,
+    policy: Policy,
+    n_tiles: u64,
+    objective: Objective,
+    budget_cycles: f64,
+) -> Option<(Policy, replication::ReplicationPlan)> {
+    let mut cache = CostCache::new(net.num_layers());
+    enforce_budget_cached(model, net, policy, n_tiles, objective, budget_cycles, &mut cache)
+}
+
+/// [`enforce_budget`] through a caller-owned [`CostCache`] — the real
+/// implementation. The loop changes exactly one layer's bits per iteration,
+/// so every per-iteration cost sweep hits the cache on all clean layers;
+/// that within-enforcement reuse is where the search's cost-model time goes.
+pub fn enforce_budget_cached(
+    model: &CostModel,
+    net: &Network,
     mut policy: Policy,
     n_tiles: u64,
     objective: Objective,
     budget_cycles: f64,
+    cache: &mut CostCache,
 ) -> Option<(Policy, replication::ReplicationPlan)> {
     // Alternates between lowering activation bits of the slowest effective
     // layer and weight bits of the most tile-hungry layer. The loop runs on
@@ -135,21 +169,21 @@ pub fn enforce_budget(
     // so the budget still holds).
     let mut prefer_acts = true;
     loop {
-        match optimized_metric_fast(model, net, &policy, n_tiles, objective) {
+        match optimized_metric_fast_cached(model, net, &policy, n_tiles, objective, cache) {
             Some((metric, _plan)) if metric <= budget_cycles => {
                 let (exact_metric, exact_plan) =
-                    optimized_metric(model, net, &policy, n_tiles, objective)?;
+                    optimized_metric_cached(model, net, &policy, n_tiles, objective, cache)?;
                 debug_assert!(exact_metric <= metric * (1.0 + 1e-9));
                 return Some((policy, exact_plan));
             }
             Some((_, plan)) => {
-                let lc = model.layers(net, &policy);
+                let lc = cache.layers(model, net, &policy);
                 let act_target = (0..policy.len())
                     .filter(|&l| policy.layers[l].a_bits > MIN_BITS)
                     .max_by(|&a, &b| {
                         let ca = lc[a].total_cycles() as f64 / plan.replication[a] as f64;
                         let cb = lc[b].total_cycles() as f64 / plan.replication[b] as f64;
-                        ca.partial_cmp(&cb).unwrap()
+                        ca.total_cmp(&cb)
                     });
                 let weight_target = (0..policy.len())
                     .filter(|&l| policy.layers[l].w_bits > MIN_BITS)
@@ -169,7 +203,7 @@ pub fn enforce_budget(
             None => {
                 // Even one instance per layer does not fit: lower weight bits
                 // of the most tile-hungry layer until mapping is feasible.
-                let lc = model.layers(net, &policy);
+                let lc = cache.layers(model, net, &policy);
                 let target = (0..policy.len())
                     .filter(|&l| policy.layers[l].w_bits > MIN_BITS)
                     .max_by_key(|&l| lc[l].tiles)?;
@@ -278,6 +312,45 @@ mod tests {
         let policy = Policy::baseline(net.num_layers());
         let out = enforce_budget(&model, &net, policy, n_tiles, Objective::Latency, 1.0);
         assert!(out.is_none(), "1-cycle budget cannot be met");
+    }
+
+    #[test]
+    fn cached_enforcement_is_bitwise_identical_to_uncached() {
+        // Routing every cost sweep through a CostCache must not move a bit:
+        // same enforced policy, same plan (replication vector and f64
+        // metrics compared by to_bits), and the cache must actually hit.
+        let net = nets::resnet::resnet18();
+        let model = CostModel::paper();
+        let n_tiles = net.tiles_at_uniform(256, 8, 1);
+        let base = model.baseline(&net);
+        for frac in [0.35, 0.25, 0.20] {
+            let budget = frac * base.total_cycles;
+            let policy = Policy::baseline(net.num_layers());
+            let (p0, plan0) =
+                enforce_budget(&model, &net, policy.clone(), n_tiles, Objective::Latency, budget)
+                    .expect("budget reachable");
+            let mut cache = CostCache::new(net.num_layers());
+            let (p1, plan1) = enforce_budget_cached(
+                &model,
+                &net,
+                policy,
+                n_tiles,
+                Objective::Latency,
+                budget,
+                &mut cache,
+            )
+            .expect("budget reachable");
+            assert_eq!(p0, p1);
+            assert_eq!(plan0.replication, plan1.replication);
+            assert_eq!(plan0.tiles_used, plan1.tiles_used);
+            assert_eq!(plan0.total_cycles.to_bits(), plan1.total_cycles.to_bits());
+            assert_eq!(
+                plan0.bottleneck_cycles.to_bits(),
+                plan1.bottleneck_cycles.to_bits()
+            );
+            assert!(cache.hits() > 0, "enforcement loop must reuse the cache");
+            assert!(cache.hit_rate() > 0.5, "hit rate {}", cache.hit_rate());
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! HAQ agent [22]; the search loop lives on the rust hot path so the agent
 //! does too).
 
+use crate::runtime::gemm::{self, PackedMatF64};
 use crate::util::prng::Rng;
 
 /// Activation applied after each hidden layer.
@@ -80,6 +81,24 @@ impl Dense {
             out.push(self.act.f(z));
         }
     }
+
+    /// Batched forward over `b` row-major samples through the packed-panel
+    /// f64 GEMM (`out = X · Wᵀ`), then the same `f(z + bias)` per element.
+    /// Each output element's reduction is the ascending-k sum from 0.0 the
+    /// per-sample [`Dense::forward`] computes, so this is bit-identical to
+    /// `b` sequential per-sample calls.
+    fn forward_batch(&self, x: &[f64], b: usize, out: &mut Vec<f64>) {
+        debug_assert_eq!(x.len(), b * self.n_in);
+        let wt = PackedMatF64::pack_transposed(&self.w, self.n_in, self.n_out);
+        out.clear();
+        out.resize(b * self.n_out, 0.0);
+        gemm::matmul_f64(x, &wt, b, out);
+        for row in out.chunks_exact_mut(self.n_out) {
+            for (v, &bias) in row.iter_mut().zip(&self.b) {
+                *v = self.act.f(*v + bias);
+            }
+        }
+    }
 }
 
 /// A fully-connected network with cached activations for backprop.
@@ -88,6 +107,12 @@ pub struct Mlp {
     layers: Vec<Dense>,
     /// Per-layer output caches from the last `forward_train` call (input at 0).
     cache: Vec<Vec<f64>>,
+    /// Batched caches from the last `forward_train_batch` call (input at 0),
+    /// kept separate from `cache` so per-sample and batched passes can
+    /// interleave without clobbering each other.
+    cache_b: Vec<Vec<f64>>,
+    /// Batch rows of the cached batched pass.
+    cache_b_rows: usize,
     t: u64, // Adam timestep
 }
 
@@ -107,6 +132,8 @@ impl Mlp {
         Mlp {
             layers,
             cache: Vec::new(),
+            cache_b: Vec::new(),
+            cache_b_rows: 0,
             t: 0,
         }
     }
@@ -141,6 +168,88 @@ impl Mlp {
             std::mem::swap(&mut cur, &mut next);
         }
         cur
+    }
+
+    /// Batched inference over `b` row-major samples (no caching), routed
+    /// through the f64 packed-panel GEMM — bit-identical to calling
+    /// [`Mlp::forward`] on each sample.
+    pub fn forward_batch(&self, x: &[f64], b: usize) -> Vec<f64> {
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for l in &self.layers {
+            l.forward_batch(&cur, b, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Batched forward that caches per-layer activations for a following
+    /// [`Mlp::backward_batch`]. Returns the `b × n_out` output batch.
+    pub fn forward_train_batch(&mut self, x: &[f64], b: usize) -> Vec<f64> {
+        debug_assert_eq!(x.len(), b * self.n_in());
+        self.cache_b.clear();
+        self.cache_b.push(x.to_vec());
+        self.cache_b_rows = b;
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for l in &self.layers {
+            l.forward_batch(&cur, b, &mut next);
+            self.cache_b.push(next.clone());
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Batched backprop of `d_out` (`b × n_out`, ∂L/∂output per sample)
+    /// through the cached batched forward pass, accumulating into `grads`.
+    /// Returns ∂L/∂input as a `b × n_in` row-major buffer.
+    ///
+    /// Every gradient slot accumulates its samples in ascending order —
+    /// the same per-slot operand sequence as `b` sequential
+    /// [`Mlp::backward`] calls — and the weight-grad / input-grad GEMMs
+    /// reduce in the per-sample loops' index order, so the results are
+    /// bit-identical to the per-sample path.
+    pub fn backward_batch(&self, d_out: &[f64], b: usize, grads: &mut Grads) -> Vec<f64> {
+        assert_eq!(
+            self.cache_b.len(),
+            self.layers.len() + 1,
+            "forward_train_batch first"
+        );
+        assert_eq!(b, self.cache_b_rows, "batch size must match the cached pass");
+        let mut delta = d_out.to_vec();
+        let mut dt = Vec::new(); // Δᵀ scratch for the weight-grad GEMM
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let y = &self.cache_b[li + 1];
+            let x = &self.cache_b[li];
+            // δ_z = δ_y ⊙ f'(z) (from cached y), elementwise over the batch.
+            for (d, &yv) in delta.iter_mut().zip(y) {
+                *d *= layer.act.df_from_y(yv);
+            }
+            let g = &mut grads.layers[li];
+            // Bias grads: fixed slot o accumulates samples r ascending.
+            for row in delta.chunks_exact(layer.n_out) {
+                for (gb, &d) in g.b.iter_mut().zip(row) {
+                    *gb += d;
+                }
+            }
+            // Weight grads: G += Δᵀ · X (per slot: samples r ascending,
+            // resuming from the already-accumulated value).
+            dt.clear();
+            dt.resize(layer.n_out * b, 0.0);
+            for r in 0..b {
+                for o in 0..layer.n_out {
+                    dt[o * b + r] = delta[r * layer.n_out + o];
+                }
+            }
+            let xp = PackedMatF64::pack(x, b, layer.n_in);
+            gemm::matmul_f64_acc(&dt, &xp, layer.n_out, &mut g.w);
+            // δ_x = Δ · W (reduction over o ascending, as per-sample does).
+            let wp = PackedMatF64::pack(&layer.w, layer.n_out, layer.n_in);
+            let mut dx = vec![0.0; b * layer.n_in];
+            gemm::matmul_f64(&delta, &wp, b, &mut dx);
+            delta = dx;
+        }
+        delta
     }
 
     /// Backprop `d_out` (∂L/∂output) through the cached forward pass,
@@ -327,6 +436,77 @@ mod tests {
             let y = net.forward(x)[0];
             assert!((y - t).abs() < 0.25, "xor({x:?}) = {y}, want {t}");
         }
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn grads_bits(g: &Grads) -> Vec<(Vec<u64>, Vec<u64>)> {
+        g.layers.iter().map(|l| (bits(&l.w), bits(&l.b))).collect()
+    }
+
+    #[test]
+    fn batched_forward_backward_bitwise_equal_per_sample() {
+        // The tentpole contract: routing a minibatch through the packed-
+        // panel GEMM must reproduce the per-sample loops bit for bit —
+        // outputs, input grads, and accumulated weight/bias grads — across
+        // batch sizes on either side of the panel width and for every
+        // output activation the DDPG nets use.
+        let mut rng = Rng::new(0x5eed);
+        for out_act in [Act::Tanh, Act::Linear, Act::Sigmoid] {
+            for b in [1usize, 7, 32] {
+                let mut net = Mlp::new(&[9, 20, 5], out_act, 42);
+                let x: Vec<f64> = (0..b * 9).map(|_| rng.normal()).collect();
+                let d_out: Vec<f64> = (0..b * 5).map(|_| rng.normal()).collect();
+
+                // Per-sample reference: sequential forward_train/backward.
+                let mut ref_grads = net.zero_grads();
+                let mut ref_out = Vec::new();
+                let mut ref_dx = Vec::new();
+                for r in 0..b {
+                    let y = net.forward_train(&x[r * 9..(r + 1) * 9]);
+                    ref_out.extend_from_slice(&y);
+                    let dx = net.backward(&d_out[r * 5..(r + 1) * 5], &mut ref_grads);
+                    ref_dx.extend_from_slice(&dx);
+                }
+
+                // Batched path.
+                let mut bat_grads = net.zero_grads();
+                let bat_out = net.forward_train_batch(&x, b);
+                let bat_dx = net.backward_batch(&d_out, b, &mut bat_grads);
+                let inf_out = net.forward_batch(&x, b);
+
+                assert_eq!(bits(&ref_out), bits(&bat_out), "{out_act:?} b={b} out");
+                assert_eq!(bits(&ref_out), bits(&inf_out), "{out_act:?} b={b} inf");
+                assert_eq!(bits(&ref_dx), bits(&bat_dx), "{out_act:?} b={b} dx");
+                assert_eq!(
+                    grads_bits(&ref_grads),
+                    grads_bits(&bat_grads),
+                    "{out_act:?} b={b} grads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_and_per_sample_caches_do_not_clobber() {
+        // Interleaving a batched training pass between a per-sample
+        // forward_train and its backward must leave the per-sample cache
+        // untouched (the DDPG update interleaves exactly like this).
+        let mut net = Mlp::new(&[4, 8, 2], Act::Linear, 9);
+        let x = [0.3, -0.2, 0.7, 0.1];
+        net.forward_train(&x);
+        let mut g1 = net.zero_grads();
+        let dx_clean = net.backward(&[1.0, -1.0], &mut g1);
+
+        net.forward_train(&x);
+        let xb: Vec<f64> = (0..3 * 4).map(|i| i as f64 * 0.1 - 0.5).collect();
+        net.forward_train_batch(&xb, 3); // must not touch `cache`
+        let mut g2 = net.zero_grads();
+        let dx_mixed = net.backward(&[1.0, -1.0], &mut g2);
+        assert_eq!(bits(&dx_clean), bits(&dx_mixed));
+        assert_eq!(grads_bits(&g1), grads_bits(&g2));
     }
 
     #[test]

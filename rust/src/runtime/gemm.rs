@@ -674,6 +674,116 @@ pub fn max_pool(x: &[f32], channels: usize, hw: usize, f: usize, out: &mut [f32]
     }
 }
 
+// --- f64 packed-panel kernels (RL policy-net minibatch GEMM) -------------
+//
+// `rl::mlp` trains in f64, so the replay-minibatch forward/backward passes
+// get their own packed-panel path rather than reusing the f32 kernels.
+// The bitwise contract differs from the f32 path in one deliberate way:
+// these kernels do NOT skip zero inputs, because the per-sample training
+// loops they replace add every `±0.0` product — each output element is the
+// plain ascending-k f64 sum starting from `0.0` (or from the existing
+// element for the accumulating variant), so routing a minibatch through
+// them reproduces the hand-rolled loops bit for bit.
+
+/// Column-panel width of the f64 packed layout (half the f32 width, same
+/// panel footprint in bytes).
+pub const PANEL_COLS_F64: usize = 32;
+
+/// An f64 matrix packed into column panels, mirroring [`PackedMat`]: panel
+/// `p` holds columns `[p·PANEL_COLS_F64, min((p+1)·PANEL_COLS_F64, cols))`,
+/// row-major within the panel.
+#[derive(Clone, Debug)]
+pub struct PackedMatF64 {
+    /// Reduction dimension.
+    pub rows: usize,
+    /// Output dimension.
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl PackedMatF64 {
+    /// Pack a row-major `rows × cols` matrix into column panels.
+    pub fn pack(w: &[f64], rows: usize, cols: usize) -> PackedMatF64 {
+        assert_eq!(w.len(), rows * cols, "weight buffer must be rows*cols");
+        let mut data = vec![0f64; rows * cols];
+        let mut off = 0;
+        let mut j0 = 0;
+        while j0 < cols {
+            let pw = PANEL_COLS_F64.min(cols - j0);
+            for i in 0..rows {
+                data[off..off + pw].copy_from_slice(&w[i * cols + j0..i * cols + j0 + pw]);
+                off += pw;
+            }
+            j0 += pw;
+        }
+        PackedMatF64 { rows, cols, data }
+    }
+
+    /// Pack the *transpose* of a row-major `cols × rows` matrix: the packed
+    /// result is `rows × cols` with element `(k, j) = w[j * rows + k]`. Lets
+    /// a `[out][in]` weight matrix serve as the `in × out` operand of a
+    /// forward pass without materializing the transpose.
+    pub fn pack_transposed(w: &[f64], rows: usize, cols: usize) -> PackedMatF64 {
+        assert_eq!(w.len(), rows * cols, "weight buffer must be rows*cols");
+        let mut data = vec![0f64; rows * cols];
+        let mut off = 0;
+        let mut j0 = 0;
+        while j0 < cols {
+            let pw = PANEL_COLS_F64.min(cols - j0);
+            for k in 0..rows {
+                for c in 0..pw {
+                    data[off] = w[(j0 + c) * rows + k];
+                    off += 1;
+                }
+            }
+            j0 += pw;
+        }
+        PackedMatF64 { rows, cols, data }
+    }
+}
+
+/// `out[m×n] = x[m×rows] · w` over the packed f64 layout. Every output
+/// element is the ascending-k reduction from `0.0` — no zero-skipping, no
+/// re-association — so it is bit-identical to the textbook per-element sum.
+pub fn matmul_f64(x: &[f64], w: &PackedMatF64, m: usize, out: &mut [f64]) {
+    matmul_f64_impl(x, w, m, out, false);
+}
+
+/// `out[m×n] += x[m×rows] · w`: like [`matmul_f64`] but each element's
+/// reduction resumes from the existing value (gradient accumulation).
+pub fn matmul_f64_acc(x: &[f64], w: &PackedMatF64, m: usize, out: &mut [f64]) {
+    matmul_f64_impl(x, w, m, out, true);
+}
+
+fn matmul_f64_impl(x: &[f64], w: &PackedMatF64, m: usize, out: &mut [f64], accumulate: bool) {
+    let (k, n) = (w.rows, w.cols);
+    assert_eq!(x.len(), m * k, "x must be m*rows");
+    assert_eq!(out.len(), m * n, "out must be m*cols");
+    let mut acc = [0f64; PANEL_COLS_F64];
+    let mut j0 = 0;
+    while j0 < n {
+        let pw = PANEL_COLS_F64.min(n - j0);
+        let panel = &w.data[j0 * k..j0 * k + pw * k];
+        for row in 0..m {
+            let xin = &x[row * k..(row + 1) * k];
+            let yout = &mut out[row * n + j0..row * n + j0 + pw];
+            if accumulate {
+                acc[..pw].copy_from_slice(yout);
+            } else {
+                acc[..pw].fill(0.0);
+            }
+            for (kk, &xv) in xin.iter().enumerate() {
+                let wrow = &panel[kk * pw..(kk + 1) * pw];
+                for (a, &wv) in acc[..pw].iter_mut().zip(wrow) {
+                    *a += xv * wv;
+                }
+            }
+            yout.copy_from_slice(&acc[..pw]);
+        }
+        j0 += pw;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -727,6 +837,86 @@ mod tests {
             let nb = naive.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
             let bb = blocked.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
             assert_eq!(nb, bb, "bitwise divergence at shape {m}x{k}x{n}");
+        }
+    }
+
+    fn random_mat_f64(rng: &mut Rng, len: usize, zero_every: usize) -> Vec<f64> {
+        (0..len)
+            .map(|i| {
+                if zero_every > 0 && i % zero_every == 0 {
+                    0.0
+                } else {
+                    rng.normal() * 0.5
+                }
+            })
+            .collect()
+    }
+
+    /// Textbook ascending-k per-element sum — the order the per-sample
+    /// `rl::mlp` loops use (zeros included).
+    fn matmul_f64_ref(x: &[f64], w: &[f64], m: usize, k: usize, n: usize, out: &mut [f64]) {
+        for row in 0..m {
+            for j in 0..n {
+                let mut acc = out[row * n + j];
+                for kk in 0..k {
+                    acc += x[row * k + kk] * w[kk * n + j];
+                }
+                out[row * n + j] = acc;
+            }
+        }
+    }
+
+    #[test]
+    fn f64_pack_transposed_matches_explicit_transpose() {
+        let mut rng = Rng::new(29);
+        for &(rows, cols) in &[(1usize, 1usize), (3, 5), (32, 32), (17, 70), (48, 33)] {
+            // wt is the row-major cols×rows original; pack_transposed packs
+            // its transpose (rows×cols).
+            let wt = random_mat_f64(&mut rng, rows * cols, 0);
+            let mut w = vec![0f64; rows * cols];
+            for j in 0..cols {
+                for k in 0..rows {
+                    w[k * cols + j] = wt[j * rows + k];
+                }
+            }
+            let a = PackedMatF64::pack(&w, rows, cols);
+            let b = PackedMatF64::pack_transposed(&wt, rows, cols);
+            assert_eq!(a.data, b.data, "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn f64_kernel_matches_reference_bit_for_bit() {
+        // Shapes straddle PANEL_COLS_F64; inputs include exact zeros, which
+        // the f64 path must NOT skip (its contract is the plain sum).
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (2, 32, 32),
+            (7, 33, 31),
+            (48, 17, 48),
+            (1, 100, 70),
+        ];
+        let mut rng = Rng::new(31);
+        for &(m, k, n) in &shapes {
+            let x = random_mat_f64(&mut rng, m * k, 3);
+            let w = random_mat_f64(&mut rng, k * n, 0);
+            let packed = PackedMatF64::pack(&w, k, n);
+            let mut reference = vec![0f64; m * n];
+            matmul_f64_ref(&x, &w, m, k, n, &mut reference);
+            let mut out = vec![0f64; m * n];
+            matmul_f64(&x, &packed, m, &mut out);
+            let rb = reference.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            let ob = out.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(rb, ob, "bitwise divergence at shape {m}x{k}x{n}");
+            // Accumulating variant resumes each element's reduction.
+            let mut acc_ref = random_mat_f64(&mut rng, m * n, 0);
+            let mut acc_out = acc_ref.clone();
+            matmul_f64_ref(&x, &w, m, k, n, &mut acc_ref);
+            matmul_f64_acc(&x, &packed, m, &mut acc_out);
+            let rb = acc_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            let ob = acc_out.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(rb, ob, "acc divergence at shape {m}x{k}x{n}");
         }
     }
 

@@ -217,6 +217,33 @@ impl WorkerPool {
             .map_err(|_| PoolError::JobPanicked { parts })
     }
 
+    /// Fan `f` over `parts` indices and collect every return value in part
+    /// order: `out[p] == f(p)` for all `p`, no matter which worker ran
+    /// which part or in what order — the indexed map-collect behind the
+    /// LRMP episode fan-out, where part order *is* the reduction order and
+    /// must not depend on scheduling. Each part writes its own slot
+    /// (uncontended mutexes, locked once per part). Panics propagate like
+    /// [`WorkerPool::run`], and the same nested-`run` deadlock caveat
+    /// applies.
+    pub fn run_map<T, F>(&self, parts: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let slots: Vec<Mutex<Option<T>>> = (0..parts).map(|_| Mutex::new(None)).collect();
+        self.run(parts, |p| {
+            *slots[p].lock().unwrap() = Some(f(p));
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .unwrap()
+                    .expect("every part stores its result before run returns")
+            })
+            .collect()
+    }
+
     /// Shared submission path. `Err` means a part of **this** job
     /// panicked; the payload is `Some` when the panic happened on the
     /// calling thread (recoverable for re-raise), `None` when it
@@ -376,6 +403,18 @@ mod tests {
             hits[p].fetch_add(1, Ordering::SeqCst);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn run_map_collects_in_part_order() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let out = pool.run_map(53, |p| p * p + threads);
+            let expect: Vec<usize> = (0..53).map(|p| p * p + threads).collect();
+            assert_eq!(out, expect, "threads={threads}");
+            // Zero parts yields an empty vec without touching the pool.
+            assert!(pool.run_map(0, |p| p).is_empty());
+        }
     }
 
     #[test]
