@@ -20,8 +20,14 @@
 //! the v5 aggregate cycles. A search section (new in schema v7) runs the
 //! same small LRMP search serially and with a 4-way episode fan-out,
 //! records episodes/sec and the cost-cache hit rate, and **fails** unless
-//! the two Deployment artifacts match byte for byte. Emits a
-//! machine-readable `BENCH_simnet.json` (schema v7, documented in
+//! the two Deployment artifacts match byte for byte. An overlap section
+//! (new in schema v8) runs the same input pair back-to-back through an
+//! overlap-off backend and as one `eval_pair` through the wavefront
+//! executor (`SimOptions::overlap`) on conv-tiny, resnet-tiny and the
+//! full VGG-16, records the pair p50 speedup against the `cost::overlap`
+//! two-sample bottleneck prediction, and **fails** unless every logit of
+//! every lane matches the serial executor bit for bit. Emits a
+//! machine-readable `BENCH_simnet.json` (schema v8, documented in
 //! `rust/src/api/README.md`) that the CI `bench-smoke` job uploads and
 //! gates on.
 //!
@@ -34,7 +40,9 @@
 //! **fails (exit 1)** if any kernel's output diverges bitwise from the
 //! naive reference, if the pass-optimized, passes-off and reference
 //! executors disagree on any logit (residual adds and fused convs
-//! included), if the cost model's default-crossbar totals diverge bitwise
+//! included), if the overlapped executor's logits diverge bitwise from
+//! the serial executor's (either `eval_pair` lane or the overlapped
+//! single eval), if the cost model's default-crossbar totals diverge bitwise
 //! from the schema-v1 closed forms, if a net with fused convs does not
 //! shrink its arena, if the parallel search's Deployment artifact diverges
 //! from the serial one (or its cost cache records no hits), if an
@@ -50,6 +58,7 @@ use lrmp::bench_harness::{fmt_time, Bencher, Table};
 use lrmp::cli::Args;
 use lrmp::coordinator::InferenceBackend;
 use lrmp::cost::breakdown::{ChipProfile, NetworkBreakdown};
+use lrmp::cost::overlap::OverlapEstimate;
 use lrmp::cost::{CostModel, NetworkCost, ACC_BITS};
 use lrmp::nets::{self, LayerKind};
 use lrmp::runtime::gemm::{self, ConvGeom, PackedMat};
@@ -600,7 +609,157 @@ fn main() {
         (j, md, identical, hit_rate)
     };
 
-    // --- machine-readable artifact (schema v7) -------------------------
+    // --- overlapped graph execution (new in schema v8) -----------------
+    // The same two inputs run (a) back-to-back through an overlap-off
+    // backend and (b) as one `eval_pair` through the wavefront executor
+    // (`SimOptions::overlap`: branch-parallel waves + inter-eval
+    // pipelining). Every logit of both lanes — and of a plain `eval`
+    // routed through the overlapped executor — must match the serial
+    // executor bit for bit; overlap changes scheduling, never values.
+    // The pair p50s give the measured pipelining speedup (machine-
+    // dependent: the win needs more worker threads than the per-eval
+    // conv fan-out can fill, so 2-core CI runners sit near 1.0×), which
+    // is recorded against the `cost::overlap` two-sample bottleneck
+    // prediction 2S / (F + 2B). The backends are built sequentially —
+    // VGG-16's packed weights are ~0.5 GB, so the serial backend is
+    // dropped before the overlapped one is stood up.
+    struct OverlapRow {
+        net: String,
+        b: usize,
+        serial_pair: lrmp::bench_harness::BenchResult,
+        pipelined_pair: lrmp::bench_harness::BenchResult,
+        bit_exact: bool,
+        predicted_speedup: f64,
+    }
+    impl OverlapRow {
+        fn measured_speedup(&self) -> f64 {
+            self.serial_pair.p50() / self.pipelined_pair.p50().max(1e-12)
+        }
+        fn model_rel_error(&self) -> f64 {
+            (self.predicted_speedup - self.measured_speedup()).abs()
+                / self.measured_speedup().max(1e-12)
+        }
+    }
+    let ov_bench = Bencher {
+        warmup: Duration::from_millis(10),
+        min_time: Duration::from_millis(if quick { 10 } else { 200 }),
+        min_samples: 2,
+        max_samples: if quick { 3 } else { 8 },
+    };
+    let mut ov_rows: Vec<OverlapRow> = Vec::new();
+    for (name, b) in [("conv-tiny", 8usize), ("resnet-tiny", 8), ("vgg16", 2)] {
+        let net = nets::by_name(name).expect("bench nets are registered");
+        let mut serial =
+            SimBackend::from_network_cfg(&net, b, 7, SimOptions::default()).expect("sim net");
+        let dim = serial.input_dim();
+        let nl = serial.num_layers();
+        let x0: Vec<f32> = (0..b * dim)
+            .map(|i| ((i * 17) % 59) as f32 / 59.0 - 0.3)
+            .collect();
+        let x1: Vec<f32> = (0..b * dim)
+            .map(|i| ((i * 23) % 71) as f32 / 71.0 - 0.1)
+            .collect();
+        let (wb, ab) = (vec![5.0f32; nl], vec![6.0f32; nl]);
+        let y0 = serial.eval(x0.clone(), wb.clone(), ab.clone()).unwrap();
+        let y1 = serial.eval(x1.clone(), wb.clone(), ab.clone()).unwrap();
+        let serial_pair = ov_bench.run(&format!("eval {} serial pair b={b}", net.name), || {
+            let a = serial.eval(x0.clone(), wb.clone(), ab.clone()).unwrap();
+            let c = serial.eval(x1.clone(), wb.clone(), ab.clone()).unwrap();
+            std::hint::black_box((a, c));
+        });
+        drop(serial);
+        let mut overlapped = SimBackend::from_network_cfg(
+            &net,
+            b,
+            7,
+            SimOptions {
+                overlap: true,
+                ..SimOptions::default()
+            },
+        )
+        .expect("sim net");
+        let ys = overlapped.eval(x0.clone(), wb.clone(), ab.clone()).unwrap();
+        let (p0, p1) = overlapped.eval_pair(&x0, &x1, &wb, &ab).unwrap();
+        let bit_exact = bits_of(&p0) == bits_of(&y0)
+            && bits_of(&p1) == bits_of(&y1)
+            && bits_of(&ys) == bits_of(&y0);
+        let pipelined_pair =
+            ov_bench.run(&format!("eval {} pipelined pair b={b}", net.name), || {
+                let (a, c) = overlapped.eval_pair(&x0, &x1, &wb, &ab).unwrap();
+                std::hint::black_box((a, c));
+            });
+        let chip_cost = CostModel::new(ChipConfig::paper_scaled()).baseline(&net);
+        let est = OverlapEstimate::from_cost(&chip_cost);
+        let predicted_speedup =
+            2.0 * est.serial_cycles / est.pipelined_latency_cycles(2).max(1e-12);
+        let row = OverlapRow {
+            net: net.name.clone(),
+            b,
+            serial_pair,
+            pipelined_pair,
+            bit_exact,
+            predicted_speedup,
+        };
+        println!(
+            "  -> overlap {}: serial pair p50 {}, pipelined pair p50 {}, x{:.2} measured \
+             (bottleneck model x{:.2}, rel err {:.0}%), bit-exact {}",
+            row.net,
+            fmt_time(row.serial_pair.p50()),
+            fmt_time(row.pipelined_pair.p50()),
+            row.measured_speedup(),
+            row.predicted_speedup,
+            row.model_rel_error() * 100.0,
+            row.bit_exact,
+        );
+        ov_rows.push(row);
+    }
+    println!();
+    let overlap_bit_exact = ov_rows.iter().all(|r| r.bit_exact);
+    let overlap_json = Json::obj(vec![
+        (
+            "nets",
+            Json::Arr(
+                ov_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("net", Json::Str(r.net.clone())),
+                            ("eval_batch", Json::Num(r.b as f64)),
+                            ("serial_pair_p50_s", Json::Num(r.serial_pair.p50())),
+                            ("pipelined_pair_p50_s", Json::Num(r.pipelined_pair.p50())),
+                            ("measured_pair_speedup", Json::Num(r.measured_speedup())),
+                            ("predicted_pair_speedup", Json::Num(r.predicted_speedup)),
+                            ("model_rel_error", Json::Num(r.model_rel_error())),
+                            ("bit_exact", Json::Bool(r.bit_exact)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("overlap_bit_exact", Json::Bool(overlap_bit_exact)),
+    ]);
+    let ov_md = {
+        let mut md = String::from(
+            "\n## overlapped execution (pair of evals, serial vs `eval_pair`)\n\n\
+             | net | batch | serial pair p50 | pipelined pair p50 | measured | model | \
+             bit-exact |\n|---|---|---|---|---|---|---|\n",
+        );
+        for r in &ov_rows {
+            md += &format!(
+                "| {} | {} | {} | {} | x{:.2} | x{:.2} | {} |\n",
+                r.net,
+                r.b,
+                fmt_time(r.serial_pair.p50()),
+                fmt_time(r.pipelined_pair.p50()),
+                r.measured_speedup(),
+                r.predicted_speedup,
+                r.bit_exact,
+            );
+        }
+        md
+    };
+
+    // --- machine-readable artifact (schema v8) -------------------------
     let gemm_json = Json::Arr(
         rows.iter()
             .map(|r| {
@@ -660,7 +819,7 @@ fn main() {
     );
     let report = Json::obj(vec![
         ("kind", Json::Str("lrmp-bench-simnet".into())),
-        ("schema_version", Json::Num(7.0)),
+        ("schema_version", Json::Num(8.0)),
         ("calibrated", Json::Bool(true)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(threads as f64)),
@@ -674,6 +833,7 @@ fn main() {
         ("serving", serving_json),
         ("breakdown", breakdown_json),
         ("search", search_json),
+        ("overlap", overlap_json),
     ]);
     report.to_file(std::path::Path::new(&out_path)).expect("write bench json");
     println!("\nwrote {out_path}");
@@ -691,7 +851,7 @@ fn main() {
         ),
     };
     if let Some(sp) = args.flags.get("summary") {
-        std::fs::write(sp, format!("{summary}{search_md}")).expect("write bench summary");
+        std::fs::write(sp, format!("{summary}{search_md}{ov_md}")).expect("write bench summary");
         println!("wrote {sp}");
     }
 
@@ -742,6 +902,13 @@ fn main() {
         eprintln!("FAIL: an FC net's steady-state eval allocated (contract is 0 allocs/eval)");
         std::process::exit(1);
     }
+    if !overlap_bit_exact {
+        eprintln!(
+            "FAIL: overlapped execution diverged bitwise from the serial executor \
+             (an eval_pair lane or the overlapped single eval changed a logit)"
+        );
+        std::process::exit(1);
+    }
     if !search_artifact_identical {
         eprintln!(
             "FAIL: the {search_threads}-thread search's Deployment artifact diverged \
@@ -767,6 +934,13 @@ fn main() {
     if mlp_pooled_speedup < 1.0 {
         // Not a failure (CI runners are noisy 2-core VMs) but worth flagging.
         println!("note: pooled kernel slower than naive on this machine");
+    }
+    if let Some(r) = ov_rows.iter().find(|r| r.net == "VGG16") {
+        if r.measured_speedup() < 1.0 {
+            // Same caveat: the pipelining win needs more worker threads
+            // than one eval's conv fan-out can fill.
+            println!("note: overlapped VGG-16 pair slower than serial on this machine");
+        }
     }
 }
 

@@ -39,12 +39,19 @@ pub const DEPLOYMENT_KIND: &str = "lrmp-deployment";
 /// How the artifact was produced (reproducibility record).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Provenance {
+    /// DDPG episodes the search ran (0 for fixed-policy artifacts).
     pub episodes: usize,
+    /// RNG seed the search ran under.
     pub seed: u64,
+    /// Accuracy-drop budget at the first episode (linearly annealed).
     pub budget_start: f64,
+    /// Accuracy-drop budget at the last episode.
     pub budget_end: f64,
+    /// Reward weight on the latency/throughput term.
     pub lambda: f64,
+    /// Reward weight on the energy term.
     pub alpha: f64,
+    /// Critic/actor gradient updates applied per episode.
     pub updates_per_episode: usize,
     /// `AccuracyProvider::name()` used for the reward.
     pub accuracy_provider: String,
@@ -56,16 +63,27 @@ pub struct Provenance {
 /// them and rejects artifacts that drift from the current model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PredictedMetrics {
+    /// End-to-end latency of the optimized design in cycles (Eqn 5).
     pub total_cycles: f64,
+    /// Slowest replicated pipeline stage in cycles (Eqn 6 denominator).
     pub bottleneck_cycles: f64,
+    /// `total_cycles` at the chip clock, in seconds.
     pub latency_s: f64,
+    /// Pipelined steady-state throughput, inferences per second.
     pub throughput_inf_s: f64,
+    /// Per-inference energy of the optimized design, joules.
     pub energy_j: f64,
+    /// Latency of the unreplicated 8/8 baseline, cycles.
     pub baseline_total_cycles: f64,
+    /// Bottleneck stage of the unreplicated 8/8 baseline, cycles.
     pub baseline_bottleneck_cycles: f64,
+    /// Per-inference energy of the unreplicated 8/8 baseline, joules.
     pub baseline_energy_j: f64,
+    /// Accuracy of the full-precision reference network.
     pub baseline_accuracy: f64,
+    /// Accuracy of the searched policy before fine-tuning.
     pub searched_accuracy: f64,
+    /// Accuracy of the searched policy after (simulated) fine-tuning.
     pub finetuned_accuracy: f64,
 }
 
@@ -93,12 +111,15 @@ impl PredictedMetrics {
         }
     }
 
+    /// Latency speedup over the baseline (>1 is better).
     pub fn latency_improvement(&self) -> f64 {
         self.baseline_total_cycles / self.total_cycles
     }
+    /// Throughput speedup over the baseline (>1 is better).
     pub fn throughput_improvement(&self) -> f64 {
         self.baseline_bottleneck_cycles / self.bottleneck_cycles
     }
+    /// Energy reduction over the baseline (>1 is better).
     pub fn energy_improvement(&self) -> f64 {
         self.baseline_energy_j / self.energy_j
     }
@@ -108,16 +129,22 @@ impl PredictedMetrics {
 /// + predictions + provenance.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Deployment {
+    /// Always [`SCHEMA_VERSION`] in memory (older files upgrade on load).
     pub schema_version: u64,
     /// Canonical benchmark name (resolvable by `nets::by_name`).
     pub net: String,
+    /// What the search optimized: Eqn-5 latency or Eqn-6 throughput.
     pub objective: Objective,
+    /// The chip (Table I parameterization) the design was searched for.
     pub chip: ChipConfig,
     /// The tile budget the search ran under (≠ `chip.n_tiles` when the
     /// paper's iso-area constraint or `--tiles` was used).
     pub n_tiles: u64,
+    /// Per-layer (weight, activation) bit-widths.
     pub policy: Policy,
+    /// Per-layer replication factors `r_l >= 1`.
     pub replication: Vec<u64>,
+    /// Tiles the plan actually consumes (≤ `n_tiles`).
     pub tiles_used: u64,
     /// Cluster-level placement of every replica (schema v2). Derived on
     /// load for v1 artifacts.
@@ -125,7 +152,9 @@ pub struct Deployment {
     /// Per-component area/energy/tclk breakdown and peak TOPS/W, TOPS/mm²
     /// for the resolved chip (schema v2). Derived on load for v1 artifacts.
     pub breakdown: NetworkBreakdown,
+    /// Cost-model predictions captured at search time.
     pub predicted: PredictedMetrics,
+    /// How the artifact was produced.
     pub provenance: Provenance,
 }
 
@@ -290,6 +319,7 @@ impl Deployment {
     // JSON
     // ------------------------------------------------------------------
 
+    /// Serialize as a schema-v2 JSON object (`kind: "lrmp-deployment"`).
     pub fn to_json(&self) -> Json {
         let p = &self.predicted;
         let pv = &self.provenance;
@@ -346,6 +376,8 @@ impl Deployment {
         ])
     }
 
+    /// Parse a deployment from JSON, migrating v1 artifacts forward (the
+    /// `placement`/`breakdown` blocks are re-derived deterministically).
     pub fn from_json(j: &Json) -> ApiResult<Deployment> {
         let missing = |k: &str| ApiError::MalformedDeployment(format!("missing field '{k}'"));
 
@@ -501,6 +533,7 @@ impl Deployment {
     // Files
     // ------------------------------------------------------------------
 
+    /// Write the artifact to `path` as pretty-printed JSON.
     pub fn save(&self, path: &Path) -> ApiResult<()> {
         self.to_json().to_file(path).map_err(|e| ApiError::Io {
             path: path.display().to_string(),
@@ -508,6 +541,7 @@ impl Deployment {
         })
     }
 
+    /// Read and parse an artifact from `path` (accepts schema v1 and v2).
     pub fn load(path: &Path) -> ApiResult<Deployment> {
         let text = std::fs::read_to_string(path).map_err(|e| ApiError::Io {
             path: path.display().to_string(),

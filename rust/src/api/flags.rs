@@ -13,15 +13,20 @@ use crate::cli::Args;
 /// Whether a flag consumes a value or is a boolean switch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FlagKind {
+    /// `--flag VALUE` (also `--flag=VALUE`).
     Value,
+    /// Boolean `--flag` (also `--flag=true|false|1|0`).
     Switch,
 }
 
 /// One registered flag.
 #[derive(Clone, Copy, Debug)]
 pub struct FlagDef {
+    /// Flag name without the `--` prefix.
     pub name: &'static str,
+    /// Value flag or boolean switch.
     pub kind: FlagKind,
+    /// One-line help shown in the usage block.
     pub help: &'static str,
 }
 
@@ -44,18 +49,24 @@ const fn switch(name: &'static str, help: &'static str) -> FlagDef {
 /// One subcommand and its flags.
 #[derive(Clone, Copy, Debug)]
 pub struct SubcommandSpec {
+    /// Subcommand name as typed on the command line.
     pub name: &'static str,
+    /// One-line help shown in the usage block.
     pub help: &'static str,
+    /// Flags this subcommand accepts (unknown flags are rejected).
     pub flags: &'static [FlagDef],
     /// Maximum positional arguments accepted (e.g. `inspect FILE`).
     pub max_positional: usize,
 }
 
 impl SubcommandSpec {
+    /// Names of every registered flag (for error messages).
     pub fn flag_names(&self) -> Vec<&'static str> {
         self.flags.iter().map(|f| f.name).collect()
     }
 
+    /// Names of the boolean switches (the parser must not let them
+    /// swallow a following positional).
     pub fn switch_names(&self) -> Vec<&'static str> {
         self.flags
             .iter()
@@ -123,6 +134,11 @@ const SERVE_FLAGS: &[FlagDef] = &[
     switch(
         "verify",
         "check routed logits bitwise against direct eval (--routes only)",
+    ),
+    switch(
+        "overlap",
+        "overlapped graph execution: branch-parallel waves + inter-eval \
+         pipelining (sim only; bitwise identical to serial)",
     ),
 ];
 

@@ -17,6 +17,10 @@
 //!
 //! See `rust/src/api/README.md` for the schema and the end-to-end flow.
 
+// The facade is the crate's contract: every public item here must say what
+// it is for. Inner modules inherit the lint.
+#![deny(missing_docs)]
+
 pub mod deployment;
 pub mod error;
 pub mod flags;

@@ -76,6 +76,12 @@ pub struct ServeOptions {
     /// bitwise-neutral by construction (the fan-out never reorders any
     /// reduction). Ignored by the live backend.
     pub conv_fanout_min_flops: Option<usize>,
+    /// Overlapped graph execution (`SimOptions::overlap`): branch-parallel
+    /// wavefront dispatch plus double-buffered inter-eval pipelining.
+    /// Bitwise identical to the serial walk by construction (gated in
+    /// tests and the bench's `overlap` block); off by default until the
+    /// calibration ROADMAP item flips it. Ignored by the live backend.
+    pub overlap: bool,
 }
 
 /// Builder for one search run plus the artifact-centric phase entry points.
@@ -116,11 +122,14 @@ impl Session {
     // Builder knobs
     // ------------------------------------------------------------------
 
+    /// Optimize for end-to-end latency (Eqn 5) or pipelined throughput
+    /// (Eqn 6).
     pub fn objective(mut self, objective: Objective) -> Self {
         self.cfg.objective = objective;
         self
     }
 
+    /// DDPG search episodes (the paper runs 300 per benchmark).
     pub fn episodes(mut self, episodes: usize) -> Self {
         self.cfg.episodes = episodes;
         self
@@ -146,11 +155,13 @@ impl Session {
         self
     }
 
+    /// DDPG gradient updates after each episode's rollout.
     pub fn updates_per_episode(mut self, updates: usize) -> Self {
         self.cfg.updates_per_episode = updates;
         self
     }
 
+    /// Seed for the whole search (agent init, exploration noise, weights).
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self
@@ -459,6 +470,7 @@ impl Session {
         let sim_opts = SimOptions {
             threads: opts.threads,
             conv_fanout_min_flops: opts.conv_fanout_min_flops,
+            overlap: opts.overlap,
             ..SimOptions::default()
         };
         let backend = SimBackend::from_network_cfg(net, eval_batch, dep.provenance.seed, sim_opts)
@@ -487,6 +499,7 @@ pub fn default_sim_batch(net: &Network) -> usize {
 /// One layer of a [`SimulationReport`].
 #[derive(Clone, Debug)]
 pub struct SimulationRow {
+    /// Layer name (matches the network definition).
     pub layer: String,
     /// Analytical latency T_l divided by the replication the simulator can
     /// exploit within one inference, min(r_l, W²), cycles.
@@ -498,10 +511,12 @@ pub struct SimulationRow {
 /// Analytical-vs-simulated cross-check of a Deployment.
 #[derive(Clone, Debug)]
 pub struct SimulationReport {
+    /// Per-layer analytical-vs-simulated rows.
     pub rows: Vec<SimulationRow>,
     /// Σ of the rows' eff_r-corrected analytic cycles (directly comparable
     /// to `simulated_total_cycles`; Eqn 5's Σ T_l/r_l is `cost.total_cycles`).
     pub analytic_total_cycles: f64,
+    /// Σ of the event-driven per-layer makespans, cycles.
     pub simulated_total_cycles: u64,
     /// The re-validated cost breakdown.
     pub cost: NetworkCost,
@@ -629,5 +644,39 @@ mod tests {
         let server =
             Session::serve_opts(&dep, BatchPolicy::default(), ServeBackend::Sim, opts).unwrap();
         assert_eq!(server.exec_threads, 3, "effective thread count must be surfaced");
+    }
+
+    #[test]
+    fn overlap_serving_matches_serial_serving() {
+        // `ServeOptions::overlap` routes through the overlapped executor;
+        // a served residual net must answer with the same logits either
+        // way (the bitwise contract, end to end through the coordinator).
+        let nl = nets::resnet::resnet_tiny().num_layers();
+        let dep = Deployment::from_policy(
+            "resnet-tiny",
+            &ChipConfig::paper_scaled(),
+            Objective::Latency,
+            Policy::baseline(nl),
+            vec![1; nl],
+            None,
+        )
+        .unwrap();
+        let x: Vec<f32> = (0..192).map(|j| (j % 7) as f32 / 7.0).collect();
+        let serve = |overlap: bool| {
+            let opts = ServeOptions {
+                overlap,
+                threads: Some(4),
+                ..ServeOptions::default()
+            };
+            let server =
+                Session::serve_opts(&dep, BatchPolicy::default(), ServeBackend::Sim, opts)
+                    .unwrap();
+            server.infer(x.clone()).unwrap()
+        };
+        let (serial, overlapped) = (serve(false), serve(true));
+        assert_eq!(
+            serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            overlapped.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 }

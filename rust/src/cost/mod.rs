@@ -10,6 +10,7 @@
 
 pub mod breakdown;
 pub mod energy;
+pub mod overlap;
 
 use crate::arch::ChipConfig;
 use crate::nets::{layer_tiles, Layer, Network};

@@ -1,0 +1,149 @@
+//! Pipelined steady-state latency under overlapped execution — the cost
+//! mirror of the runtime's `SimOptions::overlap` executor.
+//!
+//! The paper's throughput figure (Eqn 6) already divides the clock by the
+//! bottleneck stage; this module packages the same bottleneck-stage model
+//! as an *estimate object* the search and the CLI can reason about
+//! directly: a layer pipeline in steady state emits one inference every
+//! `max_l T_l / r_l` cycles, so replication that flattens the bottleneck
+//! buys pipelined latency even where it barely moves the serial sum.
+//! Everything here is derived arithmetic over an already-computed
+//! [`NetworkCost`] — no new hardware parameters, no randomness, no
+//! dependence on worker threads — so surfacing it in `SearchResult`
+//! leaves deployment artifacts byte-identical across host thread counts.
+//!
+//! Model (per-layer effective times `t_l = T_l / r_l`, depth `L`):
+//!
+//! - serial latency of one inference: `S = Σ t_l` (Eqn 5);
+//! - steady-state interval between finished inferences: `B = max t_l`
+//!   (Eqn 6 denominator);
+//! - pipeline fill: `F = S − B`, so a stream of `n` inferences takes
+//!   `F + n·B` cycles — `n = 1` degenerates to the serial `S`;
+//! - asymptotic pipelined speedup: `S / B` (the figure the bench's
+//!   `overlap` block compares against measured wall-clock).
+//!
+//! The per-layer **criticality** `t_l / B ∈ (0, 1]` says how close each
+//! layer is to pacing the pipeline; it is the overlap-aware observation
+//! feature the RL agent sees (`rl::env`), pointing the search at layers
+//! whose replication would flatten the bottleneck (the Fast-OverlaPIM
+//! observation that overlap changes *which* plans win).
+
+use super::NetworkCost;
+
+/// Bottleneck-stage pipeline estimate derived from a [`NetworkCost`].
+#[derive(Clone, Debug)]
+pub struct OverlapEstimate {
+    /// Serial latency of one inference, `Σ T_l / r_l`, cycles (Eqn 5).
+    pub serial_cycles: f64,
+    /// Steady-state cycles between finished inferences, `max T_l / r_l`
+    /// (Eqn 6 denominator).
+    pub steady_cycles: f64,
+    /// Pipeline fill `serial − steady`: the one-time cost before the
+    /// first inference of a stream completes.
+    pub fill_cycles: f64,
+    /// Asymptotic speedup of pipelined over serial execution,
+    /// `serial / steady` (≥ 1, = 1 when one layer dominates completely).
+    pub pipelined_speedup: f64,
+    /// Index of the pacing layer (`argmax T_l / r_l`).
+    pub bottleneck_layer: usize,
+    /// Per-layer `t_l / steady ∈ (0, 1]` — 1.0 exactly at the
+    /// bottleneck; the RL observation's overlap feature.
+    pub criticality: Vec<f64>,
+    /// Clock, for unit conversions (copied from the cost).
+    pub clock_hz: f64,
+}
+
+impl OverlapEstimate {
+    /// Derive the estimate from a network cost. Pure arithmetic over the
+    /// cost's `layer_cycles` — same inputs give bit-identical estimates.
+    pub fn from_cost(cost: &NetworkCost) -> OverlapEstimate {
+        let serial = cost.total_cycles;
+        let steady = cost.bottleneck_cycles;
+        let criticality = cost
+            .layer_cycles
+            .iter()
+            .map(|&t| if steady > 0.0 { t / steady } else { 0.0 })
+            .collect();
+        OverlapEstimate {
+            serial_cycles: serial,
+            steady_cycles: steady,
+            fill_cycles: serial - steady,
+            pipelined_speedup: if steady > 0.0 { serial / steady } else { 1.0 },
+            bottleneck_layer: cost.bottleneck_layer,
+            criticality,
+            clock_hz: cost.clock_hz,
+        }
+    }
+
+    /// Cycles for a stream of `n` inferences through the full pipeline:
+    /// `fill + n · steady`. `n = 1` recovers (up to f64 rounding of the
+    /// fill subtraction) the serial latency; large `n` approaches
+    /// `n · steady`.
+    pub fn pipelined_latency_cycles(&self, n: u64) -> f64 {
+        self.fill_cycles + n as f64 * self.steady_cycles
+    }
+
+    /// Steady-state pipelined throughput, inferences/second (Eqn 6).
+    pub fn throughput(&self) -> f64 {
+        self.clock_hz / self.steady_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::nets::resnet;
+    use crate::quant::Policy;
+
+    #[test]
+    fn estimate_is_consistent_with_the_network_cost() {
+        let net = resnet::resnet18();
+        let cost = CostModel::paper().baseline(&net);
+        let est = OverlapEstimate::from_cost(&cost);
+        assert_eq!(est.serial_cycles.to_bits(), cost.total_cycles.to_bits());
+        assert_eq!(est.steady_cycles.to_bits(), cost.bottleneck_cycles.to_bits());
+        assert_eq!(est.bottleneck_layer, cost.bottleneck_layer);
+        assert!((est.criticality[est.bottleneck_layer] - 1.0).abs() < 1e-12);
+        assert!(est.criticality.iter().all(|&c| (0.0..=1.0).contains(&c)));
+        assert!(est.pipelined_speedup >= 1.0);
+        // n = 1 recovers serial latency; streaming amortizes the fill.
+        assert!((est.pipelined_latency_cycles(1) - est.serial_cycles).abs() < 1e-6);
+        let per_inf_1000 = est.pipelined_latency_cycles(1000) / 1000.0;
+        assert!(per_inf_1000 < est.serial_cycles);
+        assert!((per_inf_1000 - est.steady_cycles) / est.steady_cycles < 0.1);
+        assert!((est.throughput() - cost.throughput()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replicating_the_bottleneck_flattens_the_pipeline() {
+        // The LRMP lever this estimator exists to expose: replication on
+        // the pacing layer raises pipelined speedup even though it also
+        // shrinks the serial sum.
+        let net = resnet::resnet18();
+        let model = CostModel::paper();
+        let policy = Policy::baseline(net.num_layers());
+        let mut repl = vec![1u64; net.num_layers()];
+        let base = OverlapEstimate::from_cost(&model.network(&net, &policy, &repl));
+        repl[base.bottleneck_layer] = 8;
+        let flat = OverlapEstimate::from_cost(&model.network(&net, &policy, &repl));
+        assert!(flat.steady_cycles < base.steady_cycles);
+        assert!(
+            flat.steady_cycles / flat.serial_cycles < base.steady_cycles / base.serial_cycles,
+            "the bottleneck's share of the serial sum must shrink"
+        );
+    }
+
+    #[test]
+    fn estimate_degenerates_on_a_single_layer() {
+        // One layer: no overlap to exploit — speedup exactly 1, fill 0.
+        let net = crate::nets::Network {
+            name: "one".into(),
+            layers: vec![crate::nets::Layer::linear("fc", 64, 10)],
+        };
+        let est = OverlapEstimate::from_cost(&CostModel::paper().baseline(&net));
+        assert_eq!(est.pipelined_speedup.to_bits(), 1.0f64.to_bits());
+        assert_eq!(est.fill_cycles, 0.0);
+        assert_eq!(est.bottleneck_layer, 0);
+    }
+}

@@ -1,3 +1,29 @@
+//! Rust reproduction of **LRMP: Layer Replication with Mixed Precision
+//! for spatial in-memory DNN accelerators** (arXiv:2312.03146), grown into
+//! a search → artifact → serve toolchain.
+//!
+//! The crate is layered (see `docs/ARCHITECTURE.md` for the full map and
+//! `docs/SCHEMAS.md` for every JSON contract):
+//!
+//! - [`api`] — the public facade: [`api::Session`] builders, the
+//!   versioned [`api::Deployment`] artifact, typed [`api::ApiError`]s and
+//!   the CLI flag registry. Built with `#![deny(missing_docs)]`.
+//! - [`lrmp`] — the search loop joining the DDPG agent ([`rl`]) and the
+//!   replication planner ([`replication`], [`lp`]) over the analytical
+//!   cost model.
+//! - [`cost`] / [`arch`] — the parameterized NVM-chip cost model (Table
+//!   I), per-component breakdowns, and the `cost::overlap` pipelined
+//!   steady-state estimator.
+//! - [`runtime`] — the execution tier: graph IR + passes, the worker
+//!   pool, the quantized GEMM kernels and `SimBackend` (including the
+//!   overlapped wavefront executor), plus the PJRT bridge.
+//! - [`serve`] / [`coordinator`] — the multi-deployment serving
+//!   front-end: routes, A/B splits, canaries, per-route batching.
+//!
+//! Numerical ethos everywhere: optimizations (passes, thread fan-out,
+//! overlap, search parallelism) must reproduce the serial reference **bit
+//! for bit**; CI gates on the comparisons.
+
 pub mod accuracy;
 pub mod api;
 pub mod arch;

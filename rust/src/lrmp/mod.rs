@@ -296,7 +296,19 @@ impl SearchResult {
         self.baseline.energy_j / self.optimized.energy_j
     }
 
+    /// Bottleneck-stage pipeline estimate of the winning design
+    /// (`cost::overlap`): how much overlapped execution buys on top of
+    /// the serial latency, and which layer paces the steady state.
+    pub fn overlap_estimate(&self) -> crate::cost::overlap::OverlapEstimate {
+        crate::cost::overlap::OverlapEstimate::from_cost(&self.optimized)
+    }
+
     pub fn to_json(&self) -> Json {
+        // Derived arithmetic over the (thread-invariant) optimized cost,
+        // so the overlap block never perturbs artifact byte-identity
+        // across worker thread counts.
+        let ov = self.overlap_estimate();
+        let ov_base = crate::cost::overlap::OverlapEstimate::from_cost(&self.baseline);
         Json::obj(vec![
             ("array_type", Json::Str(self.best_array.as_str().into())),
             ("best_reward", Json::Num(self.best_reward)),
@@ -315,6 +327,23 @@ impl SearchResult {
                 Json::arr_u64(&self.best_plan.replication),
             ),
             ("tiles_used", Json::Num(self.best_plan.tiles_used as f64)),
+            (
+                "overlap",
+                Json::obj(vec![
+                    ("pipelined_speedup", Json::Num(ov.pipelined_speedup)),
+                    ("serial_cycles", Json::Num(ov.serial_cycles)),
+                    ("steady_cycles", Json::Num(ov.steady_cycles)),
+                    ("fill_cycles", Json::Num(ov.fill_cycles)),
+                    (
+                        "bottleneck_layer",
+                        Json::Num(ov.bottleneck_layer as f64),
+                    ),
+                    (
+                        "baseline_pipelined_speedup",
+                        Json::Num(ov_base.pipelined_speedup),
+                    ),
+                ]),
+            ),
             // Thread-count-invariant by construction (see SearchStats), so
             // serial and parallel runs emit identical JSON.
             (
@@ -850,5 +879,17 @@ mod tests {
         let j = res.to_json().pretty();
         let parsed = Json::parse(&j).unwrap();
         assert!(parsed.get("latency_improvement").as_f64().unwrap() > 1.0);
+        // The overlap block mirrors cost::overlap off the optimized cost.
+        let ov = parsed.get("overlap");
+        let est = res.overlap_estimate();
+        assert_eq!(
+            ov.get("pipelined_speedup").as_f64().unwrap().to_bits(),
+            est.pipelined_speedup.to_bits()
+        );
+        assert!(ov.get("pipelined_speedup").as_f64().unwrap() >= 1.0);
+        assert_eq!(
+            ov.get("bottleneck_layer").as_f64().unwrap() as usize,
+            res.optimized.bottleneck_layer
+        );
     }
 }

@@ -23,11 +23,15 @@
 //!   serve     [--deployment dep.json | --net N --wbits W --abits A]
 //!             [--requests R] [--clients C] [--backend auto|live|sim]
 //!             [--eval-batch B] [--threads N] [--conv-fanout-min-flops F]
+//!             [--overlap]
 //!                                  closed-loop load test of the serving
 //!                                  coordinator, executing the artifact's
 //!                                  per-layer policy (the sim backend runs
 //!                                  FC, sequential conv, and residual
-//!                                  ResNet nets offline via the graph IR)
+//!                                  ResNet nets offline via the graph IR;
+//!                                  --overlap switches it to branch-parallel
+//!                                  wavefront dispatch + inter-eval
+//!                                  pipelining, bitwise identical to serial)
 //!   serve     --routes routes.json [--requests R] [--clients C]
 //!             [--verify] [--metrics-out metrics.json]
 //!                                  multi-deployment serving: many
@@ -39,9 +43,11 @@
 //!   inspect   dep.json [--breakdown] [--chip-config chip.json]
 //!                                  validate + print a saved artifact;
 //!                                  --breakdown adds the per-component
-//!                                  area/energy/tclk table and peak TOPS/W,
-//!                                  TOPS/mm²; --chip-config re-profiles the
-//!                                  artifact's design under override knobs
+//!                                  area/energy/tclk table, peak TOPS/W,
+//!                                  TOPS/mm², and the pipelined steady-state
+//!                                  estimate (cost::overlap); --chip-config
+//!                                  re-profiles the artifact's design under
+//!                                  override knobs
 //!
 //! The flag registry lives in `lrmp::api::flags`: unknown flags are
 //! rejected with the valid list, and boolean switches (e.g. `--live`) never
@@ -453,6 +459,7 @@ fn serve_opts_arg(args: &Args) -> Result<ServeOptions> {
         eval_batch,
         threads,
         conv_fanout_min_flops,
+        overlap: args.bool("overlap"),
     })
 }
 
@@ -927,6 +934,18 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             pr.tops_peak,
             pr.topsw_peak,
             pr.topsmm2_peak
+        );
+        // Bottleneck-stage pipeline estimate (cost::overlap): what
+        // overlapped execution buys over the serial walk of this design.
+        let ov = lrmp::cost::overlap::OverlapEstimate::from_cost(&cost);
+        println!(
+            "  pipeline    steady {:.2} Mcyc/inf (bottleneck layer {} '{}'), \
+             fill {:.2} Mcyc, pipelined speedup x{:.2} over serial",
+            ov.steady_cycles / 1e6,
+            ov.bottleneck_layer,
+            net.layers[ov.bottleneck_layer].name,
+            ov.fill_cycles / 1e6,
+            ov.pipelined_speedup
         );
         let areas = pr.tile_area_mm2.named();
         let tclks = pr.tclk_ns.named();

@@ -10,14 +10,22 @@ use crate::quant::{LayerPrecision, Policy, MAX_BITS, MIN_BITS};
 use crate::replication::{self, LayerSummary, Objective};
 
 /// Observation dimension of the per-layer state vector: 10 topology
-/// features, 4 cost-model breakdown features, and the previous action pair.
-pub const OBS_DIM: usize = 16;
+/// features, 4 cost-model breakdown features, the pipeline-criticality
+/// feature, and the previous action pair.
+pub const OBS_DIM: usize = 17;
 
 /// Build the HAQ-style observation for layer `l` given the previous action.
 /// Cost model v2 widens the state with the hardware breakdown the agent is
 /// trading against: the layer's latency split (VMM vs transport vs digital,
 /// from an 8/8 LayerCost so it is policy-independent) and the chip's ADC
 /// energy fraction, so the policy can react to array/ADC knob changes.
+/// The overlap mirror (`cost::overlap`) adds index 14, **pipeline
+/// criticality**: this layer's unreplicated 8/8 latency over the network
+/// maximum — 1.0 at the r=1 bottleneck — so the agent can see which
+/// layers pace the pipelined steady state and spend precision/tiles
+/// flattening them. Like the breakdown features it is computed at fixed
+/// 8/8 precision, keeping the observation policy-independent (and thus
+/// the search deterministic for a given seed).
 pub fn observation(
     model: &CostModel,
     net: &Network,
@@ -41,6 +49,20 @@ pub fn observation(
     let lc = model.layer(layer, LayerPrecision::new(MAX_BITS, MAX_BITS));
     let lc_total = lc.total_cycles().max(1) as f64;
     let adc_energy_fraction = model.chip.energy_fractions()[1];
+    // Pipeline criticality at r = 1 (cost::overlap's t_l / max t_l with
+    // every layer at 8/8): policy-independent like the breakdown above.
+    let max_total = net
+        .layers
+        .iter()
+        .map(|other| {
+            model
+                .layer(other, LayerPrecision::new(MAX_BITS, MAX_BITS))
+                .total_cycles()
+        })
+        .max()
+        .unwrap_or(1)
+        .max(1) as f64;
+    let criticality = lc.total_cycles() as f64 / max_total;
     vec![
         l as f64 / nl,                                  // layer index
         is_conv,                                        // layer type
@@ -56,6 +78,7 @@ pub fn observation(
         (lc.t_tile_in + lc.t_tile_out) as f64 / lc_total, // transport share
         lc.t_digital as f64 / lc_total,                 // digital share
         adc_energy_fraction,                            // chip ADC energy frac
+        criticality,                                    // pipeline criticality
         prev_action.0,                                  // previous w action
         prev_action.1,                                  // previous a action
     ]
@@ -254,6 +277,25 @@ mod tests {
             knobbed[13]
         );
         assert_eq!(base.len(), knobbed.len());
+    }
+
+    #[test]
+    fn observation_ends_with_criticality_then_prev_actions() {
+        // The overlap feature sits at index 14; the previous action pair
+        // stays the observation tail (rollout code patches the last two
+        // entries by relative index).
+        let net = nets::resnet::resnet18();
+        let model = CostModel::paper();
+        let base = model.baseline(&net);
+        let obs = observation(&model, &net, base.bottleneck_layer, (0.25, 0.75));
+        assert_eq!(obs.len(), OBS_DIM);
+        assert_eq!(obs[14], 1.0, "the r=1 bottleneck layer has criticality 1");
+        assert_eq!(obs[OBS_DIM - 2], 0.25);
+        assert_eq!(obs[OBS_DIM - 1], 0.75);
+        // A non-bottleneck layer paces less than the pipeline interval.
+        let other = (0..net.num_layers()).find(|&l| l != base.bottleneck_layer).unwrap();
+        let obs2 = observation(&model, &net, other, (0.0, 0.0));
+        assert!(obs2[14] > 0.0 && obs2[14] < 1.0, "criticality {}", obs2[14]);
     }
 
     #[test]

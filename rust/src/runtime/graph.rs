@@ -53,7 +53,7 @@ use crate::runtime::gemm::ConvGeom;
 use std::fmt;
 
 /// Index of a node within its [`Graph`] (dense, 0-based).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct NodeId(pub usize);
 
 /// One graph operation. Weight-bearing ops (`MatMul`, `Conv`) carry the
@@ -523,6 +523,143 @@ impl Graph {
     /// Number of weight-bearing nodes (`MatMul` + `Conv`).
     pub fn weight_nodes(&self) -> usize {
         self.nodes.iter().filter(|n| n.op.layer_index().is_some()).count()
+    }
+
+    /// Per-node consumer lists: `consumers()[i]` holds every node that
+    /// reads node `i`'s value, in ascending id order. Rebuilt from the
+    /// node table (the compile-time lists are not retained).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &j in &node.inputs {
+                out[j.0].push(NodeId(i));
+            }
+        }
+        out
+    }
+
+    /// Level-synchronous wavefront partition of the schedule for the
+    /// overlapped executor (`SimOptions::overlap`): every wave is a set of
+    /// nodes that may execute concurrently, and waves run in order with a
+    /// barrier between them.
+    ///
+    /// Levels are longest-path depths over the **data edges alone** —
+    /// node `n` sits one past the deepest of its producers — so a purely
+    /// sequential chain degenerates to singleton waves in schedule order
+    /// while independent branches (a residual trunk vs. its projection
+    /// skip) share a wave. The serial arena's slot recycling is
+    /// deliberately ignored here: its write-after-read hazards would
+    /// re-serialize exactly those branches, so the overlapped executor
+    /// runs on its own arena laid out by [`Graph::overlap_slots`], which
+    /// frees buffers only at wave boundaries and therefore never creates
+    /// an intra-wave hazard.
+    ///
+    /// Each chunk of work inside a wave reads only buffers finalized in
+    /// earlier waves and writes a buffer nothing else in the wave touches
+    /// — the overlapped executor computes every element with the serial
+    /// kernels in the serial reduction order, which is what makes
+    /// overlap-on bitwise identical to overlap-off (gated by tests and
+    /// the bench's `overlap_bit_exact` flag).
+    ///
+    /// `Input` and `Output` nodes are omitted (they alias the request
+    /// buffer / their producer and do no arena work). Within a wave nodes
+    /// are in ascending id order.
+    pub fn overlap_waves(&self) -> Vec<Vec<NodeId>> {
+        let n = self.nodes.len();
+        // Longest-path levels over data edges; the schedule is a
+        // topological order, so one pass suffices.
+        let mut level = vec![0usize; n];
+        let mut depth = 0usize;
+        for &id in &self.schedule {
+            let i = id.0;
+            let l = self.nodes[i]
+                .inputs
+                .iter()
+                .map(|d| level[d.0] + 1)
+                .max()
+                .unwrap_or(0);
+            level[i] = l;
+            depth = depth.max(l);
+        }
+
+        let mut waves: Vec<Vec<NodeId>> = vec![Vec::new(); depth + 1];
+        for i in 0..n {
+            if matches!(self.nodes[i].op, Op::Input { .. } | Op::Output) {
+                continue;
+            }
+            waves[level[i]].push(NodeId(i));
+        }
+        waves.retain(|w| !w.is_empty());
+        for w in &mut waves {
+            w.sort_unstable();
+        }
+        waves
+    }
+
+    /// Arena layout for the overlapped executor: per-node slot ids and
+    /// per-slot per-sample capacities, recycled at **wave granularity**
+    /// over the partition from [`Graph::overlap_waves`].
+    ///
+    /// A value claims a slot in its own wave and releases it only after
+    /// the wave holding its last reader completes, so within any single
+    /// wave no node's output buffer aliases another wave member's output
+    /// or any buffer still being read — the property the wavefront
+    /// executor's disjoint-write safety argument rests on. Values read by
+    /// `Output` are never recycled (the logits are copied out after the
+    /// last wave). The free list is LIFO and scanned deterministically,
+    /// so the layout is a pure function of the graph — independent of
+    /// thread count, like everything else the bitwise gates cover.
+    ///
+    /// Returns `(slot_of, slot_feats)` shaped like [`Graph::slot_of`] /
+    /// [`Graph::slot_feats`] but for the overlap arena; on sequential
+    /// chains it ping-pongs the same two slots the serial liveness pass
+    /// finds, and on branchy graphs it pays a slot of extra width per
+    /// concurrent branch instead of serializing them.
+    pub fn overlap_slots(&self, waves: &[Vec<NodeId>]) -> (Vec<Option<usize>>, Vec<usize>) {
+        let n = self.nodes.len();
+        let mut wave_of = vec![usize::MAX; n];
+        for (w, wave) in waves.iter().enumerate() {
+            for &id in wave {
+                wave_of[id.0] = w;
+            }
+        }
+        // Last wave that reads each value; Output pins its producer to
+        // the end of time (copy-out happens after every wave).
+        let mut last_read = vec![0usize; n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &j in &node.inputs {
+                let w = if matches!(node.op, Op::Output) {
+                    usize::MAX
+                } else {
+                    wave_of[i]
+                };
+                last_read[j.0] = last_read[j.0].max(w);
+            }
+        }
+
+        let mut slot_of: Vec<Option<usize>> = vec![None; n];
+        let mut slot_feats: Vec<usize> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        for (w, wave) in waves.iter().enumerate() {
+            for &id in wave {
+                let s = free.pop().unwrap_or_else(|| {
+                    slot_feats.push(0);
+                    slot_feats.len() - 1
+                });
+                slot_of[id.0] = Some(s);
+                slot_feats[s] = slot_feats[s].max(self.feats[id.0]);
+            }
+            // Release only at the wave boundary: a buffer freed here is
+            // first reclaimable by wave w+1, never by a same-wave peer.
+            for &id in waves.iter().flatten() {
+                if wave_of[id.0] <= w && last_read[id.0] == w {
+                    if let Some(s) = slot_of[id.0] {
+                        free.push(s);
+                    }
+                }
+            }
+        }
+        (slot_of, slot_feats)
     }
 }
 
@@ -1268,5 +1405,153 @@ mod tests {
         // both must hold 512.
         assert_eq!(g.slot_feats().iter().max(), Some(&512));
         assert_eq!(g.arena_floats_per_sample(), 512 + 512);
+    }
+
+    /// The wavefront executor's entire correctness contract: waves cover
+    /// each work node exactly once, respect data edges, and the overlap
+    /// arena never aliases two values whose live ranges (write wave
+    /// through last-reader wave) overlap — which rules out every
+    /// intra-wave RAW/WAR/WAW the serial schedule resolves by ordering.
+    fn assert_waves_sound(g: &Graph, waves: &[Vec<NodeId>]) {
+        let mut wave_of = vec![usize::MAX; g.num_nodes()];
+        let mut seen = 0usize;
+        for (w, wave) in waves.iter().enumerate() {
+            for &id in wave {
+                assert_eq!(wave_of[id.0], usize::MAX, "node {id:?} in two waves");
+                wave_of[id.0] = w;
+                seen += 1;
+            }
+        }
+        let work_nodes = (0..g.num_nodes())
+            .filter(|&i| {
+                !matches!(g.node(NodeId(i)).op, Op::Input { .. } | Op::Output)
+            })
+            .count();
+        assert_eq!(seen, work_nodes, "waves must cover every work node once");
+        // RAW: a node runs strictly after its producers.
+        for i in 0..g.num_nodes() {
+            if wave_of[i] == usize::MAX {
+                continue;
+            }
+            for &j in &g.node(NodeId(i)).inputs {
+                if wave_of[j.0] != usize::MAX {
+                    assert!(wave_of[j.0] < wave_of[i], "RAW violated: {j:?} -> {i}");
+                }
+            }
+        }
+        // Arena: values sharing an overlap slot must have disjoint live
+        // ranges [write wave, last reader wave] (Output pins to the end).
+        let (slot_of, slot_feats) = g.overlap_slots(waves);
+        let mut last_read = vec![0usize; g.num_nodes()];
+        for i in 0..g.num_nodes() {
+            let node = g.node(NodeId(i));
+            for &j in &node.inputs {
+                let w = if matches!(node.op, Op::Output) {
+                    usize::MAX
+                } else {
+                    wave_of[i]
+                };
+                last_read[j.0] = last_read[j.0].max(w);
+            }
+        }
+        for a in 0..g.num_nodes() {
+            let Some(sa) = slot_of[a] else { continue };
+            assert!(slot_feats[sa] >= g.out_features(NodeId(a)), "slot too small");
+            for b in (a + 1)..g.num_nodes() {
+                if slot_of[b] != Some(sa) {
+                    continue;
+                }
+                let (a0, a1) = (wave_of[a], last_read[a].max(wave_of[a]));
+                let (b0, b1) = (wave_of[b], last_read[b].max(wave_of[b]));
+                assert!(
+                    a1 < b0 || b1 < a0,
+                    "live ranges of {a} and {b} overlap in slot {sa}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_chain_degenerates_to_singleton_waves() {
+        let g = lower(&nets::mlp_tiny()).unwrap();
+        let waves = g.overlap_waves();
+        assert_eq!(waves.len(), g.weight_nodes());
+        assert!(waves.iter().all(|w| w.len() == 1));
+        // Singleton waves reproduce the serial schedule order exactly.
+        let flat: Vec<NodeId> = waves.iter().flatten().copied().collect();
+        let serial: Vec<NodeId> = g
+            .schedule()
+            .iter()
+            .copied()
+            .filter(|&id| !matches!(g.node(id).op, Op::Input { .. } | Op::Output))
+            .collect();
+        assert_eq!(flat, serial);
+        assert_waves_sound(&g, &waves);
+    }
+
+    #[test]
+    fn residual_branches_share_a_wave() {
+        // resnet-tiny's projected block computes a trunk conv and a 1x1
+        // downsample conv from the same fork point: branch-parallel
+        // dispatch must put at least one such independent pair in one
+        // wave, and the partition must still respect every hazard.
+        let g = lower(&nets::resnet::resnet_tiny()).unwrap();
+        let waves = g.overlap_waves();
+        assert_waves_sound(&g, &waves);
+        assert!(
+            waves.iter().any(|w| w.len() >= 2),
+            "projection skip must share a wave with the trunk"
+        );
+        let serial_depth = waves.iter().map(Vec::len).sum::<usize>();
+        assert!(waves.len() < serial_depth, "branches must shorten the critical path");
+    }
+
+    #[test]
+    fn overlap_arena_keeps_a_skip_value_alive_across_its_branch() {
+        // input -> m0 -> m1 -> add(m1, m0-skip): m0's buffer is read two
+        // waves after it is written, so the wave-granular allocator must
+        // hold it in its own slot across m1 — exactly the serial liveness
+        // result here, but proven through the overlap allocator.
+        let nodes = vec![
+            input(4),
+            matmul(0, 4, 4, 0, true),
+            matmul(1, 4, 4, 1, false),
+            Node::new(Op::Add, vec![NodeId(2), NodeId(1)], true),
+            Node::new(Op::Output, vec![NodeId(3)], false),
+        ];
+        let g = Graph::compile(nodes).unwrap();
+        let waves = g.overlap_waves();
+        assert_waves_sound(&g, &waves);
+        // m0, m1, add are a strict data chain: three singleton waves, and
+        // three live-at-once values means three overlap slots.
+        assert_eq!(waves.len(), 3);
+        let (_, slot_feats) = g.overlap_slots(&waves);
+        assert_eq!(slot_feats.len(), 3);
+    }
+
+    #[test]
+    fn overlap_arena_recycles_slots_on_sequential_chains() {
+        // On a chain the wave allocator must ping-pong two slots just
+        // like the serial liveness pass — overlap costs no extra arena
+        // when there is nothing to overlap.
+        let g = lower(&nets::mlp_tiny()).unwrap();
+        let waves = g.overlap_waves();
+        let (_, slot_feats) = g.overlap_slots(&waves);
+        assert_eq!(slot_feats.len(), g.num_slots());
+        assert_eq!(slot_feats.iter().sum::<usize>(), g.arena_floats_per_sample());
+    }
+
+    #[test]
+    fn consumers_are_rebuilt_in_ascending_order() {
+        let g = lower(&nets::resnet::resnet_tiny()).unwrap();
+        let consumers = g.consumers();
+        for (i, node) in (0..g.num_nodes()).map(|i| (i, g.node(NodeId(i)))) {
+            for &j in &node.inputs {
+                assert!(consumers[j.0].contains(&NodeId(i)));
+            }
+        }
+        for list in &consumers {
+            assert!(list.windows(2).all(|w| w[0] < w[1]));
+        }
     }
 }

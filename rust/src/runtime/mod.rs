@@ -40,10 +40,15 @@
 //!   tensors hold their own slots), and logits returned in the request's
 //!   own buffer make steady-state eval allocation-free. Its
 //!   `eval_reference` straight-line executor is the bitwise comparator
-//!   the bench and CI gate on.
+//!   the bench and CI gate on. `SimOptions::overlap` swaps the serial
+//!   topo walk for a wavefront executor: independent branches dispatch
+//!   in the same wave and `eval_pair` pipelines two evals one wave
+//!   apart over the shared pool — bitwise identical to serial by
+//!   contract (the bench's `overlap_bit_exact` gate).
 //!
 //! `cargo bench --bench bench_simnet` measures the stack and emits
-//! `BENCH_simnet.json` (schema v3 in `rust/src/api/README.md`).
+//! `BENCH_simnet.json` (schema v8 in `rust/src/api/README.md` and
+//! `docs/SCHEMAS.md`).
 
 pub mod engine;
 pub mod gemm;

@@ -555,6 +555,66 @@ mod tests {
     }
 
     #[test]
+    fn overlapped_wave_panic_poisons_only_its_own_epoch() {
+        // Regression for the overlap executor (`SimOptions::overlap`): a
+        // wavefront dispatch is one `run` over heterogeneous parts (a
+        // conv sample chunk next to an FC row chunk next to a residual
+        // Add range). If one part of such a job panics mid-wave, only
+        // *that* eval's job epoch may be poisoned — a concurrent eval's
+        // wave on the same serve-registry pool must drain clean, and the
+        // pool must keep dispatching subsequent waves.
+        let pool = std::sync::Arc::new(WorkerPool::new(4));
+        const WAVES: usize = 30;
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(2));
+        let faulty = {
+            let (pool, barrier) = (pool.clone(), barrier.clone());
+            std::thread::spawn(move || {
+                barrier.wait();
+                let mut errs = 0usize;
+                for wave in 0..WAVES {
+                    // 7 parts ≈ trunk conv chunks + skip conv chunks + an
+                    // Add range; one mid-wave part dies.
+                    let res = pool.try_run(7, |p| {
+                        if p == wave % 7 {
+                            panic!("faulty wave part");
+                        }
+                    });
+                    if res == Err(PoolError::JobPanicked { parts: 7 }) {
+                        errs += 1;
+                    }
+                }
+                errs
+            })
+        };
+        let clean = {
+            let (pool, barrier) = (pool.clone(), barrier.clone());
+            std::thread::spawn(move || {
+                barrier.wait();
+                for wave in 0..WAVES {
+                    let touched: Vec<AtomicU64> = (0..9).map(|_| AtomicU64::new(0)).collect();
+                    let res = pool.try_run(touched.len(), |p| {
+                        touched[p].fetch_add(1, Ordering::SeqCst);
+                    });
+                    assert_eq!(res, Ok(()), "clean eval poisoned at wave {wave}");
+                    assert!(
+                        touched.iter().all(|t| t.load(Ordering::SeqCst) == 1),
+                        "every part of the clean wave ran exactly once"
+                    );
+                }
+            })
+        };
+        let errs = faulty.join().expect("faulty submitter must not die");
+        clean.join().expect("clean submitter must not die");
+        assert_eq!(errs, WAVES, "every faulty wave reported its own poisoning");
+        // The pool survives for the next eval's waves.
+        let hits: Vec<AtomicU64> = (0..11).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), |p| {
+            hits[p].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
     fn default_threads_is_positive_and_clamped() {
         let t = default_threads();
         assert!((1..=MAX_THREADS).contains(&t));

@@ -68,6 +68,37 @@
 //! the bench and CI smoke job gate on it, residual adds and fused convs
 //! included.
 //!
+//! # Overlapped execution ([`SimOptions::overlap`])
+//!
+//! The serial walk leaves workers idle in exactly the situations the LRMP
+//! paper identifies for tiles (§III, non-uniform layer times): a residual
+//! block's projection skip waits for the trunk it does not depend on, and
+//! an FC tail too small to fan out occupies one worker while the rest
+//! park. With `overlap: true` the backend switches to a level-synchronous
+//! wavefront executor:
+//!
+//! - **branch-parallel dispatch** — the compiled schedule is sliced into
+//!   *waves* by data-dependency depth ([`Graph::overlap_waves`]); every
+//!   node in a wave has all inputs finalized in earlier waves, so one
+//!   pool dispatch runs the whole wave (residual trunk alongside the
+//!   projection skip), each node chunked exactly as the serial kernels
+//!   chunk it (batch rows for `MatMul`, samples for `Conv`/`Pool`,
+//!   element ranges for `Add`) so every reduction order is unchanged;
+//! - **inter-eval pipelining** — [`SimBackend::eval_pair`] runs two
+//!   evals through double-buffered lane arenas with lane 1 trailing one
+//!   wave behind lane 0: eval *i+1*'s early conv waves fill the workers
+//!   eval *i*'s tail leaves idle, at +1 step of latency over a single
+//!   eval instead of 2× the depth.
+//!
+//! Overlap changes scheduling, never values: activation quantization is
+//! still staged per node over the full batch, lanes own disjoint arenas
+//! ([`Graph::overlap_slots`] — wave-granular liveness, so a skip tensor
+//! survives across its branch), and both the overlapped single-eval path
+//! and each `eval_pair` lane are gated bitwise against the serial walk
+//! and `eval_reference` (tests across thread counts 1/2/4/7; the bench's
+//! `overlap` block is a hard CI gate). The cost-model mirror lives in
+//! `cost::overlap` (bottleneck-stage steady-state latency).
+//!
 //! Weights are synthetic (seeded He-scaled Gaussians), so logits carry no
 //! trained meaning; what the backend faithfully reproduces is everything
 //! the coordinator cares about: shapes, batching, per-layer bit-width
@@ -113,6 +144,16 @@ pub struct SimOptions {
     /// conv's sample loop fans out across the pool. `Some(0)` fans out
     /// whenever the batch allows.
     pub conv_fanout_min_flops: Option<usize>,
+    /// Overlapped graph execution (default off): independent schedule
+    /// nodes of one eval dispatch concurrently from the dataflow
+    /// wavefronts (`Graph::overlap_waves` — a residual trunk and its
+    /// projection skip share a pool dispatch instead of running back to
+    /// back), and [`SimBackend::eval_pair`] pipelines two evals through
+    /// the same wavefront barriers on double-buffered lane arenas.
+    /// Bitwise identical to the serial walk — every chunk runs the serial
+    /// kernels in the serial reduction order (tests and the bench's
+    /// `overlap_bit_exact` flag gate on it).
+    pub overlap: bool,
 }
 
 /// One layer's packed-weight cache entry (see `ensure_packed`).
@@ -143,6 +184,296 @@ enum BufRef {
     Request,
     /// Arena slot `i`.
     Slot(usize),
+}
+
+/// One pool part of one overlap wave: a disjoint chunk of one node's
+/// work with every buffer resolved to raw pointers during the wave's
+/// serial prep phase. Chunk boundaries are chosen so each part computes
+/// its output elements with the serial kernels in the serial reduction
+/// order — matmuls split by batch row, convs and pools by sample, adds by
+/// element range — which keeps overlapped execution bitwise identical to
+/// the serial walk for every thread count.
+enum RunPart {
+    /// Batch rows `[0, rows)` of one `MatMul` node (pointers pre-offset).
+    MatMul {
+        x: *const f32,
+        rows: usize,
+        w: *const PackedMat,
+        dst: *mut f32,
+        relu: bool,
+    },
+    /// A contiguous sample range of one `Conv` node, with a private strip
+    /// panel + product chunk from the overlap scratch.
+    Conv {
+        xs: *const f32,
+        samples: usize,
+        geom: ConvGeom,
+        w: *const PackedMat,
+        relu: bool,
+        pool_factor: Option<usize>,
+        strip: *mut f32,
+        strip_len: usize,
+        prod: *mut f32,
+        prod_len: usize,
+        dst: *mut f32,
+        out_feat: usize,
+    },
+    /// A contiguous sample range of one standalone `Pool` node.
+    Pool {
+        src: *const f32,
+        samples: usize,
+        channels: usize,
+        hw: usize,
+        factor: usize,
+        dst: *mut f32,
+        relu: bool,
+    },
+    /// A contiguous element range of one `Add` node (pointers pre-offset).
+    Add {
+        a: *const f32,
+        c: *const f32,
+        dst: *mut f32,
+        len: usize,
+        relu: bool,
+    },
+}
+
+// SAFETY: the raw pointers inside a RunPart are only dereferenced inside
+// the `pool.run` that the wave's prep phase hands the part list to; prep
+// guarantees the mutable targets of distinct parts are disjoint (output
+// row/sample/element ranges tile each node, scratch regions are indexed
+// per part) and the const sources are not written by any part of the same
+// wave (the wave partition orders writers after readers across waves, and
+// the two lanes own disjoint arenas). `pool.run` blocks until every part
+// finishes, so no pointer outlives the buffers it was taken from.
+unsafe impl Send for RunPart {}
+unsafe impl Sync for RunPart {}
+
+/// One eval's private buffers under the overlapped executor: overlap
+/// arena slots (wave-granular liveness, `Graph::overlap_slots`) plus one
+/// staging buffer per *wave-concurrent* weight node ([`SimBackend::eval`]'s
+/// single shared staging buffer assumes the serial walk — concurrent wave
+/// members each need their own). [`SimBackend::eval_pair`] runs two lanes
+/// at once; plain overlapped eval uses lane 0 only.
+struct LaneArena {
+    slots: Vec<Vec<f32>>,
+    staged: Vec<Vec<f32>>,
+}
+
+/// Construction-time state of the overlapped executor
+/// ([`SimOptions::overlap`]): the dataflow wavefronts, the overlap
+/// arena layout, per-node staging assignments, both lane arenas, the
+/// conv scratch sized for the widest step, and the reused part-descriptor
+/// buffer. Everything is allocated once here; overlapped evals allocate
+/// only their returned logits.
+struct OverlapState {
+    /// Dataflow wavefronts (`Graph::overlap_waves`).
+    waves: Vec<Vec<graph::NodeId>>,
+    /// Overlap-arena slot per node (`Graph::overlap_slots`).
+    slot_of: Vec<Option<usize>>,
+    /// Staging-buffer index per node (weight-bearing nodes only): nodes
+    /// sharing a wave get distinct buffers, nodes in different waves
+    /// reuse them (the wave barrier retires a buffer before its reuse).
+    stage_idx: Vec<usize>,
+    /// Double-buffered lane arenas — `eval_pair` keeps two evals in
+    /// flight, one per lane.
+    lanes: [LaneArena; 2],
+    /// Strip-panel stride (floats) per concurrent conv part.
+    strip_stride: usize,
+    /// Product-chunk stride (floats) per concurrent conv part.
+    prod_stride: usize,
+    strips: Vec<f32>,
+    prod: Vec<f32>,
+    /// Reused per-step part list (capacity covers the widest two-lane
+    /// step).
+    parts: Vec<RunPart>,
+}
+
+/// Sample fan-out of one conv node under the overlapped executor — the
+/// same flops gate [`conv_forward`] applies on the serial path.
+fn conv_parts(b: usize, g: &ConvGeom, fanout_min_flops: usize, threads: usize) -> usize {
+    let flops = 2usize
+        .saturating_mul(b)
+        .saturating_mul(g.num_positions())
+        .saturating_mul(g.patch_len())
+        .saturating_mul(g.out_c);
+    if b > 1 && flops >= fanout_min_flops {
+        threads.min(b)
+    } else {
+        1
+    }
+}
+
+impl OverlapState {
+    /// Size every overlap buffer from the compiled graph: wavefronts,
+    /// wave-granular arena, staging concurrency, and the widest step's
+    /// part and conv-scratch demand (two lanes can share a step, and a
+    /// lone conv part may widen its strip region to a full panel set for
+    /// the inline row-split path).
+    fn build(graph: &Graph, b: usize, threads: usize, opts: SimOptions) -> OverlapState {
+        let fanout_min = opts.conv_fanout_min_flops.unwrap_or(CONV_MT_MIN_FLOPS);
+        let waves = graph.overlap_waves();
+        let (slot_of, slot_feats) = graph.overlap_slots(&waves);
+        let mut stage_idx = vec![usize::MAX; graph.num_nodes()];
+        let mut stage_bufs = 0usize;
+        let mut staged_max = 0usize;
+        let (mut strip_max, mut prod_max) = (0usize, 0usize);
+        let (mut wave_parts_max, mut wave_conv_parts_max) = (0usize, 0usize);
+        for wave in &waves {
+            let mut k = 0usize;
+            let (mut wparts, mut wconv) = (0usize, 0usize);
+            for &id in wave {
+                let node = graph.node(id);
+                if node.op.layer_index().is_some() {
+                    stage_idx[id.0] = k;
+                    k += 1;
+                    staged_max = staged_max.max(graph.out_features(node.inputs[0]));
+                }
+                match node.op {
+                    Op::Conv { geom, .. } => {
+                        let chunk = CONV_CHUNK.min(geom.num_positions());
+                        strip_max = strip_max.max(TILE_ROWS * geom.patch_len());
+                        prod_max = prod_max.max(chunk * geom.out_c);
+                        let p = conv_parts(b, &geom, fanout_min, threads);
+                        wconv += p;
+                        wparts += p;
+                    }
+                    Op::MatMul { .. } | Op::Pool { .. } | Op::Add => {
+                        wparts += threads.min(b).max(1);
+                    }
+                    Op::Input { .. } | Op::Output => {}
+                }
+            }
+            stage_bufs = stage_bufs.max(k);
+            wave_parts_max = wave_parts_max.max(wparts);
+            wave_conv_parts_max = wave_conv_parts_max.max(wconv);
+        }
+        // Adjacent waves of the two lanes share a step, so 2× the widest
+        // wave bounds any step's demand.
+        let conv_slots = (2 * wave_conv_parts_max).max(threads);
+        let lane = || LaneArena {
+            slots: slot_feats.iter().map(|&f| Vec::with_capacity(b * f)).collect(),
+            staged: (0..stage_bufs).map(|_| Vec::with_capacity(b * staged_max)).collect(),
+        };
+        OverlapState {
+            waves,
+            slot_of,
+            stage_idx,
+            lanes: [lane(), lane()],
+            strip_stride: strip_max,
+            prod_stride: prod_max,
+            strips: vec![0.0; conv_slots * strip_max],
+            prod: vec![0.0; 2 * wave_conv_parts_max * prod_max],
+            parts: Vec::with_capacity(2 * wave_parts_max),
+        }
+    }
+}
+
+/// Execute one overlap part with the serial kernels. `inline` is true
+/// when the part is the step's only one and runs on the submitting thread
+/// instead of inside `pool.run` — only then may the kernels fan out
+/// across the pool themselves (the pool does not nest). Either way every
+/// output element is computed in the serial reduction order, so the
+/// choice never changes a bit.
+fn run_part(part: &RunPart, pool: &WorkerPool, inline: bool) {
+    match *part {
+        RunPart::MatMul { x, rows, w, dst, relu } => {
+            // SAFETY: prep sized these buffers (rows·w.rows / rows·w.cols)
+            // and no other part of this step touches the dst range — see
+            // the RunPart Send/Sync contract.
+            let (w, x, out) = unsafe {
+                let w = &*w;
+                (
+                    w,
+                    std::slice::from_raw_parts(x, rows * w.rows),
+                    std::slice::from_raw_parts_mut(dst, rows * w.cols),
+                )
+            };
+            if inline {
+                gemm::matmul_pooled(x, w, rows, pool, out);
+            } else {
+                gemm::matmul_pooled_threads(x, w, rows, pool, 1, out);
+            }
+            if relu {
+                relu_inplace(out);
+            }
+        }
+        RunPart::Conv {
+            xs,
+            samples,
+            ref geom,
+            w,
+            relu,
+            pool_factor,
+            strip,
+            strip_len,
+            prod,
+            prod_len,
+            dst,
+            out_feat,
+        } => {
+            let in_feat = geom.in_features();
+            // SAFETY: per the RunPart contract — the sample ranges of
+            // distinct parts tile the node's batch, and strip/prod
+            // regions are private to this part.
+            let (w, strips, pr) = unsafe {
+                (
+                    &*w,
+                    std::slice::from_raw_parts_mut(strip, strip_len),
+                    std::slice::from_raw_parts_mut(prod, prod_len),
+                )
+            };
+            for s in 0..samples {
+                let (x_s, d_s) = unsafe {
+                    (
+                        std::slice::from_raw_parts(xs.add(s * in_feat), in_feat),
+                        std::slice::from_raw_parts_mut(dst.add(s * out_feat), out_feat),
+                    )
+                };
+                conv_one_sample(x_s, geom, w, relu, pool_factor, pool, inline, strips, pr, d_s);
+            }
+        }
+        RunPart::Pool {
+            src,
+            samples,
+            channels,
+            hw,
+            factor,
+            dst,
+            relu,
+        } => {
+            let (inf, s) = (channels * hw * hw, hw / factor);
+            let of = channels * s * s;
+            for i in 0..samples {
+                // SAFETY: sample ranges of distinct parts tile the batch.
+                let (x_s, d_s) = unsafe {
+                    (
+                        std::slice::from_raw_parts(src.add(i * inf), inf),
+                        std::slice::from_raw_parts_mut(dst.add(i * of), of),
+                    )
+                };
+                gemm::max_pool(x_s, channels, hw, factor, d_s);
+                if relu {
+                    relu_inplace(d_s);
+                }
+            }
+        }
+        RunPart::Add { a, c, dst, len, relu } => {
+            // SAFETY: element ranges of distinct parts tile the buffer,
+            // and both sources were finalized in earlier waves.
+            let (a, c, d) = unsafe {
+                (
+                    std::slice::from_raw_parts(a, len),
+                    std::slice::from_raw_parts(c, len),
+                    std::slice::from_raw_parts_mut(dst, len),
+                )
+            };
+            for i in 0..len {
+                let v = a[i] + c[i];
+                d[i] = if relu { v.max(0.0) } else { v };
+            }
+        }
+    }
 }
 
 /// Compiled-schedule summary (`inspect`/`serve` print it).
@@ -198,6 +529,9 @@ pub struct SimBackend {
     /// its input here; inputs can have several consumers).
     staged: Vec<f32>,
     conv: ConvScratch,
+    /// Overlapped-executor state ([`SimOptions::overlap`]); `None` runs
+    /// the serial schedule walk.
+    overlap: Option<OverlapState>,
     /// The kernel worker pool — `Arc` so many backends can share one pool
     /// (the serve registry builds a fleet of deployments over a single
     /// pool; per-job poisoning keeps one backend's panic from another's
@@ -352,6 +686,9 @@ impl SimBackend {
                 mat: None,
             })
             .collect();
+        let overlap = opts
+            .overlap
+            .then(|| OverlapState::build(&graph, b, threads, opts));
         Ok(SimBackend {
             name: net.name.clone(),
             graph,
@@ -371,6 +708,7 @@ impl SimBackend {
                 strips: Vec::with_capacity(threads * strip_max),
                 prod: Vec::with_capacity(parts_max * prod_max),
             },
+            overlap,
             pool: shared.unwrap_or_else(|| Arc::new(WorkerPool::new(threads))),
             eval_batch,
             input_dim,
@@ -426,10 +764,22 @@ impl SimBackend {
     pub fn schedule_summary(&self) -> ScheduleSummary {
         let g = &self.graph;
         let b = self.eval_batch;
+        let overlap_floats = self.overlap.as_ref().map_or(0, |o| {
+            o.lanes
+                .iter()
+                .map(|l| {
+                    l.slots.iter().map(Vec::capacity).sum::<usize>()
+                        + l.staged.iter().map(Vec::capacity).sum::<usize>()
+                })
+                .sum::<usize>()
+                + o.strips.len()
+                + o.prod.len()
+        });
         let arena_floats: usize = self.slots.iter().map(|s| s.capacity()).sum::<usize>()
             + self.staged.capacity()
             + self.conv.strips.capacity()
-            + self.conv.prod.capacity();
+            + self.conv.prod.capacity()
+            + overlap_floats;
         let saved_floats = self
             .ref_graph
             .arena_floats_per_sample()
@@ -534,6 +884,305 @@ impl SimBackend {
             }
         }
         std::mem::take(&mut values[g.output().0])
+    }
+
+    /// Whether this backend runs the overlapped executor
+    /// ([`SimOptions::overlap`]).
+    pub fn overlap_enabled(&self) -> bool {
+        self.overlap.is_some()
+    }
+
+    /// Inter-eval pipelining: run **two** batches through the network
+    /// with their wavefronts interleaved over the shared worker pool —
+    /// lane 1 trails lane 0 by one wave, so while eval 0's deeper layers
+    /// drain, eval 1's early layers fill the otherwise-idle workers. Each
+    /// lane runs on its own double-buffered arena (only the packed
+    /// weights are shared, read-only), so the returned logits are bitwise
+    /// identical to two plain [`InferenceBackend::eval`] calls of the
+    /// same batches — the bench's `overlap_bit_exact` gate holds it to
+    /// that.
+    ///
+    /// Requires [`SimOptions::overlap`]; both batches use this backend's
+    /// `eval_batch` and the same bit vectors (the serving case: one
+    /// deployment, a stream of requests).
+    pub fn eval_pair(
+        &mut self,
+        x0: &[f32],
+        x1: &[f32],
+        w_bits: &[f32],
+        a_bits: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if self.overlap.is_none() {
+            bail!("eval_pair requires a backend built with SimOptions::overlap");
+        }
+        let b = self.eval_batch;
+        for (lane, x) in [x0, x1].iter().enumerate() {
+            if x.len() != b * self.input_dim {
+                bail!(
+                    "sim eval_pair lane {lane} expects exactly {}x{} inputs, got {}",
+                    b,
+                    self.input_dim,
+                    x.len()
+                );
+            }
+        }
+        if w_bits.len() != self.dims.len() || a_bits.len() != self.dims.len() {
+            bail!(
+                "bit vectors must have {} entries, got w={} a={}",
+                self.dims.len(),
+                w_bits.len(),
+                a_bits.len()
+            );
+        }
+        self.ensure_packed(w_bits);
+        let [y0, y1] = self.eval_overlapped([Some(x0), Some(x1)], a_bits);
+        Ok((y0.expect("lane 0 requested"), y1.expect("lane 1 requested")))
+    }
+
+    /// The wavefront executor behind [`SimOptions::overlap`]: one step
+    /// per wave (plus a drain step when both lanes run), each step a
+    /// serial prep phase — full-batch quantization staging, destination
+    /// sizing, part-descriptor construction — followed by **one**
+    /// `pool.run` over every active lane's chunk tasks. Weights must
+    /// already be packed (`ensure_packed`). Returns each requested lane's
+    /// logits.
+    fn eval_overlapped(
+        &mut self,
+        xs: [Option<&[f32]>; 2],
+        a_bits: &[f32],
+    ) -> [Option<Vec<f32>>; 2] {
+        let b = self.eval_batch;
+        let classes = self.num_classes;
+        let fanout_min = self.conv_fanout_min_flops;
+        let Self {
+            graph,
+            packed,
+            pool,
+            overlap,
+            ..
+        } = self;
+        let pool: &WorkerPool = pool;
+        let threads = pool.threads();
+        let state = overlap.as_mut().expect("caller checked overlap state");
+        let OverlapState {
+            waves,
+            slot_of,
+            stage_idx,
+            lanes,
+            strip_stride,
+            prod_stride,
+            strips,
+            prod,
+            parts,
+        } = state;
+        let (sstride, pstride) = (*strip_stride, *prod_stride);
+        let depth = waves.len();
+        let both = xs[0].is_some() && xs[1].is_some();
+        let steps = if both { depth + 1 } else { depth };
+        for t in 0..steps {
+            parts.clear();
+            let mut conv_slot = 0usize;
+            for (lane_i, x) in xs.iter().enumerate() {
+                let Some(x) = *x else { continue };
+                // Lane 1 trails lane 0 by one wave (`t - 1` wraps to an
+                // out-of-range index at t = 0, skipping the lane).
+                let w = if lane_i == 0 { t } else { t.wrapping_sub(1) };
+                if w >= depth {
+                    continue;
+                }
+                let lane = &mut lanes[lane_i];
+                for &id in &waves[w] {
+                    let node = graph.node(id);
+                    match node.op {
+                        Op::Input { .. } | Op::Output => {}
+                        Op::MatMul { layer, in_f, out_f } => {
+                            {
+                                let src = match slot_of[node.inputs[0].0] {
+                                    Some(s) => &lane.slots[s][..b * in_f],
+                                    None => &x[..b * in_f],
+                                };
+                                stage_quantized(
+                                    &mut lane.staged[stage_idx[id.0]],
+                                    src,
+                                    a_bits[layer] as u32,
+                                );
+                            }
+                            let dst = &mut lane.slots[slot_of[id.0].expect("MatMul slot")];
+                            dst.resize(b * out_f, 0.0);
+                            let dst_ptr = dst.as_mut_ptr();
+                            let x_ptr = lane.staged[stage_idx[id.0]].as_ptr();
+                            let w: *const PackedMat =
+                                packed[layer].mat.as_ref().expect("packed above");
+                            let nparts = threads.min(b).max(1);
+                            let per = (b + nparts - 1) / nparts;
+                            let mut r0 = 0;
+                            while r0 < b {
+                                let rows = per.min(b - r0);
+                                // SAFETY: offsets stay within the b-row
+                                // buffers sized above.
+                                parts.push(RunPart::MatMul {
+                                    x: unsafe { x_ptr.add(r0 * in_f) },
+                                    rows,
+                                    w,
+                                    dst: unsafe { dst_ptr.add(r0 * out_f) },
+                                    relu: node.relu,
+                                });
+                                r0 += rows;
+                            }
+                        }
+                        Op::Conv {
+                            layer,
+                            geom,
+                            pool: pf,
+                        } => {
+                            let in_f = geom.in_features();
+                            let out_f = graph.out_features(id);
+                            {
+                                let src = match slot_of[node.inputs[0].0] {
+                                    Some(s) => &lane.slots[s][..b * in_f],
+                                    None => &x[..b * in_f],
+                                };
+                                stage_quantized(
+                                    &mut lane.staged[stage_idx[id.0]],
+                                    src,
+                                    a_bits[layer] as u32,
+                                );
+                            }
+                            let dst = &mut lane.slots[slot_of[id.0].expect("Conv slot")];
+                            dst.resize(b * out_f, 0.0);
+                            let dst_ptr = dst.as_mut_ptr();
+                            let x_ptr = lane.staged[stage_idx[id.0]].as_ptr();
+                            let w: *const PackedMat =
+                                packed[layer].mat.as_ref().expect("packed above");
+                            let chunk = CONV_CHUNK.min(geom.num_positions());
+                            let (spl, prl) = (TILE_ROWS * geom.patch_len(), chunk * geom.out_c);
+                            let nparts = conv_parts(b, &geom, fanout_min, threads);
+                            let per = (b + nparts - 1) / nparts;
+                            let mut s0 = 0;
+                            while s0 < b {
+                                let samples = per.min(b - s0);
+                                // SAFETY: sample offsets stay within the
+                                // buffers sized above; `conv_slot`
+                                // regions tile the overlap scratch.
+                                parts.push(RunPart::Conv {
+                                    xs: unsafe { x_ptr.add(s0 * in_f) },
+                                    samples,
+                                    geom,
+                                    w,
+                                    relu: node.relu,
+                                    pool_factor: pf,
+                                    strip: unsafe {
+                                        strips.as_mut_ptr().add(conv_slot * sstride)
+                                    },
+                                    strip_len: spl,
+                                    prod: unsafe { prod.as_mut_ptr().add(conv_slot * pstride) },
+                                    prod_len: prl,
+                                    dst: unsafe { dst_ptr.add(s0 * out_f) },
+                                    out_feat: out_f,
+                                });
+                                conv_slot += 1;
+                                s0 += samples;
+                            }
+                        }
+                        Op::Pool {
+                            channels,
+                            hw,
+                            factor,
+                        } => {
+                            let (inf, sdim) = (channels * hw * hw, hw / factor);
+                            let of = channels * sdim * sdim;
+                            let src_ptr: *const f32 = match slot_of[node.inputs[0].0] {
+                                Some(s) => lane.slots[s][..b * inf].as_ptr(),
+                                None => x[..b * inf].as_ptr(),
+                            };
+                            let dst = &mut lane.slots[slot_of[id.0].expect("Pool slot")];
+                            dst.resize(b * of, 0.0);
+                            let dst_ptr = dst.as_mut_ptr();
+                            let nparts = threads.min(b).max(1);
+                            let per = (b + nparts - 1) / nparts;
+                            let mut s0 = 0;
+                            while s0 < b {
+                                let samples = per.min(b - s0);
+                                // SAFETY: sample offsets stay within the
+                                // b-sample buffers sized above.
+                                parts.push(RunPart::Pool {
+                                    src: unsafe { src_ptr.add(s0 * inf) },
+                                    samples,
+                                    channels,
+                                    hw,
+                                    factor,
+                                    dst: unsafe { dst_ptr.add(s0 * of) },
+                                    relu: node.relu,
+                                });
+                                s0 += samples;
+                            }
+                        }
+                        Op::Add => {
+                            let len = b * graph.out_features(id);
+                            let a_ptr: *const f32 = match slot_of[node.inputs[0].0] {
+                                Some(s) => lane.slots[s][..len].as_ptr(),
+                                None => x[..len].as_ptr(),
+                            };
+                            let c_ptr: *const f32 = match slot_of[node.inputs[1].0] {
+                                Some(s) => lane.slots[s][..len].as_ptr(),
+                                None => x[..len].as_ptr(),
+                            };
+                            let dst = &mut lane.slots[slot_of[id.0].expect("Add slot")];
+                            dst.resize(len, 0.0);
+                            let dst_ptr = dst.as_mut_ptr();
+                            let nparts = threads.min(b).max(1);
+                            let per = (len + nparts - 1) / nparts;
+                            let mut i0 = 0;
+                            while i0 < len {
+                                let n = per.min(len - i0);
+                                // SAFETY: element ranges tile the buffer
+                                // sized above.
+                                parts.push(RunPart::Add {
+                                    a: unsafe { a_ptr.add(i0) },
+                                    c: unsafe { c_ptr.add(i0) },
+                                    dst: unsafe { dst_ptr.add(i0) },
+                                    len: n,
+                                    relu: node.relu,
+                                });
+                                i0 += n;
+                            }
+                        }
+                    }
+                }
+            }
+            match parts.len() {
+                0 => {}
+                1 => {
+                    // A lone part runs inline on this thread, so its
+                    // kernels may fan out across the pool themselves; a
+                    // conv's strip region widens to the full panel set
+                    // the row-split path packs into (region 0 is the
+                    // scratch base — no other part exists to collide
+                    // with).
+                    if let RunPart::Conv { strip_len, .. } = &mut parts[0] {
+                        *strip_len *= threads;
+                    }
+                    run_part(&parts[0], pool, true);
+                }
+                n => {
+                    let parts_ref: &[RunPart] = parts;
+                    pool.run(n, |p| run_part(&parts_ref[p], pool, false));
+                }
+            }
+        }
+        // Copy each requested lane's logits out of its overlap arena.
+        let out_src = graph.node(graph.output()).inputs[0];
+        let mut out: [Option<Vec<f32>>; 2] = [None, None];
+        for (lane_i, x) in xs.iter().enumerate() {
+            let Some(x) = *x else { continue };
+            out[lane_i] = Some(match slot_of[out_src.0] {
+                Some(s) => lanes[lane_i].slots[s][..b * classes].to_vec(),
+                // Degenerate Input -> Output graph: the logits are the
+                // request itself.
+                None => x[..b * classes].to_vec(),
+            });
+        }
+        out
     }
 }
 
@@ -853,6 +1502,14 @@ impl crate::coordinator::InferenceBackend for SimBackend {
             );
         }
         self.ensure_packed(&w_bits);
+        if self.overlap.is_some() {
+            // Branch-parallel dispatch: independent wave members share
+            // one pool dispatch instead of running back to back. Bitwise
+            // identical to the serial walk below (tests and the bench's
+            // `overlap_bit_exact` flag gate on it).
+            let [y0, _] = self.eval_overlapped([Some(&x), None], &a_bits);
+            return Ok(y0.expect("lane 0 requested"));
+        }
         let fanout_min_flops = self.conv_fanout_min_flops;
         let Self {
             graph,
@@ -1336,6 +1993,144 @@ mod tests {
             yd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             ye.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             "conv fan-out threshold must never leak into the logits"
+        );
+    }
+
+    /// A miniature VGG-style chain (conv/conv/pool/conv/fc) — deep enough
+    /// to exercise multi-wave overlap with Conv+Pool fusion, small enough
+    /// for debug-mode tests (the full vgg16 propcheck runs in the release
+    /// bench's `overlap` block).
+    fn vgg_nano() -> nets::Network {
+        nets::Network {
+            name: "vgg-nano".into(),
+            layers: vec![
+                nets::Layer::conv("conv1", 3, 4, 3, 1, 1, 8),
+                nets::Layer::conv("conv2", 4, 4, 3, 1, 1, 8),
+                nets::Layer::linear("fc", 4 * 4 * 4, 10),
+            ],
+        }
+    }
+
+    fn overlap_opts(threads: usize) -> SimOptions {
+        SimOptions {
+            threads: Some(threads),
+            overlap: true,
+            ..SimOptions::default()
+        }
+    }
+
+    #[test]
+    fn overlap_on_vs_off_is_bitwise_identical_across_thread_counts() {
+        // The overlapped executor (branch-parallel wavefront dispatch on
+        // its own wave-granular arena) must reproduce the serial walk bit
+        // for bit on every topology class — FC chain, fused conv chain,
+        // residual branches — for thread counts below, at and above the
+        // batch, odd ones included. The reference executor arbitrates.
+        for net in [
+            nets::mlp_tiny(),
+            nets::conv_tiny(),
+            vgg_nano(),
+            nets::resnet::resnet_tiny(),
+        ] {
+            let nl = net.num_layers();
+            let mut serial = SimBackend::from_network_opts(&net, 3, 11, Some(2)).unwrap();
+            let dim = serial.input_dim();
+            let x: Vec<f32> = (0..3 * dim).map(|i| ((i * 13) % 41) as f32 / 41.0 - 0.2).collect();
+            let bits = vec![6.0f32; nl];
+            let y_serial = serial.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+            let y_ref = serial.eval_reference(&x, &bits, &bits);
+            for threads in [1usize, 2, 4, 7] {
+                let mut b =
+                    SimBackend::from_network_cfg(&net, 3, 11, overlap_opts(threads)).unwrap();
+                assert!(b.overlap_enabled());
+                let y = b.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+                for (name, other) in [("serial", &y_serial), ("reference", &y_ref)] {
+                    assert_eq!(
+                        y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        other.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{} overlap-vs-{name} divergence at threads={threads}",
+                        net.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_pair_matches_two_serial_evals_bit_for_bit() {
+        // Inter-eval pipelining: both lanes of eval_pair must be bitwise
+        // identical to plain serial evals of the same batches — the lane
+        // arenas are double-buffered precisely so the in-flight evals
+        // cannot interact.
+        for net in [nets::conv_tiny(), vgg_nano(), nets::resnet::resnet_tiny()] {
+            let nl = net.num_layers();
+            let mut serial = SimBackend::from_network_opts(&net, 2, 9, Some(2)).unwrap();
+            let dim = serial.input_dim();
+            let x0: Vec<f32> = (0..2 * dim).map(|i| ((i * 7) % 23) as f32 / 23.0 - 0.3).collect();
+            let x1: Vec<f32> = (0..2 * dim).map(|i| ((i * 11) % 31) as f32 / 31.0 - 0.1).collect();
+            let bits = vec![6.0f32; nl];
+            let y0_serial = serial.eval(x0.clone(), bits.clone(), bits.clone()).unwrap();
+            let y1_serial = serial.eval(x1.clone(), bits.clone(), bits.clone()).unwrap();
+            for threads in [1usize, 2, 4, 7] {
+                let mut b =
+                    SimBackend::from_network_cfg(&net, 2, 9, overlap_opts(threads)).unwrap();
+                let (y0, y1) = b.eval_pair(&x0, &x1, &bits, &bits).unwrap();
+                assert_eq!(
+                    y0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    y0_serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} lane-0 divergence at threads={threads}",
+                    net.name
+                );
+                assert_eq!(
+                    y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    y1_serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} lane-1 divergence at threads={threads}",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_pair_requires_the_overlap_executor() {
+        let mut b = SimBackend::from_network(&nets::conv_tiny(), 2, 9).unwrap();
+        let nl = b.num_layers();
+        let x = vec![0.1f32; 2 * b.input_dim()];
+        let bits = vec![8.0f32; nl];
+        let err = b.eval_pair(&x, &x, &bits, &bits).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+        assert!(!b.overlap_enabled());
+    }
+
+    #[test]
+    fn overlapped_backends_share_a_pool_without_interference() {
+        // The serve-registry configuration with overlap on: two overlap
+        // backends over one pool must match privately-pooled overlap
+        // builds bitwise (per-job poisoning and epoch-keyed draining keep
+        // the wave dispatches of different backends apart).
+        let net = nets::resnet::resnet_tiny();
+        let nl = net.num_layers();
+        let first = SimBackend::from_network_cfg(&net, 2, 13, overlap_opts(4)).unwrap();
+        let pool = first.pool_handle();
+        let mut shared = SimBackend::from_network_shared(
+            &net,
+            2,
+            13,
+            SimOptions {
+                overlap: true,
+                ..SimOptions::default()
+            },
+            pool,
+        )
+        .unwrap();
+        let mut private = SimBackend::from_network_cfg(&net, 2, 13, overlap_opts(4)).unwrap();
+        let x: Vec<f32> = (0..2 * 192).map(|i| ((i * 5) % 29) as f32 / 29.0 - 0.2).collect();
+        let bits = vec![8.0f32; nl];
+        let ys = shared.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+        let yp = private.eval(x, bits.clone(), bits).unwrap();
+        assert_eq!(
+            ys.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yp.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
     }
 }

@@ -113,6 +113,7 @@ impl DeploymentRegistry {
             pool,
             sim: SimOptions {
                 conv_fanout_min_flops: opts.conv_fanout_min_flops,
+                overlap: opts.overlap,
                 ..SimOptions::default()
             },
             default_eval_batch: opts.eval_batch,
