@@ -140,6 +140,11 @@ const SERVE_FLAGS: &[FlagDef] = &[
         "overlapped graph execution: branch-parallel waves + inter-eval \
          pipelining (sim only; bitwise identical to serial)",
     ),
+    val(
+        "int-kernels",
+        "precision-tiered integer kernels (default true; sim only; \
+         bitwise identical to f32 — 'false' pins every layer to f32)",
+    ),
 ];
 
 const ROUTES_FLAGS: &[FlagDef] = &[val("config", "routes config JSON (or positional FILE)")];

@@ -55,7 +55,7 @@ pub enum ServeBackend {
 
 /// Execution knobs for [`Session::serve_opts`]; `Default` picks them all
 /// automatically.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
     /// Fixed batch size the sim backend executes (`None`: 16 for FC nets,
     /// 2 for conv nets, whose per-sample FLOPs are orders of magnitude
@@ -82,6 +82,25 @@ pub struct ServeOptions {
     /// tests and the bench's `overlap` block); off by default until the
     /// calibration ROADMAP item flips it. Ignored by the live backend.
     pub overlap: bool,
+    /// Precision-tiered integer kernels (`SimOptions::int_kernels`,
+    /// default **on**): layers whose searched `(w_bits, a_bits)` satisfy
+    /// the 2^24 exactness predicate run the i8/i16 kernels — bitwise
+    /// identical to the f32 path by construction (the bench's
+    /// `int_bit_exact` flag is a hard gate). `serve --int-kernels=false`
+    /// pins every layer to f32. Ignored by the live backend.
+    pub int_kernels: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            eval_batch: None,
+            threads: None,
+            conv_fanout_min_flops: None,
+            overlap: false,
+            int_kernels: true,
+        }
+    }
 }
 
 /// Builder for one search run plus the artifact-centric phase entry points.
@@ -471,6 +490,7 @@ impl Session {
             threads: opts.threads,
             conv_fanout_min_flops: opts.conv_fanout_min_flops,
             overlap: opts.overlap,
+            int_kernels: opts.int_kernels,
             ..SimOptions::default()
         };
         let backend = SimBackend::from_network_cfg(net, eval_batch, dep.provenance.seed, sim_opts)

@@ -283,6 +283,11 @@ pub struct SearchResult {
     pub trajectory: Vec<EpisodeLog>,
     /// Fan-out / cost-cache counters for this run.
     pub stats: SearchStats,
+    /// Per-layer eligibility for the runtime's packed-integer kernel tier
+    /// under the winning policy: `quant::int_exact_bits` on the layer's
+    /// lowered-GEMM depth. Pure arithmetic on the searched bits, so it is
+    /// thread-count-invariant like the rest of the artifact.
+    pub int_eligible: Vec<bool>,
 }
 
 impl SearchResult {
@@ -294,6 +299,15 @@ impl SearchResult {
     }
     pub fn energy_improvement(&self) -> f64 {
         self.baseline.energy_j / self.optimized.energy_j
+    }
+
+    /// Fraction of layers the sim backend will run on the integer tier
+    /// (default `--int-kernels` on) under the winning policy.
+    pub fn int_coverage(&self) -> f64 {
+        if self.int_eligible.is_empty() {
+            return 0.0;
+        }
+        self.int_eligible.iter().filter(|&&e| e).count() as f64 / self.int_eligible.len() as f64
     }
 
     /// Bottleneck-stage pipeline estimate of the winning design
@@ -341,6 +355,25 @@ impl SearchResult {
                     (
                         "baseline_pipelined_speedup",
                         Json::Num(ov_base.pipelined_speedup),
+                    ),
+                ]),
+            ),
+            // Which layers the serving runtime will dispatch to the packed
+            // integer kernels under this policy. Derived from the searched
+            // bits alone (not from a built backend), so the block is
+            // byte-identical across worker thread counts.
+            (
+                "int_kernels",
+                Json::obj(vec![
+                    (
+                        "eligible_layers",
+                        Json::Num(self.int_eligible.iter().filter(|&&e| e).count() as f64),
+                    ),
+                    ("total_layers", Json::Num(self.int_eligible.len() as f64)),
+                    ("coverage", Json::Num(self.int_coverage())),
+                    (
+                        "per_layer",
+                        Json::Arr(self.int_eligible.iter().map(|&e| Json::Bool(e)).collect()),
                     ),
                 ]),
             ),
@@ -683,6 +716,13 @@ impl<'a> Lrmp<'a> {
         let finetuned_accuracy = provider.finetuned(&best_policy)?;
         let best_model = CostModel::new(self.model.chip.with_array(best_array));
         let optimized = best_model.network(self.net, &best_policy, &best_plan.replication);
+        let int_eligible: Vec<bool> = self
+            .net
+            .layers
+            .iter()
+            .zip(&best_policy.layers)
+            .map(|(l, p)| p.int_exact(l.lowered_rows() as usize))
+            .collect();
         Ok(SearchResult {
             best_policy,
             best_plan,
@@ -695,6 +735,7 @@ impl<'a> Lrmp<'a> {
             optimized,
             trajectory,
             stats,
+            int_eligible,
         })
     }
 }

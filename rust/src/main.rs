@@ -23,7 +23,7 @@
 //!   serve     [--deployment dep.json | --net N --wbits W --abits A]
 //!             [--requests R] [--clients C] [--backend auto|live|sim]
 //!             [--eval-batch B] [--threads N] [--conv-fanout-min-flops F]
-//!             [--overlap]
+//!             [--overlap] [--int-kernels true|false]
 //!                                  closed-loop load test of the serving
 //!                                  coordinator, executing the artifact's
 //!                                  per-layer policy (the sim backend runs
@@ -31,7 +31,10 @@
 //!                                  ResNet nets offline via the graph IR;
 //!                                  --overlap switches it to branch-parallel
 //!                                  wavefront dispatch + inter-eval
-//!                                  pipelining, bitwise identical to serial)
+//!                                  pipelining, bitwise identical to serial;
+//!                                  --int-kernels, default true, dispatches
+//!                                  eligible low-bit layers to packed-i8
+//!                                  integer kernels, also bitwise identical)
 //!   serve     --routes routes.json [--requests R] [--clients C]
 //!             [--verify] [--metrics-out metrics.json]
 //!                                  multi-deployment serving: many
@@ -66,7 +69,7 @@ use lrmp::coordinator::batcher::BatchPolicy;
 use lrmp::cost::breakdown::NetworkBreakdown;
 use lrmp::cost::CostModel;
 use lrmp::lrmp::ablation;
-use lrmp::quant::Policy;
+use lrmp::quant::{self, Policy};
 use lrmp::replication::Objective;
 use lrmp::serve::{DeploymentKey, MultiServer, RoutesConfig};
 use lrmp::util::prng::Rng;
@@ -455,11 +458,18 @@ fn serve_opts_arg(args: &Args) -> Result<ServeOptions> {
     } else {
         None
     };
+    // `--int-kernels` is default-on, so it takes a value rather than being a
+    // presence switch: only an explicit `false`/`0` pins every layer to f32.
+    let int_kernels = !matches!(
+        args.flags.get("int-kernels").map(|s| s.as_str()),
+        Some("false") | Some("0")
+    );
     Ok(ServeOptions {
         eval_batch,
         threads,
         conv_fanout_min_flops,
         overlap: args.bool("overlap"),
+        int_kernels,
     })
 }
 
@@ -613,6 +623,11 @@ fn verify_routes(ms: &MultiServer, cfg: &RoutesConfig) -> Result<()> {
             let routed = ms.infer_on(route, label, probe.clone())?;
             let dep = ms.variant_deployment(route, label)?;
             let net = nets::by_name(&dep.net).expect("registry validated the net");
+            // Deliberately leaves `int_kernels` at its default (on) even when
+            // the routes were served with `--int-kernels=false`: the integer
+            // tier is bitwise identical to f32 by construction, so comparing
+            // across tiers is a strictly stronger check than matching the
+            // route's own configuration.
             let sim_opts = SimOptions {
                 threads: Some(ms.pool_threads()),
                 ..SimOptions::default()
@@ -997,7 +1012,11 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         Err(reason) => println!("  sim backend  unsupported: {reason}"),
     }
 
-    let mut t = Table::new(&["layer", "w", "a", "r", "tiles", "eff cycles"]);
+    // Kernel tier per layer under the sim backend's default configuration
+    // (`--int-kernels` on). The eligibility predicate is pure arithmetic on
+    // the artifact — `k · (2^w−1)(2^a−1) < 2^24` with k the lowered-GEMM
+    // depth — so inspect can report it without building a backend.
+    let mut t = Table::new(&["layer", "w", "a", "r", "tiles", "eff cycles", "kernel tier"]);
     for (((l, pr), &r), lc) in net
         .layers
         .iter()
@@ -1005,6 +1024,17 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         .zip(&dep.replication)
         .zip(&cost.layers)
     {
+        let k = l.lowered_rows() as usize;
+        let tier = if quant::int_exact_bits(pr.w_bits, pr.a_bits, k) {
+            "i8/i32".into()
+        } else if !(2..=8).contains(&pr.w_bits) || !(2..=8).contains(&pr.a_bits) {
+            "f32 (bits outside 2..=8)".into()
+        } else {
+            format!(
+                "f32 (k·maxprod = {} ≥ 2^24)",
+                quant::max_dot_product_bits(pr.w_bits, pr.a_bits, k)
+            )
+        };
         t.row(&[
             l.name.clone(),
             pr.w_bits.to_string(),
@@ -1012,6 +1042,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             r.to_string(),
             (lc.tiles * r).to_string(),
             format!("{:.0}", lc.total_cycles() as f64 / r as f64),
+            tier,
         ]);
     }
     t.print();

@@ -10,6 +10,37 @@ use crate::util::json::Json;
 pub const MIN_BITS: u32 = 2;
 pub const MAX_BITS: u32 = 8;
 
+/// Exactness bound of the integer kernel tier: an f32 partial sum of a
+/// quantized dot product is exact as long as its integer code magnitude
+/// stays below 2^24 (the f32 mantissa). Layers whose worst-case
+/// [`max_dot_product_bits`] is below this bound run the packed-i8 kernels
+/// **bitwise identically** to the f32 path; everything else stays f32.
+pub const INT_EXACT_BOUND: u64 = 1 << 24;
+
+/// Worst-case dot-product code magnitude of a quantized layer with
+/// reduction length `k`: `k · (2^w−1)(2^a−1)`. Deliberately conservative —
+/// symmetric weight codes actually top out at `2^(w−1)−1` — so the
+/// eligibility decision never depends on runtime data, only on the
+/// searched policy and the layer shape.
+pub fn max_dot_product_bits(w_bits: u32, a_bits: u32, k: usize) -> u64 {
+    let wmax = (1u64 << w_bits.min(32)) - 1;
+    let amax = (1u64 << a_bits.min(32)) - 1;
+    (k as u64).saturating_mul(wmax.saturating_mul(amax))
+}
+
+/// The integer-tier exactness predicate: bits must fit the i8/i16 operand
+/// grids (`MIN_BITS..=MAX_BITS`) and every partial sum must stay below
+/// [`INT_EXACT_BOUND`]. When this holds, the i32-accumulate kernels are
+/// bitwise identical to the f32 kernels *by construction* (every f32
+/// partial sum is an exact integer multiple of the power-of-two scale
+/// product) — the predicate is what lets the dispatcher switch tiers
+/// without ever moving a bit.
+pub fn int_exact_bits(w_bits: u32, a_bits: u32, k: usize) -> bool {
+    (MIN_BITS..=MAX_BITS).contains(&w_bits)
+        && (MIN_BITS..=MAX_BITS).contains(&a_bits)
+        && max_dot_product_bits(w_bits, a_bits, k) < INT_EXACT_BOUND
+}
+
 /// Per-layer precision assignment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LayerPrecision {
@@ -22,6 +53,16 @@ impl LayerPrecision {
         assert!((MIN_BITS..=MAX_BITS).contains(&w_bits), "w_bits {w_bits}");
         assert!((MIN_BITS..=MAX_BITS).contains(&a_bits), "a_bits {a_bits}");
         LayerPrecision { w_bits, a_bits }
+    }
+
+    /// [`max_dot_product_bits`] at this layer's precision.
+    pub fn max_dot_product(&self, k: usize) -> u64 {
+        max_dot_product_bits(self.w_bits, self.a_bits, k)
+    }
+
+    /// [`int_exact_bits`] at this layer's precision.
+    pub fn int_exact(&self, k: usize) -> bool {
+        int_exact_bits(self.w_bits, self.a_bits, k)
     }
 }
 
@@ -48,6 +89,18 @@ impl Policy {
     }
     pub fn is_empty(&self) -> bool {
         self.layers.is_empty()
+    }
+
+    /// Worst-case dot-product code magnitude of `layer` at reduction
+    /// length `k` — see [`max_dot_product_bits`].
+    pub fn max_dot_product(&self, layer: usize, k: usize) -> u64 {
+        self.layers[layer].max_dot_product(k)
+    }
+
+    /// Whether `layer` at reduction length `k` is eligible for the
+    /// integer kernel tier — see [`int_exact_bits`].
+    pub fn int_exact(&self, layer: usize, k: usize) -> bool {
+        self.layers[layer].int_exact(k)
     }
 
     /// Average bits across layers, (w, a) — reported in experiment logs.
@@ -212,6 +265,94 @@ mod tests {
     fn from_json_rejects_bad_bits() {
         let j = Json::parse(r#"[{"w": 12, "a": 8}]"#).unwrap();
         assert_eq!(Policy::from_json(&j), None);
+    }
+
+    #[test]
+    fn int_exactness_predicate_pins_the_2_pow_24_boundary() {
+        // maxprod is always odd, so k·maxprod can never equal 2^24
+        // exactly — the tightest pins sit at 2^24 − 1 (largest eligible
+        // product) and the first value past the bound.
+        // (2^2−1)² = 9: k = 1 864 135 ⇒ exactly 2^24 − 1.
+        assert_eq!(max_dot_product_bits(2, 2, 1_864_135), (1u64 << 24) - 1);
+        assert!(int_exact_bits(2, 2, 1_864_135));
+        assert!(!int_exact_bits(2, 2, 1_864_136)); // 2^24 + 8
+        // (2^2−1)(2^3−1) = 21: k = 798 915 ⇒ exactly 2^24 − 1 again.
+        assert_eq!(max_dot_product_bits(2, 3, 798_915), (1u64 << 24) - 1);
+        assert!(int_exact_bits(2, 3, 798_915));
+        assert!(!int_exact_bits(2, 3, 798_916)); // 2^24 + 20
+        // Full 8/8 precision (maxprod 65 025): k = 258 is the last
+        // eligible reduction length, 259 the first ineligible — vgg16's
+        // wide-k layers at 8/8 land far above and stay on the f32 path,
+        // mlp_tiny's k = 256 layer squeaks in.
+        assert!(int_exact_bits(8, 8, 258));
+        assert!(!int_exact_bits(8, 8, 259));
+        assert!(int_exact_bits(8, 8, 256));
+        // Bits outside the searched grid are never eligible (the i8/i16
+        // operand packing requires ≤ 8 bits).
+        assert!(!int_exact_bits(9, 8, 4));
+        assert!(!int_exact_bits(8, 1, 4));
+        assert!(!int_exact_bits(24, 24, 1));
+        // The LayerPrecision / Policy delegates agree with the raw form.
+        let p = Policy::uniform(2, 8, 8);
+        assert_eq!(p.max_dot_product(0, 256), 256 * 65_025);
+        assert!(p.int_exact(0, 256));
+        assert!(!p.int_exact(1, 512));
+    }
+
+    #[test]
+    fn propcheck_int_tier_bitwise_equals_f32_on_random_eligible_layers() {
+        // The integer-tier contract, exercised end to end at the kernel
+        // level: on ANY layer the predicate admits — random bits, random
+        // eligible reduction length, random codes, power-of-two scales —
+        // the packed-i8 kernels must equal the f32 pooled kernel bit for
+        // bit at every thread count. (Test-only reach into the runtime
+        // tier; production dependencies still point strictly downward.)
+        use crate::runtime::gemm::{self, PackedMat, PackedMatI8};
+        use crate::runtime::pool::WorkerPool;
+        use crate::util::propcheck;
+        let pool = WorkerPool::new(4);
+        propcheck::check("int-vs-f32-bitwise", 24, |rng| {
+            let w_bits = rng.int_range(MIN_BITS as i64, MAX_BITS as i64) as u32;
+            let a_bits = rng.int_range(MIN_BITS as i64, MAX_BITS as i64) as u32;
+            let maxprod = ((1u64 << w_bits) - 1) * ((1u64 << a_bits) - 1);
+            // Any k below the exact bound is eligible; cap for test speed.
+            let kmax = (((INT_EXACT_BOUND - 1) / maxprod).min(300)).max(1) as i64;
+            let k = rng.int_range(1, kmax) as usize;
+            if !int_exact_bits(w_bits, a_bits, k) {
+                return Err(format!("generator produced ineligible layer k={k}"));
+            }
+            let m = rng.int_range(1, 9) as usize;
+            let n = rng.int_range(1, 80) as usize;
+            let wlim = (1i64 << (w_bits - 1)) - 1;
+            let aw: Vec<i8> = (0..k * n)
+                .map(|_| rng.int_range(-wlim, wlim) as i8)
+                .collect();
+            let amax = (1i64 << a_bits) - 1;
+            let ax: Vec<i16> = (0..m * k).map(|_| rng.int_range(0, amax) as i16).collect();
+            let sa = 2.0f32.powi(rng.int_range(-12, 3) as i32);
+            let sw = 2.0f32.powi(rng.int_range(-12, 3) as i32);
+            let xf: Vec<f32> = ax.iter().map(|&c| c as f32 * sa).collect();
+            let wf: Vec<f32> = aw.iter().map(|&c| c as f32 * sw).collect();
+            let packed_f = PackedMat::pack(&wf, k, n);
+            let packed_i = PackedMatI8::pack(&aw, k, n);
+            for threads in [1usize, 2, 4, 7] {
+                let mut f32_out = vec![0f32; m * n];
+                gemm::matmul_pooled_threads(&xf, &packed_f, m, &pool, threads, &mut f32_out);
+                let mut int_out = vec![f32::NAN; m * n];
+                gemm::matmul_pooled_i8_threads(
+                    &ax, &packed_i, m, sa * sw, &pool, threads, &mut int_out,
+                );
+                let fb: Vec<u32> = f32_out.iter().map(|v| v.to_bits()).collect();
+                let ib: Vec<u32> = int_out.iter().map(|v| v.to_bits()).collect();
+                if fb != ib {
+                    return Err(format!(
+                        "int tier diverged: w={w_bits} a={a_bits} k={k} m={m} n={n} \
+                         threads={threads}"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -42,6 +42,16 @@
 //! never materialized — and the direct-convolution reference
 //! [`conv2d_ref`] used by the tests. All are written with the same
 //! reduction order, so every path matches the others bit for bit.
+//!
+//! A third precision tier lives alongside the f32 kernels: the
+//! **packed-integer** family ([`PackedMatI8`], [`matmul_pooled_i8`],
+//! [`conv_rows_streamed_i8`]) executes layers whose quantized operands are
+//! small integer codes under power-of-two scales. Its i32 accumulators are
+//! exact, and because eligible layers satisfy the
+//! `k · (2^w−1)(2^a−1) < 2^24` predicate (`quant::Policy::int_exact`),
+//! every f32 partial sum of the corresponding f32-kernel run is exact too —
+//! so the integer path is **bitwise identical** to the f32 kernels by
+//! construction, not by tolerance. See the "integer tier" section below.
 
 use crate::runtime::pool::{self, WorkerPool};
 
@@ -674,6 +684,417 @@ pub fn max_pool(x: &[f32], channels: usize, hw: usize, f: usize, out: &mut [f32]
     }
 }
 
+// ----------------------------------------------------------------------
+// Integer tier: i8 weight codes × i16 activation codes, i32 accumulate
+// ----------------------------------------------------------------------
+//
+// Quantization in `runtime::simnet` snaps every operand to
+// `code · scale` with an integer code and a **power-of-two** scale, so a
+// quantized layer's f32 math is secretly integer math: each product is
+// `ax·aw · (sa·sw)` and each partial sum is `N · (sa·sw)` for an integer
+// N. When the layer satisfies `k · (2^w−1)(2^a−1) < 2^24`
+// (`quant::Policy::int_exact`), every such N fits a 24-bit mantissa, so
+// the f32 kernels above never round — their result is *exactly*
+// `(Σ ax·aw) · sa·sw`, independent of blocking, tiling, zero-skipping or
+// summation order. These kernels compute the same Σ in i32 (exact by the
+// same bound), dequantize once per output element with a single
+// power-of-two multiply, and are therefore **bitwise identical** to the
+// f32 path on every eligible layer — the dispatcher in
+// `SimBackend` enforces the predicate and the bench's `int_bit_exact`
+// hard gate enforces the identity.
+//
+// Operand widths: weight codes are symmetric ≤ 2^(w−1)−1 ≤ 127 (i8),
+// activation codes ≤ 2^a−1 ≤ 255 (i16), so each product fits i16's
+// 32767 and the whole reduction fits i32 with the predicate's 2^24
+// headroom. Zero codes need no skip — integer adds of 0 are exact no-ops.
+
+/// A weight-code matrix packed into column panels, mirroring
+/// [`PackedMat`]'s layout exactly (same [`PANEL_COLS`] width, row-major
+/// within the panel) but holding i8 quantization codes: the f32 value is
+/// `code · scale` for the layer's power-of-two weight scale, carried
+/// alongside by the owner.
+#[derive(Clone, Debug)]
+pub struct PackedMatI8 {
+    /// Reduction dimension (input features / lowered rows).
+    pub rows: usize,
+    /// Output dimension (output features / lowered cols).
+    pub cols: usize,
+    data: Vec<i8>,
+}
+
+impl PackedMatI8 {
+    /// Pack a row-major `rows × cols` code matrix into column panels.
+    pub fn pack(w: &[i8], rows: usize, cols: usize) -> PackedMatI8 {
+        assert_eq!(w.len(), rows * cols, "code buffer must be rows*cols");
+        let mut data = vec![0i8; rows * cols];
+        let mut off = 0;
+        let mut j0 = 0;
+        while j0 < cols {
+            let pw = PANEL_COLS.min(cols - j0);
+            for i in 0..rows {
+                data[off..off + pw].copy_from_slice(&w[i * cols + j0..i * cols + j0 + pw]);
+                off += pw;
+            }
+            j0 += pw;
+        }
+        PackedMatI8 { rows, cols, data }
+    }
+
+    /// Unpack back to the row-major layout (tests / debugging).
+    pub fn unpack(&self) -> Vec<i8> {
+        let (rows, cols) = (self.rows, self.cols);
+        let mut w = vec![0i8; rows * cols];
+        let mut off = 0;
+        let mut j0 = 0;
+        while j0 < cols {
+            let pw = PANEL_COLS.min(cols - j0);
+            for i in 0..rows {
+                w[i * cols + j0..i * cols + j0 + pw].copy_from_slice(&self.data[off..off + pw]);
+                off += pw;
+            }
+            j0 += pw;
+        }
+        w
+    }
+}
+
+/// Integer-tier pooled matmul: `out[m×n] = (x · w) · scale` where `x`
+/// holds i16 activation codes, `w` packed i8 weight codes and `scale` the
+/// power-of-two product of the two quantization scales. Fan-out mirrors
+/// [`matmul_pooled`] (same flops threshold, same row split), and on every
+/// eligible layer the result is bit-for-bit equal to [`matmul_pooled`]
+/// over the dequantized operands (see the tier comment above).
+pub fn matmul_pooled_i8(
+    x: &[i16],
+    w: &PackedMatI8,
+    m: usize,
+    scale: f32,
+    pool: &WorkerPool,
+    out: &mut [f32],
+) {
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(w.rows)
+        .saturating_mul(w.cols);
+    let threads = if flops < POOL_MIN_FLOPS {
+        1
+    } else {
+        pool.threads().min(m)
+    };
+    matmul_pooled_i8_threads(x, w, m, scale, pool, threads.max(1), out);
+}
+
+/// [`matmul_pooled_i8`] with an explicit worker count (1 = fully inline).
+/// The split is by batch rows in [`TILE_ROWS`] multiples; each output
+/// element's i32 reduction runs entirely inside one part, so results are
+/// identical for every `threads` value.
+pub fn matmul_pooled_i8_threads(
+    x: &[i16],
+    w: &PackedMatI8,
+    m: usize,
+    scale: f32,
+    pool: &WorkerPool,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let (k, n) = (w.rows, w.cols);
+    assert_eq!(x.len(), m * k, "x must be m*k");
+    assert_eq!(out.len(), m * n, "out must be m*n");
+    out.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, m);
+    let data = w.data.as_slice();
+    if threads == 1 {
+        gemm_chunk_tiled_i8(x, m, k, n, data, scale, out);
+        return;
+    }
+    // Same ~2-parts-per-thread split as the f32 pooled kernel.
+    let target = threads * 2;
+    let mut rows_per = (m + target - 1) / target;
+    rows_per = ((rows_per + TILE_ROWS - 1) / TILE_ROWS) * TILE_ROWS;
+    let parts = (m + rows_per - 1) / rows_per;
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(parts, |p| {
+        let r0 = p * rows_per;
+        let rows = rows_per.min(m - r0);
+        let xs = &x[r0 * k..(r0 + rows) * k];
+        // SAFETY: part `p` owns rows [r0, r0 + rows) of `out` exclusively
+        // (parts tile the row range without overlap), and `out` outlives
+        // `pool.run`, which blocks until every part has finished.
+        let os = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), rows * n) };
+        gemm_chunk_tiled_i8(xs, rows, k, n, data, scale, os);
+    });
+}
+
+/// Integer register-tiled microkernel over one chunk of batch rows.
+/// Unlike [`gemm_chunk_tiled`] there is no reduction-block resume: i32
+/// accumulation is exact, so each tile runs the **full** k reduction in
+/// registers and writes its dequantized f32 result exactly once — the
+/// destination needs no zeroing and order is irrelevant by exactness.
+fn gemm_chunk_tiled_i8(
+    x: &[i16],
+    rows: usize,
+    k: usize,
+    n: usize,
+    data: &[i8],
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * n);
+    let mut j0 = 0;
+    let mut poff = 0;
+    while j0 < n {
+        let pw = PANEL_COLS.min(n - j0);
+        let panel = &data[poff..poff + k * pw];
+        let mut jc = 0;
+        while jc < pw {
+            let nc = TILE_COLS.min(pw - jc);
+            let mut r0 = 0;
+            if nc == TILE_COLS {
+                while r0 + TILE_ROWS <= rows {
+                    tile_mxn_i8::<TILE_COLS>(x, k, r0, panel, pw, jc, scale, out, n, j0);
+                    r0 += TILE_ROWS;
+                }
+            } else if nc == 8 {
+                while r0 + TILE_ROWS <= rows {
+                    tile_mxn_i8::<8>(x, k, r0, panel, pw, jc, scale, out, n, j0);
+                    r0 += TILE_ROWS;
+                }
+            }
+            while r0 < rows {
+                tile_edge_row_i8(x, k, r0, panel, pw, jc, nc, scale, out, n, j0);
+                r0 += 1;
+            }
+            jc += nc;
+        }
+        j0 += pw;
+        poff += k * pw;
+    }
+}
+
+/// One full TILE_ROWS×NC integer register tile: i32 accumulators over the
+/// whole reduction, then one dequantizing store per element. `NC` is a
+/// compile-time constant (16 or 8) so the widening multiply-add bodies
+/// fully unroll and autovectorize.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_mxn_i8<const NC: usize>(
+    x: &[i16],
+    k: usize,
+    r0: usize,
+    panel: &[i8],
+    pw: usize,
+    jc: usize,
+    scale: f32,
+    out: &mut [f32],
+    n: usize,
+    j0: usize,
+) {
+    let mut acc = [[0i32; NC]; TILE_ROWS];
+    for di in 0..k {
+        let wbase = di * pw + jc;
+        let wrow = &panel[wbase..wbase + NC];
+        for (r, a) in acc.iter_mut().enumerate() {
+            let xi = x[(r0 + r) * k + di] as i32;
+            for (av, &wv) in a.iter_mut().zip(wrow) {
+                *av += xi * wv as i32;
+            }
+        }
+    }
+    for (r, a) in acc.iter().enumerate() {
+        let base = (r0 + r) * n + j0 + jc;
+        for (o, &av) in out[base..base + NC].iter_mut().zip(a) {
+            *o = av as f32 * scale;
+        }
+    }
+}
+
+/// Scalar edge path for leftover rows and odd column-slice widths (same
+/// exact i32 reduction, per-element dequantizing store).
+#[allow(clippy::too_many_arguments)]
+fn tile_edge_row_i8(
+    x: &[i16],
+    k: usize,
+    row: usize,
+    panel: &[i8],
+    pw: usize,
+    jc: usize,
+    nc: usize,
+    scale: f32,
+    out: &mut [f32],
+    n: usize,
+    j0: usize,
+) {
+    let mut acc = [0i32; TILE_COLS];
+    let acc = &mut acc[..nc];
+    for di in 0..k {
+        let xi = x[row * k + di] as i32;
+        if xi == 0 {
+            continue;
+        }
+        let wbase = di * pw + jc;
+        let wrow = &panel[wbase..wbase + nc];
+        for (a, &wv) in acc.iter_mut().zip(wrow) {
+            *a += xi * wv as i32;
+        }
+    }
+    let base = row * n + j0 + jc;
+    for (o, &av) in out[base..base + nc].iter_mut().zip(acc.iter()) {
+        *o = av as f32 * scale;
+    }
+}
+
+/// [`im2col_chunk`] over i16 activation codes: identical tap order and
+/// geometry, zero padding reads code 0 (which dequantizes to +0.0, the
+/// exact value the f32 lowering inserts).
+pub fn im2col_chunk_i16(x: &[i16], g: &ConvGeom, pos0: usize, npos: usize, patches: &mut [i16]) {
+    let pl = g.patch_len();
+    assert_eq!(x.len(), g.in_features(), "sample must be in_c*in_hw^2");
+    assert_eq!(patches.len(), npos * pl, "patch buffer must be npos*patch_len");
+    assert!(pos0 + npos <= g.num_positions(), "positions out of range");
+    for p in 0..npos {
+        let pos = pos0 + p;
+        let (oy, ox) = (pos / g.out_hw, pos % g.out_hw);
+        let dst = &mut patches[p * pl..(p + 1) * pl];
+        let mut d = 0;
+        for c in 0..g.in_c {
+            let plane = &x[c * g.in_hw * g.in_hw..(c + 1) * g.in_hw * g.in_hw];
+            for ky in 0..g.kernel {
+                let iy = (oy * g.stride + ky) as isize - g.padding as isize;
+                let in_row = iy >= 0 && (iy as usize) < g.in_hw;
+                for kx in 0..g.kernel {
+                    let ix = (ox * g.stride + kx) as isize - g.padding as isize;
+                    dst[d] = if in_row && ix >= 0 && (ix as usize) < g.in_hw {
+                        plane[iy as usize * g.in_hw + ix as usize]
+                    } else {
+                        0
+                    };
+                    d += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Integer-tier patch-streaming conv rows, mirroring
+/// [`conv_rows_streamed`]: `prod[m × w.cols] = (P · w) · scale` over the
+/// im2col code-patch matrix of positions `[pos0, pos0 + m)`, never
+/// materialized. `strips` is the i16 twin of the f32 strip scratch (same
+/// `parts × TILE_ROWS × patch_len` sizing contract); `prod` stays f32 —
+/// each element is dequantized exactly once, so everything downstream
+/// (scatter, ReLU, pooling) is untouched. Bit-for-bit equal to the f32
+/// streamed path over the dequantized operands on eligible layers.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_rows_streamed_i8(
+    xs: &[i16],
+    g: &ConvGeom,
+    pos0: usize,
+    m: usize,
+    w: &PackedMatI8,
+    scale: f32,
+    pool: &WorkerPool,
+    threads: usize,
+    strips: &mut [i16],
+    prod: &mut [f32],
+) {
+    let n = w.cols;
+    let pl = g.patch_len();
+    assert_eq!(w.rows, pl, "packed conv codes must have patch_len rows");
+    assert_eq!(prod.len(), m * n, "prod must be m*cols");
+    assert!(pos0 + m <= g.num_positions(), "positions out of range");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, m);
+    let tiles = (m + TILE_ROWS - 1) / TILE_ROWS;
+    let parts = threads.min(tiles);
+    let spl = TILE_ROWS * pl;
+    assert!(strips.len() >= parts * spl, "strip scratch too small");
+    if parts == 1 {
+        conv_rows_task_i8(xs, g, pos0, m, w, scale, &mut strips[..spl], prod);
+        return;
+    }
+    let tiles_per = (tiles + parts - 1) / parts;
+    let rows_per = tiles_per * TILE_ROWS;
+    let nparts = (m + rows_per - 1) / rows_per;
+    let sptr = pool::SendMut(strips.as_mut_ptr());
+    let pptr = SendPtr(prod.as_mut_ptr());
+    pool.run(nparts, |p| {
+        let r0 = p * rows_per;
+        let rows = rows_per.min(m - r0);
+        // SAFETY: part `p` exclusively owns strip panel `p` and prod rows
+        // [r0, r0 + rows) — parts tile both without overlap — and both
+        // buffers outlive `pool.run`, which blocks until every part has
+        // finished.
+        let strip = unsafe { std::slice::from_raw_parts_mut(sptr.0.add(p * spl), spl) };
+        let pr = unsafe { std::slice::from_raw_parts_mut(pptr.0.add(r0 * n), rows * n) };
+        conv_rows_task_i8(xs, g, pos0 + r0, rows, w, scale, strip, pr);
+    });
+}
+
+/// [`conv_rows_streamed_i8`] with the worker count chosen from the
+/// chunk's flops (same threshold as [`conv_rows_streamed_auto`], so the
+/// two tiers fan out identically).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_rows_streamed_auto_i8(
+    xs: &[i16],
+    g: &ConvGeom,
+    pos0: usize,
+    m: usize,
+    w: &PackedMatI8,
+    scale: f32,
+    pool: &WorkerPool,
+    strips: &mut [i16],
+    prod: &mut [f32],
+) {
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(w.rows)
+        .saturating_mul(w.cols);
+    let threads = if flops < POOL_MIN_FLOPS {
+        1
+    } else {
+        pool.threads()
+    };
+    conv_rows_streamed_i8(xs, g, pos0, m, w, scale, pool, threads.max(1), strips, prod);
+}
+
+/// One part's integer strip loop: pack `TILE_ROWS` code-patch rows into
+/// the i16 panel, run the integer microkernel, advance. No prod zeroing —
+/// the integer microkernel writes every covered element exactly once.
+#[allow(clippy::too_many_arguments)]
+fn conv_rows_task_i8(
+    xs: &[i16],
+    g: &ConvGeom,
+    pos0: usize,
+    m: usize,
+    w: &PackedMatI8,
+    scale: f32,
+    strip: &mut [i16],
+    prod: &mut [f32],
+) {
+    let (k, n) = (w.rows, w.cols);
+    let pl = g.patch_len();
+    let mut r0 = 0;
+    while r0 < m {
+        let h = TILE_ROWS.min(m - r0);
+        im2col_chunk_i16(xs, g, pos0 + r0, h, &mut strip[..h * pl]);
+        gemm_chunk_tiled_i8(
+            &strip[..h * pl],
+            h,
+            k,
+            n,
+            &w.data,
+            scale,
+            &mut prod[r0 * n..(r0 + h) * n],
+        );
+        r0 += h;
+    }
+}
+
 // --- f64 packed-panel kernels (RL policy-net minibatch GEMM) -------------
 //
 // `rl::mlp` trains in f64, so the replay-minibatch forward/backward passes
@@ -1145,6 +1566,166 @@ mod tests {
         let mut prod = vec![0f32; npos * g.out_c];
         conv_rows_streamed_auto(&x, &g, 0, npos, &packed, &pool, &mut strips, &mut prod);
         assert_eq!(want, prod, "auto streamed divergence");
+    }
+
+    /// Random i16 activation codes in `[0, 2^a − 1]` (the unsigned
+    /// post-ReLU grid) with exact zeros mixed in; negate when `signed`.
+    fn random_act_codes(
+        rng: &mut Rng,
+        len: usize,
+        a_bits: u32,
+        zero_every: usize,
+        signed: bool,
+    ) -> Vec<i16> {
+        let hi = (1i64 << a_bits) - 1;
+        let lo = if signed { -((1i64 << (a_bits - 1)) - 1) } else { 0 };
+        let hi = if signed { (1i64 << (a_bits - 1)) - 1 } else { hi };
+        (0..len)
+            .map(|i| {
+                if zero_every > 0 && i % zero_every == 0 {
+                    0
+                } else {
+                    rng.int_range(lo, hi) as i16
+                }
+            })
+            .collect()
+    }
+
+    /// Random i8 weight codes in the symmetric `±(2^(w−1) − 1)` grid.
+    fn random_weight_codes(rng: &mut Rng, len: usize, w_bits: u32) -> Vec<i8> {
+        let lim = (1i64 << (w_bits - 1)) - 1;
+        (0..len).map(|_| rng.int_range(-lim, lim) as i8).collect()
+    }
+
+    #[test]
+    fn packed_i8_roundtrips() {
+        let mut rng = Rng::new(15);
+        for &(rows, cols) in &[(1usize, 1usize), (3, 5), (64, 64), (17, 130), (5, 200)] {
+            let w = random_weight_codes(&mut rng, rows * cols, 8);
+            let packed = PackedMatI8::pack(&w, rows, cols);
+            assert_eq!(packed.unpack(), w, "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn int_tier_matches_f32_kernels_bit_for_bit_across_shapes_and_threads() {
+        // Every shape here is eligible at full 8/8 precision
+        // (k ≤ 200 < 258, so k·255·255 < 2^24): the integer path must
+        // equal BOTH the naive and the pooled f32 kernels over the
+        // dequantized operands, bit for bit, at every thread count.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 65, 63),
+            (5, 129, 65),
+            (17, 23, 31),
+            (16, 200, 70),
+            (3, 70, 8),
+            (9, 64, 24),
+            (7, 40, 5),
+            (21, 90, 130),
+        ];
+        // Power-of-two scales, as the simnet quantizers now guarantee.
+        let (sa, sw) = (1.0f32 / 128.0, 1.0f32 / 512.0);
+        let mut rng = Rng::new(37);
+        let pool = crate::runtime::pool::WorkerPool::new(4);
+        for (si, &(m, k, n)) in shapes.iter().enumerate() {
+            // Odd shapes use the signed activation grid (the first-layer
+            // case); the rest use the unsigned post-ReLU grid.
+            let ax = random_act_codes(&mut rng, m * k, 8, 3, si % 2 == 1);
+            let aw = random_weight_codes(&mut rng, k * n, 8);
+            let xf: Vec<f32> = ax.iter().map(|&c| c as f32 * sa).collect();
+            let wf: Vec<f32> = aw.iter().map(|&c| c as f32 * sw).collect();
+            let packed_f = PackedMat::pack(&wf, k, n);
+            let packed_i = PackedMatI8::pack(&aw, k, n);
+            let mut naive = vec![0f32; m * n];
+            matmul_naive(&xf, &wf, m, k, n, &mut naive);
+            let nb = naive.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            for threads in [1usize, 2, 4, 7] {
+                let mut f32_out = vec![0f32; m * n];
+                matmul_pooled_threads(&xf, &packed_f, m, &pool, threads, &mut f32_out);
+                let mut int_out = vec![f32::NAN; m * n];
+                matmul_pooled_i8_threads(&ax, &packed_i, m, sa * sw, &pool, threads, &mut int_out);
+                let fb = f32_out.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                let ib = int_out.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(nb, fb, "f32 divergence at {m}x{k}x{n} threads={threads}");
+                assert_eq!(fb, ib, "int divergence at {m}x{k}x{n} threads={threads}");
+            }
+            // The auto-threaded entry point agrees too.
+            let mut auto = vec![0f32; m * n];
+            matmul_pooled_i8(&ax, &packed_i, m, sa * sw, &pool, &mut auto);
+            assert_eq!(naive, auto, "auto int divergence at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn streamed_conv_i8_matches_f32_streamed_bit_for_bit() {
+        // Same 7x7 grid as the f32 streamed test (49 positions — not a
+        // TILE_ROWS multiple); patch_len 27 is eligible at 8/8 with huge
+        // margin. The integer streamed path must match the f32 streamed
+        // path over the dequantized operands at every thread count,
+        // including offset windows and the auto entry point.
+        let g = ConvGeom {
+            in_c: 3,
+            out_c: 5,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+            in_hw: 7,
+            out_hw: 7,
+        };
+        let (sa, sw) = (1.0f32 / 256.0, 1.0f32 / 64.0);
+        let mut rng = Rng::new(53);
+        let ax = random_act_codes(&mut rng, g.in_features(), 8, 4, false);
+        let aw = random_weight_codes(&mut rng, g.patch_len() * g.out_c, 8);
+        let xf: Vec<f32> = ax.iter().map(|&c| c as f32 * sa).collect();
+        let wf: Vec<f32> = aw.iter().map(|&c| c as f32 * sw).collect();
+        let packed_f = PackedMat::pack(&wf, g.patch_len(), g.out_c);
+        let packed_i = PackedMatI8::pack(&aw, g.patch_len(), g.out_c);
+        let npos = g.num_positions();
+        let pl = g.patch_len();
+        let pool = crate::runtime::pool::WorkerPool::new(4);
+
+        let mut want = vec![0f32; npos * g.out_c];
+        {
+            let mut strips = vec![0f32; TILE_ROWS * pl];
+            conv_rows_streamed(&xf, &g, 0, npos, &packed_f, &pool, 1, &mut strips, &mut want);
+        }
+        let wb = want.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        for threads in [1usize, 2, 3, 7] {
+            let mut strips = vec![0i16; threads * TILE_ROWS * pl];
+            let mut prod = vec![f32::NAN; npos * g.out_c];
+            conv_rows_streamed_i8(
+                &ax, &g, 0, npos, &packed_i, sa * sw, &pool, threads, &mut strips, &mut prod,
+            );
+            let pb = prod.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(wb, pb, "int streamed divergence at threads={threads}");
+        }
+
+        // Offset window (pos0 > 0, odd m).
+        let (pos0, m) = (13usize, 10usize);
+        let mut strips = vec![0i16; 2 * TILE_ROWS * pl];
+        let mut prod = vec![0f32; m * g.out_c];
+        conv_rows_streamed_i8(
+            &ax, &g, pos0, m, &packed_i, sa * sw, &pool, 2, &mut strips, &mut prod,
+        );
+        assert_eq!(
+            prod.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want[pos0 * g.out_c..(pos0 + m) * g.out_c]
+                .iter()
+                .map(|v| v.to_bits())
+                .collect::<Vec<_>>(),
+            "offset int streamed window diverged"
+        );
+
+        // The auto-threaded entry point agrees too.
+        let mut strips = vec![0i16; pool.threads() * TILE_ROWS * pl];
+        let mut prod = vec![0f32; npos * g.out_c];
+        conv_rows_streamed_auto_i8(
+            &ax, &g, 0, npos, &packed_i, sa * sw, &pool, &mut strips, &mut prod,
+        );
+        assert_eq!(want, prod, "auto int streamed divergence");
     }
 
     #[test]

@@ -73,6 +73,19 @@ impl std::error::Error for PoolError {}
 /// saturate memory bandwidth — same bound the PR 2 scope kernel used).
 pub const MAX_THREADS: usize = 16;
 
+/// Typed raw-pointer wrapper for fanning **disjoint** mutable regions of
+/// one buffer across the parts of a [`WorkerPool::run`] job — the
+/// generic sibling of `gemm::SendPtr` (which predates it and stays
+/// f32-specific). The integer-tier kernels fan out i16 im2col strips and
+/// i8-derived f32 products through it.
+///
+/// SAFETY contract for users: every part must dereference a region
+/// disjoint from every other part's, and the buffer must outlive the
+/// `run` call (which blocks until all parts finish).
+pub(crate) struct SendMut<T>(pub(crate) *mut T);
+unsafe impl<T> Send for SendMut<T> {}
+unsafe impl<T> Sync for SendMut<T> {}
+
 /// Worker count a pool gets by default: `LRMP_SIM_THREADS` when set, else
 /// the machine parallelism, clamped to `1..=MAX_THREADS`.
 pub fn default_threads() -> usize {

@@ -60,6 +60,25 @@
 //! The logits are handed back in the request's own buffer, so the
 //! scratch never leaves the backend.
 //!
+//! # Precision-tiered integer kernels ([`SimOptions::int_kernels`])
+//!
+//! Quantization snaps every operand onto an integer grid with a
+//! **power-of-two** scale, so a quantized matmul is secretly integer
+//! arithmetic carried in f32. Per weight-bearing node the backend picks a
+//! kernel *tier*: when `quant::int_exact_bits(w_bits, a_bits, k)` holds
+//! (`k · (2^w−1)(2^a−1) < 2^24` — every f32 partial sum exact) *and* the
+//! cached weight codes / staged activation codes exist with normal
+//! power-of-two scales, the node dispatches to the i8/i16 integer kernels
+//! (`gemm::matmul_pooled_i8`, `gemm::conv_rows_streamed_i8`) which
+//! accumulate in i32 and dequantize once per output — **bitwise identical
+//! to the f32 path by construction**, not by tolerance. Ineligible layers
+//! (e.g. vgg16's wide-`k` layers at 8/8) and degenerate scales fall back
+//! to the f32 kernels, so the tier choice never changes a logit bit; the
+//! tests and the bench's `int_bit_exact` hard gate hold it to that. The
+//! i8 pack rides the same per-layer cache as the f32 pack (one entry,
+//! keyed by `w_bits` — a repack rebuilds both), so tier dispatch is a
+//! per-eval predicate over cached state, never a second cache.
+//!
 //! [`SimBackend::eval_reference`] is the straight-line comparator: the
 //! **unoptimized** schedule executed with fresh allocations per node,
 //! fully materialized im2col and the naive reference kernel. Both paths
@@ -105,10 +124,11 @@
 //! plumbing, determinism, and failure modes.
 
 use crate::nets::Network;
-use crate::runtime::gemm::{self, ConvGeom, PackedMat, SendPtr, TILE_ROWS};
+use crate::quant;
+use crate::runtime::gemm::{self, ConvGeom, PackedMat, PackedMatI8, SendPtr, TILE_ROWS};
 use crate::runtime::graph::{self, Graph, Op};
 use crate::runtime::passes::{self, PassConfig, PassReport};
-use crate::runtime::pool::{self, WorkerPool};
+use crate::runtime::pool::{self, SendMut, WorkerPool};
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -130,8 +150,9 @@ pub const CONV_MT_MIN_FLOPS: usize = 1 << 21;
 
 /// Construction-time knobs of [`SimBackend::from_network_cfg`].
 /// `Default` is the production configuration: machine-parallel pool,
-/// full pass pipeline, stock conv fan-out threshold.
-#[derive(Clone, Copy, Debug, Default)]
+/// full pass pipeline, stock conv fan-out threshold, integer kernel
+/// tier enabled.
+#[derive(Clone, Copy, Debug)]
 pub struct SimOptions {
     /// Kernel worker-thread count (`None`: machine parallelism with the
     /// `LRMP_SIM_THREADS` override, clamped to `pool::MAX_THREADS`).
@@ -154,6 +175,26 @@ pub struct SimOptions {
     /// kernels in the serial reduction order (tests and the bench's
     /// `overlap_bit_exact` flag gate on it).
     pub overlap: bool,
+    /// Precision-tiered integer kernels (default **on**): layers whose
+    /// `(w_bits, a_bits, k)` satisfy the 2^24 exactness predicate
+    /// (`quant::int_exact_bits`) run the i8/i16 integer kernels instead
+    /// of the f32 path — bitwise identical by construction (see the
+    /// module docs), so this flag trades nothing but speed. `false`
+    /// forces every layer onto the f32 kernels (`serve
+    /// --int-kernels=false` keeps that path exercised in CI).
+    pub int_kernels: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> SimOptions {
+        SimOptions {
+            threads: None,
+            passes: PassConfig::default(),
+            conv_fanout_min_flops: None,
+            overlap: false,
+            int_kernels: true,
+        }
+    }
 }
 
 /// One layer's packed-weight cache entry (see `ensure_packed`).
@@ -165,6 +206,12 @@ struct PackedLayer {
     /// invalidation test and the bench read.
     packs: u64,
     mat: Option<PackedMat>,
+    /// The integer-tier twin of `mat`: the same quantized weights as i8
+    /// codes plus their power-of-two scale, built in the same
+    /// `ensure_packed` pass (one `packs` increment covers both). `None`
+    /// when the weight grid has no exact i8 code form (`w_bits > 8`,
+    /// all-zero weights, saturated scale) — those layers stay f32.
+    int: Option<(PackedMatI8, f32)>,
 }
 
 /// Conv-lowering scratch, sized once at construction: `strips` holds one
@@ -174,6 +221,9 @@ struct PackedLayer {
 /// `CONV_CHUNK × out_c` product buffer per sample part.
 struct ConvScratch {
     strips: Vec<f32>,
+    /// i16 twin of `strips` for integer-tier conv nodes (`prod` is shared
+    /// — the integer microkernel writes dequantized f32 product rows).
+    strips_i16: Vec<i16>,
     prod: Vec<f32>,
 }
 
@@ -202,6 +252,16 @@ enum RunPart {
         dst: *mut f32,
         relu: bool,
     },
+    /// Integer-tier twin of `MatMul`: staged i16 activation codes against
+    /// the layer's i8 code pack, dequantized by `scale` on store.
+    MatMulI8 {
+        x: *const i16,
+        rows: usize,
+        w: *const PackedMatI8,
+        scale: f32,
+        dst: *mut f32,
+        relu: bool,
+    },
     /// A contiguous sample range of one `Conv` node, with a private strip
     /// panel + product chunk from the overlap scratch.
     Conv {
@@ -212,6 +272,25 @@ enum RunPart {
         relu: bool,
         pool_factor: Option<usize>,
         strip: *mut f32,
+        strip_len: usize,
+        prod: *mut f32,
+        prod_len: usize,
+        dst: *mut f32,
+        out_feat: usize,
+    },
+    /// Integer-tier twin of `Conv`: i16 activation codes stream through
+    /// an i16 strip panel against the i8 code pack; the product chunk is
+    /// f32 (the microkernel dequantizes on store), so the scatter is the
+    /// f32 path's.
+    ConvI8 {
+        xs: *const i16,
+        samples: usize,
+        geom: ConvGeom,
+        w: *const PackedMatI8,
+        scale: f32,
+        relu: bool,
+        pool_factor: Option<usize>,
+        strip: *mut i16,
         strip_len: usize,
         prod: *mut f32,
         prod_len: usize,
@@ -258,6 +337,9 @@ unsafe impl Sync for RunPart {}
 struct LaneArena {
     slots: Vec<Vec<f32>>,
     staged: Vec<Vec<f32>>,
+    /// i16 twins of `staged` for integer-tier nodes (a node stages into
+    /// exactly one of the two, per its tier).
+    staged_codes: Vec<Vec<i16>>,
 }
 
 /// Construction-time state of the overlapped executor
@@ -283,6 +365,9 @@ struct OverlapState {
     /// Product-chunk stride (floats) per concurrent conv part.
     prod_stride: usize,
     strips: Vec<f32>,
+    /// i16 strip panels for integer-tier conv parts — same slot indexing
+    /// and stride as `strips` (a part uses exactly one of the two).
+    strips_i16: Vec<i16>,
     prod: Vec<f32>,
     /// Reused per-step part list (capacity covers the widest two-lane
     /// step).
@@ -354,6 +439,7 @@ impl OverlapState {
         let lane = || LaneArena {
             slots: slot_feats.iter().map(|&f| Vec::with_capacity(b * f)).collect(),
             staged: (0..stage_bufs).map(|_| Vec::with_capacity(b * staged_max)).collect(),
+            staged_codes: (0..stage_bufs).map(|_| Vec::with_capacity(b * staged_max)).collect(),
         };
         OverlapState {
             waves,
@@ -363,6 +449,7 @@ impl OverlapState {
             strip_stride: strip_max,
             prod_stride: prod_max,
             strips: vec![0.0; conv_slots * strip_max],
+            strips_i16: vec![0; conv_slots * strip_max],
             prod: vec![0.0; 2 * wave_conv_parts_max * prod_max],
             parts: Vec::with_capacity(2 * wave_parts_max),
         }
@@ -393,6 +480,26 @@ fn run_part(part: &RunPart, pool: &WorkerPool, inline: bool) {
                 gemm::matmul_pooled(x, w, rows, pool, out);
             } else {
                 gemm::matmul_pooled_threads(x, w, rows, pool, 1, out);
+            }
+            if relu {
+                relu_inplace(out);
+            }
+        }
+        RunPart::MatMulI8 { x, rows, w, scale, dst, relu } => {
+            // SAFETY: same contract as `MatMul` — prep sized the buffers
+            // and dst ranges of distinct parts are disjoint.
+            let (w, x, out) = unsafe {
+                let w = &*w;
+                (
+                    w,
+                    std::slice::from_raw_parts(x, rows * w.rows),
+                    std::slice::from_raw_parts_mut(dst, rows * w.cols),
+                )
+            };
+            if inline {
+                gemm::matmul_pooled_i8(x, w, rows, scale, pool, out);
+            } else {
+                gemm::matmul_pooled_i8_threads(x, w, rows, scale, pool, 1, out);
             }
             if relu {
                 relu_inplace(out);
@@ -431,6 +538,43 @@ fn run_part(part: &RunPart, pool: &WorkerPool, inline: bool) {
                     )
                 };
                 conv_one_sample(x_s, geom, w, relu, pool_factor, pool, inline, strips, pr, d_s);
+            }
+        }
+        RunPart::ConvI8 {
+            xs,
+            samples,
+            ref geom,
+            w,
+            scale,
+            relu,
+            pool_factor,
+            strip,
+            strip_len,
+            prod,
+            prod_len,
+            dst,
+            out_feat,
+        } => {
+            let in_feat = geom.in_features();
+            // SAFETY: same contract as `Conv` — sample ranges tile the
+            // node's batch, strip/prod regions are private to this part.
+            let (w, strips, pr) = unsafe {
+                (
+                    &*w,
+                    std::slice::from_raw_parts_mut(strip, strip_len),
+                    std::slice::from_raw_parts_mut(prod, prod_len),
+                )
+            };
+            for s in 0..samples {
+                let (x_s, d_s) = unsafe {
+                    (
+                        std::slice::from_raw_parts(xs.add(s * in_feat), in_feat),
+                        std::slice::from_raw_parts_mut(dst.add(s * out_feat), out_feat),
+                    )
+                };
+                conv_one_sample_i8(
+                    x_s, geom, w, scale, relu, pool_factor, pool, inline, strips, pr, d_s,
+                );
             }
         }
         RunPart::Pool {
@@ -528,6 +672,12 @@ pub struct SimBackend {
     /// Quantization staging buffer (each weight-bearing node quantizes
     /// its input here; inputs can have several consumers).
     staged: Vec<f32>,
+    /// i16 twin of `staged`: integer-tier nodes stage activation *codes*
+    /// here instead of fake-quantized f32 values.
+    staged_codes: Vec<i16>,
+    /// Whether the integer kernel tier may dispatch at all
+    /// ([`SimOptions::int_kernels`]; `false` pins every layer to f32).
+    int_kernels: bool,
     conv: ConvScratch,
     /// Overlapped-executor state ([`SimOptions::overlap`]); `None` runs
     /// the serial schedule walk.
@@ -684,6 +834,7 @@ impl SimBackend {
                 bits: -1.0,
                 packs: 0,
                 mat: None,
+                int: None,
             })
             .collect();
         let overlap = opts
@@ -700,12 +851,15 @@ impl SimBackend {
             packed,
             slots,
             staged: Vec::with_capacity(b * staged_max),
+            staged_codes: Vec::with_capacity(b * staged_max),
+            int_kernels: opts.int_kernels,
             conv: ConvScratch {
                 // The narrow-batch path fans a chunk's *rows* across the
                 // pool (one strip panel per pool thread); the wide-batch
                 // path fans *samples* (one strip panel + one prod chunk
                 // per sample part) — `threads` panels cover both.
                 strips: Vec::with_capacity(threads * strip_max),
+                strips_i16: Vec::with_capacity(threads * strip_max),
                 prod: Vec::with_capacity(parts_max * prod_max),
             },
             overlap,
@@ -775,6 +929,17 @@ impl SimBackend {
                 + o.strips.len()
                 + o.prod.len()
         });
+        // Integer-tier staging and strip panels are i16 — half a float
+        // each in the byte total.
+        let overlap_codes = self.overlap.as_ref().map_or(0, |o| {
+            o.lanes
+                .iter()
+                .map(|l| l.staged_codes.iter().map(Vec::capacity).sum::<usize>())
+                .sum::<usize>()
+                + o.strips_i16.len()
+        });
+        let code_elems: usize =
+            self.staged_codes.capacity() + self.conv.strips_i16.capacity() + overlap_codes;
         let arena_floats: usize = self.slots.iter().map(|s| s.capacity()).sum::<usize>()
             + self.staged.capacity()
             + self.conv.strips.capacity()
@@ -792,7 +957,8 @@ impl SimBackend {
             pool_nodes: g.pool_nodes(),
             fused_convs: g.fused_convs(),
             slots: g.num_slots(),
-            arena_bytes: arena_floats * std::mem::size_of::<f32>(),
+            arena_bytes: arena_floats * std::mem::size_of::<f32>()
+                + code_elems * std::mem::size_of::<i16>(),
             nodes_pre_pass: self.pass_report.nodes_before,
             arena_bytes_saved: saved_floats * std::mem::size_of::<f32>(),
             pass_rewrites: self.pass_report.rewrites(),
@@ -802,6 +968,10 @@ impl SimBackend {
     /// Per-layer packed-weight cache: repack **only** the layers whose
     /// requested `w_bits` differ from their cached pack, so changing one
     /// layer's bits leaves every other layer's `PackedMat` untouched.
+    /// One rebuild produces both tiers — the f32 pack and (when the grid
+    /// has an exact i8 code form) the i8 code pack — under a single
+    /// `packs` increment, so the tier split never changes the cache's
+    /// invalidation behavior (`a_bits` changes still repack nothing).
     fn ensure_packed(&mut self, w_bits: &[f32]) {
         for (i, &bits) in w_bits.iter().enumerate() {
             let entry = &mut self.packed[i];
@@ -809,11 +979,31 @@ impl SimBackend {
                 continue;
             }
             let (rows, cols) = self.dims[i];
-            let q = quantize_symmetric(&self.weights[i], bits as u32);
+            let (q, int) = quantize_symmetric_with_codes(&self.weights[i], bits as u32);
             entry.mat = Some(PackedMat::pack(&q, rows, cols));
+            entry.int = int.map(|(codes, scale)| (PackedMatI8::pack(&codes, rows, cols), scale));
             entry.bits = bits;
             entry.packs += 1;
         }
+    }
+
+    /// Whether the integer kernel tier may dispatch
+    /// ([`SimOptions::int_kernels`]).
+    pub fn int_kernels_enabled(&self) -> bool {
+        self.int_kernels
+    }
+
+    /// The tier predicate for one layer against its **cached** pack: true
+    /// when an eval at the cached `w_bits` and the given `a_bits` would
+    /// dispatch this layer to the integer kernels (modulo the final
+    /// data-dependent activation-scale check, which can only fall back to
+    /// the bitwise-identical f32 path). The repack regression test and
+    /// `serve`'s introspection read it.
+    pub fn layer_int_eligible(&self, layer: usize, a_bits: f32) -> bool {
+        let entry = &self.packed[layer];
+        self.int_kernels
+            && entry.int.is_some()
+            && quant::int_exact_bits(entry.bits as u32, a_bits as u32, self.dims[layer].0)
     }
 
     /// The straight-line reference executor over the **unoptimized**
@@ -954,6 +1144,7 @@ impl SimBackend {
         let b = self.eval_batch;
         let classes = self.num_classes;
         let fanout_min = self.conv_fanout_min_flops;
+        let int_on = self.int_kernels;
         let Self {
             graph,
             packed,
@@ -972,6 +1163,7 @@ impl SimBackend {
             strip_stride,
             prod_stride,
             strips,
+            strips_i16,
             prod,
             parts,
         } = state;
@@ -996,38 +1188,73 @@ impl SimBackend {
                     match node.op {
                         Op::Input { .. } | Op::Output => {}
                         Op::MatMul { layer, in_f, out_f } => {
-                            {
+                            let int_scale = {
                                 let src = match slot_of[node.inputs[0].0] {
                                     Some(s) => &lane.slots[s][..b * in_f],
                                     None => &x[..b * in_f],
                                 };
-                                stage_quantized(
-                                    &mut lane.staged[stage_idx[id.0]],
-                                    src,
+                                let s = try_stage_int(
+                                    int_on,
+                                    &packed[layer],
+                                    in_f,
                                     a_bits[layer] as u32,
+                                    src,
+                                    &mut lane.staged_codes[stage_idx[id.0]],
                                 );
-                            }
+                                if s.is_none() {
+                                    stage_quantized(
+                                        &mut lane.staged[stage_idx[id.0]],
+                                        src,
+                                        a_bits[layer] as u32,
+                                    );
+                                }
+                                s
+                            };
                             let dst = &mut lane.slots[slot_of[id.0].expect("MatMul slot")];
                             dst.resize(b * out_f, 0.0);
                             let dst_ptr = dst.as_mut_ptr();
-                            let x_ptr = lane.staged[stage_idx[id.0]].as_ptr();
-                            let w: *const PackedMat =
-                                packed[layer].mat.as_ref().expect("packed above");
                             let nparts = threads.min(b).max(1);
                             let per = (b + nparts - 1) / nparts;
-                            let mut r0 = 0;
-                            while r0 < b {
-                                let rows = per.min(b - r0);
-                                // SAFETY: offsets stay within the b-row
-                                // buffers sized above.
-                                parts.push(RunPart::MatMul {
-                                    x: unsafe { x_ptr.add(r0 * in_f) },
-                                    rows,
-                                    w,
-                                    dst: unsafe { dst_ptr.add(r0 * out_f) },
-                                    relu: node.relu,
-                                });
-                                r0 += rows;
+                            match int_scale {
+                                Some(scale) => {
+                                    let x_ptr = lane.staged_codes[stage_idx[id.0]].as_ptr();
+                                    let w: *const PackedMatI8 =
+                                        &packed[layer].int.as_ref().expect("int pack checked").0;
+                                    let mut r0 = 0;
+                                    while r0 < b {
+                                        let rows = per.min(b - r0);
+                                        // SAFETY: offsets stay within the
+                                        // b-row buffers sized above.
+                                        parts.push(RunPart::MatMulI8 {
+                                            x: unsafe { x_ptr.add(r0 * in_f) },
+                                            rows,
+                                            w,
+                                            scale,
+                                            dst: unsafe { dst_ptr.add(r0 * out_f) },
+                                            relu: node.relu,
+                                        });
+                                        r0 += rows;
+                                    }
+                                }
+                                None => {
+                                    let x_ptr = lane.staged[stage_idx[id.0]].as_ptr();
+                                    let w: *const PackedMat =
+                                        packed[layer].mat.as_ref().expect("packed above");
+                                    let mut r0 = 0;
+                                    while r0 < b {
+                                        let rows = per.min(b - r0);
+                                        // SAFETY: offsets stay within the
+                                        // b-row buffers sized above.
+                                        parts.push(RunPart::MatMul {
+                                            x: unsafe { x_ptr.add(r0 * in_f) },
+                                            rows,
+                                            w,
+                                            dst: unsafe { dst_ptr.add(r0 * out_f) },
+                                            relu: node.relu,
+                                        });
+                                        r0 += rows;
+                                    }
+                                }
                             }
                         }
                         Op::Conv {
@@ -1037,51 +1264,103 @@ impl SimBackend {
                         } => {
                             let in_f = geom.in_features();
                             let out_f = graph.out_features(id);
-                            {
+                            let int_scale = {
                                 let src = match slot_of[node.inputs[0].0] {
                                     Some(s) => &lane.slots[s][..b * in_f],
                                     None => &x[..b * in_f],
                                 };
-                                stage_quantized(
-                                    &mut lane.staged[stage_idx[id.0]],
-                                    src,
+                                let s = try_stage_int(
+                                    int_on,
+                                    &packed[layer],
+                                    geom.patch_len(),
                                     a_bits[layer] as u32,
+                                    src,
+                                    &mut lane.staged_codes[stage_idx[id.0]],
                                 );
-                            }
+                                if s.is_none() {
+                                    stage_quantized(
+                                        &mut lane.staged[stage_idx[id.0]],
+                                        src,
+                                        a_bits[layer] as u32,
+                                    );
+                                }
+                                s
+                            };
                             let dst = &mut lane.slots[slot_of[id.0].expect("Conv slot")];
                             dst.resize(b * out_f, 0.0);
                             let dst_ptr = dst.as_mut_ptr();
-                            let x_ptr = lane.staged[stage_idx[id.0]].as_ptr();
-                            let w: *const PackedMat =
-                                packed[layer].mat.as_ref().expect("packed above");
                             let chunk = CONV_CHUNK.min(geom.num_positions());
                             let (spl, prl) = (TILE_ROWS * geom.patch_len(), chunk * geom.out_c);
                             let nparts = conv_parts(b, &geom, fanout_min, threads);
                             let per = (b + nparts - 1) / nparts;
-                            let mut s0 = 0;
-                            while s0 < b {
-                                let samples = per.min(b - s0);
-                                // SAFETY: sample offsets stay within the
-                                // buffers sized above; `conv_slot`
-                                // regions tile the overlap scratch.
-                                parts.push(RunPart::Conv {
-                                    xs: unsafe { x_ptr.add(s0 * in_f) },
-                                    samples,
-                                    geom,
-                                    w,
-                                    relu: node.relu,
-                                    pool_factor: pf,
-                                    strip: unsafe {
-                                        strips.as_mut_ptr().add(conv_slot * sstride)
-                                    },
-                                    strip_len: spl,
-                                    prod: unsafe { prod.as_mut_ptr().add(conv_slot * pstride) },
-                                    prod_len: prl,
-                                    dst: unsafe { dst_ptr.add(s0 * out_f) },
-                                    out_feat: out_f,
-                                });
-                                conv_slot += 1;
-                                s0 += samples;
+                            match int_scale {
+                                Some(scale) => {
+                                    let x_ptr = lane.staged_codes[stage_idx[id.0]].as_ptr();
+                                    let w: *const PackedMatI8 =
+                                        &packed[layer].int.as_ref().expect("int pack checked").0;
+                                    let mut s0 = 0;
+                                    while s0 < b {
+                                        let samples = per.min(b - s0);
+                                        // SAFETY: sample offsets stay
+                                        // within the buffers sized above;
+                                        // `conv_slot` regions tile the
+                                        // i16 overlap scratch.
+                                        parts.push(RunPart::ConvI8 {
+                                            xs: unsafe { x_ptr.add(s0 * in_f) },
+                                            samples,
+                                            geom,
+                                            w,
+                                            scale,
+                                            relu: node.relu,
+                                            pool_factor: pf,
+                                            strip: unsafe {
+                                                strips_i16.as_mut_ptr().add(conv_slot * sstride)
+                                            },
+                                            strip_len: spl,
+                                            prod: unsafe {
+                                                prod.as_mut_ptr().add(conv_slot * pstride)
+                                            },
+                                            prod_len: prl,
+                                            dst: unsafe { dst_ptr.add(s0 * out_f) },
+                                            out_feat: out_f,
+                                        });
+                                        conv_slot += 1;
+                                        s0 += samples;
+                                    }
+                                }
+                                None => {
+                                    let x_ptr = lane.staged[stage_idx[id.0]].as_ptr();
+                                    let w: *const PackedMat =
+                                        packed[layer].mat.as_ref().expect("packed above");
+                                    let mut s0 = 0;
+                                    while s0 < b {
+                                        let samples = per.min(b - s0);
+                                        // SAFETY: sample offsets stay
+                                        // within the buffers sized above;
+                                        // `conv_slot` regions tile the
+                                        // overlap scratch.
+                                        parts.push(RunPart::Conv {
+                                            xs: unsafe { x_ptr.add(s0 * in_f) },
+                                            samples,
+                                            geom,
+                                            w,
+                                            relu: node.relu,
+                                            pool_factor: pf,
+                                            strip: unsafe {
+                                                strips.as_mut_ptr().add(conv_slot * sstride)
+                                            },
+                                            strip_len: spl,
+                                            prod: unsafe {
+                                                prod.as_mut_ptr().add(conv_slot * pstride)
+                                            },
+                                            prod_len: prl,
+                                            dst: unsafe { dst_ptr.add(s0 * out_f) },
+                                            out_feat: out_f,
+                                        });
+                                        conv_slot += 1;
+                                        s0 += samples;
+                                    }
+                                }
                             }
                         }
                         Op::Pool {
@@ -1159,8 +1438,11 @@ impl SimBackend {
                     // the row-split path packs into (region 0 is the
                     // scratch base — no other part exists to collide
                     // with).
-                    if let RunPart::Conv { strip_len, .. } = &mut parts[0] {
-                        *strip_len *= threads;
+                    match &mut parts[0] {
+                        RunPart::Conv { strip_len, .. } | RunPart::ConvI8 { strip_len, .. } => {
+                            *strip_len *= threads;
+                        }
+                        _ => {}
                     }
                     run_part(&parts[0], pool, true);
                 }
@@ -1357,6 +1639,113 @@ fn conv_one_sample(
     }
 }
 
+/// Integer-tier twin of [`conv_forward`]: i16 activation codes stream
+/// through i16 strip panels against the layer's i8 code pack
+/// (`gemm::conv_rows_streamed_i8`), dequantized by `scale` into the
+/// shared f32 product chunks — the scatter and fan-out structure are the
+/// f32 path's, so the result is bitwise identical on eligible layers.
+#[allow(clippy::too_many_arguments)]
+fn conv_forward_i8(
+    h: &[i16],
+    b: usize,
+    g: &ConvGeom,
+    w: &PackedMatI8,
+    scale: f32,
+    relu: bool,
+    pool_factor: Option<usize>,
+    fanout_min_flops: usize,
+    pool: &WorkerPool,
+    scr: &mut ConvScratch,
+    out: &mut [f32],
+) {
+    let in_feat = g.in_features();
+    let npos = g.num_positions();
+    let pl = g.patch_len();
+    let out_feat = conv_out_features(g, pool_factor);
+    debug_assert_eq!(h.len(), b * in_feat);
+    debug_assert_eq!(out.len(), b * out_feat);
+    let chunk = CONV_CHUNK.min(npos);
+    let (spl, prl) = (TILE_ROWS * pl, chunk * g.out_c);
+    let flops = 2usize
+        .saturating_mul(b)
+        .saturating_mul(npos)
+        .saturating_mul(pl)
+        .saturating_mul(g.out_c);
+    let parts = if b > 1 && flops >= fanout_min_flops {
+        pool.threads().min(b)
+    } else {
+        1
+    };
+    // Within preallocated capacity (sized at construction): no alloc.
+    scr.strips_i16.resize(pool.threads() * spl, 0);
+    scr.prod.resize(parts * prl, 0.0);
+    if parts == 1 {
+        let strips = scr.strips_i16.as_mut_slice();
+        let prod = &mut scr.prod[..prl];
+        for s in 0..b {
+            let xs = &h[s * in_feat..(s + 1) * in_feat];
+            let dst = &mut out[s * out_feat..(s + 1) * out_feat];
+            conv_one_sample_i8(xs, g, w, scale, relu, pool_factor, pool, true, strips, prod, dst);
+        }
+        return;
+    }
+    let per = (b + parts - 1) / parts;
+    let nparts = (b + per - 1) / per;
+    let sptr = SendMut(scr.strips_i16.as_mut_ptr());
+    let rptr = SendPtr(scr.prod.as_mut_ptr());
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(nparts, |p| {
+        // SAFETY: identical tiling to conv_forward — part `p` exclusively
+        // owns strip panel `p`, product chunk `p` and the output rows of
+        // samples [s0, s1); every buffer outlives `pool.run`.
+        let strip = unsafe { std::slice::from_raw_parts_mut(sptr.0.add(p * spl), spl) };
+        let prod = unsafe { std::slice::from_raw_parts_mut(rptr.0.add(p * prl), prl) };
+        let s0 = p * per;
+        let s1 = (s0 + per).min(b);
+        for s in s0..s1 {
+            let xs = &h[s * in_feat..(s + 1) * in_feat];
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(optr.0.add(s * out_feat), out_feat) };
+            conv_one_sample_i8(xs, g, w, scale, relu, pool_factor, pool, false, strip, prod, dst);
+        }
+    });
+}
+
+/// Integer-tier twin of [`conv_one_sample`] (same chunking, streaming
+/// and scatter; only the inner kernel differs).
+#[allow(clippy::too_many_arguments)]
+fn conv_one_sample_i8(
+    xs: &[i16],
+    g: &ConvGeom,
+    w: &PackedMatI8,
+    scale: f32,
+    relu: bool,
+    pool_factor: Option<usize>,
+    pool: &WorkerPool,
+    split: bool,
+    strips: &mut [i16],
+    prod: &mut [f32],
+    dst: &mut [f32],
+) {
+    let npos = g.num_positions();
+    let chunk = CONV_CHUNK.min(npos);
+    if pool_factor.is_some() {
+        dst.fill(f32::NEG_INFINITY);
+    }
+    let mut pos0 = 0;
+    while pos0 < npos {
+        let m = chunk.min(npos - pos0);
+        let pr = &mut prod[..m * g.out_c];
+        if split {
+            gemm::conv_rows_streamed_auto_i8(xs, g, pos0, m, w, scale, pool, strips, pr);
+        } else {
+            gemm::conv_rows_streamed_i8(xs, g, pos0, m, w, scale, pool, 1, strips, pr);
+        }
+        scatter_rows(g, pool_factor, relu, pos0, &prod[..m * g.out_c], dst);
+        pos0 += m;
+    }
+}
+
 /// Scatter position-major (HWC) product rows into the CHW destination,
 /// applying the fused ReLU per value — bitwise identical to a post-pass
 /// `relu_inplace` over the full grid, since the scatter is a permutation.
@@ -1436,24 +1825,69 @@ fn relu_inplace(h: &mut [f32]) {
     }
 }
 
-/// Symmetric per-tensor fake-quantization to `bits` (signed levels).
-fn quantize_symmetric(w: &[f32], bits: u32) -> Vec<f32> {
-    let max = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
-    if max == 0.0 || bits >= 24 {
-        return w.to_vec();
+/// Smallest power of two `>= x` (x clamped to the normal range, so the
+/// result is always a normal f32). Power-of-two scales are what make the
+/// integer tier possible: `v / scale` and `code * scale` are then *exact*
+/// f32 operations (pure exponent shifts), so quantized values are exactly
+/// `code · 2^e` and every sufficiently small partial sum is exact — see
+/// the module docs. `scale >= max/levels` keeps every code within the
+/// grid (`round(max/scale) <= levels`, since `levels` is an integer).
+fn po2_scale_at_least(x: f32) -> f32 {
+    let x = x.max(f32::MIN_POSITIVE);
+    let bits = x.to_bits();
+    if bits & 0x7f_ffff == 0 {
+        return x; // already a power of two
     }
-    let levels = ((1u32 << (bits.max(1) - 1)) - 1).max(1) as f32;
-    let scale = max / levels;
-    w.iter().map(|&v| (v / scale).round() * scale).collect()
+    // Finite positive normal → biased exponent in 1..=0xfe; the min
+    // saturates at 2^127 instead of overflowing to inf (callers treat a
+    // saturated scale as "bypass" via the codes-fit check).
+    f32::from_bits(((bits >> 23) + 1).min(0xfe) << 23)
 }
 
-/// Fake-quantization of activations to `bits`. Hidden layers are post-ReLU
-/// (non-negative → unsigned grid with 2^b − 1 levels); the first layer sees
-/// raw client data, so signed inputs fall back to a symmetric signed grid.
-fn quantize_activations(h: &mut [f32], bits: u32) {
+/// Symmetric per-tensor fake-quantization to `bits` (signed levels).
+fn quantize_symmetric(w: &[f32], bits: u32) -> Vec<f32> {
+    quantize_symmetric_with_codes(w, bits).0
+}
+
+/// [`quantize_symmetric`] that also returns the integer-tier form: the
+/// same grid as i8 codes plus the power-of-two scale, satisfying
+/// `codes[i] as f32 * scale == quantized[i]` **bitwise** (both sides are
+/// the exact product `round(v/scale) · 2^e`). `None` when no exact i8
+/// form exists — quantization bypassed (all-zero weights, `bits >= 24`),
+/// codes too wide for i8 (`bits > 8`), or a saturated scale.
+fn quantize_symmetric_with_codes(w: &[f32], bits: u32) -> (Vec<f32>, Option<(Vec<i8>, f32)>) {
+    let max = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if max == 0.0 || bits >= 24 {
+        return (w.to_vec(), None);
+    }
+    let levels = ((1u32 << (bits.max(1) - 1)) - 1).max(1) as f32;
+    let scale = po2_scale_at_least(max / levels);
+    if max / scale > levels {
+        // Saturated po2 (max near f32::MAX): no grid fits — bypass.
+        return (w.to_vec(), None);
+    }
+    let q: Vec<f32> = w.iter().map(|&v| (v / scale).round() * scale).collect();
+    let int = (bits <= 8).then(|| {
+        // |code| <= levels <= 127 for bits <= 8, so the cast is lossless.
+        let codes: Vec<i8> = w.iter().map(|&v| (v / scale).round() as i8).collect();
+        (codes, scale)
+    });
+    (q, int)
+}
+
+/// The activation quantization grid for `bits`: `None` bypasses
+/// quantization (all-zero input, `bits >= 24`, saturated scale); `Some`
+/// is the power-of-two scale shared by [`quantize_activations`] and
+/// [`stage_codes`] — both derive values/codes from it with exact f32
+/// ops, which is what keeps the two tiers bitwise interchangeable.
+///
+/// Hidden layers are post-ReLU (non-negative → unsigned grid with
+/// 2^b − 1 levels); the first layer sees raw client data, so signed
+/// inputs fall back to a symmetric signed grid.
+fn activation_scale(h: &[f32], bits: u32) -> Option<f32> {
     let max_abs = h.iter().fold(0f32, |m, &v| m.max(v.abs()));
     if max_abs == 0.0 || bits >= 24 {
-        return;
+        return None;
     }
     let signed = h.iter().any(|&v| v < 0.0);
     let levels = if signed {
@@ -1461,10 +1895,70 @@ fn quantize_activations(h: &mut [f32], bits: u32) {
     } else {
         ((1u64 << bits) - 1).max(1) as f32
     };
-    let scale = max_abs / levels;
+    let scale = po2_scale_at_least(max_abs / levels);
+    if max_abs / scale > levels {
+        return None; // saturated po2 — bypass, as quantize_symmetric does
+    }
+    Some(scale)
+}
+
+/// Fake-quantization of activations to `bits` (see [`activation_scale`]).
+fn quantize_activations(h: &mut [f32], bits: u32) {
+    let Some(scale) = activation_scale(h, bits) else {
+        return;
+    };
     for v in h.iter_mut() {
         *v = (*v / scale).round() * scale;
     }
+}
+
+/// Integer-tier activation staging: quantize `src` to i16 *codes* (grid
+/// index instead of `code * scale`) and return the scale. `None` means
+/// the node cannot take the integer path for this input — codes too wide
+/// (`bits > 8`), quantization bypassed — and the caller stages f32
+/// instead, which is bitwise identical by the tier contract. Codes fit
+/// i16 comfortably: unsigned grids reach 2^8 − 1, signed ones ±127.
+fn stage_codes(staged: &mut Vec<i16>, src: &[f32], bits: u32) -> Option<f32> {
+    if bits > 8 {
+        return None;
+    }
+    let scale = activation_scale(src, bits)?;
+    staged.resize(src.len(), 0);
+    for (d, &v) in staged.iter_mut().zip(src) {
+        *d = (v / scale).round() as i16;
+    }
+    Some(scale)
+}
+
+/// The per-node tier decision, shared by the serial walk and the
+/// overlapped executor: check the enable flag, the layer's cached i8
+/// pack, the 2^24 exactness predicate (`quant::int_exact_bits` against
+/// the **cached** `w_bits` and the node's reduction length `k`), then
+/// stage the activation codes and validate the combined dequantization
+/// scale. `Some(scale)` means the codes are staged and the caller
+/// dispatches the i8 kernels; `None` means nothing was staged and the
+/// caller takes the f32 path — bitwise identical either way, so the
+/// data-dependent parts of this decision can never change a logit.
+fn try_stage_int(
+    int_on: bool,
+    entry: &PackedLayer,
+    k: usize,
+    a_bits: u32,
+    src: &[f32],
+    staged_codes: &mut Vec<i16>,
+) -> Option<f32> {
+    if !int_on {
+        return None;
+    }
+    let (_, w_scale) = entry.int.as_ref()?;
+    if !quant::int_exact_bits(entry.bits as u32, a_bits, k) {
+        return None;
+    }
+    let a_scale = stage_codes(staged_codes, src, a_bits)?;
+    let scale = w_scale * a_scale;
+    // A degenerate product of the two power-of-two scales (subnormal
+    // underflow) would break the exactness argument — fall back.
+    scale.is_normal().then_some(scale)
 }
 
 impl crate::coordinator::InferenceBackend for SimBackend {
@@ -1511,11 +2005,13 @@ impl crate::coordinator::InferenceBackend for SimBackend {
             return Ok(y0.expect("lane 0 requested"));
         }
         let fanout_min_flops = self.conv_fanout_min_flops;
+        let int_on = self.int_kernels;
         let Self {
             graph,
             packed,
             slots,
             staged,
+            staged_codes,
             conv,
             pool,
             ..
@@ -1525,17 +2021,36 @@ impl crate::coordinator::InferenceBackend for SimBackend {
             match node.op {
                 Op::Input { .. } | Op::Output => {}
                 Op::MatMul { layer, in_f, out_f } => {
-                    {
+                    let int_scale = {
                         let src = match graph.slot_of(node.inputs[0]) {
                             Some(s) => &slots[s][..b * in_f],
                             None => &x[..b * in_f],
                         };
-                        stage_quantized(staged, src, a_bits[layer] as u32);
-                    }
-                    let w = packed[layer].mat.as_ref().expect("packed above");
+                        let s = try_stage_int(
+                            int_on,
+                            &packed[layer],
+                            in_f,
+                            a_bits[layer] as u32,
+                            src,
+                            staged_codes,
+                        );
+                        if s.is_none() {
+                            stage_quantized(staged, src, a_bits[layer] as u32);
+                        }
+                        s
+                    };
                     let dst = &mut slots[graph.slot_of(id).expect("MatMul has a slot")];
                     dst.resize(b * out_f, 0.0); // within preallocated capacity
-                    gemm::matmul_pooled(staged, w, b, pool, dst);
+                    match int_scale {
+                        Some(scale) => {
+                            let (iw, _) = packed[layer].int.as_ref().expect("int pack checked");
+                            gemm::matmul_pooled_i8(staged_codes, iw, b, scale, pool, dst);
+                        }
+                        None => {
+                            let w = packed[layer].mat.as_ref().expect("packed above");
+                            gemm::matmul_pooled(staged, w, b, pool, dst);
+                        }
+                    }
                     if node.relu {
                         relu_inplace(dst);
                     }
@@ -1546,31 +2061,62 @@ impl crate::coordinator::InferenceBackend for SimBackend {
                     pool: pool_factor,
                 } => {
                     let in_f = geom.in_features();
-                    {
+                    let int_scale = {
                         let src = match graph.slot_of(node.inputs[0]) {
                             Some(s) => &slots[s][..b * in_f],
                             None => &x[..b * in_f],
                         };
-                        stage_quantized(staged, src, a_bits[layer] as u32);
-                    }
-                    let w = packed[layer].mat.as_ref().expect("packed above");
+                        let s = try_stage_int(
+                            int_on,
+                            &packed[layer],
+                            geom.patch_len(),
+                            a_bits[layer] as u32,
+                            src,
+                            staged_codes,
+                        );
+                        if s.is_none() {
+                            stage_quantized(staged, src, a_bits[layer] as u32);
+                        }
+                        s
+                    };
                     let dst = &mut slots[graph.slot_of(id).expect("Conv has a slot")];
                     // The compiled graph's (validated) shape rule sizes
                     // the destination; conv_forward re-derives it only
                     // because it cannot see the graph.
                     dst.resize(b * graph.out_features(id), 0.0);
-                    conv_forward(
-                        staged,
-                        b,
-                        &geom,
-                        w,
-                        node.relu,
-                        pool_factor,
-                        fanout_min_flops,
-                        pool,
-                        conv,
-                        dst,
-                    );
+                    match int_scale {
+                        Some(scale) => {
+                            let (iw, _) = packed[layer].int.as_ref().expect("int pack checked");
+                            conv_forward_i8(
+                                staged_codes,
+                                b,
+                                &geom,
+                                iw,
+                                scale,
+                                node.relu,
+                                pool_factor,
+                                fanout_min_flops,
+                                pool,
+                                conv,
+                                dst,
+                            );
+                        }
+                        None => {
+                            let w = packed[layer].mat.as_ref().expect("packed above");
+                            conv_forward(
+                                staged,
+                                b,
+                                &geom,
+                                w,
+                                node.relu,
+                                pool_factor,
+                                fanout_min_flops,
+                                pool,
+                                conv,
+                                dst,
+                            );
+                        }
+                    }
                 }
                 Op::Pool {
                     channels,
@@ -1885,10 +2431,16 @@ mod tests {
         let bits = vec![8.0f32; nl];
         b.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
         assert_eq!(b.pack_counts(), vec![1; nl], "first eval packs every layer");
+        // mlp_tiny at 8/8 is mixed-tier: k=256 stays under the 2^24
+        // exactness predicate (256·255² < 2^24), k=512 exceeds it.
+        assert!(b.layer_int_eligible(0, 8.0), "k=256 at 8/8 is eligible");
+        assert!(!b.layer_int_eligible(1, 8.0), "k=512 at 8/8 exceeds 2^24");
         // Same bits again: everything cached.
         b.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
         assert_eq!(b.pack_counts(), vec![1; nl], "warm eval repacks nothing");
-        // Change ONE layer's w_bits: only that layer repacks.
+        // Change ONE layer's w_bits across the tier boundary: only that
+        // layer repacks (one increment covers both the f32 and the i8
+        // pack), and its tier switches to the integer kernels.
         let mut wb = bits.clone();
         wb[1] = 4.0;
         b.eval(x.clone(), wb, bits.clone()).unwrap();
@@ -1899,12 +2451,137 @@ mod tests {
             expect,
             "single-layer w_bits change must leave the other layers' packs untouched"
         );
+        assert!(
+            b.layer_int_eligible(1, 8.0),
+            "w_bits 8→4 crosses the tier boundary: 512·15·255 < 2^24"
+        );
         // And a_bits changes never repack anything.
         let mut wb = bits.clone();
         wb[1] = 4.0;
         let ab = vec![3.0f32; nl];
         b.eval(x, wb, ab).unwrap();
         assert_eq!(b.pack_counts(), expect, "a_bits changes never repack");
+    }
+
+    #[test]
+    fn int_tier_on_vs_off_is_bitwise_identical_across_nets_and_threads() {
+        // The integer tier must be invisible in the logits: for every
+        // topology class and thread count, an int-kernels backend must
+        // match the f32-pinned backend and the reference executor bit
+        // for bit — at 6/6 (every layer eligible) and 8/8 (mixed tiers:
+        // mlp_tiny's k=512 layers fall back to f32).
+        for net in [
+            nets::mlp_tiny(),
+            nets::conv_tiny(),
+            vgg_nano(),
+            nets::resnet::resnet_tiny(),
+        ] {
+            let nl = net.num_layers();
+            for bits_v in [6.0f32, 8.0] {
+                let bits = vec![bits_v; nl];
+                let mut off = SimBackend::from_network_cfg(
+                    &net,
+                    3,
+                    11,
+                    SimOptions {
+                        threads: Some(2),
+                        int_kernels: false,
+                        ..SimOptions::default()
+                    },
+                )
+                .unwrap();
+                assert!(!off.int_kernels_enabled());
+                let dim = off.input_dim();
+                let x: Vec<f32> =
+                    (0..3 * dim).map(|i| ((i * 13) % 41) as f32 / 41.0 - 0.2).collect();
+                let y_off = off.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+                let y_ref = off.eval_reference(&x, &bits, &bits);
+                assert_eq!(
+                    y_off.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    y_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} f32-pinned vs reference divergence at bits={bits_v}",
+                    net.name
+                );
+                for threads in [1usize, 2, 4, 7] {
+                    let mut on =
+                        SimBackend::from_network_opts(&net, 3, 11, Some(threads)).unwrap();
+                    assert!(on.int_kernels_enabled(), "int kernels default on");
+                    let y = on.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+                    // Not vacuous: the first layer really took the
+                    // integer tier (first-layer k is small everywhere).
+                    assert!(
+                        on.layer_int_eligible(0, bits_v),
+                        "{} layer 0 must be int-eligible at {bits_v}",
+                        net.name
+                    );
+                    assert_eq!(
+                        y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        y_off.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{} int-on vs int-off divergence at threads={threads} bits={bits_v}",
+                        net.name
+                    );
+                    // The overlapped executor dispatches the same tiers.
+                    let mut ov =
+                        SimBackend::from_network_cfg(&net, 3, 11, overlap_opts(threads))
+                            .unwrap();
+                    let yo = ov.eval(x.clone(), bits.clone(), bits.clone()).unwrap();
+                    assert_eq!(
+                        yo.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        y_off.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{} overlap+int divergence at threads={threads} bits={bits_v}",
+                        net.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tier_boundary_layers_fall_back_to_f32_and_switch_on_narrower_bits() {
+        // k=1024 puts a layer past the 2^24 predicate at 8/8
+        // (1024·255·255 ≈ 2^26) but inside it at 4/8 (1024·15·255 <
+        // 2^24): both configurations must match the f32-pinned backend
+        // bitwise, and the tier probe must flip with the repack.
+        let net = nets::Network {
+            name: "wide-k".into(),
+            layers: vec![
+                nets::Layer::linear("fc1", 1024, 32),
+                nets::Layer::linear("fc2", 32, 10),
+            ],
+        };
+        let mut on = SimBackend::from_network_opts(&net, 2, 17, Some(4)).unwrap();
+        let mut off = SimBackend::from_network_cfg(
+            &net,
+            2,
+            17,
+            SimOptions {
+                threads: Some(4),
+                int_kernels: false,
+                ..SimOptions::default()
+            },
+        )
+        .unwrap();
+        let x: Vec<f32> = (0..2 * 1024).map(|i| ((i * 7) % 23) as f32 / 23.0 - 0.3).collect();
+        let wide = vec![8.0f32; 2];
+        let y_on = on.eval(x.clone(), wide.clone(), wide.clone()).unwrap();
+        let y_off = off.eval(x.clone(), wide.clone(), wide.clone()).unwrap();
+        assert_eq!(
+            y_on.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y_off.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "wide-k fallback must be bitwise identical"
+        );
+        assert!(!on.layer_int_eligible(0, 8.0), "k=1024 at 8/8 exceeds 2^24");
+        assert!(on.layer_int_eligible(1, 8.0), "k=32 at 8/8 is eligible");
+        assert!(!off.layer_int_eligible(1, 8.0), "the flag pins every layer to f32");
+        let narrow = vec![4.0f32, 8.0];
+        let y_on4 = on.eval(x.clone(), narrow.clone(), wide.clone()).unwrap();
+        let y_off4 = off.eval(x, narrow, wide).unwrap();
+        assert_eq!(
+            y_on4.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y_off4.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "narrower w_bits must stay bitwise identical on the integer tier"
+        );
+        assert!(on.layer_int_eligible(0, 8.0), "4/8 brings k=1024 under 2^24");
     }
 
     #[test]

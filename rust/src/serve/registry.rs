@@ -114,6 +114,7 @@ impl DeploymentRegistry {
             sim: SimOptions {
                 conv_fanout_min_flops: opts.conv_fanout_min_flops,
                 overlap: opts.overlap,
+                int_kernels: opts.int_kernels,
                 ..SimOptions::default()
             },
             default_eval_batch: opts.eval_batch,
